@@ -1,0 +1,58 @@
+//! Ablation: NATSA's balanced diagonal-pair partitioning (Section 4.2)
+//! vs naive contiguous and strided splits — the design choice DESIGN.md
+//! flags.  Reports both the *static* load imbalance and the *measured*
+//! wall-clock of the parallel engine under each scheme.
+
+use natsa::benchmark::{black_box, fmt_time, time_budget, Table};
+use natsa::mp::parallel::{assign, with_stats, Partition};
+use natsa::mp::MpConfig;
+use natsa::timeseries::generator::{generate, Pattern};
+
+fn main() {
+    let n = 65_536;
+    let m = 256;
+    let nw = n - m + 1;
+    let excl = m / 4;
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get().min(8))
+        .unwrap_or(4);
+    let series = generate::<f64>(Pattern::RandomWalk, n, 12);
+    let cfg = MpConfig::new(m);
+
+    let mut t = Table::new(&["partition", "imbalance", "median", "vs balanced"]);
+    let mut balanced = 0.0f64;
+    for part in [
+        Partition::BalancedPairs,
+        Partition::Strided,
+        Partition::Contiguous,
+    ] {
+        // static imbalance: max/min thread load in cells
+        let lists = assign(nw, excl, threads, part);
+        let loads: Vec<u64> = lists
+            .iter()
+            .map(|l| l.iter().map(|&d| (nw - d) as u64).sum())
+            .collect();
+        let imb = *loads.iter().max().unwrap() as f64 / (*loads.iter().min().unwrap()).max(1) as f64;
+
+        let s = time_budget(2.0, || {
+            black_box(with_stats(&series, cfg, threads, part).unwrap());
+        });
+        if part == Partition::BalancedPairs {
+            balanced = s.median;
+        }
+        t.row(&[
+            format!("{part:?}"),
+            format!("{imb:.3}"),
+            fmt_time(s.median),
+            format!("{:+.1}%", (s.median / balanced - 1.0) * 100.0),
+        ]);
+    }
+    t.print(&format!(
+        "partitioning ablation: n={n}, m={m}, {threads} threads"
+    ));
+    println!(
+        "\nContiguous puts all long diagonals on the first thread (its\n\
+         owner straggles); NATSA's pair scheme is balanced by construction\n\
+         and preserves the anytime property, unlike sorting-based fixes."
+    );
+}

@@ -1,0 +1,69 @@
+//! Fig. 3: SCRIMP thread scaling and bandwidth saturation.
+//!
+//! Two panels: (a) the calibrated KNL model reproducing the paper's
+//! series (saturation at ~32 threads on DDR4, ~128 on MCDRAM), and
+//! (b) a *measured* thread-scaling run of our rust SCRIMP on this host,
+//! which must show the same shape: near-linear scaling until a memory
+//! or core ceiling, then a plateau.
+
+use natsa::benchmark::{black_box, time_budget, Table};
+use natsa::mp::parallel::{self, Partition};
+use natsa::mp::MpConfig;
+use natsa::sim::platform::KnlModel;
+use natsa::timeseries::generator::{generate, Pattern};
+
+fn main() {
+    // (a) model: the paper's figure
+    let ddr = KnlModel::ddr4();
+    let hbm = KnlModel::mcdram();
+    let mut t = Table::new(&["threads", "DDR4 perf", "DDR4 GB/s", "HBM perf", "HBM GB/s"]);
+    for threads in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let (pd, bd) = ddr.scaling_point(threads);
+        let (ph, bh) = hbm.scaling_point(threads);
+        t.row(&[
+            threads.to_string(),
+            format!("{pd:.1}x"),
+            format!("{bd:.1}"),
+            format!("{ph:.1}x"),
+            format!("{bh:.1}"),
+        ]);
+    }
+    t.print("Fig. 3 (model): KNL SCRIMP scaling, normalized to 1 thread");
+    println!(
+        "knees: DDR4 ~{} threads, HBM ~{} threads (paper: 32 / 128)",
+        ddr.saturation_threads(),
+        hbm.saturation_threads()
+    );
+
+    // (b) measured on this host
+    let n = 48_000;
+    let m = 128;
+    let series = generate::<f64>(Pattern::RandomWalk, n, 1);
+    let cfg = MpConfig::new(m);
+    let host = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let mut t = Table::new(&["threads", "median", "speedup", "cells/s"]);
+    let mut base = 0.0f64;
+    let cells = natsa::mp::total_cells(n - m + 1, m / 4);
+    for threads in [1usize, 2, 4, 8, 16] {
+        if threads > 2 * host {
+            break;
+        }
+        let s = time_budget(1.5, || {
+            black_box(
+                parallel::with_stats(&series, cfg, threads, Partition::BalancedPairs).unwrap(),
+            );
+        });
+        if threads == 1 {
+            base = s.median;
+        }
+        t.row(&[
+            threads.to_string(),
+            natsa::benchmark::fmt_time(s.median),
+            format!("{:.2}x", base / s.median),
+            format!("{:.2e}", s.throughput(cells)),
+        ]);
+    }
+    t.print(&format!(
+        "Fig. 3 (measured): rust SCRIMP on this host ({host} hw threads), n={n}, m={m}"
+    ));
+}

@@ -1,0 +1,53 @@
+//! Fig. 4: roofline analysis of SCRIMP.
+//!
+//! (a) the KNL model regenerating the paper's plot (AI far left of the
+//! ridge, achieved a tiny fraction of peak), and (b) a measured point:
+//! the achieved FLOP rate of our rust SCRIMP on this host against the
+//! host's own crude roofline.
+
+use natsa::benchmark::{black_box, time_budget, Table};
+use natsa::mp::{scrimp, MpConfig};
+use natsa::sim::roofline::{fig4_points, Roofline};
+use natsa::sim::Workload;
+use natsa::timeseries::generator::{generate, Pattern};
+
+fn main() {
+    // (a) model
+    let w = Workload::new(1_048_576, 256);
+    let roof = Roofline::knl7210();
+    let mut t = Table::new(&["memory", "AI flop/B", "achieved GF/s", "attainable GF/s", "% peak"]);
+    for (name, p) in fig4_points(&w) {
+        t.row(&[
+            name,
+            format!("{:.3}", p.ai_flop_per_byte),
+            format!("{:.1}", p.achieved_gflops),
+            format!("{:.1}", p.attainable_gflops),
+            format!("{:.2}%", p.peak_fraction * 100.0),
+        ]);
+    }
+    t.print(&format!(
+        "Fig. 4 (model): KNL roofline, peak {:.0} GFLOP/s, ridges {:.1} / {:.1} flop/B",
+        roof.peak_gflops,
+        roof.ridge(0),
+        roof.ridge(1)
+    ));
+
+    // (b) measured: flops/s of rust SCRIMP on this host
+    let n = 40_000;
+    let m = 128;
+    let series = generate::<f64>(Pattern::RandomWalk, n, 2);
+    let cfg = MpConfig::new(m);
+    let (_, work) = scrimp::with_stats(&series, cfg, scrimp::DiagOrder::Sequential).unwrap();
+    let flops = work.flops(m);
+    let s = time_budget(2.0, || {
+        black_box(scrimp::matrix_profile(&series, cfg).unwrap());
+    });
+    println!(
+        "\nmeasured (this host, 1 thread): {:.2} GFLOP/s over {:.2e} flops \
+         ({} per cell model)",
+        flops as f64 / s.median / 1e9,
+        flops as f64,
+        13
+    );
+    println!("paper's point: SCRIMP sits on the bandwidth roof, far below compute peak.");
+}

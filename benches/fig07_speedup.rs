@@ -1,0 +1,56 @@
+//! Fig. 7: NATSA speedup over the DDR4-OoO baseline (DP), all Table 1
+//! sizes, via the calibrated models — plus a functional-plane measurement
+//! comparing our serial SCRIMP against the NATSA engine (48 logical PUs
+//! on host threads) to show the coordination layer itself scales.
+
+use natsa::benchmark::{black_box, time_budget, Table};
+use natsa::mp::{scrimp, MpConfig};
+use natsa::natsa::{NatsaConfig, NatsaEngine};
+use natsa::sim::accel::NatsaDesign;
+use natsa::sim::platform::GpPlatform;
+use natsa::sim::{Precision, Workload};
+use natsa::timeseries::generator::{generate, Pattern};
+
+fn main() {
+    // (a) model: the paper's figure
+    let base = GpPlatform::ddr4_ooo();
+    let natsa = NatsaDesign::hbm(Precision::Dp);
+    let mut t = Table::new(&["dataset", "baseline(s)", "NATSA-DP(s)", "speedup"]);
+    let mut speedups = Vec::new();
+    for (name, w) in Workload::table1() {
+        let b = base.estimate(&w, Precision::Dp).time_s;
+        let a = natsa.estimate(&w).time_s;
+        speedups.push(b / a);
+        t.row(&[
+            name,
+            format!("{b:.2}"),
+            format!("{a:.2}"),
+            format!("{:.1}x", b / a),
+        ]);
+    }
+    t.print("Fig. 7 (model): NATSA-DP speedup vs DDR4-OoO");
+    println!(
+        "average {:.1}x, max {:.1}x   (paper: 9.9x avg, up to 14.2x)",
+        speedups.iter().sum::<f64>() / speedups.len() as f64,
+        speedups.iter().cloned().fold(0.0, f64::max)
+    );
+
+    // (b) measured: serial SCRIMP vs the NATSA engine on host threads
+    let n = 48_000;
+    let m = 256;
+    let series = generate::<f64>(Pattern::RandomWalk, n, 3);
+    let cfg = MpConfig::new(m);
+    let serial = time_budget(2.0, || {
+        black_box(scrimp::matrix_profile(&series, cfg).unwrap());
+    });
+    let engine = NatsaEngine::<f64>::new(NatsaConfig::default());
+    let fleet = time_budget(2.0, || {
+        black_box(engine.compute(&series, m).unwrap());
+    });
+    println!(
+        "\nmeasured (n={n}, m={m}): serial SCRIMP {} vs NATSA engine {} -> {:.2}x",
+        natsa::benchmark::fmt_time(serial.median),
+        natsa::benchmark::fmt_time(fleet.median),
+        serial.median / fleet.median
+    );
+}

@@ -1,0 +1,5 @@
+//! Fig. 8: dynamic power per platform (rand_512K DP).  Pure model/report
+//! regeneration — power cannot be measured on this substrate.
+fn main() {
+    println!("{}", natsa::report::run("fig8").unwrap());
+}

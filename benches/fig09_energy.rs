@@ -1,0 +1,6 @@
+//! Fig. 9: energy per platform (rand_512K DP), with compute/memory
+//! decomposition and ratios vs NATSA (paper: 27.2x max / 19.4x avg vs
+//! baseline, 10.2x vs HBM-inOrder, 1.7x/4.1x/11x vs K40c/GTX1050/KNL).
+fn main() {
+    println!("{}", natsa::report::run("fig9").unwrap());
+}

@@ -1,0 +1,19 @@
+//! Fig. 10: area comparison (NATSA smallest at the largest node), plus
+//! the bottom-up Table 3 per-PU area reconstruction.
+use natsa::natsa::pu::PuDesign;
+use natsa::sim::area::ComponentAreas;
+use natsa::sim::Precision;
+
+fn main() {
+    println!("{}", natsa::report::run("fig10").unwrap());
+    for (label, prec, d) in [
+        ("DP", Precision::Dp, PuDesign::dp()),
+        ("SP", Precision::Sp, PuDesign::sp()),
+    ] {
+        let a = ComponentAreas::at_45nm(prec).pu_area_mm2(&d);
+        println!(
+            "bottom-up PU-{label} area: {a:.2} mm^2 (Table 3: {:.2} mm^2)",
+            d.area_mm2
+        );
+    }
+}

@@ -1,0 +1,5 @@
+//! Fig. 11: general-purpose platform speedups over the baseline and their
+//! memory bandwidth usage, all Table 1 sizes (model).
+fn main() {
+    println!("{}", natsa::report::run("fig11").unwrap());
+}

@@ -1,0 +1,116 @@
+//! Hot-path microbenchmarks — the L3 perf-pass instrument.
+//!
+//! Covers the kernels the profile shows hottest: the SCRIMP diagonal walk
+//! (cells/s), the per-chunk batch size, the stats precompute, scheduling,
+//! and profile reduction.  EXPERIMENTS.md §Perf records these before and
+//! after each optimization step.
+
+use natsa::benchmark::{black_box, fmt_time, time_budget, Table};
+use natsa::mp::scrimp::compute_diagonal;
+use natsa::mp::{MatrixProfile, MpConfig, WorkStats};
+use natsa::natsa::scheduler;
+use natsa::timeseries::generator::{generate, Pattern};
+use natsa::timeseries::sliding_stats;
+use natsa::timeseries::stats::sliding_stats_exact;
+
+fn main() {
+    let n = 262_144;
+    let m = 256;
+    let t64 = generate::<f64>(Pattern::RandomWalk, n, 9);
+    let t32: Vec<f32> = t64.iter().map(|&x| x as f32).collect();
+    let st64 = sliding_stats(&t64, m);
+    let st32 = sliding_stats(&t32, m);
+    let nw = st64.len();
+    let excl = m / 4;
+
+    // 1. diagonal walk throughput (the inner loop of everything)
+    let mut table = Table::new(&["kernel", "median", "cells/s"]);
+    {
+        let mut mp = MatrixProfile::<f64>::new_inf(nw, m, excl);
+        let mut work = WorkStats::default();
+        let d = excl; // longest diagonal: nw - excl cells
+        let cells = (nw - d) as u64;
+        let s = time_budget(2.0, || {
+            compute_diagonal(&t64, &st64, d, &mut mp, &mut work);
+            black_box(&mp);
+        });
+        table.row(&[
+            "diag walk f64".into(),
+            fmt_time(s.median),
+            format!("{:.2e}", s.throughput(cells)),
+        ]);
+    }
+    {
+        let mut mp = MatrixProfile::<f32>::new_inf(nw, m, excl);
+        let mut work = WorkStats::default();
+        let d = excl;
+        let cells = (nw - d) as u64;
+        let s = time_budget(2.0, || {
+            compute_diagonal(&t32, &st32, d, &mut mp, &mut work);
+            black_box(&mp);
+        });
+        table.row(&[
+            "diag walk f32".into(),
+            fmt_time(s.median),
+            format!("{:.2e}", s.throughput(cells)),
+        ]);
+    }
+
+    // 2. stats precompute: cumsum vs exact
+    {
+        let s = time_budget(1.0, || {
+            black_box(sliding_stats(&t64, m));
+        });
+        table.row(&[
+            "stats cumsum".into(),
+            fmt_time(s.median),
+            format!("{:.2e}", s.throughput(n as u64)),
+        ]);
+        let s = time_budget(1.0, || {
+            black_box(sliding_stats_exact(&t64[..32_768], m));
+        });
+        table.row(&[
+            "stats exact (32K)".into(),
+            fmt_time(s.median),
+            format!("{:.2e}", s.throughput(32_768)),
+        ]);
+    }
+
+    // 3. scheduling + reduction
+    {
+        let s = time_budget(1.0, || {
+            black_box(scheduler::schedule(nw, excl, 48));
+        });
+        table.row(&[
+            "schedule 48 PUs".into(),
+            fmt_time(s.median),
+            format!("{:.2e}", s.throughput((nw - excl) as u64)),
+        ]);
+        let mut a = MatrixProfile::<f64>::new_inf(nw, m, excl);
+        let b = MatrixProfile::<f64>::new_inf(nw, m, excl);
+        let s = time_budget(1.0, || {
+            a.merge(black_box(&b));
+        });
+        table.row(&[
+            "profile merge".into(),
+            fmt_time(s.median),
+            format!("{:.2e}", s.throughput(nw as u64)),
+        ]);
+    }
+
+    // 4. end-to-end small profile (scrimp serial), the workhorse number
+    {
+        let small = generate::<f64>(Pattern::RandomWalk, 32_768, 10);
+        let cfg = MpConfig::new(m);
+        let cells = natsa::mp::total_cells(32_768 - m + 1, excl);
+        let s = time_budget(2.0, || {
+            black_box(natsa::mp::scrimp::matrix_profile(&small, cfg).unwrap());
+        });
+        table.row(&[
+            "scrimp 32K e2e".into(),
+            fmt_time(s.median),
+            format!("{:.2e}", s.throughput(cells)),
+        ]);
+    }
+    table.print("hot paths (n=256K series context, m=256)");
+}

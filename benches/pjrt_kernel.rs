@@ -1,0 +1,120 @@
+//! PJRT hot-path benchmark: throughput of the AOT diag_chunk kernel and
+//! the end-to-end coordinator on a small workload.  Skips (with a clear
+//! message) when `make artifacts` has not run.
+//!
+//! This is the L1/L2 perf-pass instrument: interpret-mode Pallas on CPU
+//! measures *structure* (calls, per-call overhead), not TPU speed — the
+//! TPU projection lives in DESIGN.md §7.
+
+use natsa::benchmark::{black_box, fmt_time, time, time_budget, Table};
+use natsa::coordinator::PjrtEngine;
+use natsa::natsa::NatsaConfig;
+use natsa::runtime::{default_artifact_dir, Runtime};
+use natsa::timeseries::generator::{generate, Pattern};
+use natsa::timeseries::sliding_stats;
+
+fn main() {
+    let dir = default_artifact_dir();
+    let rt = match Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP pjrt_kernel bench: {e}");
+            return;
+        }
+    };
+
+    let m = 128;
+    // chunk length of the preferred lowered kernel (largest available V)
+    let v = rt
+        .manifest()
+        .find(natsa::runtime::ArtifactKind::DiagChunk, "f64", m)
+        .expect("diag_chunk artifact")
+        .v;
+    let n = 4 * v + 2 * m;
+    let t64 = generate::<f64>(Pattern::RandomWalk, n, 13);
+    let st = sliding_stats(&t64, m);
+
+    // per-call kernel latency (dot_init, diag_chunk) for both dtypes
+    let mut table = Table::new(&["kernel", "median/call", "cells/s"]);
+    {
+        let s = time_budget(1.5, || {
+            black_box(rt.dot_init(m, &t64[..m], &t64[m..2 * m]).unwrap());
+        });
+        table.row(&["dot_init f64".into(), fmt_time(s.median), "-".into()]);
+    }
+    {
+        let ta = &t64[0..v + m];
+        let tb = &t64[m - 1..m - 1 + v + m];
+        let mu_a = &st.mu[1..1 + v];
+        let sig_a = &st.sig[1..1 + v];
+        let mu_b = &st.mu[m..m + v];
+        let sig_b = &st.sig[m..m + v];
+        let q0 = t64[1..1 + m]
+            .iter()
+            .zip(&t64[m..2 * m])
+            .map(|(a, b)| a * b)
+            .sum::<f64>();
+        let s = time_budget(2.0, || {
+            black_box(
+                rt.diag_chunk(m, Some(v), ta, tb, mu_a, sig_a, mu_b, sig_b, q0, v)
+                    .unwrap(),
+            );
+        });
+        table.row(&[
+            format!("diag_chunk f64 ({v} cells)"),
+            fmt_time(s.median),
+            format!("{:.2e}", s.throughput(v as u64)),
+        ]);
+    }
+    {
+        let t32: Vec<f32> = t64.iter().map(|&x| x as f32).collect();
+        let st32 = sliding_stats(&t32, m);
+        let q0 = t32[1..1 + m]
+            .iter()
+            .zip(&t32[m..2 * m])
+            .map(|(a, b)| a * b)
+            .sum::<f32>();
+        let s = time_budget(2.0, || {
+            black_box(
+                rt.diag_chunk(
+                    m,
+                    Some(v),
+                    &t32[0..v + m],
+                    &t32[m - 1..m - 1 + v + m],
+                    &st32.mu[1..1 + v],
+                    &st32.sig[1..1 + v],
+                    &st32.mu[m..m + v],
+                    &st32.sig[m..m + v],
+                    q0,
+                    v,
+                )
+                .unwrap(),
+            );
+        });
+        table.row(&[
+            format!("diag_chunk f32 ({v} cells)"),
+            fmt_time(s.median),
+            format!("{:.2e}", s.throughput(v as u64)),
+        ]);
+    }
+    table.print("AOT kernel latency via PJRT (interpret-mode Pallas, CPU)");
+
+    // end-to-end coordinator throughput, 1 vs 4 workers
+    let n_e2e = 2048;
+    let series = generate::<f64>(Pattern::RandomWalk, n_e2e, 14);
+    let cells = natsa::mp::total_cells(n_e2e - m + 1, m / 4);
+    let mut table = Table::new(&["workers", "median", "cells/s"]);
+    for workers in [1usize, 2, 4] {
+        let engine = PjrtEngine::<f64>::new(NatsaConfig::default(), dir.clone())
+            .with_workers(workers);
+        let s = time(0, 3, || {
+            black_box(engine.compute(&series, m).unwrap());
+        });
+        table.row(&[
+            workers.to_string(),
+            fmt_time(s.median),
+            format!("{:.2e}", s.throughput(cells)),
+        ]);
+    }
+    table.print(&format!("PJRT coordinator end-to-end (n={n_e2e}, m={m})"));
+}

@@ -1,0 +1,39 @@
+//! Section 6.5: sensitivity to the subsequence length m — model
+//! regeneration plus a measured sweep of rust SCRIMP, which must show the
+//! same effect: larger m reduces execution time, strongly when n/m is
+//! small and weakly when n/m is large.
+
+use natsa::benchmark::{black_box, fmt_time, time_budget, Table};
+use natsa::mp::{scrimp, MpConfig};
+use natsa::timeseries::generator::{generate, Pattern};
+
+fn main() {
+    println!("{}", natsa::report::run("sens-m").unwrap());
+
+    let mut t = Table::new(&["n", "m", "median", "vs m=min"]);
+    for n in [8_192usize, 49_152] {
+        let series = generate::<f64>(Pattern::RandomWalk, n, 6);
+        let ms: Vec<usize> = vec![64, 256, 1024, n / 8];
+        let mut base = 0.0;
+        for (k, &m) in ms.iter().enumerate() {
+            let cfg = MpConfig::new(m);
+            let s = time_budget(1.0, || {
+                black_box(scrimp::matrix_profile(&series, cfg).unwrap());
+            });
+            if k == 0 {
+                base = s.median;
+            }
+            t.row(&[
+                n.to_string(),
+                m.to_string(),
+                fmt_time(s.median),
+                format!("{:+.1}%", (s.median / base - 1.0) * 100.0),
+            ]);
+        }
+    }
+    t.print("measured: rust SCRIMP window-length sensitivity");
+    println!(
+        "\npaper: m 1K->16K cuts time 41% at n=128K but only 13% at n=2M\n\
+         (shorter profiles + fewer diagonals; first-dot amortization)."
+    );
+}

@@ -1,0 +1,56 @@
+//! Table 2: execution time for SP and DP across six configs and the five
+//! Table 1 sizes (model vs paper), plus wall-clock of the functional
+//! engines on down-scaled workloads so the trends are also *measured*.
+
+use natsa::benchmark::{black_box, fmt_time, time_budget, Table};
+use natsa::mp::{scrimp, stomp, MpConfig};
+use natsa::natsa::{NatsaConfig, NatsaEngine};
+use natsa::sim::accel::NatsaDesign;
+use natsa::sim::platform::GpPlatform;
+use natsa::sim::{Precision, Workload};
+use natsa::timeseries::generator::{generate, Pattern};
+
+fn main() {
+    // (a) the paper table, model vs paper rows
+    println!("{}", natsa::report::run("table2").unwrap());
+
+    // (b) measured trends on this host (sizes scaled down ~32x)
+    let m = 256;
+    let mut t = Table::new(&["n", "scrimp f64", "scrimp f32", "stomp f64", "natsa f64"]);
+    for n in [16_384usize, 32_768, 49_152] {
+        let t64 = generate::<f64>(Pattern::RandomWalk, n, 4);
+        let t32: Vec<f32> = t64.iter().map(|&x| x as f32).collect();
+        let cfg = MpConfig::new(m);
+        let s64 = time_budget(1.0, || {
+            black_box(scrimp::matrix_profile(&t64, cfg).unwrap());
+        });
+        let s32 = time_budget(1.0, || {
+            black_box(scrimp::matrix_profile(&t32, cfg).unwrap());
+        });
+        let st = time_budget(1.0, || {
+            black_box(stomp::matrix_profile(&t64, cfg).unwrap());
+        });
+        let engine = NatsaEngine::<f64>::new(NatsaConfig::default());
+        let na = time_budget(1.0, || {
+            black_box(engine.compute(&t64, m).unwrap());
+        });
+        t.row(&[
+            n.to_string(),
+            fmt_time(s64.median),
+            fmt_time(s32.median),
+            fmt_time(st.median),
+            fmt_time(na.median),
+        ]);
+    }
+    t.print("measured on this host (functional plane, m=256)");
+
+    // quadratic scaling check, as in Table 2
+    let w1 = Workload::new(16_384, m);
+    let w2 = Workload::new(65_536, m);
+    println!(
+        "\ncell ratio 16K->64K: {:.1}x (time should scale ~the same; Table 2 scales ~16x per 4x n)",
+        w2.cells as f64 / w1.cells as f64
+    );
+    let _ = GpPlatform::ddr4_ooo(); // keep model linkage for the reader
+    let _ = NatsaDesign::hbm(Precision::Dp);
+}

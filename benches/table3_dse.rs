@@ -1,0 +1,56 @@
+//! Table 3 + Section 6.3: design-space exploration of the PU count on
+//! HBM and DDR4, cross-checking the closed-form model against the
+//! chunk-level discrete-event simulator (and timing the DES itself).
+
+use natsa::benchmark::{black_box, time, Table};
+use natsa::sim::accel::{design_space, NatsaDesign};
+use natsa::sim::dram::DramConfig;
+use natsa::sim::{Precision, Workload};
+
+fn main() {
+    println!("{}", natsa::report::run("table3").unwrap());
+
+    // DES cross-check + its own cost (it is part of the eval substrate).
+    let w = Workload::new(524_288, 256);
+    let mut t = Table::new(&["design", "closed(s)", "DES(s)", "delta", "events", "DES cost"]);
+    for (label, d) in [
+        ("DP 32PU", NatsaDesign::hbm(Precision::Dp).with_pus(32)),
+        ("DP 48PU", NatsaDesign::hbm(Precision::Dp)),
+        ("DP 64PU", NatsaDesign::hbm(Precision::Dp).with_pus(64)),
+        ("SP 48PU", NatsaDesign::hbm(Precision::Sp)),
+        ("DP 8PU DDR4", NatsaDesign::ddr4(Precision::Dp)),
+    ] {
+        let cf = d.estimate(&w);
+        let mut events = 0;
+        let mut des_time = 0.0;
+        let s = time(0, 3, || {
+            let (e, ev) = d.simulate(&w, None);
+            events = ev;
+            des_time = e.time_s;
+            black_box(e);
+        });
+        t.row(&[
+            label.to_string(),
+            format!("{:.2}", cf.time_s),
+            format!("{des_time:.2}"),
+            format!("{:+.1}%", (des_time / cf.time_s - 1.0) * 100.0),
+            events.to_string(),
+            natsa::benchmark::fmt_time(s.median),
+        ]);
+    }
+    t.print("closed form vs DES (rand_512K)");
+
+    // PU-count sweep timing of the closed form (cheap, used everywhere)
+    let s = time(1, 10, || {
+        black_box(design_space(
+            Precision::Dp,
+            DramConfig::hbm2(),
+            &[8, 16, 24, 32, 40, 48, 56, 64, 96, 128],
+            &w,
+        ));
+    });
+    println!(
+        "\n10-point DSE sweep costs {} (closed form)",
+        natsa::benchmark::fmt_time(s.median)
+    );
+}

@@ -1,0 +1,73 @@
+//! Serving demo: many clients submitting time series analysis jobs to a
+//! bounded-queue NATSA service (the L3 coordinator as a deployable
+//! component: workers, backpressure, latency metrics).
+//!
+//! Run: `cargo run --release --example analysis_service`
+
+use std::sync::Arc;
+
+use natsa::coordinator::service::{AnalysisService, SubmitError};
+use natsa::natsa::NatsaConfig;
+use natsa::timeseries::generator::{generate, Pattern};
+
+fn main() {
+    let service: Arc<AnalysisService<f64>> = Arc::new(AnalysisService::start(
+        NatsaConfig::default(),
+        /* workers */ 3,
+        /* queue depth */ 8,
+    ));
+
+    // 4 client threads, 6 jobs each, mixed workloads.
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let svc = service.clone();
+            std::thread::spawn(move || {
+                let mut done = 0;
+                let mut rejected = 0;
+                for k in 0..6u64 {
+                    let pattern = match (c + k) % 3 {
+                        0 => Pattern::EcgLike,
+                        1 => Pattern::SeismicLike,
+                        _ => Pattern::PlantedMotif,
+                    };
+                    let n = 2048 + 512 * ((c as usize + k as usize) % 4);
+                    let series = Arc::new(generate::<f64>(pattern, n, 100 * c + k));
+                    // retry loop under backpressure
+                    let id = loop {
+                        match svc.submit(series.clone(), 64) {
+                            Ok(id) => break id,
+                            Err(SubmitError::Backpressure) => {
+                                rejected += 1;
+                                std::thread::sleep(std::time::Duration::from_millis(5));
+                            }
+                            Err(e) => panic!("{e}"),
+                        }
+                    };
+                    let result = svc.wait(id);
+                    let profile = result.profile.expect("job must succeed");
+                    let (disc, d) = profile.discord().unwrap();
+                    println!(
+                        "client {c}: job {id} ({} n={n}) -> discord @{disc} d={d:.3} \
+                         (wait {:.1}ms, exec {:.1}ms)",
+                        pattern.name(),
+                        result.queue_wait_s * 1e3,
+                        result.exec_s * 1e3,
+                    );
+                    done += 1;
+                }
+                (done, rejected)
+            })
+        })
+        .collect();
+
+    let mut total_done = 0;
+    let mut total_retries = 0;
+    for c in clients {
+        let (done, rejected) = c.join().unwrap();
+        total_done += done;
+        total_retries += rejected;
+    }
+    println!("\nall clients done: {total_done} jobs, {total_retries} backpressure retries");
+    println!("service metrics: {}", service.metrics().summary());
+    assert_eq!(total_done, 24);
+}

@@ -1,0 +1,47 @@
+//! Anytime property demo (paper Sections 1 / 4.2): interrupt NATSA at
+//! increasing work budgets and watch the planted motif emerge long before
+//! full coverage — but only when diagonals are visited in random order.
+//!
+//! Run: `cargo run --release --example anytime_demo`
+
+use natsa::benchmark::Table;
+use natsa::natsa::anytime::{run_anytime, Budget};
+use natsa::natsa::{NatsaConfig, Order};
+use natsa::timeseries::generator::{generate_with_event, Pattern, PlantedEvent};
+
+fn main() -> anyhow::Result<()> {
+    let n = 8192;
+    let m = 64;
+    let (t, ev) = generate_with_event::<f64>(Pattern::PlantedMotif, n, 11);
+    let (a, b) = match ev {
+        PlantedEvent::Motif { a, b, .. } => (a, b),
+        _ => unreachable!(),
+    };
+    println!("planted motif pair at windows {a} and {b} (n={n}, m={m})");
+
+    for (order, label) in [
+        (Order::Random(123), "random order (anytime preserved)"),
+        (Order::Sequential, "sequential order (anytime forfeited)"),
+    ] {
+        let config = NatsaConfig::default().with_order(order);
+        let mut table = Table::new(&["budget", "progress", "best motif d", "found pair?"]);
+        for pct in [2, 5, 10, 25, 50, 100] {
+            let out = run_anytime(&t, m, &config, Budget::Fraction(pct as f64 / 100.0))?;
+            let (mi, md) = out.profile.motif().unwrap();
+            let found = md < 1e-6 && (mi == a || mi == b);
+            table.row(&[
+                format!("{pct}%"),
+                format!("{:.1}%", out.progress * 100.0),
+                format!("{md:.4}"),
+                if found { "YES".into() } else { "no".into() },
+            ]);
+        }
+        table.print(label);
+    }
+    println!(
+        "\nRandom order finds the motif at a small fraction of the work;\n\
+         sequential order only discovers events up to the interruption\n\
+         point (the trade-off Section 4.2 describes)."
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Design-space exploration (paper Section 6.3): sweep PU counts and
+//! memory technologies, cross-check the closed-form model against the
+//! chunk-level discrete-event simulation, and print the balance analysis
+//! that selects 48 PUs for HBM (and 8 for DDR4, footnote 2).
+//!
+//! Run: `cargo run --release --example design_space`
+
+use natsa::benchmark::Table;
+use natsa::sim::accel::{design_space, NatsaDesign};
+use natsa::sim::dram::DramConfig;
+use natsa::sim::{Precision, Workload};
+
+fn main() {
+    let w = Workload::new(524_288, 256); // rand_512K, the paper's pivot
+
+    for (prec, label) in [(Precision::Dp, "DP"), (Precision::Sp, "SP")] {
+        let mut table = Table::new(&["PUs", "time(s)", "bound", "BW-util", "area mm^2", "peak W"]);
+        for p in design_space(prec, DramConfig::hbm2(), &[8, 16, 24, 32, 48, 64, 96, 128], &w) {
+            table.row(&[
+                p.pus.to_string(),
+                format!("{:.2}", p.time_s),
+                p.bound.to_string(),
+                format!("{:.0}%", p.bw_utilization * 100.0),
+                format!("{:.1}", p.area_mm2),
+                format!("{:.2}", p.peak_power_w),
+            ]);
+        }
+        table.print(&format!("HBM design space, {label}, rand_512K"));
+    }
+
+    // Closed form vs discrete-event simulation at the chosen point.
+    let mut table = Table::new(&["design", "closed-form(s)", "DES(s)", "delta", "DES events"]);
+    for (label, d) in [
+        ("NATSA-DP 48PU/HBM", NatsaDesign::hbm(Precision::Dp)),
+        ("NATSA-SP 48PU/HBM", NatsaDesign::hbm(Precision::Sp)),
+        ("NATSA-DP 8PU/DDR4", NatsaDesign::ddr4(Precision::Dp)),
+    ] {
+        let cf = d.estimate(&w);
+        let (des, events) = d.simulate(&w, None);
+        table.row(&[
+            label.to_string(),
+            format!("{:.2}", cf.time_s),
+            format!("{:.2}", des.time_s),
+            format!("{:+.1}%", (des.time_s / cf.time_s - 1.0) * 100.0),
+            events.to_string(),
+        ]);
+    }
+    table.print("closed-form vs chunk-level DES");
+
+    // The balance argument, in numbers.
+    let d = NatsaDesign::hbm(Precision::Dp);
+    println!(
+        "\nper-PU demand {:.2} GB/s vs share {:.2} GB/s at 48 PUs -> balanced;",
+        d.demand_per_pu_gbs(),
+        d.bw_per_pu_gbs()
+    );
+    println!(
+        "paper: 48 PUs balanced, 32 compute-bound, 64 memory-bound; DDR4 saturates at 8 PUs."
+    );
+}

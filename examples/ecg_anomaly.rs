@@ -1,0 +1,90 @@
+//! End-to-end driver: arrhythmia detection through the FULL three-layer
+//! stack (the repo's headline validation run — see EXPERIMENTS.md §E2E).
+//!
+//! Pipeline exercised:
+//!   synthetic ECG (rust)  →  host stats + diagonal-pair schedule (rust,
+//!   Alg. 2)  →  AOT Pallas diag_chunk/dot_init kernels (lowered by
+//!   python/compile/aot.py, executed via xla/PJRT)  →  PU-private profile
+//!   updates + host reduction (rust)  →  anomaly report,
+//! then cross-checked bit-for-bit against the native SCRIMP baseline and
+//! the brute-force oracle, in both precisions (the paper's Fig. 12
+//! experiment), with the timing/energy models projecting the run onto the
+//! paper's platforms.
+//!
+//! Requires `make artifacts`.  Run:
+//!   cargo run --release --example ecg_anomaly
+
+use natsa::coordinator::PjrtEngine;
+use natsa::mp::{brute, scrimp, MpConfig};
+use natsa::natsa::NatsaConfig;
+use natsa::runtime::default_artifact_dir;
+use natsa::sim::accel::NatsaDesign;
+use natsa::sim::platform::GpPlatform;
+use natsa::sim::{Precision, Workload};
+use natsa::timeseries::generator::{generate_with_event, Pattern, PlantedEvent};
+
+fn main() -> anyhow::Result<()> {
+    let n = 4096;
+    let m = 64;
+    let (t64, ev) = generate_with_event::<f64>(Pattern::EcgLike, n, 5);
+    let (start, len) = match ev {
+        PlantedEvent::Anomaly { start, len } => (start, len),
+        _ => unreachable!(),
+    };
+    println!("ECG-like series: n={n}, beat anomaly planted at [{start}, {})", start + len);
+
+    // ---- Layer 3 + 2 + 1: PJRT engine over the AOT Pallas kernels (DP).
+    let engine = PjrtEngine::<f64>::new(NatsaConfig::default(), default_artifact_dir())
+        .with_workers(4);
+    let out = engine.compute(&t64, m)?;
+    println!(
+        "\n[PJRT/AOT DP] {} chunk + {} dot kernel calls on {} workers",
+        out.metrics.chunk_calls, out.metrics.dot_calls, out.metrics.workers
+    );
+    println!(
+        "  kernel time {:.2}s, wall {:.2}s, {} cells",
+        out.metrics.kernel_seconds, out.metrics.wall_seconds, out.work.cells
+    );
+    let (discord, dist) = out.profile.discord().unwrap();
+    let hit = discord + m >= start && discord < start + len + m;
+    println!("  discord at {discord} (d={dist:.3}) -> anomaly {}", if hit { "DETECTED" } else { "MISSED" });
+    anyhow::ensure!(hit, "e2e run must detect the planted arrhythmia");
+
+    // ---- Cross-check against native SCRIMP and the brute-force oracle.
+    let native = scrimp::matrix_profile(&t64, MpConfig::new(m))?;
+    let oracle = brute::matrix_profile(&t64, MpConfig::new(m))?;
+    let d_native = out.profile.max_abs_diff(&native);
+    let d_oracle = out.profile.max_abs_diff(&oracle);
+    println!("\n[validation] max |PJRT - native SCRIMP| = {d_native:.2e}");
+    println!("[validation] max |PJRT - brute oracle|  = {d_oracle:.2e}");
+    anyhow::ensure!(d_native < 1e-8, "AOT kernels diverged from native");
+    anyhow::ensure!(d_oracle < 1e-7, "AOT kernels diverged from the oracle");
+
+    // ---- Fig. 12: single precision detects the same event.
+    let t32: Vec<f32> = t64.iter().map(|&x| x as f32).collect();
+    let engine_sp = PjrtEngine::<f32>::new(NatsaConfig::default(), default_artifact_dir())
+        .with_workers(4);
+    let out_sp = engine_sp.compute(&t32, m)?;
+    let (discord_sp, dist_sp) = out_sp.profile.discord().unwrap();
+    let hit_sp = discord_sp + m >= start && discord_sp < start + len + m;
+    println!(
+        "\n[PJRT/AOT SP] discord at {discord_sp} (d={dist_sp:.3}) -> anomaly {}",
+        if hit_sp { "DETECTED" } else { "MISSED" }
+    );
+    anyhow::ensure!(hit_sp, "SP run must detect the event too (paper Fig. 12)");
+
+    // ---- Project this workload onto the paper's platforms (Table 2 path).
+    println!("\n[projection] modeled time for this workload (n={n}, m={m}):");
+    let w = Workload::new(n, m);
+    let base = GpPlatform::ddr4_ooo().estimate(&w, Precision::Dp);
+    let natsa_dp = NatsaDesign::hbm(Precision::Dp).estimate(&w);
+    println!(
+        "  DDR4-OoO {:.4}s vs NATSA {:.4}s -> modeled speedup {:.1}x, energy ratio {:.1}x",
+        base.time_s,
+        natsa_dp.time_s,
+        base.time_s / natsa_dp.time_s,
+        base.energy_j / natsa_dp.energy_j,
+    );
+    println!("\nE2E OK: all three layers compose and agree with the oracle.");
+    Ok(())
+}

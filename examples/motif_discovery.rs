@@ -1,0 +1,102 @@
+//! Motif discovery workflow: preprocessing → fast approximate pass
+//! (PreSCRIMP) → exact NATSA run → top-k ranked events.
+//!
+//! The shape of a real analysis session from the paper's §1 application
+//! list: repair a gappy recording, detrend it, get an interactive-speed
+//! approximate answer, then confirm with the exact engine and extract the
+//! ranked motif/discord report.
+//!
+//! Run: `cargo run --release --example motif_discovery`
+
+use natsa::benchmark::Table;
+use natsa::mp::{prescrimp, topk, MpConfig};
+use natsa::natsa::{NatsaConfig, NatsaEngine};
+use natsa::timeseries::generator::{generate_with_event, Pattern, PlantedEvent};
+use natsa::timeseries::transform::{detrend, repair_gaps, standardize};
+
+fn main() -> anyhow::Result<()> {
+    // A "field recording": planted motif + drift + sensor dropouts.
+    let n = 8192;
+    let m = 64;
+    let (mut t, ev) = generate_with_event::<f64>(Pattern::PlantedMotif, n, 21);
+    let (a, b, mlen) = match ev {
+        PlantedEvent::Motif { a, b, len } => (a, b, len),
+        _ => unreachable!(),
+    };
+    for (i, v) in t.iter_mut().enumerate() {
+        *v += 0.002 * i as f64; // slow drift
+    }
+    for gap in [500usize, 3000, 7777] {
+        for k in 0..5 {
+            t[gap + k] = f64::NAN; // dropouts
+        }
+    }
+
+    // 1. preprocessing
+    let mut t = repair_gaps(&t)?;
+    detrend(&mut t);
+    standardize(&mut t);
+    println!("preprocessed: n={n}, gaps repaired, detrended, standardized");
+
+    // 2. interactive pass: PreSCRIMP (O(n^2/s) work)
+    let t0 = std::time::Instant::now();
+    let (approx, work) = prescrimp::matrix_profile(&t, MpConfig::new(m), None, 9)?;
+    let (mi, md) = approx.motif().unwrap();
+    println!(
+        "\nPreSCRIMP ({} cells, {:.0} ms): best motif so far @{mi} d={md:.4}",
+        work.cells,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // 3. exact pass: NATSA engine
+    let t0 = std::time::Instant::now();
+    let exact = NatsaEngine::<f64>::new(NatsaConfig::default()).compute(&t, m)?;
+    println!(
+        "NATSA exact ({} cells, {:.0} ms)",
+        exact.work.cells,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // PreSCRIMP must upper-bound the exact profile
+    let worst = approx
+        .p
+        .iter()
+        .zip(&exact.profile.p)
+        .map(|(ap, ex)| ex - ap)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!("approx-vs-exact: max(exact - approx) = {worst:.2e} (<= 0 means upper bound)");
+
+    // 4. ranked report
+    let mut table = Table::new(&["rank", "kind", "window", "neighbor", "distance"]);
+    for (r, ev) in topk::top_motifs(&exact.profile, 3).iter().enumerate() {
+        table.row(&[
+            (r + 1).to_string(),
+            "motif".into(),
+            ev.index.to_string(),
+            ev.neighbor.to_string(),
+            format!("{:.4}", ev.distance),
+        ]);
+    }
+    for (r, ev) in topk::top_discords(&exact.profile, 3).iter().enumerate() {
+        table.row(&[
+            (r + 1).to_string(),
+            "discord".into(),
+            ev.index.to_string(),
+            ev.neighbor.to_string(),
+            format!("{:.4}", ev.distance),
+        ]);
+    }
+    table.print("top-k events");
+
+    // the planted segment is longer than m, so every window inside it is
+    // an exact repeat: rank-1 must fall within either copy's span
+    let top = topk::top_motifs(&exact.profile, 1)[0];
+    let inside = |x: usize, s: usize| x >= s && x + m <= s + mlen;
+    anyhow::ensure!(
+        inside(top.index, a) || inside(top.index, b),
+        "rank-1 motif at {} outside planted spans [{a},+{mlen}) / [{b},+{mlen})",
+        top.index
+    );
+    println!("\nplanted motif pair ({a}, {b}) recovered as rank-1 ✓");
+    Ok(())
+}

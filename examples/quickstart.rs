@@ -1,0 +1,60 @@
+//! Quickstart: compute a matrix profile with NATSA and find the anomaly.
+//!
+//! Reproduces the paper's Fig. 1 scenario end to end on the functional
+//! engine, then — if `make artifacts` has been run — also executes the
+//! self-contained AOT `mp_tile` kernel through PJRT to show the compiled
+//! path producing the same answer.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use natsa::natsa::{NatsaConfig, NatsaEngine};
+use natsa::runtime::{default_artifact_dir, Runtime};
+use natsa::timeseries::generator::{generate_with_event, Pattern, PlantedEvent};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A periodic signal with a planted anomaly (the paper's Fig. 1).
+    let n = 4096;
+    let m = 64;
+    let (t, event) = generate_with_event::<f64>(Pattern::SineWithAnomaly, n, 7);
+    let (start, len) = match event {
+        PlantedEvent::Anomaly { start, len } => (start, len),
+        _ => unreachable!(),
+    };
+    println!("series: n={n}, window m={m}, planted anomaly at [{start}, {})", start + len);
+
+    // 2. NATSA: Algorithm 2 over 48 PUs (functional engine).
+    let engine = NatsaEngine::<f64>::new(NatsaConfig::default());
+    let out = engine.compute(&t, m)?;
+    let (discord, dist) = out.profile.discord().expect("profile non-empty");
+    println!(
+        "NATSA: {} cells on {} PUs (imbalance {:.3})",
+        out.work.cells,
+        out.pu_cells.len(),
+        out.schedule_imbalance
+    );
+    println!("discord (most anomalous window): index {discord}, distance {dist:.3}");
+    let hit = discord + m >= start && discord < start + len + m;
+    println!("anomaly detected: {}", if hit { "YES" } else { "NO" });
+    assert!(hit, "quickstart must find the planted anomaly");
+
+    // 3. Same math through the AOT-compiled Pallas kernel (PJRT), if the
+    //    artifacts are built.  The mp_tile artifact is fixed at n=1024.
+    match Runtime::new(&default_artifact_dir()) {
+        Ok(rt) => {
+            let (t1k, _) = generate_with_event::<f32>(Pattern::SineWithAnomaly, 1024, 7);
+            let (p, _i) = rt.mp_tile(&t1k)?;
+            let nw = 1024 - 64 + 1; // artifact was lowered with m=64
+            let (peak, val) = p[..nw]
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| d.is_finite())
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            println!("PJRT mp_tile (AOT Pallas, n=1024): discord at {peak} (d={val:.3})");
+        }
+        Err(e) => {
+            println!("(PJRT path skipped: {e}; run `make artifacts`)");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+"""AOT compiler: lower every Layer-2 graph to HLO text in ``artifacts/``.
+
+This is the single build-time entry point (``make artifacts``).  It lowers
+each (kind, dtype, m) variant of the Layer-2 graphs with jax.jit, converts
+the StableHLO to an XlaComputation, and dumps **HLO text**:
+
+    the interchange format is HLO text, NOT ``lowered.compile()`` or a
+    serialized HloModuleProto — jax >= 0.5 emits protos with 64-bit
+    instruction ids that the rust side's xla_extension 0.5.1 rejects
+    (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+    round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside the ``.hlo.txt`` files it writes ``manifest.tsv`` — one line per
+artifact with its static parameters — which the rust runtime parses to
+discover available kernel variants (no JSON: the offline vendor set has no
+serde, and a TSV is all the information there is).
+
+Usage:  cd python && python -m compile.aot [--outdir ../artifacts] [--force]
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # before any jnp use: f64 designs
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.diagonal import DEFAULT_CHUNK
+
+# Kernel variant grid.  m values cover the paper's sensitivity range scaled
+# to the artifact budget; rust picks the largest m' <= requested m... no —
+# m is exact: the runtime selects the artifact matching the requested window
+# or falls back to the native path.
+WINDOW_SIZES = (32, 64, 128, 256)
+CHUNK = DEFAULT_CHUNK
+# Larger chunk variant: fewer kernel invocations per diagonal on the rust
+# side (the per-call PJRT+interpret overhead dominates at V=512; the
+# coordinator picks the largest available V).
+CHUNK_LARGE = 2048
+STATS_N = 8192
+TILE_N, TILE_M = 1024, 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_plan():
+    """Yield (name, fn, example_args, meta) for every artifact."""
+    for dname, dtype in model.DTYPES.items():
+        for m in WINDOW_SIZES:
+            for v in (CHUNK, CHUNK_LARGE):
+                yield (
+                    f"diag_chunk_{dname}_m{m}_v{v}",
+                    model.diag_chunk_fn(m, v),
+                    (
+                        _spec((v + m,), dtype), _spec((v + m,), dtype),
+                        _spec((v,), dtype), _spec((v,), dtype),
+                        _spec((v,), dtype), _spec((v,), dtype),
+                        _spec((1,), dtype), _spec((1,), jnp.int32),
+                    ),
+                    {"kind": "diag_chunk", "dtype": dname, "m": m, "v": v, "n": 0},
+                )
+            yield (
+                f"dot_init_{dname}_m{m}",
+                model.dot_init_fn(m),
+                (_spec((m,), dtype), _spec((m,), dtype)),
+                {"kind": "dot_init", "dtype": dname, "m": m, "v": 0, "n": 0},
+            )
+        yield (
+            f"stats_{dname}_m128_n{STATS_N}",
+            model.stats_fn(128),
+            (_spec((STATS_N,), dtype),),
+            {"kind": "stats", "dtype": dname, "m": 128, "v": 0, "n": STATS_N},
+        )
+        yield (
+            f"mp_tile_{dname}_n{TILE_N}_m{TILE_M}",
+            model.mp_tile_fn(TILE_N, TILE_M),
+            (_spec((TILE_N,), dtype),),
+            {"kind": "mp_tile", "dtype": dname, "m": TILE_M, "v": 0, "n": TILE_N},
+        )
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources: skip relowering when unchanged."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in os.walk(base):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="relower even if fresh")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.outdir, exist_ok=True)
+    stamp = os.path.join(args.outdir, ".fingerprint")
+    fp = input_fingerprint()
+    if not args.force and not args.only and os.path.exists(stamp):
+        with open(stamp) as fh:
+            if fh.read().strip() == fp:
+                print("artifacts: fresh (fingerprint match), nothing to do")
+                return 0
+
+    manifest = []
+    for name, fn, specs, meta in build_plan():
+        if args.only and args.only not in name:
+            continue
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as fh:
+            fh.write(text)
+        ins = ";".join(f"{'x'.join(map(str, s.shape))}:{s.dtype}" for s in specs)
+        manifest.append(
+            f"{name}\t{name}.hlo.txt\t{meta['kind']}\t{meta['dtype']}"
+            f"\t{meta['m']}\t{meta['v']}\t{meta['n']}\t{ins}"
+        )
+        print(f"  lowered {name}  ({len(text) / 1024:.0f} KiB)")
+
+    if not args.only:
+        with open(os.path.join(args.outdir, "manifest.tsv"), "w") as fh:
+            fh.write("# name\tfile\tkind\tdtype\tm\tv\tn\tinputs\n")
+            fh.write("\n".join(manifest) + "\n")
+        with open(stamp, "w") as fh:
+            fh.write(fp)
+    print(f"wrote {len(manifest)} artifacts to {args.outdir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,131 @@
+"""Layer-1 Pallas kernels: the NATSA PU datapath.
+
+The paper's PU (Section 4.1, Fig. 5) is a four-stage pipeline:
+
+  DPU   — first dot product of a diagonal (step 1),
+  DCU   — z-norm Euclidean distance, Eq. 1 (steps 2, 5),
+  DPUU  — incremental dot-product update, Eq. 2 (step 4),
+  PUU   — profile min/argmin update (steps 3, 6).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): a diagonal *chunk* of V
+cells is one VMEM tile.  The DPUU's serial chain
+
+    q_k = q_{k-1} - t[i+k-1] t[j+k-1] + t[i+k+m-1] t[j+k+m-1]
+
+is an associative add-scan over the product deltas, so it vectorizes on the
+VPU instead of being a 1-element/cycle recurrence; the PUU becomes a
+per-chunk min/argmin pre-reduction so only O(1) update candidates leave the
+kernel per chunk.  There is no matmul here — matrix profile is a VPU
+workload (the paper's roofline, Fig. 4, puts it far left of the ridge) —
+so BlockSpec tiling targets VMEM residency, not the MXU.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the rust
+runtime loads.  Correctness versus ``ref.py`` is enforced by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["diag_chunk", "dot_init", "DEFAULT_CHUNK"]
+
+# Chunk length V: cells of one diagonal processed per kernel invocation.
+# 512 keeps the f64 tile (2*(V+m)+5*V doubles ~ 30 KB at m=256) comfortably
+# inside a single VMEM block while amortizing scan startup.
+DEFAULT_CHUNK = 512
+
+
+def _diag_chunk_kernel(
+    ta_ref, tb_ref, mu_a_ref, sig_a_ref, mu_b_ref, sig_b_ref, q0_ref, nvalid_ref,
+    dists_ref, qlast_ref, minval_ref, minidx_ref,
+    *, m: int, v: int,
+):
+    """Fused DPUU -> DCU -> PUU over one diagonal chunk.
+
+    Refs (all VMEM-resident for the whole invocation):
+      ta, tb   : (V+m,) series slices starting one point before the chunk's
+                 first windows (Eq. 2 needs t[i-1] and t[i+m-1]).
+      mu_*,sig_*: (V,) precomputed window statistics (host-side, Alg. 2 l.2).
+      q0       : (1,) dot product of the chunk's first window pair (from the
+                 DPU kernel or the previous chunk's q_last).
+      nvalid   : (1,) int32 — live cells; the tail chunk of a diagonal is
+                 padded to V and masked here.
+    Outputs:
+      dists    : (V,) z-norm distances (+inf on masked lanes),
+      q_last   : (1,) dot product at the last *valid* cell (chunk chaining),
+      min_val/min_idx : (1,) PUU pre-reduction over the chunk.
+    """
+    ta = ta_ref[...]
+    tb = tb_ref[...]
+    nvalid = nvalid_ref[0]
+    k = jax.lax.iota(jnp.int32, v)
+    live = k < nvalid
+
+    # --- DPUU: product deltas, then an associative add-scan.  delta_0 = 0
+    # (cell 0's q is q0); masked lanes contribute 0 so q_last lands on the
+    # last valid cell.
+    # ta[x] = t[i0-1+x], so cell k's Eq. 2 terms are
+    #   subtract t[i0+k-1] = ta[k]   and   add t[i0+k+m-1] = ta[k+m].
+    lo = ta[:v] * tb[:v]
+    hi = ta[m : m + v] * tb[m : m + v]
+    delta = jnp.where((k >= 1) & live, hi - lo, jnp.zeros_like(lo))
+    qs = q0_ref[0] + jnp.cumsum(delta)
+
+    # --- DCU: Eq. 1, clamped for numeric safety; sig==0 (constant window)
+    # degenerates to correlation 0 => distance sqrt(2m), as in ref.py.
+    mu_a = mu_a_ref[...]
+    mu_b = mu_b_ref[...]
+    denom = m * sig_a_ref[...] * sig_b_ref[...]
+    corr = jnp.where(denom > 0, (qs - m * mu_a * mu_b) / denom, jnp.zeros_like(qs))
+    d = jnp.sqrt(jnp.maximum(2.0 * m * (1.0 - corr), 0.0))
+    d = jnp.where(live, d, jnp.full_like(d, jnp.inf))
+
+    # --- PUU pre-reduction: the L3 coordinator applies the surviving
+    # candidate to both the row and column private profiles.
+    midx = jnp.argmin(d).astype(jnp.int32)
+
+    dists_ref[...] = d
+    qlast_ref[0] = qs[v - 1]
+    minval_ref[0] = d[midx]
+    minidx_ref[0] = midx
+
+
+@functools.partial(jax.jit, static_argnames=("m", "v"))
+def diag_chunk(ta, tb, mu_a, sig_a, mu_b, sig_b, q0, nvalid, *, m: int, v: int = DEFAULT_CHUNK):
+    """Compute one V-cell diagonal chunk (distances + PUU pre-reduction).
+
+    See ``_diag_chunk_kernel`` for the argument contract and
+    ``ref.diag_chunk_ref`` for the semantics oracle.
+    """
+    dtype = ta.dtype
+    return pl.pallas_call(
+        functools.partial(_diag_chunk_kernel, m=m, v=v),
+        out_shape=(
+            jax.ShapeDtypeStruct((v,), dtype),
+            jax.ShapeDtypeStruct((1,), dtype),
+            jax.ShapeDtypeStruct((1,), dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=True,
+    )(ta, tb, mu_a, sig_a, mu_b, sig_b, q0, nvalid)
+
+
+def _dot_init_kernel(ta_ref, tb_ref, q_ref):
+    """DPU: the O(m) first dot product of a diagonal (Alg. 1 line 7)."""
+    q_ref[0] = jnp.sum(ta_ref[...] * tb_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def dot_init(ta, tb, *, m: int):
+    """Dot product of two length-m windows (the DPU hardware component)."""
+    assert ta.shape == (m,) and tb.shape == (m,)
+    return pl.pallas_call(
+        _dot_init_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), ta.dtype),
+        interpret=True,
+    )(ta, tb)

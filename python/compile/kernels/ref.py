@@ -1,0 +1,124 @@
+"""Pure-jnp reference oracle for the matrix profile and its building blocks.
+
+Everything here is deliberately simple and allocation-heavy: it exists only
+to check the Pallas kernels (diagonal.py, tile.py) and the L2 model graph at
+build time.  Nothing in this file is lowered into artifacts.
+
+Conventions (match the paper, Section 2.1):
+  * window (subsequence) length ``m``; a series of length ``n`` has
+    ``nw = n - m + 1`` windows.
+  * z-normalized Euclidean distance (Eq. 1)::
+
+        d_ij = sqrt(2 m (1 - (q_ij - m mu_i mu_j) / (m sig_i sig_j)))
+
+    with ``q_ij`` the plain dot product of the two windows and ``sigma`` the
+    *population* standard deviation (ddof = 0), as in SCRIMP.
+  * exclusion zone: ``|i - j| < excl`` is skipped; the paper's default is
+    ``excl = m / 4`` (and the main diagonal is always excluded).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "sliding_stats",
+    "znorm_distance",
+    "distance_matrix",
+    "matrix_profile_ref",
+    "diag_chunk_ref",
+    "dot_init_ref",
+    "default_exclusion",
+]
+
+
+def default_exclusion(m: int) -> int:
+    """Paper default exclusion zone: m/4 (at least 1 — the main diagonal)."""
+    return max(1, m // 4)
+
+
+def sliding_stats(t, m: int):
+    """Mean and population std-dev of every length-``m`` window of ``t``.
+
+    O(n) cumulative-sum formulation, matching the host-side
+    ``precalculateMeansDevs`` of Algorithm 1 (line 1).
+    Returns ``(mu, sig)`` each of length ``n - m + 1``.
+    """
+    t = jnp.asarray(t)
+    csum = jnp.concatenate([jnp.zeros(1, t.dtype), jnp.cumsum(t)])
+    csum2 = jnp.concatenate([jnp.zeros(1, t.dtype), jnp.cumsum(t * t)])
+    s = csum[m:] - csum[:-m]
+    s2 = csum2[m:] - csum2[:-m]
+    mu = s / m
+    var = jnp.maximum(s2 / m - mu * mu, 0.0)
+    return mu, jnp.sqrt(var)
+
+
+def znorm_distance(q, m: int, mu_i, sig_i, mu_j, sig_j):
+    """Eq. 1 of the paper, numerically clamped at zero.
+
+    ``q`` is the raw dot product of the two windows.  Degenerate (constant)
+    windows have ``sig == 0``; following SCAMP convention we define the
+    correlation term as 0 there, giving distance ``sqrt(2m)``.
+    """
+    denom = m * sig_i * sig_j
+    corr = jnp.where(denom > 0, (q - m * mu_i * mu_j) / denom, 0.0)
+    return jnp.sqrt(jnp.maximum(2.0 * m * (1.0 - corr), 0.0))
+
+
+def distance_matrix(t, m: int, excl: int | None = None):
+    """Full (nw x nw) z-norm distance matrix with the exclusion zone set to
+    +inf.  O(n^2 m) memory/compute — small inputs only."""
+    t = jnp.asarray(t)
+    nw = t.shape[0] - m + 1
+    if excl is None:
+        excl = default_exclusion(m)
+    idx = jnp.arange(nw)
+    windows = t[idx[:, None] + jnp.arange(m)[None, :]]  # (nw, m)
+    q = windows @ windows.T
+    mu, sig = sliding_stats(t, m)
+    d = znorm_distance(q, m, mu[:, None], sig[:, None], mu[None, :], sig[None, :])
+    ban = jnp.abs(idx[:, None] - idx[None, :]) < excl
+    return jnp.where(ban, jnp.inf, d)
+
+
+def matrix_profile_ref(t, m: int, excl: int | None = None):
+    """Brute-force exact matrix profile: ``(P, I)`` per Section 2.1."""
+    d = distance_matrix(t, m, excl)
+    return jnp.min(d, axis=1), jnp.argmin(d, axis=1)
+
+
+def dot_init_ref(ta, tb):
+    """DPU reference: plain dot product of two length-m windows."""
+    return jnp.sum(jnp.asarray(ta) * jnp.asarray(tb))
+
+
+def diag_chunk_ref(ta, tb, mu_a, sig_a, mu_b, sig_b, q0, m: int, nvalid: int):
+    """Reference for the DPUU+DCU+PUU diagonal-chunk kernel.
+
+    Computes ``V = len(mu_a)`` consecutive cells of one diagonal.  Cell ``k``
+    is the window pair ``(i0+k, j0+k)``; ``q0`` is the dot product at cell 0;
+    ``ta``/``tb`` are the series slices starting at ``i0-1``/``j0-1`` with
+    length ``V+m`` (Eq. 2 needs ``t[i-1]`` and ``t[i+m-1]``).
+
+    Returns ``(dists, q_last, min_val, min_idx)`` where cells ``k >= nvalid``
+    are masked to +inf and do not advance the dot product.
+    """
+    ta = jnp.asarray(ta)
+    tb = jnp.asarray(tb)
+    v = mu_a.shape[0]
+    k = jnp.arange(v)
+    # delta_k advances q from cell k-1 to cell k (delta_0 = 0: q_0 = q0).
+    # With ta[x] = t[i0-1+x], Eq. 2 for cell k subtracts t[i0+k-1] = ta[k]
+    # and adds t[i0+k+m-1] = ta[k+m].
+    delta = jnp.where(
+        (k >= 1) & (k < nvalid),
+        ta[k + m] * tb[k + m] - ta[k] * tb[k],
+        0.0,
+    )
+    qs = q0 + jnp.cumsum(delta)
+    dists = znorm_distance(qs, m, mu_a, sig_a, mu_b, sig_b)
+    dists = jnp.where(k < nvalid, dists, jnp.inf)
+    q_last = qs[v - 1]  # deltas beyond nvalid are zeroed => q at last valid cell
+    min_idx = jnp.argmin(dists)
+    return dists, q_last, dists[min_idx], min_idx

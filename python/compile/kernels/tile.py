@@ -1,0 +1,49 @@
+"""Layer-1 Pallas kernel: batched window dot products for a profile tile.
+
+The diagonal kernel (diagonal.py) mirrors NATSA's PU pipeline.  This kernel
+is the *other* natural TPU mapping of the same math (DESIGN.md
+§Hardware-Adaptation): instead of walking diagonals with a scan, compute a
+(TI x TJ) tile of the dot-product matrix as a matmul between two window
+matrices — an MXU-shaped formulation used by the quickstart demo artifact
+``mp_tile`` and by the design-space ablation (bench `ablate_formulation`).
+
+For a tile anchored at (i0, j0):
+
+    Q[a, b] = W_i[a, :] . W_j[b, :]     (W rows are length-m windows)
+
+which is a (TI, m) x (m, TJ) matmul — MXU work, fp32 accumulation — followed
+by the same Eq. 1 distance and an exclusion-zone mask.  The paper's PU has no
+use for this shape (its HBM channel feeds 5 GB/s, far below what an MXU
+needs), which is exactly the ablation's point: on TPU the crossover moves.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dot_tile", "TILE_I", "TILE_J"]
+
+TILE_I = 128  # MXU-friendly tile edges
+TILE_J = 128
+
+
+def _dot_tile_kernel(wi_ref, wj_ref, q_ref):
+    """Q = W_i @ W_j^T with fp32 (or fp64) accumulation on the MXU."""
+    q_ref[...] = jnp.dot(
+        wi_ref[...], wj_ref[...].T, preferred_element_type=q_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("ti", "tj"))
+def dot_tile(wi, wj, *, ti: int = TILE_I, tj: int = TILE_J):
+    """(ti, m) x (tj, m) -> (ti, tj) window dot-product tile."""
+    assert wi.shape[0] == ti and wj.shape[0] == tj and wi.shape[1] == wj.shape[1]
+    return pl.pallas_call(
+        _dot_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((ti, tj), wi.dtype),
+        interpret=True,
+    )(wi, wj)

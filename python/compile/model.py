@@ -1,0 +1,120 @@
+"""Layer-2 JAX compute graphs — what the host offloads to NATSA.
+
+Each public ``*_fn`` builder returns a jax-jittable function with *concrete*
+shapes, ready for ``aot.py`` to lower to HLO text.  The functions call the
+Layer-1 Pallas kernels (``kernels.diagonal``, ``kernels.tile``) so the kernel
+lowers into the same HLO module the rust runtime loads.
+
+Graphs:
+  * ``diag_chunk_fn``  — one PU pipeline step over a V-cell diagonal chunk
+                         (the hot-path artifact; one variant per (m, dtype)).
+  * ``dot_init_fn``    — the DPU first-dot-product of a diagonal.
+  * ``stats_fn``       — host-side mean/std precompute (Alg. 2 line 2) as an
+                         offloadable graph for the demo path.
+  * ``mp_tile_fn``     — a self-contained small matrix profile built from
+                         MXU-shaped dot tiles (quickstart + ablation).
+
+Python here runs at *build time only* (``make artifacts``); the rust binary
+never imports it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import diagonal, tile
+from .kernels.ref import default_exclusion, sliding_stats, znorm_distance
+
+__all__ = ["diag_chunk_fn", "dot_init_fn", "stats_fn", "mp_tile_fn", "DTYPES"]
+
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def diag_chunk_fn(m: int, v: int = diagonal.DEFAULT_CHUNK):
+    """Builder for the per-chunk PU step.  Signature of the built fn:
+
+    (ta[v+m], tb[v+m], mu_a[v], sig_a[v], mu_b[v], sig_b[v], q0[1],
+     nvalid[1]:i32) -> (dists[v], q_last[1], min_val[1], min_idx[1]:i32)
+    """
+
+    def fn(ta, tb, mu_a, sig_a, mu_b, sig_b, q0, nvalid):
+        return diagonal.diag_chunk(
+            ta, tb, mu_a, sig_a, mu_b, sig_b, q0, nvalid, m=m, v=v
+        )
+
+    return fn
+
+
+def dot_init_fn(m: int):
+    """Builder for the DPU: (ta[m], tb[m]) -> (q[1],)."""
+
+    def fn(ta, tb):
+        return (diagonal.dot_init(ta, tb, m=m),)
+
+    return fn
+
+
+def stats_fn(m: int):
+    """Builder for the window-statistics precompute: T[n] -> (mu, sig)."""
+
+    def fn(t):
+        return sliding_stats(t, m)
+
+    return fn
+
+
+def mp_tile_fn(n: int, m: int, excl: int | None = None, tile_edge: int = tile.TILE_I):
+    """Builder for a complete small matrix profile from MXU dot tiles.
+
+    T[n] -> (P[nw_pad], I[nw_pad]:i32) with nw_pad = ceil(nw / tile_edge) *
+    tile_edge; padded lanes carry +inf / -1.  The tile loop is unrolled at
+    trace time (shapes are static), producing one fused HLO module.
+    """
+    if excl is None:
+        excl = default_exclusion(m)
+    nw = n - m + 1
+    nt = -(-nw // tile_edge)  # ceil
+    nw_pad = nt * tile_edge
+
+    def fn(t):
+        dtype = t.dtype
+        # Window matrix, padded by clamping starts beyond nw (masked below).
+        idx = jnp.arange(nw_pad)
+        starts = jnp.minimum(idx, nw - 1)
+        w = t[starts[:, None] + jnp.arange(m)[None, :]]
+        mu, sig = sliding_stats(t, m)
+        mu = mu[starts]
+        sig = sig[starts]
+
+        p = jnp.full((nw_pad,), jnp.inf, dtype)
+        i_out = jnp.full((nw_pad,), -1, jnp.int32)
+        for a in range(nt):
+            ra = slice(a * tile_edge, (a + 1) * tile_edge)
+            ia = idx[ra]
+            best = jnp.full((tile_edge,), jnp.inf, dtype)
+            besti = jnp.full((tile_edge,), -1, jnp.int32)
+            for b in range(nt):
+                rb = slice(b * tile_edge, (b + 1) * tile_edge)
+                ib = idx[rb]
+                q = tile.dot_tile(w[ra], w[rb], ti=tile_edge, tj=tile_edge)
+                d = znorm_distance(
+                    q, m,
+                    mu[ra][:, None], sig[ra][:, None],
+                    mu[rb][None, :], sig[rb][None, :],
+                )
+                ban = (
+                    (jnp.abs(ia[:, None] - ib[None, :]) < excl)
+                    | (ia[:, None] >= nw)
+                    | (ib[None, :] >= nw)
+                )
+                d = jnp.where(ban, jnp.inf, d)
+                bmin = jnp.min(d, axis=1)
+                barg = ib[jnp.argmin(d, axis=1)].astype(jnp.int32)
+                upd = bmin < best
+                best = jnp.where(upd, bmin, best)
+                besti = jnp.where(upd, barg, besti)
+            p = p.at[ra].set(best)
+            i_out = i_out.at[ra].set(besti)
+        return p, i_out
+
+    return fn

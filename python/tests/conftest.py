@@ -1,0 +1,13 @@
+"""Shared pytest config: enable x64 before anything imports jax.numpy."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xA75A)  # NATSA

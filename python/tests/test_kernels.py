@@ -1,0 +1,164 @@
+"""Pallas kernels vs the ref.py oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtypes, chunk validity masks and degenerate inputs;
+every case asserts allclose against the pure-jnp reference.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import diagonal, ref, tile
+
+DTYPES = [np.float32, np.float64]
+
+
+def tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == np.float32 else dict(rtol=1e-9, atol=1e-9)
+
+
+def make_chunk_case(rng, n, m, v, diag, i0, nvalid, dtype):
+    """Slice a random series into the diag_chunk argument tuple."""
+    t = rng.standard_normal(n).astype(dtype)
+    mu, sig = ref.sliding_stats(t, m)
+    j0 = i0 + diag
+    ta = t[i0 - 1 : i0 - 1 + v + m]
+    tb = t[j0 - 1 : j0 - 1 + v + m]
+    # pad tail slices to fixed kernel shape
+    ta = np.pad(ta, (0, v + m - len(ta)))
+    tb = np.pad(tb, (0, v + m - len(tb)))
+    pad = lambda x: np.pad(np.asarray(x, dtype), (0, max(0, v - len(x))))[:v]
+    mu_a, sig_a = pad(mu[i0 : i0 + v]), pad(sig[i0 : i0 + v])
+    mu_b, sig_b = pad(mu[j0 : j0 + v]), pad(sig[j0 : j0 + v])
+    q0 = np.array([t[i0 : i0 + m] @ t[j0 : j0 + m]], dtype)
+    return t, (
+        jnp.asarray(ta), jnp.asarray(tb),
+        jnp.asarray(mu_a), jnp.asarray(sig_a),
+        jnp.asarray(mu_b), jnp.asarray(sig_b),
+        jnp.asarray(q0), jnp.asarray([nvalid], jnp.int32),
+    )
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,v", [(8, 32), (16, 64), (32, 128)])
+def test_diag_chunk_matches_ref(rng, dtype, m, v):
+    n = v + 3 * m + 10
+    i0, diag = 1, m  # j0 = i0 + m, outside exclusion
+    nvalid = v
+    _, args = make_chunk_case(rng, n, m, v, diag, i0, nvalid, dtype)
+    got = diagonal.diag_chunk(*args, m=m, v=v)
+    want = ref.diag_chunk_ref(*args[:7], m=m, nvalid=nvalid)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(g).ravel(), np.asarray(w).ravel(), **tol(dtype)
+        )
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_diag_chunk_distances_match_bruteforce(rng, dtype):
+    """End-to-end: chunk distances equal the explicit z-norm distances."""
+    m, v = 16, 64
+    n = 3 * v
+    t = rng.standard_normal(n).astype(dtype)
+    mu, sig = ref.sliding_stats(t, m)
+    i0, diag = 1, 40
+    j0 = i0 + diag
+    nv = min(v, (n - m + 1) - j0)
+    _, args = make_chunk_case_from(t, mu, sig, m, v, i0, j0, nv, dtype)
+    dists = np.asarray(diagonal.diag_chunk(*args, m=m, v=v)[0])
+    d_full = np.asarray(ref.distance_matrix(t, m, excl=1))
+    for k in range(nv):
+        np.testing.assert_allclose(dists[k], d_full[i0 + k, j0 + k], **tol(dtype))
+    assert np.all(np.isinf(dists[nv:]))
+
+
+def make_chunk_case_from(t, mu, sig, m, v, i0, j0, nvalid, dtype):
+    ta = np.pad(t[i0 - 1 : i0 - 1 + v + m], (0, 0))
+    tb = np.pad(t[j0 - 1 : j0 - 1 + v + m], (0, 0))
+    ta = np.pad(ta, (0, v + m - len(ta)))
+    tb = np.pad(tb, (0, v + m - len(tb)))
+    pad = lambda x: np.pad(np.asarray(x, dtype), (0, max(0, v - len(x))))[:v]
+    return None, (
+        jnp.asarray(ta), jnp.asarray(tb),
+        pad(mu[i0 : i0 + v]), pad(sig[i0 : i0 + v]),
+        pad(mu[j0 : j0 + v]), pad(sig[j0 : j0 + v]),
+        jnp.asarray([t[i0 : i0 + m] @ t[j0 : j0 + m]], dtype),
+        jnp.asarray([nvalid], jnp.int32),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([4, 8, 16]),
+    v=st.sampled_from([16, 32, 64]),
+    nvalid_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+    f64=st.booleans(),
+)
+def test_diag_chunk_hypothesis(m, v, nvalid_frac, seed, f64):
+    """Property sweep: arbitrary (m, v, mask, dtype) chunks match the oracle."""
+    dtype = np.float64 if f64 else np.float32
+    rng = np.random.default_rng(seed)
+    nvalid = max(1, int(v * nvalid_frac))
+    n = v + 3 * m + 8
+    _, args = make_chunk_case(rng, n, m, v, m, 1, nvalid, dtype)
+    got = diagonal.diag_chunk(*args, m=m, v=v)
+    want = ref.diag_chunk_ref(*args[:7], m=m, nvalid=nvalid)
+    np.testing.assert_allclose(
+        np.asarray(got[0])[:nvalid], np.asarray(want[0])[:nvalid], **tol(dtype)
+    )
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), **tol(dtype))
+    assert int(got[3][0]) == int(want[3])
+
+
+def test_diag_chunk_qlast_chains_chunks(rng):
+    """q_last of chunk k must equal q0 of chunk k+1 computed from scratch."""
+    m, v = 16, 32
+    dtype = np.float64
+    n = 4 * v + 2 * m
+    t = rng.standard_normal(n).astype(dtype)
+    mu, sig = ref.sliding_stats(t, m)
+    i0, j0 = 1, 1 + m
+    _, args = make_chunk_case_from(t, mu, sig, m, v, i0, j0, v, dtype)
+    q_last = float(diagonal.diag_chunk(*args, m=m, v=v)[1][0])
+    # q at cell v-1 is the dot product of windows (i0+v-1, j0+v-1);
+    # the next chunk starts at (i0+v, j0+v) whose q0 is one Eq.2 step away.
+    i1, j1 = i0 + v - 1, j0 + v - 1
+    q_direct = t[i1 : i1 + m] @ t[j1 : j1 + m]
+    np.testing.assert_allclose(q_last, q_direct, rtol=1e-9)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m", [4, 16, 64, 256])
+def test_dot_init_matches_ref(rng, dtype, m):
+    ta = jnp.asarray(rng.standard_normal(m).astype(dtype))
+    tb = jnp.asarray(rng.standard_normal(m).astype(dtype))
+    got = np.asarray(diagonal.dot_init(ta, tb, m=m))[0]
+    want = float(ref.dot_init_ref(ta, tb))
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dot_tile_matches_matmul(rng, dtype):
+    m = 32
+    wi = jnp.asarray(rng.standard_normal((tile.TILE_I, m)).astype(dtype))
+    wj = jnp.asarray(rng.standard_normal((tile.TILE_J, m)).astype(dtype))
+    got = np.asarray(tile.dot_tile(wi, wj))
+    want = np.asarray(wi) @ np.asarray(wj).T
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+def test_diag_chunk_constant_window_safe(rng):
+    """A zero-variance window inside the chunk must not produce NaN."""
+    m, v = 8, 32
+    dtype = np.float64
+    n = v + 3 * m + 8
+    t = rng.standard_normal(n)
+    t[5 : 5 + m + 4] = 1.5  # flat region spanning several windows
+    t = t.astype(dtype)
+    mu, sig = ref.sliding_stats(t, m)
+    _, args = make_chunk_case_from(t, mu, sig, m, v, 1, 1 + m, v, dtype)
+    dists = np.asarray(diagonal.diag_chunk(*args, m=m, v=v)[0])
+    assert not np.any(np.isnan(dists))

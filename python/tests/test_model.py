@@ -1,0 +1,100 @@
+"""Layer-2 graph checks: model.py functions vs the oracle, shape contracts,
+and the AOT plan's internal consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("dname", ["f32", "f64"])
+def test_stats_fn(rng, dname):
+    dtype = model.DTYPES[dname]
+    t = jnp.asarray(rng.standard_normal(512), dtype)
+    mu, sig = jax.jit(model.stats_fn(64))(t)
+    mu_r, sig_r = ref.sliding_stats(t, 64)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_r), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sig), np.asarray(sig_r), rtol=1e-4)
+
+
+@pytest.mark.parametrize("dname", ["f32", "f64"])
+def test_mp_tile_matches_bruteforce(rng, dname):
+    """The MXU-tile full profile equals the brute-force oracle on small n."""
+    dtype = model.DTYPES[dname]
+    n, m, edge = 300, 16, 64
+    t = jnp.asarray(rng.standard_normal(n), dtype)
+    p, i = jax.jit(model.mp_tile_fn(n, m, tile_edge=edge))(t)
+    p_ref, _ = ref.matrix_profile_ref(t, m)
+    nw = n - m + 1
+    rtol = 1e-3 if dname == "f32" else 1e-8
+    np.testing.assert_allclose(
+        np.asarray(p)[:nw], np.asarray(p_ref), rtol=rtol, atol=1e-4
+    )
+    # padded lanes must be inert
+    assert np.all(np.isinf(np.asarray(p)[nw:]))
+    assert np.all(np.asarray(i)[nw:] == -1)
+    # indices respect the exclusion zone
+    ii = np.asarray(i)[:nw]
+    excl = ref.default_exclusion(m)
+    assert np.all(np.abs(ii - np.arange(nw)) >= excl)
+
+
+def test_mp_tile_finds_planted_motif(rng):
+    n, m = 300, 16
+    t = rng.standard_normal(n)
+    t[200 : 200 + m] = t[50 : 50 + m]
+    p, i = jax.jit(model.mp_tile_fn(n, m, tile_edge=64))(jnp.asarray(t))
+    p = np.asarray(p)
+    i = np.asarray(i)
+    assert p[50] < 1e-4 and p[200] < 1e-4
+    assert i[50] == 200 and i[200] == 50
+
+
+def test_diag_chunk_fn_signature():
+    """The AOT'd chunk signature must match what the rust runtime feeds."""
+    m, v = 32, 512
+    fn = jax.jit(model.diag_chunk_fn(m, v))
+    specs = (
+        jax.ShapeDtypeStruct((v + m,), jnp.float32),
+        jax.ShapeDtypeStruct((v + m,), jnp.float32),
+        jax.ShapeDtypeStruct((v,), jnp.float32),
+        jax.ShapeDtypeStruct((v,), jnp.float32),
+        jax.ShapeDtypeStruct((v,), jnp.float32),
+        jax.ShapeDtypeStruct((v,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+    )
+    out = jax.eval_shape(fn, *specs)
+    assert out[0].shape == (v,) and out[0].dtype == jnp.float32
+    assert out[1].shape == (1,)
+    assert out[2].shape == (1,)
+    assert out[3].shape == (1,) and out[3].dtype == jnp.int32
+
+
+def test_aot_plan_complete_and_unique():
+    plan = list(aot.build_plan())
+    names = [p[0] for p in plan]
+    assert len(names) == len(set(names))
+    kinds = {p[3]["kind"] for p in plan}
+    assert kinds == {"diag_chunk", "dot_init", "stats", "mp_tile"}
+    # every (dtype, m) pair present for the hot-path kernel
+    for dname in model.DTYPES:
+        for m in aot.WINDOW_SIZES:
+            assert any(n.startswith(f"diag_chunk_{dname}_m{m}_v") for n in names)
+            assert f"dot_init_{dname}_m{m}" in names
+
+
+def test_aot_hlo_text_is_parseable_text():
+    """Lower the smallest artifact and sanity-check the HLO text format."""
+    m = 32
+    fn = model.dot_init_fn(m)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text and "ENTRY" in text
+    assert "f32[32]" in text

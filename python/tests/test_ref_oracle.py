@@ -1,0 +1,121 @@
+"""Self-checks of the pure-jnp oracle (ref.py) against a from-scratch numpy
+implementation.  If the oracle is wrong everything downstream is wrong, so it
+gets its own independently-written cross-check."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+
+
+def numpy_stats(t, m):
+    nw = len(t) - m + 1
+    mu = np.array([t[i : i + m].mean() for i in range(nw)])
+    sig = np.array([t[i : i + m].std() for i in range(nw)])
+    return mu, sig
+
+
+def numpy_profile(t, m, excl):
+    """Textbook O(n^2 m): z-normalize every window pair explicitly."""
+    nw = len(t) - m + 1
+    p = np.full(nw, np.inf)
+    idx = np.full(nw, -1)
+    for i in range(nw):
+        wi = t[i : i + m]
+        si = wi.std()
+        zi = (wi - wi.mean()) / si if si > 0 else np.zeros(m)
+        for j in range(nw):
+            if abs(i - j) < excl:
+                continue
+            wj = t[j : j + m]
+            sj = wj.std()
+            zj = (wj - wj.mean()) / sj if sj > 0 else np.zeros(m)
+            d = np.sqrt(((zi - zj) ** 2).sum())
+            if d < p[i]:
+                p[i] = d
+                idx[i] = j
+    return p, idx
+
+
+@pytest.mark.parametrize("n,m", [(64, 8), (100, 12), (128, 16)])
+def test_sliding_stats_match_numpy(rng, n, m):
+    t = rng.standard_normal(n)
+    mu, sig = ref.sliding_stats(t, m)
+    mu_np, sig_np = numpy_stats(t, m)
+    np.testing.assert_allclose(np.asarray(mu), mu_np, rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(sig), sig_np, rtol=1e-8)
+
+
+@pytest.mark.parametrize("n,m", [(64, 8), (96, 16)])
+def test_profile_matches_textbook(rng, n, m):
+    t = rng.standard_normal(n)
+    excl = ref.default_exclusion(m)
+    p, i = ref.matrix_profile_ref(t, m)
+    p_np, i_np = numpy_profile(t, m, excl)
+    np.testing.assert_allclose(np.asarray(p), p_np, rtol=1e-6, atol=1e-8)
+    # argmin ties can differ; require the distances at the chosen indices match
+    d = np.asarray(ref.distance_matrix(t, m))
+    np.testing.assert_allclose(
+        d[np.arange(len(p)), np.asarray(i)], p_np, rtol=1e-6, atol=1e-8
+    )
+
+
+def test_profile_symmetric_envelope(rng):
+    """P_i is a min over a symmetric matrix => P is invariant to transposition."""
+    t = rng.standard_normal(80)
+    d = np.asarray(ref.distance_matrix(t, 8))
+    np.testing.assert_allclose(d, d.T, rtol=1e-8, atol=1e-10)
+
+
+def test_exclusion_zone_is_banned(rng):
+    t = rng.standard_normal(64)
+    m = 8
+    excl = ref.default_exclusion(m)
+    d = np.asarray(ref.distance_matrix(t, m, excl))
+    nw = 64 - m + 1
+    ii, jj = np.meshgrid(np.arange(nw), np.arange(nw), indexing="ij")
+    assert np.all(np.isinf(d[np.abs(ii - jj) < excl]))
+
+
+def test_constant_window_degenerates_to_sqrt_2m(rng):
+    """sig == 0 windows take correlation 0 => distance sqrt(2m)."""
+    m = 8
+    t = rng.standard_normal(48)
+    t[10 : 10 + m] = 3.0  # constant window at index 10
+    d = np.asarray(ref.distance_matrix(t, m))
+    row = d[10]
+    finite = row[np.isfinite(row)]
+    np.testing.assert_allclose(finite, np.sqrt(2 * m), rtol=1e-6)
+
+
+def test_motif_pair_is_found(rng):
+    """Planting an identical pair of windows must produce ~0 profile there."""
+    t = rng.standard_normal(200)
+    m = 16
+    t[120 : 120 + m] = t[30 : 30 + m]  # plant exact motif
+    p, i = ref.matrix_profile_ref(t, m)
+    p = np.asarray(p)
+    i = np.asarray(i)
+    assert p[30] < 1e-5 and p[120] < 1e-5
+    assert i[30] == 120 and i[120] == 30
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(40, 120),
+    m=st.integers(4, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_incremental_dot_product_identity(n, m, seed):
+    """Eq. 2: Q_{i,j} = Q_{i-1,j-1} - t_{i-1} t_{j-1} + t_{i+m-1} t_{j+m-1}."""
+    t = np.random.default_rng(seed).standard_normal(n)
+    nw = n - m + 1
+    for i, j in [(1, 5), (2, nw - 1), (3, m)]:
+        if j >= nw or i >= nw or j < 1 or i < 1:
+            continue
+        q_prev = t[i - 1 : i - 1 + m] @ t[j - 1 : j - 1 + m]
+        q_inc = q_prev - t[i - 1] * t[j - 1] + t[i + m - 1] * t[j + m - 1]
+        q_dir = t[i : i + m] @ t[j : j + m]
+        np.testing.assert_allclose(q_inc, q_dir, rtol=1e-9, atol=1e-9)

@@ -1,0 +1,148 @@
+//! Tiny benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Used by every target in `benches/` (`harness = false`).  Provides
+//! warmup + repeated timing with median/min/mean reporting, black-box
+//! value sinking, and aligned table printing for the paper-style rows.
+
+use std::time::Instant;
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One measured statistic set (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub median: f64,
+    pub min: f64,
+    pub mean: f64,
+    pub reps: usize,
+}
+
+impl Sample {
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / self.median
+    }
+}
+
+/// Time `f` with `warmup` + `reps` runs; returns stats over the reps.
+pub fn time<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Sample {
+        median: times[times.len() / 2],
+        min: times[0],
+        mean: times.iter().sum::<f64>() / times.len() as f64,
+        reps: times.len(),
+    }
+}
+
+/// Adaptive: pick reps so total time ~ `budget_s`, then measure.
+pub fn time_budget<F: FnMut()>(budget_s: f64, mut f: F) -> Sample {
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let reps = ((budget_s / once) as usize).clamp(3, 1000);
+    time(1, reps, f)
+}
+
+/// Pretty time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}us", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// A minimal aligned-table printer for bench reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.header));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reports_positive() {
+        let s = time(1, 5, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.median > 0.0 && s.min <= s.median && s.reps == 5);
+    }
+
+    #[test]
+    fn budget_clamps_reps() {
+        let s = time_budget(0.01, || {
+            black_box((0..10_000).sum::<u64>());
+        });
+        assert!(s.reps >= 3 && s.reps <= 1000);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_time(2.0).ends_with('s'));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_checks_columns() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".to_string()]);
+    }
+}

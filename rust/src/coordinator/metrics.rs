@@ -1,0 +1,153 @@
+//! Lightweight run-time metrics for the analysis service.
+//!
+//! Lock-free counters + a fixed-bucket latency histogram.  No external
+//! deps; everything is readable at any time from any thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Service-level counters.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub jobs_rejected: AtomicU64,
+    /// Sum of queue-wait nanoseconds (divide by completed for the mean).
+    pub queue_wait_ns: AtomicU64,
+    /// Sum of execution nanoseconds.
+    pub exec_ns: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+impl ServiceMetrics {
+    pub fn in_flight(&self) -> u64 {
+        let submitted = self.jobs_submitted.load(Ordering::Relaxed);
+        let done = self.jobs_completed.load(Ordering::Relaxed)
+            + self.jobs_failed.load(Ordering::Relaxed);
+        submitted.saturating_sub(done)
+    }
+
+    pub fn mean_exec_seconds(&self) -> f64 {
+        let done = self.jobs_completed.load(Ordering::Relaxed);
+        if done == 0 {
+            0.0
+        } else {
+            self.exec_ns.load(Ordering::Relaxed) as f64 / done as f64 * 1e-9
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs: {} submitted, {} done, {} failed, {} rejected | in-flight {} | mean exec {:.3}s | p50 {:.3}s p99 {:.3}s",
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+            self.jobs_rejected.load(Ordering::Relaxed),
+            self.in_flight(),
+            self.mean_exec_seconds(),
+            self.latency.quantile(0.50),
+            self.latency.quantile(0.99),
+        )
+    }
+}
+
+/// Log-spaced latency histogram: 1 µs .. ~1000 s in 64 buckets.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; 64],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket_of(seconds: f64) -> usize {
+        // bucket = log2(us), clamped
+        let us = (seconds * 1e6).max(1.0);
+        (us.log2() as usize).min(63)
+    }
+
+    /// Upper edge (seconds) of bucket `i`.
+    fn edge(i: usize) -> f64 {
+        (1u64 << (i as u32 + 1).min(63)) as f64 * 1e-6
+    }
+
+    pub fn record(&self, seconds: f64) {
+        self.buckets[Self::bucket_of(seconds)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate quantile (upper bucket edge), 0 if empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::edge(i);
+            }
+        }
+        Self::edge(63)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::default();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3); // 1..100 ms
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 > 1e-3 && p50 < 0.2, "{p50}");
+        assert!(p99 > 0.05 && p99 < 0.5, "{p99}");
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn metrics_in_flight_accounting() {
+        let m = ServiceMetrics::default();
+        m.jobs_submitted.store(5, Ordering::Relaxed);
+        m.jobs_completed.store(2, Ordering::Relaxed);
+        m.jobs_failed.store(1, Ordering::Relaxed);
+        assert_eq!(m.in_flight(), 2);
+        assert!(m.summary().contains("5 submitted"));
+    }
+
+    #[test]
+    fn extreme_latencies_clamped() {
+        let h = LatencyHistogram::default();
+        h.record(0.0);
+        h.record(1e9);
+        assert_eq!(h.count(), 2);
+    }
+}

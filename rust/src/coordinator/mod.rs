@@ -1,0 +1,394 @@
+//! Layer-3 coordinator: NATSA's host logic over the PJRT request path.
+//!
+//! This is where the three layers compose at run time:
+//!
+//! 1. the host precomputes statistics and the diagonal-pair schedule
+//!    (Algorithm 2, [`crate::natsa`]),
+//! 2. a fleet of worker threads — one per emulated memory channel — drains
+//!    PU work lists, executing the **AOT-compiled Pallas chunk kernel**
+//!    through [`crate::runtime::Runtime`] for every diagonal chunk (the
+//!    DPU/DPUU/DCU/PUU pipeline runs inside the kernel; the PUU's
+//!    cross-chunk profile update happens here, against PU-private
+//!    profiles),
+//! 3. the host min-reduces the private profiles.
+//!
+//! Python is never involved: the kernels were lowered at build time.
+//!
+//! [`service`] wraps the engine in a multi-client job queue (submit /
+//! await, backpressure, metrics) — the "thin driver" face of the paper's
+//! accelerator for embedding in a larger system.
+
+pub mod metrics;
+pub mod service;
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::Context;
+
+use crate::mp::{MatrixProfile, MpConfig, WorkStats};
+use crate::natsa::{scheduler, NatsaConfig, Order};
+use crate::runtime::{ArtifactKind, Manifest, Runtime, XlaReal};
+use crate::timeseries::{sliding_stats, WindowStats};
+
+/// Per-run execution metrics of the PJRT engine.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    /// diag_chunk kernel invocations.
+    pub chunk_calls: u64,
+    /// dot_init kernel invocations (one per diagonal).
+    pub dot_calls: u64,
+    /// Wall-clock seconds inside PJRT execute (sum across workers).
+    pub kernel_seconds: f64,
+    /// End-to-end wall-clock seconds.
+    pub wall_seconds: f64,
+    /// Worker threads used.
+    pub workers: usize,
+}
+
+/// Result of a PJRT-backed NATSA run.
+#[derive(Clone, Debug)]
+pub struct PjrtOutput<T> {
+    pub profile: MatrixProfile<T>,
+    pub work: WorkStats,
+    pub metrics: EngineMetrics,
+}
+
+/// A unit of accelerator work: one group of PU work lists against a
+/// shared series + statistics (Arc'd so persistent workers can own it).
+struct PuJob<T> {
+    t: Arc<Vec<T>>,
+    st: Arc<WindowStats<T>>,
+    diags: Vec<usize>,
+    nw: usize,
+    excl: usize,
+    reply: Sender<crate::Result<(MatrixProfile<T>, WorkStats, EngineMetrics)>>,
+}
+
+/// The PJRT-backed NATSA engine: same scheduling/reduction as
+/// [`crate::natsa::NatsaEngine`], but every chunk of distance computation
+/// runs through the AOT Pallas kernel.
+///
+/// Workers are **persistent** threads, each owning one PJRT client with
+/// its compiled-executable cache: artifacts compile once per worker for
+/// the engine's lifetime, not once per `compute` call (perf pass — the
+/// per-call recompile dominated small workloads).
+pub struct PjrtEngine<T: XlaReal> {
+    pub config: NatsaConfig,
+    pub artifact_dir: PathBuf,
+    /// Worker threads (each owns a PJRT client). Defaults to 4.
+    pub workers: usize,
+    pool: OnceLock<Pool<T>>,
+    _marker: std::marker::PhantomData<T>,
+}
+
+struct Pool<T> {
+    tx: Option<Sender<PuJob<T>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<T: XlaReal> Drop for PjrtEngine<T> {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.get_mut() {
+            pool.tx.take(); // close the queue
+            for h in pool.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl<T: XlaReal> PjrtEngine<T> {
+    pub fn new(config: NatsaConfig, artifact_dir: PathBuf) -> Self {
+        PjrtEngine {
+            config,
+            artifact_dir,
+            workers: 4,
+            pool: OnceLock::new(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        assert!(self.pool.get().is_none(), "set workers before first compute");
+        self.workers = workers.max(1);
+        self
+    }
+
+    fn pool(&self) -> &Pool<T> {
+        self.pool.get_or_init(|| {
+            let (tx, rx) = channel::<PuJob<T>>();
+            let rx = Arc::new(Mutex::new(rx));
+            let mut handles = Vec::new();
+            for _ in 0..self.workers {
+                let rx = rx.clone();
+                let dir = self.artifact_dir.clone();
+                handles.push(std::thread::spawn(move || worker_loop::<T>(rx, dir)));
+            }
+            Pool { tx: Some(tx), handles }
+        })
+    }
+
+    /// Window lengths the loaded artifact set supports for `T`.
+    pub fn supported_windows(&self) -> crate::Result<Vec<usize>> {
+        Ok(Manifest::load(&self.artifact_dir)?.chunk_windows(T::DTYPE))
+    }
+
+    /// Compute the matrix profile of `t` with window `m` on the AOT path.
+    ///
+    /// `m` must match a lowered kernel variant (see `make artifacts`,
+    /// default {32, 64, 128, 256}); anything else is an error that lists
+    /// the available windows.
+    pub fn compute(&self, t: &[T], m: usize) -> crate::Result<PjrtOutput<T>> {
+        let cfg = match self.config.excl {
+            Some(e) => MpConfig::with_excl(m, e),
+            None => MpConfig::new(m),
+        };
+        let nw = cfg.validate(t.len())?;
+        let excl = cfg.exclusion();
+
+        // Artifact availability check up front (clear error path).
+        let manifest = Manifest::load(&self.artifact_dir)?;
+        manifest
+            .find(ArtifactKind::DiagChunk, T::DTYPE, m)
+            .with_context(|| {
+                format!(
+                    "no diag_chunk artifact for dtype={} m={m}; available m: {:?}",
+                    T::DTYPE,
+                    manifest.chunk_windows(T::DTYPE)
+                )
+            })?;
+
+        // Host precompute (Alg. 2 line 2) + scheduling (line 4).
+        let st = sliding_stats(t, m);
+        let mut sched = scheduler::schedule(nw, excl, self.config.pus);
+        match self.config.order {
+            Order::Sequential => sched.sequentialize(),
+            Order::Random(seed) => sched.randomize(seed),
+        }
+
+        let start = std::time::Instant::now();
+        let workers = self.workers.min(self.config.pus).max(1);
+        let t_arc = Arc::new(t.to_vec());
+        let st_arc = Arc::new(st);
+
+        // One job per worker: PUs dealt round-robin across job groups so
+        // every group inherits the scheduler's balance.
+        let pool = self.pool();
+        let tx = pool.tx.as_ref().expect("pool open");
+        let (reply_tx, reply_rx) = channel();
+        let mut sent = 0usize;
+        for g in 0..workers {
+            let diags: Vec<usize> = sched
+                .per_pu
+                .iter()
+                .skip(g)
+                .step_by(workers)
+                .flatten()
+                .copied()
+                .collect();
+            if diags.is_empty() {
+                continue;
+            }
+            tx.send(PuJob {
+                t: t_arc.clone(),
+                st: st_arc.clone(),
+                diags,
+                nw,
+                excl,
+                reply: reply_tx.clone(),
+            })
+            .map_err(|_| anyhow::anyhow!("worker pool is gone"))?;
+            sent += 1;
+        }
+        drop(reply_tx);
+
+        // Host reduction (Alg. 2 line 6).
+        let mut profile = MatrixProfile::new_inf(nw, m, excl);
+        let mut work = WorkStats::default();
+        let mut metrics = EngineMetrics {
+            workers,
+            ..Default::default()
+        };
+        for _ in 0..sent {
+            let (local, w, mx) = reply_rx.recv().expect("worker vanished")?;
+            profile.merge(&local);
+            work.add(&w);
+            metrics.chunk_calls += mx.chunk_calls;
+            metrics.dot_calls += mx.dot_calls;
+            metrics.kernel_seconds += mx.kernel_seconds;
+        }
+        metrics.wall_seconds = start.elapsed().as_secs_f64();
+        Ok(PjrtOutput { profile, work, metrics })
+    }
+}
+
+/// Persistent worker: owns one PJRT runtime (compiled-executable cache
+/// lives as long as the engine) and drains PU jobs from the shared queue.
+fn worker_loop<T: XlaReal>(rx: Arc<Mutex<Receiver<PuJob<T>>>>, dir: PathBuf) {
+    let mut runtime: Option<Runtime> = None;
+    loop {
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // engine dropped
+        };
+        let result = (|| -> crate::Result<_> {
+            if runtime.is_none() {
+                runtime = Some(Runtime::new(&dir)?);
+            }
+            let rt = runtime.as_ref().unwrap();
+            let m = job.st.m;
+            let mut local = MatrixProfile::new_inf(job.nw, m, job.excl);
+            let mut work = WorkStats::default();
+            let mut mx = EngineMetrics::default();
+            for &d in &job.diags {
+                run_diagonal_pjrt(rt, &job.t, &job.st, d, &mut local, &mut work, &mut mx)?;
+            }
+            Ok((local, work, mx))
+        })();
+        let _ = job.reply.send(result);
+    }
+}
+
+/// Execute one diagonal through the AOT kernels, chunk by chunk.
+fn run_diagonal_pjrt<T: XlaReal>(
+    rt: &Runtime,
+    t: &[T],
+    st: &WindowStats<T>,
+    d: usize,
+    local: &mut MatrixProfile<T>,
+    work: &mut WorkStats,
+    mx: &mut EngineMetrics,
+) -> crate::Result<()> {
+    let m = st.m;
+    let nw = st.len();
+    let len = nw - d;
+    // Available chunk variants (ascending V).  Per chunk we pick the
+    // LARGEST V that does not overshoot the remaining cells (padding is
+    // pure waste in interpret mode: the kernel computes all V lanes);
+    // only the final sub-V tail pays for masked lanes of the smallest
+    // variant (perf pass, EXPERIMENTS.md §Perf).
+    let variants: Vec<usize> = rt
+        .manifest()
+        .chunk_variants(T::DTYPE, m)
+        .iter()
+        .map(|a| a.v)
+        .collect();
+    anyhow::ensure!(!variants.is_empty(), "diag_chunk artifact disappeared");
+    let v_max = *variants.last().unwrap();
+
+    // DPU: first dot product of the diagonal.
+    let t0 = std::time::Instant::now();
+    let mut q = rt.dot_init(m, &t[..m], &t[d..d + m])?;
+    mx.kernel_seconds += t0.elapsed().as_secs_f64();
+    mx.dot_calls += 1;
+    work.first_dots += 1;
+    work.diagonals += 1;
+
+    // Chunked walk; scratch buffers sized for the largest variant and
+    // re-sliced per chunk.
+    let mut ta = vec![T::zero(); v_max + m];
+    let mut tb = vec![T::zero(); v_max + m];
+    let mut mu_a = vec![T::zero(); v_max];
+    let mut sig_a = vec![T::zero(); v_max];
+    let mut mu_b = vec![T::zero(); v_max];
+    let mut sig_b = vec![T::zero(); v_max];
+
+    let mut i0 = 0usize;
+    while i0 < len {
+        let remaining = len - i0;
+        let v = *variants
+            .iter()
+            .rev()
+            .find(|&&vv| vv <= remaining)
+            .unwrap_or(&variants[0]);
+        let nvalid = v.min(remaining);
+        let j0 = i0 + d;
+        // ta[x] = t[i0-1+x]; ta[0] is a dummy when i0 == 0 (never read:
+        // delta_0 = 0 in the kernel).
+        fill_shifted(&mut ta[..v + m], t, i0 as isize - 1);
+        fill_shifted(&mut tb[..v + m], t, j0 as isize - 1);
+        fill_stat(&mut mu_a[..v], &st.mu, i0, nvalid);
+        fill_stat(&mut sig_a[..v], &st.sig, i0, nvalid);
+        fill_stat(&mut mu_b[..v], &st.mu, j0, nvalid);
+        fill_stat(&mut sig_b[..v], &st.sig, j0, nvalid);
+
+        let t0 = std::time::Instant::now();
+        let out = rt.diag_chunk(
+            m,
+            Some(v),
+            &ta[..v + m],
+            &tb[..v + m],
+            &mu_a[..v],
+            &sig_a[..v],
+            &mu_b[..v],
+            &sig_b[..v],
+            q,
+            nvalid,
+        )?;
+        mx.kernel_seconds += t0.elapsed().as_secs_f64();
+        mx.chunk_calls += 1;
+
+        for (k, &dist) in out.dists.iter().take(nvalid).enumerate() {
+            local.update(i0 + k, j0 + k, dist);
+        }
+        work.cells += nvalid as u64;
+        work.updates += 2 * nvalid as u64;
+        // q_last is the dot product AT the chunk's last valid cell
+        // (iL, jL); the next chunk's cell 0 is one Eq. 2 step further,
+        // so the host advances it (2 mul + 2 add, negligible).
+        let i_last = i0 + nvalid - 1;
+        let j_last = i_last + d;
+        i0 += nvalid;
+        if i0 < len {
+            q = out.q_last - t[i_last] * t[j_last] + t[i_last + m] * t[j_last + m];
+        }
+    }
+    Ok(())
+}
+
+/// Fill `dst` with `t[start + k]`, zero outside bounds.
+fn fill_shifted<T: XlaReal>(dst: &mut [T], t: &[T], start: isize) {
+    for (k, slot) in dst.iter_mut().enumerate() {
+        let idx = start + k as isize;
+        *slot = if idx >= 0 && (idx as usize) < t.len() {
+            t[idx as usize]
+        } else {
+            T::zero()
+        };
+    }
+}
+
+/// Fill `dst[0..n]` from `src[at..at+n]`, zero-pad the tail.
+fn fill_stat<T: XlaReal>(dst: &mut [T], src: &[T], at: usize, n: usize) {
+    for (k, slot) in dst.iter_mut().enumerate() {
+        *slot = if k < n { src[at + k] } else { T::zero() };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_shifted_pads_out_of_range() {
+        let t = [1.0f64, 2.0, 3.0];
+        let mut dst = [9.0f64; 5];
+        fill_shifted(&mut dst, &t, -1);
+        assert_eq!(dst, [0.0, 1.0, 2.0, 3.0, 0.0]);
+        fill_shifted(&mut dst, &t, 2);
+        assert_eq!(dst, [3.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn fill_stat_pads_tail() {
+        let src = [1.0f32, 2.0, 3.0, 4.0];
+        let mut dst = [9.0f32; 4];
+        fill_stat(&mut dst, &src, 1, 2);
+        assert_eq!(dst, [2.0, 3.0, 0.0, 0.0]);
+    }
+
+    // Full PJRT integration tests live in rust/tests/e2e_pjrt.rs (they
+    // need `make artifacts` to have run).
+}

@@ -1,0 +1,291 @@
+//! The analysis service: a multi-client job queue over the NATSA engine.
+//!
+//! The accelerator itself computes one profile at a time per PU fleet;
+//! a deployment wraps it in a service that accepts jobs from many clients,
+//! applies backpressure when the queue is full, and reports metrics —
+//! the same role the vLLM router plays for model replicas.  Workers run
+//! the *native* functional engine by default (fast path); the PJRT engine
+//! is exercised by the end-to-end example and integration tests.
+//!
+//! Design notes:
+//! * `std::sync::mpsc` + worker threads (tokio is not in the offline
+//!   vendor set; the queue semantics are identical for this shape),
+//! * bounded queue => `submit` fails fast with [`SubmitError::Backpressure`]
+//!   instead of buffering unboundedly,
+//! * each job may carry its own window length and precision is fixed by
+//!   the service's type parameter.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::metrics::ServiceMetrics;
+use crate::mp::MatrixProfile;
+use crate::natsa::{NatsaConfig, NatsaEngine};
+use crate::Real;
+
+/// A submitted analysis job.
+struct Job<T> {
+    id: u64,
+    series: Arc<Vec<T>>,
+    m: usize,
+    submitted: std::time::Instant,
+}
+
+/// Completed job result.
+#[derive(Clone, Debug)]
+pub struct JobResult<T> {
+    pub id: u64,
+    pub profile: Result<MatrixProfile<T>, String>,
+    pub queue_wait_s: f64,
+    pub exec_s: f64,
+}
+
+/// Why a submission was rejected.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue full — caller should retry later (backpressure).
+    Backpressure,
+    /// Service is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "service closed"),
+        }
+    }
+}
+
+struct Shared<T> {
+    results: Mutex<HashMap<u64, JobResult<T>>>,
+    cv: Condvar,
+    metrics: ServiceMetrics,
+}
+
+/// Multi-worker analysis service over the functional NATSA engine.
+pub struct AnalysisService<T: Real> {
+    tx: Option<SyncSender<Job<T>>>,
+    shared: Arc<Shared<T>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl<T: Real> AnalysisService<T> {
+    /// Start `workers` worker threads with a bounded queue of `depth`.
+    pub fn start(config: NatsaConfig, workers: usize, depth: usize) -> Self {
+        let (tx, rx) = sync_channel::<Job<T>>(depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            results: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            metrics: ServiceMetrics::default(),
+        });
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let rx = rx.clone();
+            let shared = shared.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(rx, shared, config);
+            }));
+        }
+        AnalysisService {
+            tx: Some(tx),
+            shared,
+            workers: handles,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// Submit a job; fails fast under backpressure.
+    pub fn submit(&self, series: Arc<Vec<T>>, m: usize) -> Result<u64, SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let job = Job {
+            id,
+            series,
+            m,
+            submitted: std::time::Instant::now(),
+        };
+        match self.tx.as_ref().ok_or(SubmitError::Closed)?.try_send(job) {
+            Ok(()) => {
+                self.shared
+                    .metrics
+                    .jobs_submitted
+                    .fetch_add(1, Ordering::Relaxed);
+                Ok(id)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.shared
+                    .metrics
+                    .jobs_rejected
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Backpressure)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Block until job `id` completes.
+    pub fn wait(&self, id: u64) -> JobResult<T> {
+        let mut results = self.shared.results.lock().unwrap();
+        loop {
+            if let Some(r) = results.remove(&id) {
+                return r;
+            }
+            results = self.shared.cv.wait(results).unwrap();
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn poll(&self, id: u64) -> Option<JobResult<T>> {
+        self.shared.results.lock().unwrap().remove(&id)
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.shared.metrics
+    }
+
+    /// Stop accepting jobs, drain the queue, join workers.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close channel
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop<T: Real>(
+    rx: Arc<Mutex<Receiver<Job<T>>>>,
+    shared: Arc<Shared<T>>,
+    config: NatsaConfig,
+) {
+    let engine = NatsaEngine::<T>::new(config);
+    loop {
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // channel closed
+        };
+        let queue_wait = job.submitted.elapsed().as_secs_f64();
+        let start = std::time::Instant::now();
+        let outcome = engine.compute(&job.series, job.m);
+        let exec = start.elapsed().as_secs_f64();
+
+        let (profile, failed) = match outcome {
+            Ok(o) => (Ok(o.profile), false),
+            Err(e) => (Err(e.to_string()), true),
+        };
+        let m = &shared.metrics;
+        if failed {
+            m.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            m.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            m.exec_ns
+                .fetch_add((exec * 1e9) as u64, Ordering::Relaxed);
+            m.queue_wait_ns
+                .fetch_add((queue_wait * 1e9) as u64, Ordering::Relaxed);
+            m.latency.record(queue_wait + exec);
+        }
+        shared.results.lock().unwrap().insert(
+            job.id,
+            JobResult {
+                id: job.id,
+                profile,
+                queue_wait_s: queue_wait,
+                exec_s: exec,
+            },
+        );
+        shared.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Rng;
+    use crate::timeseries::generator::{generate, Pattern};
+
+    fn svc() -> AnalysisService<f64> {
+        AnalysisService::start(NatsaConfig::default().with_threads(2), 2, 4)
+    }
+
+    #[test]
+    fn submit_and_wait_roundtrip() {
+        let s = svc();
+        let series = Arc::new(generate::<f64>(Pattern::PlantedMotif, 1024, 3));
+        let id = s.submit(series, 32).unwrap();
+        let r = s.wait(id);
+        let profile = r.profile.unwrap();
+        assert_eq!(profile.len(), 1024 - 32 + 1);
+        assert_eq!(s.metrics().jobs_completed.load(Ordering::Relaxed), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn many_jobs_from_many_clients() {
+        let s = Arc::new(AnalysisService::<f64>::start(
+            NatsaConfig::default().with_threads(1),
+            3,
+            64,
+        ));
+        let mut ids = Vec::new();
+        for k in 0..12 {
+            let series = Arc::new(generate::<f64>(Pattern::RandomWalk, 512, k));
+            ids.push(s.submit(series, 16).unwrap());
+        }
+        for id in ids {
+            let r = s.wait(id);
+            assert!(r.profile.is_ok());
+        }
+        assert_eq!(s.metrics().jobs_completed.load(Ordering::Relaxed), 12);
+        assert_eq!(s.metrics().in_flight(), 0);
+    }
+
+    #[test]
+    fn bad_job_reports_error_not_panic() {
+        let s = svc();
+        let id = s.submit(Arc::new(vec![1.0f64; 9]), 8).unwrap(); // nw(2) <= excl(2)
+        let r = s.wait(id);
+        assert!(r.profile.is_err());
+        assert_eq!(s.metrics().jobs_failed.load(Ordering::Relaxed), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // 1 worker, queue depth 1, slow-ish jobs: the 3rd+ submit in a
+        // tight loop must eventually see Backpressure.
+        let s = AnalysisService::<f64>::start(NatsaConfig::default().with_threads(1), 1, 1);
+        let mut rng = Rng::new(9);
+        let series = Arc::new(rng.gauss_vec(6000));
+        let mut saw_backpressure = false;
+        let mut accepted = Vec::new();
+        for _ in 0..32 {
+            match s.submit(series.clone(), 16) {
+                Ok(id) => accepted.push(id),
+                Err(SubmitError::Backpressure) => {
+                    saw_backpressure = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(saw_backpressure, "queue never filled");
+        for id in accepted {
+            let _ = s.wait(id);
+        }
+        assert!(s.metrics().jobs_rejected.load(Ordering::Relaxed) >= 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutdown_closes_submission() {
+        let s = svc();
+        let shared = s.shared.clone();
+        s.shutdown();
+        // after shutdown the channel is gone; metrics survive
+        assert_eq!(shared.metrics.in_flight(), 0);
+    }
+}

@@ -1,0 +1,108 @@
+//! # NATSA — Near-Data Processing Accelerator for Time Series Analysis
+//!
+//! Full-system reproduction of *NATSA: A Near-Data Processing Accelerator
+//! for Time Series Analysis* (Fernandez et al., ICCD 2020) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: NATSA's diagonal-pair
+//!   workload partitioning ([`natsa::scheduler`]), the PU fleet and its
+//!   functional datapath ([`natsa::pu`]), the host API of Algorithm 2
+//!   ([`natsa`]), software baselines ([`mp`]), the evaluation substrates
+//!   the paper ran on ZSim/gem5/Ramulator/McPAT/Aladdin ([`sim`]), and the
+//!   request-path runtime that executes AOT-compiled kernels through
+//!   xla/PJRT ([`runtime`], [`coordinator`]).
+//! * **Layer 2 (python/compile/model.py, build-time only)** — the JAX
+//!   compute graphs the host offloads, lowered once to HLO text in
+//!   `artifacts/`.
+//! * **Layer 1 (python/compile/kernels/, build-time only)** — Pallas
+//!   kernels implementing the PU pipeline (DPU → DPUU → DCU → PUU).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! kernels once and the rust binary is self-contained afterwards.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use natsa::natsa::{NatsaConfig, NatsaEngine};
+//! use natsa::timeseries::generator::{self, Pattern};
+//!
+//! let t = generator::generate::<f64>(Pattern::SineWithAnomaly, 4096, 7);
+//! let engine = NatsaEngine::<f64>::new(NatsaConfig::default());
+//! let out = engine.compute(&t, 64).unwrap();
+//! let (pos, _) = out.profile.discord().unwrap();
+//! println!("strongest anomaly near index {pos}");
+//! ```
+//!
+//! ## Planes
+//!
+//! The crate keeps two orthogonal planes (DESIGN.md §4):
+//! * the **functional plane** computes bit-checked matrix profiles
+//!   ([`mp`], [`natsa`], [`runtime`]);
+//! * the **timing/energy plane** ([`sim`]) consumes work descriptors from
+//!   the functional plane and evaluates per-platform performance, power,
+//!   energy and area models to regenerate the paper's tables and figures
+//!   ([`report`]).
+
+pub mod benchmark;
+pub mod coordinator;
+pub mod mp;
+pub mod natsa;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod timeseries;
+
+/// Crate-wide result type (thin wrapper over [`anyhow`]).
+pub type Result<T> = anyhow::Result<T>;
+
+/// Floating-point element trait for the whole stack.
+///
+/// The paper evaluates double-precision (DP) and single-precision (SP)
+/// NATSA designs; every algorithm and model in this crate is generic over
+/// this trait so both designs share one implementation.
+pub trait Real:
+    num_traits::Float
+    + num_traits::FromPrimitive
+    + num_traits::ToPrimitive
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::iter::Sum
+    + Send
+    + Sync
+    + 'static
+{
+    /// Short dtype tag matching the artifact naming scheme ("f32"/"f64").
+    const DTYPE: &'static str;
+    /// Bytes per element — drives the memory-traffic models in [`sim`].
+    const BYTES: usize;
+    fn of_f64(v: f64) -> Self {
+        num_traits::FromPrimitive::from_f64(v).expect("finite f64 -> Real")
+    }
+    fn to_f64s(self) -> f64 {
+        num_traits::ToPrimitive::to_f64(&self).expect("Real -> f64")
+    }
+}
+
+impl Real for f32 {
+    const DTYPE: &'static str = "f32";
+    const BYTES: usize = 4;
+}
+
+impl Real for f64 {
+    const DTYPE: &'static str = "f64";
+    const BYTES: usize = 8;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_roundtrip() {
+        assert_eq!(f32::DTYPE, "f32");
+        assert_eq!(f64::BYTES, 8);
+        assert_eq!(f32::of_f64(1.5), 1.5f32);
+        assert_eq!(2.5f64.to_f64s(), 2.5);
+    }
+}

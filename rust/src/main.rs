@@ -1,0 +1,317 @@
+//! `natsa` — command-line front end for the NATSA reproduction.
+//!
+//! Subcommands:
+//!   generate   synthesize a time series to a file
+//!   profile    compute a matrix profile (scrimp/stomp/brute/natsa/pjrt)
+//!   anytime    interruptible NATSA run with a work budget
+//!   simulate   evaluate a platform timing/power model on a workload
+//!   repro      regenerate a paper table/figure (or `all`)
+//!   artifacts  list the AOT kernel artifacts the runtime can load
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs): the offline
+//! vendor set has no clap.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use natsa::coordinator::PjrtEngine;
+use natsa::mp::{brute, parallel, scrimp, stomp, MpConfig};
+use natsa::natsa::anytime::{run_anytime, Budget};
+use natsa::natsa::{NatsaConfig, NatsaEngine, Order};
+use natsa::runtime::{default_artifact_dir, Manifest};
+use natsa::sim::accel::NatsaDesign;
+use natsa::sim::platform::GpPlatform;
+use natsa::sim::{Precision, Workload};
+use natsa::timeseries::generator::{self, Pattern};
+use natsa::timeseries::io;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+struct Opts(HashMap<String, String>);
+
+impl Opts {
+    fn parse(args: &[String]) -> anyhow::Result<Opts> {
+        let mut map = HashMap::new();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got '{a}'"))?;
+            let val = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+            map.insert(key.to_string(), val.clone());
+        }
+        Ok(Opts(map))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+fn series_from(opts: &Opts) -> anyhow::Result<Vec<f64>> {
+    if let Some(path) = opts.get("input") {
+        return io::load_series(&PathBuf::from(path));
+    }
+    let pattern = Pattern::parse(opts.get("pattern").unwrap_or("random-walk"))
+        .ok_or_else(|| anyhow::anyhow!("unknown pattern (see `generate`)"))?;
+    let n = opts.usize("n", 16_384)?;
+    let seed = opts.u64("seed", 42)?;
+    Ok(generator::generate(pattern, n, seed))
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let opts = Opts::parse(&args[1..])?;
+    match cmd.as_str() {
+        "generate" => cmd_generate(&opts),
+        "profile" => cmd_profile(&opts),
+        "anytime" => cmd_anytime(&opts),
+        "simulate" => cmd_simulate(&opts),
+        "repro" => cmd_repro(&opts),
+        "artifacts" => cmd_artifacts(&opts),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `natsa help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "natsa — NATSA (ICCD 2020) reproduction\n\n\
+         usage: natsa <command> [--key value ...]\n\n\
+         commands:\n\
+         \x20 generate  --pattern <random-walk|sine|ecg|seismic|motif> --n N --seed S --out FILE\n\
+         \x20 profile   --engine <scrimp|stomp|brute|natsa|parallel|pjrt> --m M\n\
+         \x20           [--input FILE | --pattern P --n N --seed S] [--out FILE]\n\
+         \x20           [--pus 48] [--threads T] [--precision f32|f64] [--order seq|random]\n\
+         \x20 anytime   --fraction F --m M [--pattern P --n N]\n\
+         \x20 simulate  --platform <ddr4-ooo|ddr4-inorder|hbm-ooo|hbm-inorder|natsa|natsa-ddr4>\n\
+         \x20           --n N --m M [--precision dp|sp]\n\
+         \x20 repro     --id <fig1|fig3|fig4|fig7|table2|fig8|fig9|fig10|table3|fig11|fig12|sens-m|all>\n\
+         \x20 artifacts [--dir artifacts]"
+    );
+}
+
+fn cmd_generate(opts: &Opts) -> anyhow::Result<()> {
+    let t = series_from(opts)?;
+    match opts.get("out") {
+        Some(path) => {
+            io::save_series(&PathBuf::from(path), &t)?;
+            println!("wrote {} points to {path}", t.len());
+        }
+        None => {
+            for v in &t {
+                println!("{v}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_profile(opts: &Opts) -> anyhow::Result<()> {
+    let t = series_from(opts)?;
+    let m = opts.usize("m", 128)?;
+    let engine = opts.get("engine").unwrap_or("natsa");
+    let threads = opts.usize("threads", 0)?;
+    let pus = opts.usize("pus", 48)?;
+    let order = match opts.get("order") {
+        Some("random") => Order::Random(opts.u64("seed", 42)?),
+        _ => Order::Sequential,
+    };
+    let cfg = MpConfig::new(m);
+    let start = std::time::Instant::now();
+
+    let (p, i): (Vec<f64>, Vec<i64>) = match engine {
+        "scrimp" => {
+            let mp = scrimp::matrix_profile(&t, cfg)?;
+            (mp.p, mp.i)
+        }
+        "stomp" => {
+            let mp = stomp::matrix_profile(&t, cfg)?;
+            (mp.p, mp.i)
+        }
+        "brute" => {
+            let mp = brute::matrix_profile(&t, cfg)?;
+            (mp.p, mp.i)
+        }
+        "parallel" => {
+            let thr = if threads == 0 { 8 } else { threads };
+            let mp = parallel::matrix_profile(&t, cfg, thr)?;
+            (mp.p, mp.i)
+        }
+        "natsa" => {
+            let mut config = NatsaConfig::default().with_pus(pus).with_order(order);
+            if threads > 0 {
+                config = config.with_threads(threads);
+            }
+            let out = NatsaEngine::new(config).compute(&t, m)?;
+            println!(
+                "natsa: {} PUs, imbalance {:.3}, {} cells",
+                pus, out.schedule_imbalance, out.work.cells
+            );
+            (out.profile.p, out.profile.i)
+        }
+        "pjrt" => {
+            if opts.get("precision") == Some("f32") {
+                let t32: Vec<f32> = t.iter().map(|&x| x as f32).collect();
+                let engine = PjrtEngine::<f32>::new(
+                    NatsaConfig::default().with_pus(pus).with_order(order),
+                    default_artifact_dir(),
+                )
+                .with_workers(if threads == 0 { 4 } else { threads });
+                let out = engine.compute(&t32, m)?;
+                println!(
+                    "pjrt: {} chunk calls, {} dot calls, kernel {:.2}s, wall {:.2}s",
+                    out.metrics.chunk_calls,
+                    out.metrics.dot_calls,
+                    out.metrics.kernel_seconds,
+                    out.metrics.wall_seconds
+                );
+                (
+                    out.profile.p.iter().map(|&x| x as f64).collect(),
+                    out.profile.i,
+                )
+            } else {
+                let engine = PjrtEngine::<f64>::new(
+                    NatsaConfig::default().with_pus(pus).with_order(order),
+                    default_artifact_dir(),
+                )
+                .with_workers(if threads == 0 { 4 } else { threads });
+                let out = engine.compute(&t, m)?;
+                println!(
+                    "pjrt: {} chunk calls, {} dot calls, kernel {:.2}s, wall {:.2}s",
+                    out.metrics.chunk_calls,
+                    out.metrics.dot_calls,
+                    out.metrics.kernel_seconds,
+                    out.metrics.wall_seconds
+                );
+                (out.profile.p, out.profile.i)
+            }
+        }
+        other => anyhow::bail!("unknown engine '{other}'"),
+    };
+    let dt = start.elapsed().as_secs_f64();
+
+    let (motif_i, motif_d) = p
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| d.is_finite())
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(k, d)| (k, *d))
+        .unwrap_or((0, f64::NAN));
+    let (disc_i, disc_d) = p
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| d.is_finite())
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(k, d)| (k, *d))
+        .unwrap_or((0, f64::NAN));
+    println!(
+        "{engine}: n={}, m={m}, {:.3}s | motif @{motif_i} d={motif_d:.4} | discord @{disc_i} d={disc_d:.4}",
+        t.len(),
+        dt
+    );
+    if let Some(path) = opts.get("out") {
+        io::save_profile(&PathBuf::from(path), &p, &i)?;
+        println!("profile written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_anytime(opts: &Opts) -> anyhow::Result<()> {
+    let t = series_from(opts)?;
+    let m = opts.usize("m", 128)?;
+    let fraction: f64 = opts.get("fraction").unwrap_or("0.2").parse()?;
+    let config = NatsaConfig::default().with_order(Order::Random(opts.u64("seed", 42)?));
+    let out = run_anytime(&t, m, &config, Budget::Fraction(fraction))?;
+    let (mi, md) = out.profile.motif().unwrap();
+    println!(
+        "anytime: {:.1}% of cells, {} diagonals | best motif so far @{mi} d={md:.4}",
+        out.progress * 100.0,
+        out.diagonals_done
+    );
+    Ok(())
+}
+
+fn cmd_simulate(opts: &Opts) -> anyhow::Result<()> {
+    let n = opts.usize("n", 524_288)?;
+    let m = opts.usize("m", 256)?;
+    let prec = match opts.get("precision").unwrap_or("dp") {
+        "sp" | "f32" => Precision::Sp,
+        _ => Precision::Dp,
+    };
+    let w = Workload::new(n, m);
+    let e = match opts.get("platform").unwrap_or("natsa") {
+        "ddr4-ooo" => GpPlatform::ddr4_ooo().estimate(&w, prec),
+        "ddr4-inorder" => GpPlatform::ddr4_inorder().estimate(&w, prec),
+        "hbm-ooo" => GpPlatform::hbm_ooo().estimate(&w, prec),
+        "hbm-inorder" => GpPlatform::hbm_inorder().estimate(&w, prec),
+        "natsa" => NatsaDesign::hbm(prec).estimate(&w),
+        "natsa-ddr4" => NatsaDesign::ddr4(prec).estimate(&w),
+        other => anyhow::bail!("unknown platform '{other}'"),
+    };
+    println!(
+        "{} [{}] n={n} m={m}: {:.2}s, {:.1} GB/s, {:.1} W, {:.0} J ({}-bound)",
+        e.platform,
+        e.precision.name(),
+        e.time_s,
+        e.bw_gbs,
+        e.power_w,
+        e.energy_j,
+        e.bound
+    );
+    Ok(())
+}
+
+fn cmd_repro(opts: &Opts) -> anyhow::Result<()> {
+    let id = opts.get("id").unwrap_or("all");
+    if id == "all" {
+        for id in natsa::report::ALL {
+            println!("{}", natsa::report::run(id)?);
+        }
+    } else {
+        println!("{}", natsa::report::run(id)?);
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(opts: &Opts) -> anyhow::Result<()> {
+    let dir = PathBuf::from(opts.get("dir").unwrap_or("artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    println!("{} artifacts in {}:", manifest.artifacts.len(), dir.display());
+    for a in &manifest.artifacts {
+        println!(
+            "  {:28} kind={:?} dtype={} m={} v={} n={}",
+            a.name, a.kind, a.dtype, a.m, a.v, a.n
+        );
+    }
+    Ok(())
+}

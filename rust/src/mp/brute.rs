@@ -1,0 +1,124 @@
+//! Brute-force exact matrix profile — the independent oracle.
+//!
+//! Deliberately formulated *differently* from the production algorithms:
+//! each window is explicitly z-normalized and the plain Euclidean distance
+//! between the normalized windows is taken (no Eq. 1, no Eq. 2, no shared
+//! statistics code).  O(n²·m) — small inputs only, used by tests to pin
+//! down every other implementation.
+
+use crate::mp::{MatrixProfile, MpConfig};
+use crate::Real;
+
+/// Compute the exact matrix profile by explicit z-normalization.
+pub fn matrix_profile<T: Real>(t: &[T], cfg: MpConfig) -> crate::Result<MatrixProfile<T>> {
+    let nw = cfg.validate(t.len())?;
+    let m = cfg.m;
+    let excl = cfg.exclusion();
+
+    // Pre-normalize every window (f64 internally for oracle quality).
+    let mut znorm: Vec<Vec<f64>> = Vec::with_capacity(nw);
+    for i in 0..nw {
+        let w: Vec<f64> = t[i..i + m].iter().map(|x| x.to_f64s()).collect();
+        let mu = w.iter().sum::<f64>() / m as f64;
+        let var = w.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / m as f64;
+        let sig = var.sqrt();
+        znorm.push(if sig > 0.0 {
+            w.iter().map(|x| (x - mu) / sig).collect()
+        } else {
+            vec![0.0; m]
+        });
+    }
+
+    let mut mp = MatrixProfile::new_inf(nw, m, excl);
+    for i in 0..nw {
+        for j in (i + excl)..nw {
+            let d2: f64 = znorm[i]
+                .iter()
+                .zip(&znorm[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            mp.update(i, j, T::of_f64(d2.sqrt()));
+        }
+    }
+    Ok(mp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, Rng};
+    use crate::timeseries::generator::{generate_with_event, Pattern, PlantedEvent};
+
+    #[test]
+    fn planted_motif_found() {
+        let (t, ev) = generate_with_event::<f64>(Pattern::PlantedMotif, 512, 11);
+        let mp = matrix_profile(&t, MpConfig::new(24)).unwrap();
+        if let PlantedEvent::Motif { a, b, .. } = ev {
+            assert!(mp.p[a] < 1e-6, "p[{a}] = {}", mp.p[a]);
+            assert!(mp.p[b] < 1e-6);
+            assert_eq!(mp.i[a], b as i64);
+            assert_eq!(mp.i[b], a as i64);
+        } else {
+            unreachable!()
+        }
+    }
+
+    #[test]
+    fn trivial_match_banned_by_exclusion() {
+        let mut rng = Rng::new(2);
+        let t: Vec<f64> = rng.gauss_vec(200);
+        let mp = matrix_profile(&t, MpConfig::new(16)).unwrap();
+        for (k, &j) in mp.i.iter().enumerate() {
+            assert!(j >= 0);
+            assert!((k as i64 - j).unsigned_abs() as usize >= mp.excl);
+        }
+    }
+
+    #[test]
+    fn profile_bounded_by_2_sqrt_m() {
+        // z-norm distance is bounded: d^2 = 2m(1-corr) <= 4m
+        let mut rng = Rng::new(3);
+        let t: Vec<f64> = rng.gauss_vec(300);
+        let m = 12;
+        let mp = matrix_profile(&t, MpConfig::new(m)).unwrap();
+        let bound = 2.0 * (m as f64).sqrt() + 1e-9;
+        for &d in &mp.p {
+            assert!(d <= bound, "{d} > {bound}");
+        }
+    }
+
+    #[test]
+    fn symmetric_distances_give_consistent_index_pairs() {
+        check("brute-index-consistency", 10, |rng: &mut Rng| {
+            let n = rng.range(80, 200);
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let mp = matrix_profile(&t, MpConfig::new(8)).unwrap();
+            // For every i, the distance to I[i] must equal P[i] when
+            // recomputed from scratch.
+            for (i, &j) in mp.i.iter().enumerate() {
+                let j = j as usize;
+                let d = znorm_pair(&t, i, j, 8);
+                assert!(
+                    (d - mp.p[i]).abs() < 1e-9,
+                    "P[{i}]={} but d(i,I[i])={d}",
+                    mp.p[i]
+                );
+            }
+        });
+    }
+
+    fn znorm_pair(t: &[f64], i: usize, j: usize, m: usize) -> f64 {
+        let z = |s: usize| -> Vec<f64> {
+            let w = &t[s..s + m];
+            let mu = w.iter().sum::<f64>() / m as f64;
+            let sig = (w.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / m as f64).sqrt();
+            w.iter().map(|x| (x - mu) / sig).collect()
+        };
+        let (a, b) = (z(i), z(j));
+        a.iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+            .sqrt()
+    }
+}

@@ -1,0 +1,320 @@
+//! Matrix profile: types, distance math, and the software baselines.
+//!
+//! Section 2.1 of the paper: for a series `T` of length `n` and window
+//! length `m`, the profile `P[i]` is the minimum z-normalized Euclidean
+//! distance (Eq. 1) from window `i` to any window outside its exclusion
+//! zone, and `I[i]` is that neighbor's index.
+//!
+//! Implementations (all exact, all checked against each other):
+//! * [`brute`] — textbook O(n²·m) with explicit z-normalization; the
+//!   independent oracle (deliberately does *not* use Eq. 1).
+//! * [`stomp`]  — row-streaming O(n²) incremental dot products (STOMP [44]).
+//! * [`scrimp`] — the paper's baseline: diagonal-order SCRIMP (Alg. 1),
+//!   serial and chunk-"vectorized".
+//! * [`parallel`] — multi-threaded SCRIMP with per-thread private profiles,
+//!   the software analogue of NATSA's PU fleet.
+//! * [`prescrimp`] — the approximate SCRIMP++ preprocessing phase.
+//! * [`topk`] — ranked motif/discord extraction with trivial-match
+//!   suppression (the downstream-user API).
+
+pub mod brute;
+pub mod parallel;
+pub mod prescrimp;
+pub mod scrimp;
+pub mod stomp;
+pub mod topk;
+
+use crate::timeseries::{default_exclusion, num_windows};
+use crate::Real;
+
+/// The result of a matrix profile computation.
+#[derive(Clone, Debug)]
+pub struct MatrixProfile<T> {
+    /// `P`: minimum z-norm distance per window (+inf when nothing admissible).
+    pub p: Vec<T>,
+    /// `I`: index of the nearest neighbor (-1 when nothing admissible).
+    pub i: Vec<i64>,
+    /// Window length `m`.
+    pub m: usize,
+    /// Exclusion-zone radius actually used.
+    pub excl: usize,
+}
+
+impl<T: Real> MatrixProfile<T> {
+    /// Fresh all-infinite profile for `nw` windows.
+    pub fn new_inf(nw: usize, m: usize, excl: usize) -> Self {
+        MatrixProfile {
+            p: vec![T::infinity(); nw],
+            i: vec![-1; nw],
+            m,
+            excl,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.p.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.p.is_empty()
+    }
+
+    /// Record distance `d` between windows `a` and `b` (both directions) —
+    /// the PUU update (Alg. 1 lines 9-10 / 21-22).
+    #[inline]
+    pub fn update(&mut self, a: usize, b: usize, d: T) {
+        if d < self.p[a] {
+            self.p[a] = d;
+            self.i[a] = b as i64;
+        }
+        if d < self.p[b] {
+            self.p[b] = d;
+            self.i[b] = a as i64;
+        }
+    }
+
+    /// Element-wise min-merge of another (partial) profile — Alg. 2 line 6.
+    pub fn merge(&mut self, other: &MatrixProfile<T>) {
+        assert_eq!(self.len(), other.len(), "profile length mismatch");
+        for k in 0..self.p.len() {
+            if other.p[k] < self.p[k] {
+                self.p[k] = other.p[k];
+                self.i[k] = other.i[k];
+            }
+        }
+    }
+
+    /// Strongest discord: the window with the *largest finite* profile
+    /// value (most isolated subsequence — the anomaly detector).
+    pub fn discord(&self) -> Option<(usize, T)> {
+        self.p
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.is_finite())
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, d)| (k, *d))
+    }
+
+    /// Strongest motif: the window with the smallest profile value.
+    pub fn motif(&self) -> Option<(usize, T)> {
+        self.p
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.is_finite())
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, d)| (k, *d))
+    }
+
+    /// Replace every finite profile value with its square root — the
+    /// deferred Eq. 1 finalization for engines that accumulate squared
+    /// distances (see `scrimp::compute_diagonal`'s PERF CONTRACT).
+    pub fn sqrt_in_place(&mut self) {
+        for v in self.p.iter_mut() {
+            if v.is_finite() {
+                *v = v.sqrt();
+            }
+        }
+    }
+
+    /// Maximum absolute profile difference vs another result (test helper).
+    pub fn max_abs_diff(&self, other: &MatrixProfile<T>) -> f64 {
+        assert_eq!(self.len(), other.len());
+        self.p
+            .iter()
+            .zip(&other.p)
+            .map(|(a, b)| {
+                if a.is_infinite() && b.is_infinite() {
+                    0.0
+                } else {
+                    (a.to_f64s() - b.to_f64s()).abs()
+                }
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Configuration shared by all matrix profile implementations.
+#[derive(Clone, Copy, Debug)]
+pub struct MpConfig {
+    /// Window (subsequence) length `m`.
+    pub m: usize,
+    /// Exclusion-zone radius; `None` = paper default `m/4`.
+    pub excl: Option<usize>,
+}
+
+impl MpConfig {
+    pub fn new(m: usize) -> Self {
+        MpConfig { m, excl: None }
+    }
+
+    pub fn with_excl(m: usize, excl: usize) -> Self {
+        MpConfig { m, excl: Some(excl) }
+    }
+
+    pub fn exclusion(&self) -> usize {
+        self.excl.unwrap_or_else(|| default_exclusion(self.m))
+    }
+
+    /// Validate against a series length; returns the window count.
+    pub fn validate(&self, n: usize) -> crate::Result<usize> {
+        anyhow::ensure!(self.m >= 3, "window length m={} too small (min 3)", self.m);
+        let nw = num_windows(n, self.m);
+        anyhow::ensure!(
+            nw > self.exclusion(),
+            "series too short: n={n}, m={}, excl={} leaves no admissible pair",
+            self.m,
+            self.exclusion()
+        );
+        Ok(nw)
+    }
+}
+
+/// Squared Eq. 1 distance (sqrt deferred — see `scrimp::compute_diagonal`).
+#[inline(always)]
+pub fn znorm_sqdist<T: Real>(q: T, m: usize, mu_i: T, inv_i: T, mu_j: T, inv_j: T) -> T {
+    let mf = T::of_f64(m as f64);
+    let corr = (q - mf * mu_i * mu_j) * inv_i * inv_j * mf;
+    let two_m = T::of_f64(2.0 * m as f64);
+    (two_m * (T::one() - corr)).max(T::zero())
+}
+
+/// Eq. 1: z-normalized Euclidean distance from a raw dot product `q`.
+///
+/// `inv_msig_*` is the precomputed `1/(m*sigma)` (zero for constant
+/// windows, which degenerate to correlation 0 ⇒ distance `sqrt(2m)`).
+#[inline(always)]
+pub fn znorm_dist<T: Real>(q: T, m: usize, mu_i: T, inv_i: T, mu_j: T, inv_j: T) -> T {
+    let mf = T::of_f64(m as f64);
+    let corr = (q - mf * mu_i * mu_j) * inv_i * inv_j * mf; // (q - m μi μj)/(m σi σj)
+    let two_m = T::of_f64(2.0 * m as f64);
+    (two_m * (T::one() - corr)).max(T::zero()).sqrt()
+}
+
+/// Work accounting emitted by the functional plane and consumed by the
+/// timing/energy models in [`crate::sim`] (DESIGN.md §4).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkStats {
+    /// Distance-matrix cells evaluated (excludes the exclusion zone).
+    pub cells: u64,
+    /// Diagonals walked.
+    pub diagonals: u64,
+    /// O(m) first-dot-products computed (one per diagonal or chunk seed).
+    pub first_dots: u64,
+    /// Profile update attempts (two per cell: row + column side).
+    pub updates: u64,
+}
+
+impl WorkStats {
+    pub fn add(&mut self, other: &WorkStats) {
+        self.cells += other.cells;
+        self.diagonals += other.diagonals;
+        self.first_dots += other.first_dots;
+        self.updates += other.updates;
+    }
+
+    /// Floating-point operations implied by this work, per Algorithm 1:
+    /// Eq. 2 update (4 flops) + Eq. 1 distance (~7 flops) + 2 compares
+    /// per cell, plus 2m flops per first dot product.
+    pub fn flops(&self, m: usize) -> u64 {
+        self.cells * 13 + self.first_dots * (2 * m as u64)
+    }
+}
+
+/// Total admissible cells in the upper-triangular distance matrix —
+/// the denominator for anytime progress and the DES workload size.
+pub fn total_cells(nw: usize, excl: usize) -> u64 {
+    // diagonals excl..nw-1; diagonal d has nw - d cells
+    (excl..nw).map(|d| (nw - d) as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_both_directions() {
+        let mut mp = MatrixProfile::<f64>::new_inf(4, 3, 1);
+        mp.update(0, 2, 1.5);
+        assert_eq!(mp.p[0], 1.5);
+        assert_eq!(mp.i[0], 2);
+        assert_eq!(mp.p[2], 1.5);
+        assert_eq!(mp.i[2], 0);
+        mp.update(0, 3, 2.0); // worse: no change on 0
+        assert_eq!(mp.p[0], 1.5);
+        assert_eq!(mp.p[3], 2.0);
+    }
+
+    #[test]
+    fn merge_takes_elementwise_min() {
+        let mut a = MatrixProfile::<f64>::new_inf(3, 3, 1);
+        let mut b = MatrixProfile::<f64>::new_inf(3, 3, 1);
+        a.update(0, 2, 1.0);
+        b.update(1, 2, 0.5);
+        a.merge(&b);
+        assert_eq!(a.p[0], 1.0);
+        assert_eq!(a.p[1], 0.5);
+        assert_eq!(a.p[2], 0.5);
+        assert_eq!(a.i[2], 1);
+    }
+
+    #[test]
+    fn discord_and_motif() {
+        let mp = MatrixProfile::<f64> {
+            p: vec![1.0, 5.0, 0.25, f64::INFINITY],
+            i: vec![2, 0, 0, -1],
+            m: 4,
+            excl: 1,
+        };
+        assert_eq!(mp.discord(), Some((1, 5.0)));
+        assert_eq!(mp.motif(), Some((2, 0.25)));
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(MpConfig::new(2).validate(100).is_err());
+        assert!(MpConfig::new(8).validate(9).is_err());
+        assert_eq!(MpConfig::new(8).validate(100).unwrap(), 93);
+        assert_eq!(MpConfig::new(8).exclusion(), 2);
+        assert_eq!(MpConfig::with_excl(8, 5).exclusion(), 5);
+    }
+
+    #[test]
+    fn znorm_dist_identical_windows_is_zero() {
+        // identical windows: q = sum(x^2) over the window
+        let w = [1.0f64, 2.0, 3.0, 4.0];
+        let m = w.len();
+        let mu = w.iter().sum::<f64>() / m as f64;
+        let var = w.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / m as f64;
+        let sig = var.sqrt();
+        let q: f64 = w.iter().map(|x| x * x).sum();
+        let inv = 1.0 / (m as f64 * sig);
+        let d = znorm_dist(q, m, mu, inv, mu, inv);
+        assert!(d.abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn znorm_dist_constant_window_sqrt_2m() {
+        let m = 8usize;
+        let d = znorm_dist(64.0f64, m, 1.0, 0.0, 0.5, 1.0);
+        assert!((d - (2.0 * m as f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_cells_matches_enumeration() {
+        // nw=10, excl=2 -> diagonals 2..9, lengths 8..1
+        assert_eq!(total_cells(10, 2), (1..=8).sum::<u64>());
+        assert_eq!(total_cells(5, 1), 4 + 3 + 2 + 1);
+        assert_eq!(total_cells(3, 3), 0);
+    }
+
+    #[test]
+    fn workstats_flops() {
+        let w = WorkStats {
+            cells: 10,
+            diagonals: 1,
+            first_dots: 1,
+            updates: 20,
+        };
+        assert_eq!(w.flops(16), 10 * 13 + 32);
+    }
+}

@@ -1,0 +1,201 @@
+//! Multi-threaded SCRIMP — the software analogue of NATSA's PU fleet.
+//!
+//! Mirrors the paper's baseline setup (Section 2.2): diagonals are
+//! partitioned across threads, each thread keeps a *private* profile
+//! (`PP`/`II`, exactly like NATSA's per-PU replicated vectors — Section
+//! 4.2 "Data mapping"), and a final reduction min-merges them.  No locks
+//! or atomics on the hot path.
+//!
+//! Partitioning is pluggable so benches can contrast the naive contiguous
+//! split (load-imbalanced: diagonal lengths vary) against NATSA's
+//! balanced pair scheme from [`crate::natsa::scheduler`].
+
+use crate::mp::scrimp::compute_diagonal;
+use crate::mp::{MatrixProfile, MpConfig, WorkStats};
+use crate::timeseries::sliding_stats;
+use crate::Real;
+
+/// How diagonals are split across threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    /// Contiguous blocks of diagonal indices (the naive split; threads
+    /// holding short diagonals finish early).
+    Contiguous,
+    /// Round-robin by index (better but still unbalanced at the tail).
+    Strided,
+    /// NATSA's balanced diagonal-pair scheme (Section 4.2).
+    BalancedPairs,
+}
+
+/// Parallel SCRIMP with `threads` workers.
+pub fn matrix_profile<T: Real>(
+    t: &[T],
+    cfg: MpConfig,
+    threads: usize,
+) -> crate::Result<MatrixProfile<T>> {
+    Ok(with_stats(t, cfg, threads, Partition::BalancedPairs)?.0)
+}
+
+/// Parallel SCRIMP with explicit partitioning and aggregate work stats.
+pub fn with_stats<T: Real>(
+    t: &[T],
+    cfg: MpConfig,
+    threads: usize,
+    partition: Partition,
+) -> crate::Result<(MatrixProfile<T>, WorkStats)> {
+    anyhow::ensure!(threads >= 1, "need at least one thread");
+    let nw = cfg.validate(t.len())?;
+    let excl = cfg.exclusion();
+    let m = cfg.m;
+    let st = sliding_stats(t, m);
+    let assignments = assign(nw, excl, threads, partition);
+
+    let results: Vec<(MatrixProfile<T>, WorkStats)> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for diags in &assignments {
+            let st = &st;
+            handles.push(scope.spawn(move || {
+                let mut local = MatrixProfile::new_inf(nw, m, excl);
+                let mut work = WorkStats::default();
+                for &d in diags {
+                    compute_diagonal(t, st, d, &mut local, &mut work);
+                }
+                (local, work)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Host-side reduction (Alg. 2 line 6).
+    let mut mp = MatrixProfile::new_inf(nw, m, excl);
+    let mut work = WorkStats::default();
+    for (local, w) in &results {
+        mp.merge(local);
+        work.add(w);
+    }
+    mp.sqrt_in_place(); // diagonals accumulate squared distances
+    Ok((mp, work))
+}
+
+/// Split diagonals `excl..nw` into per-thread work lists.
+pub fn assign(nw: usize, excl: usize, threads: usize, partition: Partition) -> Vec<Vec<usize>> {
+    let diags: Vec<usize> = (excl..nw).collect();
+    let mut out = vec![Vec::new(); threads];
+    match partition {
+        Partition::Contiguous => {
+            let per = diags.len().div_ceil(threads);
+            for (k, chunk) in diags.chunks(per.max(1)).enumerate() {
+                out[k.min(threads - 1)].extend_from_slice(chunk);
+            }
+        }
+        Partition::Strided => {
+            for (k, d) in diags.into_iter().enumerate() {
+                out[k % threads].push(d);
+            }
+        }
+        Partition::BalancedPairs => {
+            // Delegate to the NATSA scheduler so the software fleet and the
+            // accelerator share one partitioning implementation.
+            let sched = crate::natsa::scheduler::schedule(nw, excl, threads);
+            for (k, pu) in sched.per_pu.into_iter().enumerate() {
+                out[k] = pu;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mp::scrimp;
+    use crate::prop::{check, Rng};
+
+    #[test]
+    fn all_partitions_match_serial() {
+        let mut rng = Rng::new(21);
+        let t: Vec<f64> = rng.gauss_vec(600);
+        let cfg = MpConfig::new(24);
+        let want = scrimp::matrix_profile(&t, cfg).unwrap();
+        for part in [
+            Partition::Contiguous,
+            Partition::Strided,
+            Partition::BalancedPairs,
+        ] {
+            let (got, _) = with_stats(&t, cfg, 4, part).unwrap();
+            assert!(
+                got.max_abs_diff(&want) < 1e-12,
+                "{part:?}: {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn thread_counts_equivalent() {
+        let mut rng = Rng::new(22);
+        let t: Vec<f32> = rng.gauss_vec(500).iter().map(|&x| x as f32).collect();
+        let cfg = MpConfig::new(16);
+        let one = matrix_profile(&t, cfg, 1).unwrap();
+        for threads in [2, 3, 7, 16] {
+            let multi = matrix_profile(&t, cfg, threads).unwrap();
+            assert!(one.max_abs_diff(&multi) < 1e-6, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn assignment_covers_every_diagonal_once() {
+        check("partition-coverage", 15, |rng: &mut Rng| {
+            let nw = rng.range(20, 500);
+            let excl = rng.range(1, 8.min(nw / 2));
+            let threads = rng.range(1, 17);
+            for part in [
+                Partition::Contiguous,
+                Partition::Strided,
+                Partition::BalancedPairs,
+            ] {
+                let lists = assign(nw, excl, threads, part);
+                assert_eq!(lists.len(), threads);
+                let mut all: Vec<usize> = lists.concat();
+                all.sort_unstable();
+                let want: Vec<usize> = (excl..nw).collect();
+                assert_eq!(all, want, "{part:?} nw={nw} excl={excl} thr={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn balanced_pairs_has_lower_imbalance_than_contiguous() {
+        // Work per thread = sum of diagonal lengths (nw - d).
+        let nw = 4000;
+        let excl = 4;
+        let threads = 8;
+        let load = |lists: &Vec<Vec<usize>>| -> (u64, u64) {
+            let loads: Vec<u64> = lists
+                .iter()
+                .map(|l| l.iter().map(|&d| (nw - d) as u64).sum())
+                .collect();
+            (*loads.iter().max().unwrap(), *loads.iter().min().unwrap())
+        };
+        let (max_b, min_b) = load(&assign(nw, excl, threads, Partition::BalancedPairs));
+        let (max_c, min_c) = load(&assign(nw, excl, threads, Partition::Contiguous));
+        let imb_b = max_b as f64 / min_b.max(1) as f64;
+        let imb_c = max_c as f64 / min_c.max(1) as f64;
+        assert!(
+            imb_b < 1.01,
+            "balanced pairs imbalance {imb_b} (max {max_b}, min {min_b})"
+        );
+        assert!(imb_b < imb_c, "balanced {imb_b} vs contiguous {imb_c}");
+    }
+
+    #[test]
+    fn work_stats_independent_of_threads() {
+        let mut rng = Rng::new(23);
+        let t: Vec<f64> = rng.gauss_vec(300);
+        let cfg = MpConfig::new(12);
+        let (_, w1) = with_stats(&t, cfg, 1, Partition::BalancedPairs).unwrap();
+        let (_, w4) = with_stats(&t, cfg, 4, Partition::BalancedPairs).unwrap();
+        assert_eq!(w1.cells, w4.cells);
+        assert_eq!(w1.first_dots, w4.first_dots);
+    }
+}

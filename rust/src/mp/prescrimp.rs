@@ -1,0 +1,188 @@
+//! PreSCRIMP — the approximate preprocessing phase of SCRIMP++ [112].
+//!
+//! The paper's related work positions SCRIMP++ (= PreSCRIMP + SCRIMP) as
+//! the interactive-speed variant: PreSCRIMP samples the distance matrix on
+//! a stride-`s` grid of anchor cells and *propagates* each sampled dot
+//! product along its diagonal neighborhood (Eq. 2 both directions),
+//! producing a high-quality approximate profile in O(n²/s) work.  Running
+//! full SCRIMP afterwards converges to the exact answer with most of the
+//! anytime benefit front-loaded.
+//!
+//! We include it as (a) the paper's "approximate algorithms are faster but
+//! inexact" contrast point, and (b) a better-than-random anytime seed for
+//! the NATSA engine.
+
+use crate::mp::{znorm_sqdist, MatrixProfile, MpConfig, WorkStats};
+use crate::prop::Rng;
+use crate::timeseries::sliding_stats;
+use crate::Real;
+
+/// Default sampling stride: m/4 (the SCRIMP++ paper's choice).
+pub fn default_stride(m: usize) -> usize {
+    (m / 4).max(1)
+}
+
+/// Approximate matrix profile via anchor sampling + diagonal propagation.
+///
+/// `stride = None` uses the SCRIMP++ default m/4.  The result is an upper
+/// bound of the exact profile (every recorded distance is a true pairwise
+/// distance; some better neighbors may be missed).
+pub fn matrix_profile<T: Real>(
+    t: &[T],
+    cfg: MpConfig,
+    stride: Option<usize>,
+    seed: u64,
+) -> crate::Result<(MatrixProfile<T>, WorkStats)> {
+    let nw = cfg.validate(t.len())?;
+    let m = cfg.m;
+    let excl = cfg.exclusion();
+    let s = stride.unwrap_or_else(|| default_stride(m)).max(1);
+    let st = sliding_stats(t, m);
+    let mut mp = MatrixProfile::new_inf(nw, m, excl);
+    let mut work = WorkStats::default();
+
+    // Anchor rows in random order (preserves anytime behaviour).
+    let mut anchors: Vec<usize> = (0..nw).step_by(s).collect();
+    Rng::new(seed).shuffle(&mut anchors);
+
+    for &i in &anchors {
+        // Best admissible neighbor of window i by direct scan over the
+        // stride grid of columns.
+        let mut best_j = usize::MAX;
+        let mut best_d2 = T::infinity();
+        let mut j = 0usize;
+        while j < nw {
+            if j + excl > i && i + excl > j {
+                j += s;
+                continue; // inside exclusion zone
+            }
+            let q = (0..m).map(|k| t[i + k] * t[j + k]).sum::<T>();
+            work.first_dots += 1;
+            let d2 = znorm_sqdist(q, m, st.mu[i], st.inv_msig[i], st.mu[j], st.inv_msig[j]);
+            mp.update(i, j, d2);
+            work.cells += 1;
+            work.updates += 2;
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best_j = j;
+            }
+            j += s;
+        }
+        if best_j == usize::MAX {
+            continue;
+        }
+
+        // Propagate the best anchor pair along its diagonal, s cells in
+        // each direction (Eq. 2 forward and backward).
+        let (ii, jj) = (i, best_j);
+        let q0 = (0..m).map(|k| t[ii + k] * t[jj + k]).sum::<T>();
+        work.first_dots += 1;
+        // forward
+        let mut q = q0;
+        for step in 1..s {
+            let (a, b) = (ii + step, jj + step);
+            if a >= nw || b >= nw {
+                break;
+            }
+            q = q - t[a - 1] * t[b - 1] + t[a + m - 1] * t[b + m - 1];
+            let d2 = znorm_sqdist(q, m, st.mu[a], st.inv_msig[a], st.mu[b], st.inv_msig[b]);
+            mp.update(a, b, d2);
+            work.cells += 1;
+            work.updates += 2;
+        }
+        // backward
+        let mut q = q0;
+        for step in 1..s {
+            if ii < step || jj < step {
+                break;
+            }
+            let (a, b) = (ii - step, jj - step);
+            q = q + t[a] * t[b] - t[a + m] * t[b + m];
+            let d2 = znorm_sqdist(q, m, st.mu[a], st.inv_msig[a], st.mu[b], st.inv_msig[b]);
+            mp.update(a, b, d2);
+            work.cells += 1;
+            work.updates += 2;
+        }
+        work.diagonals += 1;
+    }
+    mp.sqrt_in_place();
+    Ok((mp, work))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mp::brute;
+    use crate::prop::{check, Rng};
+    use crate::timeseries::generator::{generate_with_event, Pattern, PlantedEvent};
+
+    #[test]
+    fn upper_bounds_exact_profile() {
+        check("prescrimp-upper-bound", 8, |rng: &mut Rng| {
+            let n = rng.range(200, 500);
+            let m = rng.range(8, 32);
+            if n < 5 * m {
+                return;
+            }
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let cfg = MpConfig::new(m);
+            let (approx, _) = matrix_profile(&t, cfg, None, 7).unwrap();
+            let exact = brute::matrix_profile(&t, cfg).unwrap();
+            for k in 0..exact.len() {
+                assert!(
+                    approx.p[k] >= exact.p[k] - 1e-9,
+                    "approx P[{k}]={} below exact {}",
+                    approx.p[k],
+                    exact.p[k]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn finds_planted_motif_with_fraction_of_work() {
+        let (t, ev) = generate_with_event::<f64>(Pattern::PlantedMotif, 4096, 3);
+        let (a, b) = match ev {
+            PlantedEvent::Motif { a, b, .. } => (a, b),
+            _ => unreachable!(),
+        };
+        let m = 64;
+        let cfg = MpConfig::new(m);
+        let (approx, work) = matrix_profile(&t, cfg, None, 5).unwrap();
+        // the planted pair is an exact repeat: PreSCRIMP's propagation
+        // must find it (the anchor grid hits the motif diagonal)
+        assert!(approx.p[a] < 0.5, "p[a]={}", approx.p[a]);
+        assert_eq!(approx.i[a], b as i64);
+        // and with far fewer cells than the full quadratic scan
+        let full = crate::mp::total_cells(t.len() - m + 1, m / 4);
+        assert!(
+            work.cells * 4 < full,
+            "PreSCRIMP did {} of {full} cells",
+            work.cells
+        );
+    }
+
+    #[test]
+    fn respects_exclusion_zone() {
+        let mut rng = Rng::new(9);
+        let t: Vec<f64> = rng.gauss_vec(400);
+        let (mp, _) = matrix_profile(&t, MpConfig::new(16), Some(8), 1).unwrap();
+        for (k, &j) in mp.i.iter().enumerate() {
+            if j >= 0 {
+                assert!((k as i64 - j).unsigned_abs() as usize >= mp.excl);
+            }
+        }
+    }
+
+    #[test]
+    fn stride_one_is_nearly_exact_on_grid_rows() {
+        // with stride 1 every row is an anchor scanning every column:
+        // the result IS the exact profile
+        let mut rng = Rng::new(10);
+        let t: Vec<f64> = rng.gauss_vec(200);
+        let cfg = MpConfig::new(8);
+        let (approx, _) = matrix_profile(&t, cfg, Some(1), 2).unwrap();
+        let exact = brute::matrix_profile(&t, cfg).unwrap();
+        assert!(approx.max_abs_diff(&exact) < 1e-7);
+    }
+}

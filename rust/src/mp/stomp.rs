@@ -1,0 +1,132 @@
+//! STOMP [44]: row-streaming exact matrix profile, O(n²) time, O(n) space.
+//!
+//! The GPU-oriented predecessor of SCRIMP.  Row `i`'s dot products are
+//! derived from row `i-1`'s in O(1) per cell (the same Eq. 2 recurrence,
+//! applied row-wise instead of diagonal-wise).  Included as the second
+//! exact baseline the paper compares against (STOMP/GPU rows of Figs. 8-10)
+//! and as another cross-check on SCRIMP.
+
+use crate::mp::{znorm_sqdist, MatrixProfile, MpConfig, WorkStats};
+use crate::timeseries::sliding_stats;
+use crate::Real;
+
+/// Compute the matrix profile with row-streaming STOMP.
+pub fn matrix_profile<T: Real>(t: &[T], cfg: MpConfig) -> crate::Result<MatrixProfile<T>> {
+    Ok(with_stats(t, cfg)?.0)
+}
+
+/// STOMP with work accounting for the timing models.
+pub fn with_stats<T: Real>(
+    t: &[T],
+    cfg: MpConfig,
+) -> crate::Result<(MatrixProfile<T>, WorkStats)> {
+    let nw = cfg.validate(t.len())?;
+    let m = cfg.m;
+    let excl = cfg.exclusion();
+    let st = sliding_stats(t, m);
+    let mut mp = MatrixProfile::new_inf(nw, m, excl);
+    let mut work = WorkStats::default();
+
+    // Row 0: direct dot products for all admissible columns.
+    let mut q_row: Vec<T> = vec![T::zero(); nw];
+    for j in excl..nw {
+        let q = (0..m).map(|k| t[k] * t[j + k]).sum::<T>();
+        q_row[j] = q;
+        let d = znorm_sqdist(q, m, st.mu[0], st.inv_msig[0], st.mu[j], st.inv_msig[j]);
+        mp.update(0, j, d);
+        work.cells += 1;
+        work.updates += 2;
+    }
+    work.first_dots += (nw - excl) as u64;
+    work.diagonals += 1; // row 0 counts once for accounting symmetry
+
+    // Rows 1..: q[i][j] = q[i-1][j-1] - t[i-1] t[j-1] + t[i+m-1] t[j+m-1].
+    // Only the upper triangle j >= i + excl is computed (symmetry handles
+    // the rest through the two-sided update).
+    for i in 1..nw {
+        // walk j downward so q_row[j-1] is still row i-1's value
+        let jlo = i + excl;
+        if jlo >= nw {
+            break;
+        }
+        for j in (jlo..nw).rev() {
+            let q = if j == 0 {
+                unreachable!()
+            } else {
+                q_row[j - 1] - t[i - 1] * t[j - 1] + t[i + m - 1] * t[j + m - 1]
+            };
+            q_row[j] = q;
+            let d = znorm_sqdist(q, m, st.mu[i], st.inv_msig[i], st.mu[j], st.inv_msig[j]);
+            mp.update(i, j, d);
+            work.cells += 1;
+            work.updates += 2;
+        }
+    }
+    mp.sqrt_in_place(); // cells accumulate squared distances
+    Ok((mp, work))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mp::brute;
+    use crate::prop::{check, Rng};
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Rng::new(5);
+        let t: Vec<f64> = rng.gauss_vec(400);
+        let cfg = MpConfig::new(16);
+        let got = matrix_profile(&t, cfg).unwrap();
+        let want = brute::matrix_profile(&t, cfg).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-8, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn prop_matches_brute_various_shapes() {
+        check("stomp-vs-brute", 12, |rng: &mut Rng| {
+            let n = rng.range(60, 250);
+            let m = rng.range(4, 24);
+            if n < 4 * m {
+                return;
+            }
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let cfg = MpConfig::new(m);
+            let got = matrix_profile(&t, cfg).unwrap();
+            let want = brute::matrix_profile(&t, cfg).unwrap();
+            assert!(
+                got.max_abs_diff(&want) < 1e-7,
+                "n={n} m={m} diff={}",
+                got.max_abs_diff(&want)
+            );
+        });
+    }
+
+    #[test]
+    fn f32_tracks_f64_loosely() {
+        let mut rng = Rng::new(6);
+        let tf64: Vec<f64> = rng.gauss_vec(300);
+        let tf32: Vec<f32> = tf64.iter().map(|&x| x as f32).collect();
+        let a = matrix_profile(&tf64, MpConfig::new(12)).unwrap();
+        let b = matrix_profile(&tf32, MpConfig::new(12)).unwrap();
+        for k in 0..a.len() {
+            assert!(
+                (a.p[k] - b.p[k] as f64).abs() < 1e-2,
+                "k={k}: {} vs {}",
+                a.p[k],
+                b.p[k]
+            );
+        }
+    }
+
+    #[test]
+    fn work_stats_count_upper_triangle() {
+        let mut rng = Rng::new(7);
+        let t: Vec<f64> = rng.gauss_vec(100);
+        let cfg = MpConfig::new(8);
+        let (_, work) = with_stats(&t, cfg).unwrap();
+        let nw = 93;
+        let excl = 2;
+        assert_eq!(work.cells, crate::mp::total_cells(nw, excl));
+    }
+}

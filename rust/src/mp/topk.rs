@@ -1,0 +1,157 @@
+//! Top-k motif and discord extraction from a matrix profile.
+//!
+//! The profile gives the *1-nearest-neighbor* structure; applications
+//! (the paper's §1 list: arrhythmia review, seismic catalogs, ...) want
+//! the top-k ranked events with trivial-match suppression: once a window
+//! is reported, its exclusion-zone neighborhood is masked so the next
+//! pick is a genuinely distinct event, not the same one shifted by one
+//! sample.
+
+use crate::mp::MatrixProfile;
+use crate::Real;
+
+/// One ranked event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event<T> {
+    /// Window start index.
+    pub index: usize,
+    /// Its nearest-neighbor window (motifs: the matching occurrence).
+    pub neighbor: i64,
+    /// z-norm distance to that neighbor.
+    pub distance: T,
+}
+
+fn extract<T: Real>(
+    mp: &MatrixProfile<T>,
+    k: usize,
+    pick_max: bool,
+    suppress: usize,
+) -> Vec<Event<T>> {
+    let mut masked = vec![false; mp.len()];
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut best: Option<(usize, T)> = None;
+        for (idx, &d) in mp.p.iter().enumerate() {
+            if masked[idx] || !d.is_finite() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, bd)) => {
+                    if pick_max {
+                        d > bd
+                    } else {
+                        d < bd
+                    }
+                }
+            };
+            if better {
+                best = Some((idx, d));
+            }
+        }
+        let Some((idx, d)) = best else { break };
+        out.push(Event { index: idx, neighbor: mp.i[idx], distance: d });
+        // trivial-match suppression around the pick (and, for motifs,
+        // around its matching occurrence too)
+        let lo = idx.saturating_sub(suppress);
+        let hi = (idx + suppress + 1).min(mp.len());
+        masked[lo..hi].iter_mut().for_each(|m| *m = true);
+        if !pick_max && mp.i[idx] >= 0 {
+            let nb = mp.i[idx] as usize;
+            let lo = nb.saturating_sub(suppress);
+            let hi = (nb + suppress + 1).min(mp.len());
+            masked[lo..hi].iter_mut().for_each(|m| *m = true);
+        }
+    }
+    out
+}
+
+/// Top-k motifs: the k smallest-profile windows, suppressing each pick's
+/// neighborhood (radius = the profile's exclusion zone) *and* its match.
+pub fn top_motifs<T: Real>(mp: &MatrixProfile<T>, k: usize) -> Vec<Event<T>> {
+    extract(mp, k, false, mp.excl.max(mp.m / 2))
+}
+
+/// Top-k discords: the k largest finite-profile windows with the same
+/// trivial-match suppression.
+pub fn top_discords<T: Real>(mp: &MatrixProfile<T>, k: usize) -> Vec<Event<T>> {
+    extract(mp, k, true, mp.excl.max(mp.m / 2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mp::{scrimp, MpConfig};
+    use crate::prop::Rng;
+    use crate::timeseries::generator::{generate_with_event, Pattern, PlantedEvent};
+
+    fn profile(n: usize, m: usize, seed: u64) -> (Vec<f64>, MatrixProfile<f64>) {
+        let mut rng = Rng::new(seed);
+        let t: Vec<f64> = rng.gauss_vec(n);
+        let mp = scrimp::matrix_profile(&t, MpConfig::new(m)).unwrap();
+        (t, mp)
+    }
+
+    #[test]
+    fn motifs_sorted_ascending_discords_descending() {
+        let (_, mp) = profile(800, 16, 1);
+        let motifs = top_motifs(&mp, 5);
+        let discords = top_discords(&mp, 5);
+        assert!(motifs.windows(2).all(|w| w[0].distance <= w[1].distance));
+        assert!(discords.windows(2).all(|w| w[0].distance >= w[1].distance));
+        assert!(motifs[0].distance <= discords.last().unwrap().distance);
+    }
+
+    #[test]
+    fn picks_are_separated_by_suppression_radius() {
+        let (_, mp) = profile(1000, 20, 2);
+        let radius = mp.excl.max(mp.m / 2);
+        for events in [top_motifs(&mp, 6), top_discords(&mp, 6)] {
+            for a in 0..events.len() {
+                for b in (a + 1)..events.len() {
+                    let gap = events[a].index.abs_diff(events[b].index);
+                    assert!(gap > radius, "picks {a},{b} only {gap} apart");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn planted_motif_is_rank_one() {
+        let (t, ev) = generate_with_event::<f64>(Pattern::PlantedMotif, 2048, 4);
+        let mp = scrimp::matrix_profile(&t, MpConfig::new(32)).unwrap();
+        let (a, b) = match ev {
+            PlantedEvent::Motif { a, b, .. } => (a, b),
+            _ => unreachable!(),
+        };
+        let motifs = top_motifs(&mp, 3);
+        let top = &motifs[0];
+        assert!(
+            top.index.abs_diff(a) < 32 || top.index.abs_diff(b) < 32,
+            "rank-1 motif at {} not near planted {a}/{b}",
+            top.index
+        );
+        assert!(top.distance < 1e-4);
+    }
+
+    #[test]
+    fn planted_anomaly_is_rank_one_discord() {
+        let (t, ev) = generate_with_event::<f64>(Pattern::EcgLike, 4096, 5);
+        let mp = scrimp::matrix_profile(&t, MpConfig::new(64)).unwrap();
+        let (start, len) = match ev {
+            PlantedEvent::Anomaly { start, len } => (start, len),
+            _ => unreachable!(),
+        };
+        let discords = top_discords(&mp, 2);
+        let top = discords[0].index;
+        assert!(top + 64 >= start && top < start + len + 64);
+    }
+
+    #[test]
+    fn k_larger_than_events_truncates() {
+        let (_, mp) = profile(200, 16, 6);
+        let motifs = top_motifs(&mp, 1000);
+        assert!(motifs.len() < 1000);
+        assert!(!motifs.is_empty());
+    }
+}

@@ -1,0 +1,303 @@
+//! NATSA: the accelerator's host API and functional engine.
+//!
+//! This module is Algorithm 2 of the paper:
+//!
+//! ```text
+//! function P, I <- NATSA(T, m, exc, conf)
+//!     mu, sig <- precalculateMeanDev(T, m)          // host CPU
+//!     PP, II  <- allocatePrivateProfiles(T, m, exc) // per-PU vectors
+//!     idx     <- diagonalScheduling(T, m, exc)      // Section 4.2
+//!     START_ACCELERATOR(T, m, exc, conf, idx, PP, II)
+//!     P, I    <- reduction(PP, II)                  // host CPU
+//! ```
+//!
+//! [`NatsaEngine`] executes the accelerator step with host threads standing
+//! in for the 48 PUs (each PU's work list and private profile is preserved
+//! 1:1, so schedules, load accounting and anytime behaviour are faithful;
+//! only the physical substrate differs).  The PJRT-backed engine that runs
+//! the *AOT Pallas kernels* per chunk lives in [`crate::coordinator`] and
+//! reuses this module's scheduling and reduction.
+
+pub mod anytime;
+pub mod pu;
+pub mod scheduler;
+
+use crate::mp::scrimp::compute_diagonal;
+use crate::mp::{MatrixProfile, MpConfig, WorkStats};
+use crate::timeseries::sliding_stats;
+use crate::Real;
+use scheduler::Schedule;
+
+/// Diagonal visiting order within each PU (Section 4.2, ways 1 and 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Order {
+    /// Sequential: locality-friendly, forfeits the anytime property.
+    Sequential,
+    /// Random (seeded): preserves the anytime property.
+    Random(u64),
+}
+
+/// Accelerator configuration (`conf` of Algorithm 2).
+#[derive(Clone, Copy, Debug)]
+pub struct NatsaConfig {
+    /// Number of processing units (48 in the paper's HBM design).
+    pub pus: usize,
+    /// Host threads emulating the PU fleet (defaults to available
+    /// parallelism; PU→thread mapping is round-robin).
+    pub threads: Option<usize>,
+    /// Diagonal order within each PU.
+    pub order: Order,
+    /// Exclusion-zone radius override (`exc`); `None` = m/4.
+    pub excl: Option<usize>,
+}
+
+impl Default for NatsaConfig {
+    fn default() -> Self {
+        NatsaConfig {
+            pus: 48,
+            threads: None,
+            order: Order::Sequential,
+            excl: None,
+        }
+    }
+}
+
+impl NatsaConfig {
+    pub fn with_pus(mut self, pus: usize) -> Self {
+        self.pus = pus;
+        self
+    }
+
+    pub fn with_order(mut self, order: Order) -> Self {
+        self.order = order;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    fn host_threads(&self) -> usize {
+        self.threads.unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+        })
+    }
+}
+
+/// Result of a NATSA run.
+#[derive(Clone, Debug)]
+pub struct NatsaOutput<T> {
+    /// The reduced profile `P`, `I`.
+    pub profile: MatrixProfile<T>,
+    /// Aggregate functional work (drives the timing models).
+    pub work: WorkStats,
+    /// Cells executed by each PU (load-balance evidence).
+    pub pu_cells: Vec<u64>,
+    /// The schedule that was executed.
+    pub schedule_imbalance: f64,
+}
+
+/// The functional NATSA engine (native execution substrate).
+pub struct NatsaEngine<T> {
+    pub config: NatsaConfig,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Real> NatsaEngine<T> {
+    pub fn new(config: NatsaConfig) -> Self {
+        NatsaEngine { config, _marker: std::marker::PhantomData }
+    }
+
+    /// Algorithm 2: compute the full matrix profile of `t` with window `m`.
+    pub fn compute(&self, t: &[T], m: usize) -> crate::Result<NatsaOutput<T>> {
+        let cfg = match self.config.excl {
+            Some(e) => MpConfig::with_excl(m, e),
+            None => MpConfig::new(m),
+        };
+        let nw = cfg.validate(t.len())?;
+        let excl = cfg.exclusion();
+
+        // Host: statistics precompute + diagonal scheduling.
+        let st = sliding_stats(t, m);
+        let mut sched = scheduler::schedule(nw, excl, self.config.pus);
+        match self.config.order {
+            Order::Sequential => sched.sequentialize(),
+            Order::Random(seed) => sched.randomize(seed),
+        }
+        let imbalance = sched.imbalance();
+
+        // Accelerator: PUs execute their work lists with private profiles.
+        let (locals, pu_cells) = run_pus(t, &st, &sched, excl, self.config.host_threads());
+
+        // Host: reduction of the private profiles.
+        let mut profile = MatrixProfile::new_inf(nw, m, excl);
+        let mut work = WorkStats::default();
+        for (local, w) in &locals {
+            profile.merge(local);
+            work.add(w);
+        }
+        profile.sqrt_in_place(); // diagonals accumulate squared distances
+        Ok(NatsaOutput { profile, work, pu_cells, schedule_imbalance: imbalance })
+    }
+}
+
+/// Execute every PU's work list on `threads` host threads.  Returns one
+/// (private profile, work) per *thread* (merging is associative and the
+/// per-PU cell counts are preserved separately).
+fn run_pus<T: Real>(
+    t: &[T],
+    st: &crate::timeseries::WindowStats<T>,
+    sched: &Schedule,
+    excl: usize,
+    threads: usize,
+) -> (Vec<(MatrixProfile<T>, WorkStats)>, Vec<u64>) {
+    let nw = sched.nw;
+    let m = st.m;
+    let pus = sched.per_pu.len();
+    let threads = threads.clamp(1, pus.max(1));
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for tid in 0..threads {
+            let sched = &sched;
+            let st = &st;
+            handles.push(scope.spawn(move || {
+                let mut local = MatrixProfile::new_inf(nw, m, excl);
+                let mut work = WorkStats::default();
+                let mut cells: Vec<(usize, u64)> = Vec::new();
+                // PU p runs on thread p % threads — round-robin, like the
+                // paper's static PU placement.
+                for p in (tid..pus).step_by(threads) {
+                    let before = work.cells;
+                    for &d in &sched.per_pu[p] {
+                        compute_diagonal(t, st, d, &mut local, &mut work);
+                    }
+                    cells.push((p, work.cells - before));
+                }
+                (local, work, cells)
+            }));
+        }
+        let mut locals = Vec::with_capacity(threads);
+        let mut pu_cells = vec![0u64; pus];
+        for h in handles {
+            let (local, work, cells) = h.join().expect("PU thread panicked");
+            for (p, c) in cells {
+                pu_cells[p] = c;
+            }
+            locals.push((local, work));
+        }
+        (locals, pu_cells)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mp::brute;
+    use crate::prop::{check, Rng};
+    use crate::timeseries::generator::{generate_with_event, Pattern, PlantedEvent};
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Rng::new(41);
+        let t: Vec<f64> = rng.gauss_vec(512);
+        let engine = NatsaEngine::new(NatsaConfig::default());
+        let out = engine.compute(&t, 16).unwrap();
+        let want = brute::matrix_profile(&t, MpConfig::new(16)).unwrap();
+        assert!(out.profile.max_abs_diff(&want) < 1e-8);
+    }
+
+    #[test]
+    fn order_does_not_change_result() {
+        let mut rng = Rng::new(42);
+        let t: Vec<f64> = rng.gauss_vec(400);
+        let seq = NatsaEngine::new(NatsaConfig::default().with_order(Order::Sequential))
+            .compute(&t, 12)
+            .unwrap();
+        let rnd = NatsaEngine::new(NatsaConfig::default().with_order(Order::Random(7)))
+            .compute(&t, 12)
+            .unwrap();
+        assert!(seq.profile.max_abs_diff(&rnd.profile) < 1e-12);
+        assert_eq!(seq.profile.i, rnd.profile.i);
+    }
+
+    #[test]
+    fn prop_pu_count_invariance() {
+        check("natsa-pu-invariance", 8, |rng: &mut Rng| {
+            let n = rng.range(150, 400);
+            let m = rng.range(6, 24);
+            if n < 4 * m {
+                return;
+            }
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let base = NatsaEngine::new(NatsaConfig::default().with_pus(1).with_threads(1))
+                .compute(&t, m)
+                .unwrap();
+            for pus in [2, 7, 48, 64] {
+                let out = NatsaEngine::new(NatsaConfig::default().with_pus(pus))
+                    .compute(&t, m)
+                    .unwrap();
+                assert!(
+                    out.profile.max_abs_diff(&base.profile) < 1e-12,
+                    "pus={pus}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn pu_loads_are_balanced() {
+        let mut rng = Rng::new(44);
+        let t: Vec<f64> = rng.gauss_vec(4000);
+        let out = NatsaEngine::new(NatsaConfig::default())
+            .compute(&t, 32)
+            .unwrap();
+        // 48 PUs x ~41.3 pairs: quantization allows one extra pair per PU
+        assert!(out.schedule_imbalance < 1.03, "{}", out.schedule_imbalance);
+        let max = *out.pu_cells.iter().max().unwrap() as f64;
+        let min = *out.pu_cells.iter().min().unwrap() as f64;
+        assert!(max / min < 1.05, "PU cells {max} vs {min}");
+        let total: u64 = out.pu_cells.iter().sum();
+        assert_eq!(total, out.work.cells);
+    }
+
+    #[test]
+    fn finds_planted_motif_and_discord() {
+        let (t, ev) = generate_with_event::<f32>(Pattern::PlantedMotif, 2048, 5);
+        let out = NatsaEngine::new(NatsaConfig::default())
+            .compute(&t, 32)
+            .unwrap();
+        if let PlantedEvent::Motif { a, b, .. } = ev {
+            // f32 Eq.1 cancellation leaves O(sqrt(2m*eps)) residue
+            assert!(out.profile.p[a] < 0.05, "p[a] = {}", out.profile.p[a]);
+            assert_eq!(out.profile.i[a], b as i64);
+        } else {
+            unreachable!()
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let engine = NatsaEngine::<f64>::new(NatsaConfig::default());
+        assert!(engine.compute(&[1.0; 14], 12).is_err()); // nw(3) <= excl(3)
+        assert!(engine.compute(&[1.0; 100], 2).is_err()); // m too small
+    }
+
+    #[test]
+    fn custom_exclusion_flows_through() {
+        let mut rng = Rng::new(45);
+        let t: Vec<f64> = rng.gauss_vec(300);
+        let mut config = NatsaConfig::default();
+        config.excl = Some(9);
+        let out = NatsaEngine::new(config).compute(&t, 12).unwrap();
+        assert_eq!(out.profile.excl, 9);
+        for (k, &j) in out.profile.i.iter().enumerate() {
+            if j >= 0 {
+                assert!((k as i64 - j).unsigned_abs() >= 9);
+            }
+        }
+    }
+}

@@ -1,0 +1,344 @@
+//! NATSA processing-unit datapath: functional model + work descriptors.
+//!
+//! Paper Section 4.1 / Fig. 5: a PU is a control FSM around four shared-FPU
+//! hardware components —
+//!
+//! * **DPU**  — dot product of the first window pair of a diagonal,
+//! * **DCU**  — z-norm Euclidean distance (Eq. 1),
+//! * **PUU**  — profile/index min-update,
+//! * **DPUU** — incremental dot-product update (Eq. 2), replicated for
+//!   vectorization and pipelined with DCU + PUU.
+//!
+//! This module gives that PU two faces:
+//!
+//! 1. [`PuDatapath`] — a *functional* cycle-by-cycle state machine that
+//!    executes the six execution-flow steps of Section 4.1 literally
+//!    (used by tests to pin the hardware semantics to SCRIMP's math, and
+//!    by `examples/pu_trace.rs` to show the pipeline schedule);
+//! 2. [`PuDesign`] + [`ChunkWork`] — the *descriptor* face: per-chunk
+//!    cycle and DRAM-traffic accounting consumed by the timing/energy
+//!    models in [`crate::sim::accel`] (gem5-Aladdin substitute).
+
+use crate::mp::{znorm_dist, MatrixProfile, WorkStats};
+use crate::timeseries::WindowStats;
+use crate::Real;
+
+/// Static design parameters of one PU (paper Table 3, per-PU columns).
+#[derive(Clone, Copy, Debug)]
+pub struct PuDesign {
+    /// Vector lanes: diagonal cells advanced per cycle at II=1.
+    pub lanes: usize,
+    /// FP multiplier / adder counts (Table 3).
+    pub fp_mults: usize,
+    pub fp_adds: usize,
+    pub int_adds: usize,
+    pub bitwise: usize,
+    pub registers: usize,
+    /// Private scratchpad for window size + configuration (Section 4.1).
+    pub scratchpad_bytes: usize,
+    /// Clock (GHz) — 1 GHz in the paper.
+    pub freq_ghz: f64,
+    /// HBM channel share per PU (GB/s) — 5 GB/s in Table 3.
+    pub mem_bw_gbs: f64,
+    /// Peak dynamic power (W) and area (mm², 45 nm) per Table 3.
+    pub peak_power_w: f64,
+    pub area_mm2: f64,
+    /// Element width this design processes.
+    pub elem_bytes: usize,
+}
+
+impl PuDesign {
+    /// Double-precision PU (Table 3 column PU-DP).
+    pub fn dp() -> Self {
+        PuDesign {
+            lanes: 8,
+            fp_mults: 16,
+            fp_adds: 14,
+            int_adds: 16,
+            bitwise: 2,
+            registers: 108,
+            scratchpad_bytes: 1024,
+            freq_ghz: 1.0,
+            mem_bw_gbs: 5.0,
+            peak_power_w: 0.1,
+            area_mm2: 1.62,
+            elem_bytes: 8,
+        }
+    }
+
+    /// Single-precision PU (Table 3 column PU-SP).
+    pub fn sp() -> Self {
+        PuDesign {
+            lanes: 16,
+            fp_mults: 64,
+            fp_adds: 36,
+            int_adds: 64,
+            bitwise: 2,
+            registers: 267,
+            scratchpad_bytes: 1024,
+            freq_ghz: 1.0,
+            mem_bw_gbs: 5.0,
+            peak_power_w: 0.08,
+            area_mm2: 1.51,
+            elem_bytes: 4,
+        }
+    }
+
+    /// Pick the design matching an element type.
+    pub fn for_dtype(dtype: &str) -> Self {
+        match dtype {
+            "f32" => Self::sp(),
+            _ => Self::dp(),
+        }
+    }
+
+    /// Peak cells/second of one PU (vector lanes at II=1).
+    pub fn peak_cells_per_sec(&self) -> f64 {
+        self.lanes as f64 * self.freq_ghz * 1e9
+    }
+}
+
+/// One unit of PU work: a contiguous run of cells on one diagonal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkWork {
+    /// Cells computed (incremental, Eq. 2 path).
+    pub cells: u64,
+    /// Whether this chunk begins a diagonal (O(m) DPU dot product).
+    pub first_dot: bool,
+    /// Window length.
+    pub m: usize,
+}
+
+impl ChunkWork {
+    /// PU cycles: DPU startup (m / lanes, vectorized reduce) + pipeline
+    /// fill + II=1 vector iterations over the cells.
+    pub fn cycles(&self, d: &PuDesign) -> u64 {
+        const PIPE_FILL: u64 = 12; // DPUU->DCU->PUU depth, Fig. 5
+        let dot = if self.first_dot {
+            (self.m as u64).div_ceil(d.lanes as u64) + PIPE_FILL
+        } else {
+            0
+        };
+        dot + self.cells.div_ceil(d.lanes as u64) + PIPE_FILL
+    }
+
+    /// DRAM bytes moved for this chunk.  Per cell the PU streams the two
+    /// series points of Eq. 2, four statistics, and the two profile
+    /// entries + indices it may update (Section 4.2 data mapping: profile
+    /// vectors are PU-private but DRAM-resident; only `m`/config live in
+    /// the 1 KB scratchpad).
+    pub fn traffic_bytes(&self, d: &PuDesign) -> u64 {
+        let e = d.elem_bytes as u64;
+        let per_cell = 2 * e      // t[i+m-1], t[j+m-1] (t[i-1],t[j-1] reuse the stream)
+            + 4 * e               // mu_i, mu_j, inv_msig_i, inv_msig_j
+            + 2 * e               // P_i, P_j read
+            + e;                  // amortized P/I write-back
+        let dot = if self.first_dot { 2 * self.m as u64 * e } else { 0 };
+        dot + self.cells * per_cell
+    }
+
+    /// FLOPs executed (Eq. 2: 4, Eq. 1: ~7, compares: 2 per cell).
+    pub fn flops(&self) -> u64 {
+        let dot = if self.first_dot { 2 * self.m as u64 } else { 0 };
+        dot + self.cells * 13
+    }
+}
+
+/// Pipeline stage occupancy, one entry per step of Section 4.1.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PuTrace {
+    pub dpu_cycles: u64,
+    pub dpuu_cycles: u64,
+    pub dcu_cycles: u64,
+    pub puu_cycles: u64,
+}
+
+/// Functional PU: executes one diagonal exactly as the Section 4.1 flow
+/// describes, updating a (private) profile and producing a stage trace.
+pub struct PuDatapath<'a, T> {
+    pub design: PuDesign,
+    t: &'a [T],
+    st: &'a WindowStats<T>,
+}
+
+impl<'a, T: Real> PuDatapath<'a, T> {
+    pub fn new(design: PuDesign, t: &'a [T], st: &'a WindowStats<T>) -> Self {
+        PuDatapath { design, t, st }
+    }
+
+    /// Execute diagonal `d` against private profile `pp` following the six
+    /// steps of Section 4.1.  Returns the stage trace and work stats.
+    pub fn run_diagonal(&self, d: usize, pp: &mut MatrixProfile<T>) -> (PuTrace, WorkStats) {
+        let m = self.st.m;
+        let nw = self.st.len();
+        let len = nw - d;
+        let lanes = self.design.lanes as u64;
+        let mut trace = PuTrace::default();
+        let mut work = WorkStats::default();
+
+        // Step 1 — DPU: first dot product (vectorized tree reduce).
+        let mut q = (0..m).map(|k| self.t[k] * self.t[d + k]).sum::<T>();
+        trace.dpu_cycles += (m as u64).div_ceil(lanes) + (lanes.trailing_zeros() as u64);
+        work.first_dots += 1;
+        work.diagonals += 1;
+
+        // Step 2 — DCU: first distance.
+        let dist = znorm_dist(
+            q,
+            m,
+            self.st.mu[0],
+            self.st.inv_msig[0],
+            self.st.mu[d],
+            self.st.inv_msig[d],
+        );
+        trace.dcu_cycles += 1;
+
+        // Step 3 — PUU: first profile update (both directions).
+        pp.update(0, d, dist);
+        trace.puu_cycles += 1;
+        work.cells += 1;
+        work.updates += 2;
+
+        // Steps 4-6 — DPUU + DCU + PUU pipelined over remaining cells,
+        // `lanes` at a time.
+        let mut i = 1usize;
+        while i < len {
+            let c = (self.design.lanes).min(len - i);
+            for k in 0..c {
+                let ii = i + k;
+                let jj = d + ii;
+                // Step 4: DPUU incremental dot product (serial within the
+                // lane group in hardware via a carry chain; semantics are
+                // sequential regardless).
+                q = q - self.t[ii - 1] * self.t[jj - 1]
+                    + self.t[ii + m - 1] * self.t[jj + m - 1];
+                // Step 5: DCU distance.
+                let dist = znorm_dist(
+                    q,
+                    m,
+                    self.st.mu[ii],
+                    self.st.inv_msig[ii],
+                    self.st.mu[jj],
+                    self.st.inv_msig[jj],
+                );
+                // Step 6: PUU update.
+                pp.update(ii, jj, dist);
+            }
+            trace.dpuu_cycles += 1;
+            trace.dcu_cycles += 1;
+            trace.puu_cycles += 1;
+            work.cells += c as u64;
+            work.updates += 2 * c as u64;
+            i += c;
+        }
+        (trace, work)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mp::{scrimp, MpConfig};
+    use crate::prop::{check, Rng};
+    use crate::timeseries::sliding_stats;
+
+    #[test]
+    fn table3_per_pu_parameters() {
+        let dp = PuDesign::dp();
+        assert_eq!(dp.fp_mults, 16);
+        assert_eq!(dp.fp_adds, 14);
+        assert_eq!(dp.registers, 108);
+        assert!((dp.mem_bw_gbs - 5.0).abs() < 1e-12);
+        assert!((dp.peak_power_w - 0.1).abs() < 1e-12);
+        let sp = PuDesign::sp();
+        assert_eq!(sp.fp_mults, 64);
+        assert_eq!(sp.registers, 267);
+        assert!(sp.area_mm2 < dp.area_mm2);
+    }
+
+    #[test]
+    fn datapath_matches_scrimp_per_diagonal() {
+        check("pu-vs-scrimp", 10, |rng: &mut Rng| {
+            let n = rng.range(80, 400);
+            let m = rng.range(4, 20);
+            if n < 4 * m {
+                return;
+            }
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let st = sliding_stats(&t, m);
+            let nw = st.len();
+            let excl = (m / 4).max(1);
+            let design = PuDesign::dp();
+            let dp = PuDatapath::new(design, &t, &st);
+
+            let mut via_pu = MatrixProfile::new_inf(nw, m, excl);
+            let mut via_scrimp = MatrixProfile::new_inf(nw, m, excl);
+            let mut w = WorkStats::default();
+            for d in excl..nw {
+                dp.run_diagonal(d, &mut via_pu);
+                scrimp::compute_diagonal(&t, &st, d, &mut via_scrimp, &mut w);
+            }
+            via_scrimp.sqrt_in_place(); // scrimp path defers the sqrt
+            assert!(via_pu.max_abs_diff(&via_scrimp) < 1e-7);
+        });
+    }
+
+    #[test]
+    fn full_profile_through_datapath_matches_reference() {
+        let mut rng = Rng::new(31);
+        let t: Vec<f64> = rng.gauss_vec(300);
+        let cfg = MpConfig::new(12);
+        let st = sliding_stats(&t, 12);
+        let nw = st.len();
+        let dp = PuDatapath::new(PuDesign::dp(), &t, &st);
+        let mut mp = MatrixProfile::new_inf(nw, 12, cfg.exclusion());
+        for d in cfg.exclusion()..nw {
+            dp.run_diagonal(d, &mut mp);
+        }
+        let want = scrimp::matrix_profile(&t, cfg).unwrap();
+        assert!(mp.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn chunk_cycles_scale_with_lanes() {
+        let w = ChunkWork { cells: 1024, first_dot: false, m: 128 };
+        let dp_cycles = w.cycles(&PuDesign::dp());
+        let sp_cycles = w.cycles(&PuDesign::sp());
+        assert!(sp_cycles < dp_cycles);
+        assert_eq!(w.cycles(&PuDesign::dp()), 1024 / 8 + 12);
+    }
+
+    #[test]
+    fn first_dot_adds_startup() {
+        let a = ChunkWork { cells: 100, first_dot: false, m: 256 };
+        let b = ChunkWork { cells: 100, first_dot: true, m: 256 };
+        let d = PuDesign::dp();
+        assert!(b.cycles(&d) > a.cycles(&d));
+        assert!(b.traffic_bytes(&d) > a.traffic_bytes(&d));
+    }
+
+    #[test]
+    fn sp_traffic_half_of_dp() {
+        let w = ChunkWork { cells: 1000, first_dot: false, m: 64 };
+        assert_eq!(
+            w.traffic_bytes(&PuDesign::dp()),
+            2 * w.traffic_bytes(&PuDesign::sp())
+        );
+    }
+
+    #[test]
+    fn trace_pipeline_counts() {
+        let mut rng = Rng::new(33);
+        let t: Vec<f64> = rng.gauss_vec(200);
+        let st = sliding_stats(&t, 8);
+        let dp = PuDatapath::new(PuDesign::dp(), &t, &st);
+        let nw = st.len();
+        let mut pp = MatrixProfile::new_inf(nw, 8, 2);
+        let (trace, work) = dp.run_diagonal(10, &mut pp);
+        // one DPU burst, then ceil((len-1)/lanes) vector groups
+        let len = (nw - 10) as u64;
+        assert_eq!(trace.dpuu_cycles, (len - 1).div_ceil(8));
+        assert_eq!(trace.dcu_cycles, 1 + trace.dpuu_cycles);
+        assert_eq!(work.cells, len);
+    }
+}

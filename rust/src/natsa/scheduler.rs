@@ -1,0 +1,220 @@
+//! NATSA's workload partitioning scheme (paper Section 4.2).
+//!
+//! Diagonals of the distance matrix have different lengths (diagonal `d`
+//! has `nw - d` cells), so a naive split load-imbalances the PUs.  NATSA
+//! pairs the *k-th shortest remaining* diagonal with the *k-th longest*:
+//! every pair then sums to exactly
+//!
+//! ```text
+//! (nw - first) + (nw - last) = nw - excl + 1   cells
+//! ```
+//!
+//! (the paper states this as `(n - m + 1) - m/4`, the main-diagonal-length
+//! minus the exclusion zone).  Pairs are dealt round-robin to PUs, so
+//! every PU receives the same cell count to within one pair — *static*
+//! balance, independent of the data, preserving the anytime property
+//! because each PU's list can still be visited in any order.
+
+use crate::prop::Rng;
+
+/// A pair of diagonals with complementary lengths (the second is `None`
+/// for the unpaired middle diagonal when the count is odd).
+pub type DiagPair = (usize, Option<usize>);
+
+/// The output of the partitioning scheme.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Diagonal indices assigned to each PU, in assignment order
+    /// (alternating long/short so progress is spatially uniform).
+    pub per_pu: Vec<Vec<usize>>,
+    /// The balanced pairs, in dealing order.
+    pub pairs: Vec<DiagPair>,
+    /// Window count and exclusion zone used to build the schedule.
+    pub nw: usize,
+    pub excl: usize,
+}
+
+impl Schedule {
+    /// Cells of work assigned to PU `k`.
+    pub fn load(&self, k: usize) -> u64 {
+        self.per_pu[k]
+            .iter()
+            .map(|&d| (self.nw - d) as u64)
+            .sum()
+    }
+
+    /// max/min PU load ratio (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let loads: Vec<u64> = (0..self.per_pu.len()).map(|k| self.load(k)).collect();
+        let max = *loads.iter().max().unwrap_or(&0) as f64;
+        let min = *loads.iter().min().unwrap_or(&0) as f64;
+        if min == 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
+    }
+
+    /// Shuffle each PU's list in place (anytime mode, Section 4.2 way 1).
+    pub fn randomize(&mut self, seed: u64) {
+        for (k, list) in self.per_pu.iter_mut().enumerate() {
+            Rng::new(seed ^ ((k as u64) << 32)).shuffle(list);
+        }
+    }
+
+    /// Sort each PU's list ascending (sequential mode, way 2 — locality).
+    pub fn sequentialize(&mut self) {
+        for list in &mut self.per_pu {
+            list.sort_unstable();
+        }
+    }
+}
+
+/// Build the balanced diagonal-pair schedule for `pus` processing units
+/// over windows `nw` with exclusion radius `excl`.
+///
+/// Diagonals `excl ..= nw-1` are paired outside-in; pairs are dealt
+/// round-robin.  Panics if there is no admissible diagonal.
+pub fn schedule(nw: usize, excl: usize, pus: usize) -> Schedule {
+    assert!(pus >= 1, "need at least one PU");
+    assert!(nw > excl, "no admissible diagonals (nw={nw}, excl={excl})");
+
+    let mut lo = excl;
+    let mut hi = nw - 1;
+    let mut pairs: Vec<DiagPair> = Vec::with_capacity((nw - excl).div_ceil(2));
+    while lo < hi {
+        pairs.push((lo, Some(hi)));
+        lo += 1;
+        hi -= 1;
+    }
+    if lo == hi {
+        pairs.push((lo, None));
+    }
+
+    let mut per_pu = vec![Vec::new(); pus];
+    for (k, (a, b)) in pairs.iter().enumerate() {
+        let list = &mut per_pu[k % pus];
+        list.push(*a);
+        if let Some(b) = b {
+            list.push(*b);
+        }
+    }
+    Schedule { per_pu, pairs, nw, excl }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::check;
+
+    #[test]
+    fn paper_example_two_pus() {
+        // Fig. 6: n=13, m=4 -> nw = 10 windows, exclusion = 1 extra
+        // diagonal beyond the main one => diagonals 2..=9 are computed.
+        // (paper indexes columns from 1; we use 0-based diagonals)
+        let s = schedule(10, 2, 2);
+        // each pair must sum to (nw - excl + 1) = 9 cells
+        for (a, b) in &s.pairs {
+            if let Some(b) = b {
+                assert_eq!((s.nw - a) + (s.nw - b), 9);
+            }
+        }
+        // PU0 gets pairs 0 and 2; PU1 gets pairs 1 and 3
+        assert_eq!(s.per_pu[0], vec![2, 9, 4, 7]);
+        assert_eq!(s.per_pu[1], vec![3, 8, 5, 6]);
+        assert_eq!(s.load(0), s.load(1));
+    }
+
+    #[test]
+    fn pairs_sum_constant() {
+        let s = schedule(1000, 16, 48);
+        for (a, b) in &s.pairs {
+            if let Some(b) = b {
+                assert_eq!((s.nw - a) + (s.nw - b), s.nw - s.excl + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_coverage_exactly_once() {
+        check("schedule-coverage", 30, |rng| {
+            let nw = rng.range(10, 3000);
+            let excl = rng.range(1, (nw / 2).max(2));
+            let pus = rng.range(1, 65);
+            let s = schedule(nw, excl, pus);
+            let mut all: Vec<usize> = s.per_pu.concat();
+            all.sort_unstable();
+            assert_eq!(all, (excl..nw).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn prop_near_perfect_balance() {
+        check("schedule-balance", 30, |rng| {
+            let nw = rng.range(500, 5000);
+            let excl = rng.range(1, 32);
+            let pus = rng.range(2, 65);
+            let s = schedule(nw, excl, pus);
+            let total: u64 = (0..pus).map(|k| s.load(k)).sum();
+            assert_eq!(total, crate::mp::total_cells(nw, excl));
+            // every PU is within one pair's worth of cells of the mean
+            let pair_cells = (nw - excl + 1) as f64;
+            let mean = total as f64 / pus as f64;
+            for k in 0..pus {
+                let dev = (s.load(k) as f64 - mean).abs();
+                assert!(
+                    dev <= pair_cells,
+                    "PU{k} load {} vs mean {mean} (pair {pair_cells})",
+                    s.load(k)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_randomize_is_permutation() {
+        check("schedule-randomize", 10, |rng| {
+            let nw = rng.range(50, 800);
+            let excl = rng.range(1, 8);
+            let mut s = schedule(nw, excl, 7);
+            let before: Vec<Vec<usize>> = s
+                .per_pu
+                .iter()
+                .map(|l| {
+                    let mut v = l.clone();
+                    v.sort_unstable();
+                    v
+                })
+                .collect();
+            s.randomize(42);
+            for (k, list) in s.per_pu.iter().enumerate() {
+                let mut v = list.clone();
+                v.sort_unstable();
+                assert_eq!(v, before[k]);
+            }
+        });
+    }
+
+    #[test]
+    fn sequentialize_sorts() {
+        let mut s = schedule(100, 4, 3);
+        s.sequentialize();
+        for list in &s.per_pu {
+            assert!(list.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn more_pus_than_pairs_leaves_idle_pus() {
+        let s = schedule(8, 4, 16); // diagonals 4..=7 -> 2 pairs
+        assert_eq!(s.pairs.len(), 2);
+        let nonempty = s.per_pu.iter().filter(|l| !l.is_empty()).count();
+        assert_eq!(nonempty, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "no admissible diagonals")]
+    fn degenerate_panics() {
+        schedule(4, 4, 2);
+    }
+}

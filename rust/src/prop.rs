@@ -1,0 +1,145 @@
+//! Minimal in-repo property-testing harness.
+//!
+//! The offline vendor set has no `proptest`/`quickcheck`, so this module
+//! provides the two pieces the test suites actually need:
+//!
+//! * [`Rng`] — a tiny, fast, seedable xorshift64* generator (deterministic
+//!   across platforms, no external deps), and
+//! * [`check`] — a runner that executes a property over `cases` random
+//!   seeds and, on failure, reports the failing seed so the case can be
+//!   replayed with `Rng::new(seed)`.
+//!
+//! It is part of the public crate so integration tests, benches and
+//! examples can share the same deterministic workload generation.
+
+/// xorshift64* PRNG — 8 bytes of state, passes BigCrush for our purposes.
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Create a generator from a seed (0 is remapped internally).
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15).max(1))
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform usize in [lo, hi) — `hi > lo` required.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "empty range");
+        lo + (self.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (one value per call, simple > fast).
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.f64().max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Vector of standard normals.
+    pub fn gauss_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.gauss()).collect()
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Run `prop` over `cases` deterministic seeds; panic with the failing seed.
+///
+/// The property receives a fresh [`Rng`] per case.  Use the reported seed
+/// with `Rng::new(seed)` to replay a failure under a debugger.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xA75A_0000 + case; // stable, per-property offset free
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(2);
+        for _ in 0..10_000 {
+            let v = r.range(3, 17);
+            assert!((3..17).contains(&v));
+        }
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(3);
+        let xs = r.gauss_vec(50_000);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(4);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed at seed")]
+    fn check_reports_seed() {
+        check("always-fails", 3, |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,379 @@
+//! Request-path runtime: load and execute the AOT-compiled kernels.
+//!
+//! `make artifacts` (python, build-time) lowers the Layer-1/Layer-2 Pallas
+//! + JAX graphs to **HLO text** under `artifacts/` plus a `manifest.tsv`
+//! describing each variant.  This module is everything the rust binary
+//! needs at run time:
+//!
+//! * [`Manifest`] — parse the TSV, resolve `(kind, dtype, m)` to a file;
+//! * [`Runtime`]  — a PJRT CPU client that compiles each HLO module once
+//!   (lazily, cached) and executes it with [`xla::Literal`] inputs.
+//!
+//! Interchange is HLO *text*, never serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! `python/compile/aot.py`).
+//!
+//! The xla wrapper types hold raw pointers and are not `Send`; the
+//! coordinator therefore gives each worker thread its own [`Runtime`]
+//! (PJRT CPU executions are cheap to duplicate; compilation is per-worker
+//! but amortized over the whole run).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::Context;
+
+use crate::Real;
+
+/// Kinds of AOT artifacts (matches `python/compile/aot.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// The PU pipeline over one diagonal chunk (hot path).
+    DiagChunk,
+    /// The DPU first dot product.
+    DotInit,
+    /// Sliding mean/std precompute.
+    Stats,
+    /// Self-contained small matrix profile (MXU-tile formulation).
+    MpTile,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "diag_chunk" => ArtifactKind::DiagChunk,
+            "dot_init" => ArtifactKind::DotInit,
+            "stats" => ArtifactKind::Stats,
+            "mp_tile" => ArtifactKind::MpTile,
+            _ => return None,
+        })
+    }
+}
+
+/// One artifact entry from `manifest.tsv`.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    pub dtype: String,
+    pub m: usize,
+    /// Chunk length V (diag_chunk only).
+    pub v: usize,
+    /// Fixed series length (stats / mp_tile only).
+    pub n: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            anyhow::ensure!(f.len() >= 7, "manifest line {}: bad field count", lineno + 1);
+            let kind = ArtifactKind::parse(f[2])
+                .with_context(|| format!("manifest line {}: unknown kind {}", lineno + 1, f[2]))?;
+            artifacts.push(Artifact {
+                name: f[0].to_string(),
+                path: dir.join(f[1]),
+                kind,
+                dtype: f[3].to_string(),
+                m: f[4].parse().context("m")?,
+                v: f[5].parse().context("v")?,
+                n: f[6].parse().context("n")?,
+            });
+        }
+        anyhow::ensure!(!artifacts.is_empty(), "empty manifest {}", path.display());
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find an artifact by kind/dtype and exact window length.  For the
+    /// hot-path chunk kernel the *largest* available V is preferred:
+    /// fewer PJRT invocations per diagonal (perf pass, EXPERIMENTS.md).
+    pub fn find(&self, kind: ArtifactKind, dtype: &str, m: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.dtype == dtype && a.m == m)
+            .max_by_key(|a| a.v)
+    }
+
+    /// All diag_chunk variants for (dtype, m), sorted by ascending V.
+    pub fn chunk_variants(&self, dtype: &str, m: usize) -> Vec<&Artifact> {
+        let mut v: Vec<&Artifact> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::DiagChunk && a.dtype == dtype && a.m == m)
+            .collect();
+        v.sort_by_key(|a| a.v);
+        v
+    }
+
+    /// Window lengths available for the hot-path chunk kernel.
+    pub fn chunk_windows(&self, dtype: &str) -> Vec<usize> {
+        let mut ms: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::DiagChunk && a.dtype == dtype)
+            .map(|a| a.m)
+            .collect();
+        ms.sort_unstable();
+        ms
+    }
+}
+
+/// Outputs of one `diag_chunk` kernel invocation.
+#[derive(Clone, Debug)]
+pub struct DiagChunkOut<T> {
+    /// Distances for the chunk's cells (+inf on masked lanes).
+    pub dists: Vec<T>,
+    /// Dot product at the last valid cell (chains into the next chunk).
+    pub q_last: T,
+    /// PUU pre-reduction over the chunk.
+    pub min_val: T,
+    pub min_idx: i32,
+}
+
+/// Element types the runtime can feed to PJRT.
+pub trait XlaReal: Real + xla::NativeType + xla::ArrayElement {}
+impl XlaReal for f32 {}
+impl XlaReal for f64 {}
+
+/// A PJRT CPU runtime over one artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime for `artifacts/` (compiles lazily on first use).
+    pub fn new(artifact_dir: &Path) -> crate::Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an executable by artifact name.
+    pub fn executable(&self, name: &str) -> crate::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let art = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let proto = xla::HloModuleProto::from_text_file(&art.path)
+            .with_context(|| format!("parse HLO text {}", art.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("PJRT compile {name}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {name}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute the DPU first-dot-product kernel.
+    pub fn dot_init<T: XlaReal>(&self, m: usize, ta: &[T], tb: &[T]) -> crate::Result<T> {
+        anyhow::ensure!(ta.len() == m && tb.len() == m, "dot_init wants length-m slices");
+        let art = self
+            .manifest
+            .find(ArtifactKind::DotInit, T::DTYPE, m)
+            .with_context(|| format!("no dot_init artifact for {} m={m}", T::DTYPE))?;
+        let name = art.name.clone();
+        let out = self.run(&name, &[xla::Literal::vec1(ta), xla::Literal::vec1(tb)])?;
+        Ok(out[0].to_vec::<T>()?[0])
+    }
+
+    /// Execute the PU pipeline over one diagonal chunk.
+    #[allow(clippy::too_many_arguments)]
+    pub fn diag_chunk<T: XlaReal>(
+        &self,
+        m: usize,
+        v_want: Option<usize>,
+        ta: &[T],
+        tb: &[T],
+        mu_a: &[T],
+        sig_a: &[T],
+        mu_b: &[T],
+        sig_b: &[T],
+        q0: T,
+        nvalid: usize,
+    ) -> crate::Result<DiagChunkOut<T>> {
+        let art = match v_want {
+            Some(vw) => self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| {
+                    a.kind == ArtifactKind::DiagChunk && a.dtype == T::DTYPE && a.m == m && a.v == vw
+                })
+                .with_context(|| format!("no diag_chunk for {} m={m} v={vw}", T::DTYPE))?,
+            None => self
+                .manifest
+                .find(ArtifactKind::DiagChunk, T::DTYPE, m)
+                .with_context(|| format!("no diag_chunk artifact for {} m={m}", T::DTYPE))?,
+        };
+        let v = art.v;
+        anyhow::ensure!(ta.len() == v + m && tb.len() == v + m, "ta/tb must be V+m");
+        anyhow::ensure!(
+            mu_a.len() == v && sig_a.len() == v && mu_b.len() == v && sig_b.len() == v,
+            "stats slices must be V"
+        );
+        anyhow::ensure!(nvalid >= 1 && nvalid <= v, "nvalid out of range");
+        let name = art.name.clone();
+        let out = self.run(
+            &name,
+            &[
+                xla::Literal::vec1(ta),
+                xla::Literal::vec1(tb),
+                xla::Literal::vec1(mu_a),
+                xla::Literal::vec1(sig_a),
+                xla::Literal::vec1(mu_b),
+                xla::Literal::vec1(sig_b),
+                xla::Literal::vec1(&[q0]),
+                xla::Literal::vec1(&[nvalid as i32]),
+            ],
+        )?;
+        Ok(DiagChunkOut {
+            dists: out[0].to_vec::<T>()?,
+            q_last: out[1].to_vec::<T>()?[0],
+            min_val: out[2].to_vec::<T>()?[0],
+            min_idx: out[3].to_vec::<i32>()?[0],
+        })
+    }
+
+    /// Execute the offloaded stats precompute (fixed demo length).
+    pub fn stats<T: XlaReal>(&self, t: &[T]) -> crate::Result<(Vec<T>, Vec<T>)> {
+        let art = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Stats && a.dtype == T::DTYPE)
+            .with_context(|| format!("no stats artifact for {}", T::DTYPE))?;
+        anyhow::ensure!(
+            t.len() == art.n,
+            "stats artifact is fixed at n={}, got {}",
+            art.n,
+            t.len()
+        );
+        let name = art.name.clone();
+        let out = self.run(&name, &[xla::Literal::vec1(t)])?;
+        Ok((out[0].to_vec::<T>()?, out[1].to_vec::<T>()?))
+    }
+
+    /// Execute the self-contained MXU-tile matrix profile (fixed n).
+    pub fn mp_tile<T: XlaReal>(&self, t: &[T]) -> crate::Result<(Vec<T>, Vec<i32>)> {
+        let art = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::MpTile && a.dtype == T::DTYPE)
+            .with_context(|| format!("no mp_tile artifact for {}", T::DTYPE))?;
+        anyhow::ensure!(
+            t.len() == art.n,
+            "mp_tile artifact is fixed at n={}, got {}",
+            art.n,
+            t.len()
+        );
+        let name = art.name.clone();
+        let out = self.run(&name, &[xla::Literal::vec1(t)])?;
+        Ok((out[0].to_vec::<T>()?, out[1].to_vec::<i32>()?))
+    }
+}
+
+/// Default artifact directory: `$NATSA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("NATSA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), body).unwrap();
+    }
+
+    #[test]
+    fn manifest_parses_and_finds() {
+        let dir = std::env::temp_dir().join("natsa-manifest-test");
+        write_manifest(
+            &dir,
+            "# name\tfile\tkind\tdtype\tm\tv\tn\tinputs\n\
+             diag_chunk_f32_m64\tdiag_chunk_f32_m64.hlo.txt\tdiag_chunk\tf32\t64\t512\t0\tx\n\
+             dot_init_f64_m32\tdot_init_f64_m32.hlo.txt\tdot_init\tf64\t32\t0\t0\tx\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find(ArtifactKind::DiagChunk, "f32", 64).unwrap();
+        assert_eq!(a.v, 512);
+        assert!(m.find(ArtifactKind::DiagChunk, "f64", 64).is_none());
+        assert_eq!(m.chunk_windows("f32"), vec![64]);
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent-natsa"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn manifest_rejects_bad_kind() {
+        let dir = std::env::temp_dir().join("natsa-manifest-badkind");
+        write_manifest(&dir, "x\tx.hlo.txt\tnope\tf32\t1\t2\t3\tx\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_empty() {
+        let dir = std::env::temp_dir().join("natsa-manifest-empty");
+        write_manifest(&dir, "# header only\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

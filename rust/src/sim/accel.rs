@@ -1,0 +1,403 @@
+//! NATSA accelerator timing model — the gem5-Aladdin substitute.
+//!
+//! Two evaluators, cross-checked by tests:
+//!
+//! * [`NatsaDesign::estimate`] — closed-form: per-PU time is the max of
+//!   its compute time (divider-limited PU pipeline) and its memory time
+//!   (fair share of HBM channel bandwidth); the accelerator finishes when
+//!   the most-loaded PU does.
+//! * [`NatsaDesign::simulate`] — chunk-level discrete-event simulation:
+//!   each PU alternates compute and memory phases per diagonal chunk, its
+//!   HBM channel serving transfers FCFS ([`crate::sim::des`]).  Captures
+//!   transient channel contention the closed form averages away.
+//!
+//! ## PU throughput
+//!
+//! The PU pipeline (Fig. 5) is limited by the shared DCU floating-point
+//! divide + sqrt path: one cell needs one reciprocal-multiply and one
+//! sqrt through the shared energy-efficient FPU [29], giving a steady
+//! state of ~14 cycles/cell in DP and ~8 in SP at 1 GHz.  At 72 B (DP) /
+//! 36 B (SP) of DRAM traffic per cell this demands ~5.1 GB/s (DP) and
+//! ~4.5 GB/s (SP) per PU — exactly why the paper's DSE (Section 6.3)
+//! balances at 48 PUs on a 256 GB/s HBM stack: 32 PUs leave bandwidth
+//! stranded (compute-bound), 64 PUs starve (memory-bound).
+
+use crate::natsa::pu::{ChunkWork, PuDesign};
+use crate::natsa::scheduler;
+use crate::sim::des::{EventQueue, FcfsChannel};
+use crate::sim::dram::DramConfig;
+use crate::sim::{Bound, Estimate, Precision, Workload};
+
+/// Steady-state PU cycles per diagonal cell (divider-limited).
+pub fn cycles_per_cell(prec: Precision) -> f64 {
+    match prec {
+        Precision::Dp => 14.0,
+        Precision::Sp => 8.0,
+    }
+}
+
+/// DRAM bytes per cell streamed by a PU (see `ChunkWork::traffic_bytes`).
+pub fn bytes_per_cell(prec: Precision) -> f64 {
+    9.0 * prec.bytes() as f64
+}
+
+/// A full NATSA configuration: PU fleet + memory stack.
+#[derive(Clone, Debug)]
+pub struct NatsaDesign {
+    pub pus: usize,
+    pub pu: PuDesign,
+    pub dram: DramConfig,
+    pub precision: Precision,
+}
+
+impl NatsaDesign {
+    /// The paper's HBM design point: 48 PUs @ 1 GHz on HBM2.
+    pub fn hbm(precision: Precision) -> Self {
+        NatsaDesign {
+            pus: 48,
+            pu: match precision {
+                Precision::Dp => PuDesign::dp(),
+                Precision::Sp => PuDesign::sp(),
+            },
+            dram: DramConfig::hbm2(),
+            precision,
+        }
+    }
+
+    /// The DDR4 variant (footnote 2): 8 PUs saturate dual-channel DDR4.
+    pub fn ddr4(precision: Precision) -> Self {
+        NatsaDesign {
+            pus: 8,
+            dram: DramConfig::ddr4_2400_dual(),
+            ..Self::hbm(precision)
+        }
+    }
+
+    /// Same design with a different PU count (design space exploration).
+    pub fn with_pus(mut self, pus: usize) -> Self {
+        self.pus = pus;
+        self
+    }
+
+    fn name(&self) -> String {
+        format!("NATSA-{}x{}", self.dram.name, self.pus)
+    }
+
+    /// Per-PU HBM bandwidth share (GB/s) — channels divide evenly.
+    pub fn bw_per_pu_gbs(&self) -> f64 {
+        self.dram.effective_bw_gbs() / self.pus as f64
+    }
+
+    /// Per-PU compute demand on memory (GB/s) to keep the pipeline fed.
+    pub fn demand_per_pu_gbs(&self) -> f64 {
+        bytes_per_cell(self.precision)
+            / (cycles_per_cell(self.precision) / self.pu.freq_ghz)
+    }
+
+    /// Closed-form evaluation (Table 2 / Fig. 7 path).
+    pub fn estimate(&self, w: &Workload) -> Estimate {
+        let sched = scheduler::schedule(w.nw, w.excl, self.pus);
+        let cyc = cycles_per_cell(self.precision);
+        let bpc = bytes_per_cell(self.precision);
+        let bw_pu = self.bw_per_pu_gbs() * 1e9;
+        let freq = self.pu.freq_ghz * 1e9;
+        let lanes = self.pu.lanes as f64;
+
+        let mut t_max = 0.0f64;
+        let mut compute_bound_pus = 0usize;
+        let mut total_bytes = 0u64;
+        for k in 0..self.pus {
+            let cells = sched.load(k) as f64;
+            let diags = sched.per_pu[k].len() as f64;
+            // DPU startup per diagonal: m/lanes cycles.
+            let compute_s = (cells * cyc + diags * w.m as f64 / lanes) / freq;
+            let bytes = cells * bpc + diags * 2.0 * w.m as f64 * self.pu.elem_bytes as f64;
+            let mem_s = bytes / bw_pu;
+            total_bytes += bytes as u64;
+            if compute_s >= mem_s {
+                compute_bound_pus += 1;
+            }
+            t_max = t_max.max(compute_s.max(mem_s));
+        }
+        let bound = if compute_bound_pus * 2 >= self.pus {
+            Bound::Compute
+        } else {
+            Bound::Memory
+        };
+        let bw_gbs = total_bytes as f64 / t_max / 1e9;
+        let power_w = self.compute_power_w() + self.dram.dynamic_power_w(bw_gbs);
+        Estimate {
+            platform: self.name(),
+            precision: self.precision,
+            time_s: t_max,
+            bw_gbs,
+            power_w,
+            energy_j: power_w * t_max,
+            bound,
+        }
+    }
+
+    /// PU-fleet dynamic power (W): peak per-PU power scaled by pipeline
+    /// utilization (memory-bound PUs idle their FPUs part of the time).
+    pub fn compute_power_w(&self) -> f64 {
+        let util = (self.demand_per_pu_gbs() / self.bw_per_pu_gbs()).min(1.0);
+        // util < 1 => compute-bound (FPUs busy); util > 1 clamped: memory
+        // bound => FPUs busy a fraction 1/util of the time.
+        let busy = if util >= 1.0 { 1.0 / util } else { 1.0 };
+        self.pus as f64 * self.pu.peak_power_w * busy.max(0.3)
+    }
+
+    /// Chunk-level discrete-event simulation.  `sim_chunk` cells per
+    /// event (defaults keep the event count ~1e5); returns an [`Estimate`]
+    /// plus the number of events processed.
+    pub fn simulate(&self, w: &Workload, sim_chunk: Option<u64>) -> (Estimate, u64) {
+        let sched = scheduler::schedule(w.nw, w.excl, self.pus);
+        let chunk = sim_chunk
+            .unwrap_or_else(|| (w.cells / self.pus as u64 / 2000).clamp(512, 1 << 22));
+        let freq_hz = self.pu.freq_ghz * 1e9;
+        let ps_per_cycle = 1e12 / freq_hz;
+        let ch_bw_bytes_per_ps = self.dram.channel_bw_gbs() * 1e9 / 1e12;
+
+        // Per-PU work: flatten its diagonals into chunk descriptors.
+        let mut pu_chunks: Vec<std::vec::IntoIter<ChunkWork>> = sched
+            .per_pu
+            .iter()
+            .map(|diags| {
+                let mut v = Vec::new();
+                for &d in diags {
+                    let mut left = (w.nw - d) as u64;
+                    let mut first = true;
+                    while left > 0 {
+                        let c = left.min(chunk);
+                        v.push(ChunkWork { cells: c, first_dot: first, m: w.m });
+                        first = false;
+                        left -= c;
+                    }
+                }
+                v.into_iter()
+            })
+            .collect();
+
+        let mut channels = vec![FcfsChannel::default(); self.dram.channels];
+        let mut queue: EventQueue<usize> = EventQueue::new();
+        let mut events = 0u64;
+        let mut finish = vec![0u64; self.pus];
+
+        // Kick off every PU at t=0.
+        for pu in 0..self.pus {
+            queue.schedule(0, pu);
+        }
+        while let Some(ev) = queue.pop() {
+            let pu = ev.payload;
+            if let Some(work) = pu_chunks[pu].next() {
+                events += 1;
+                // memory phase: the PU's channel streams the chunk while
+                // the pipeline computes; completion = max(compute, mem)
+                // from the channel's grant time (double-buffered).
+                let ch = pu % self.dram.channels;
+                let mem_done =
+                    channels[ch].serve(ev.at, work.traffic_bytes(&self.pu), ch_bw_bytes_per_ps);
+                let compute_ps = (work.cycles(&self.pu) as f64 * ps_per_cycle) as u64;
+                let done = mem_done.max(ev.at + compute_ps);
+                finish[pu] = done;
+                queue.schedule(done, pu);
+            }
+        }
+        let t_ps = *finish.iter().max().unwrap_or(&0);
+        let time_s = t_ps as f64 * 1e-12;
+        let total_bytes: u64 = channels.iter().map(|c| c.bytes_served).sum();
+        let bw_gbs = total_bytes as f64 / time_s / 1e9;
+        let power_w = self.compute_power_w() + self.dram.dynamic_power_w(bw_gbs);
+        let est = Estimate {
+            platform: format!("{}(des)", self.name()),
+            precision: self.precision,
+            time_s,
+            bw_gbs,
+            power_w,
+            energy_j: power_w * time_s,
+            bound: if self.demand_per_pu_gbs() > self.bw_per_pu_gbs() {
+                Bound::Memory
+            } else {
+                Bound::Compute
+            },
+        };
+        (est, events)
+    }
+
+    /// Total accelerator area (mm², 45 nm) — Table 3.
+    pub fn area_mm2(&self) -> f64 {
+        self.pus as f64 * self.pu.area_mm2
+    }
+
+    /// Total peak power (W) — Table 3.
+    pub fn peak_power_w(&self) -> f64 {
+        self.pus as f64 * self.pu.peak_power_w
+    }
+}
+
+/// Design-space exploration row (Section 6.3): PU count sweep.
+#[derive(Clone, Debug)]
+pub struct DsePoint {
+    pub pus: usize,
+    pub time_s: f64,
+    pub bound: Bound,
+    pub bw_utilization: f64,
+    pub area_mm2: f64,
+    pub peak_power_w: f64,
+}
+
+/// Sweep PU counts on a workload (the Section 6.3 exploration).
+pub fn design_space(
+    precision: Precision,
+    dram: DramConfig,
+    pu_counts: &[usize],
+    w: &Workload,
+) -> Vec<DsePoint> {
+    pu_counts
+        .iter()
+        .map(|&pus| {
+            let mut d = NatsaDesign::hbm(precision);
+            d.dram = dram.clone();
+            d.pus = pus;
+            let e = d.estimate(w);
+            DsePoint {
+                pus,
+                time_s: e.time_s,
+                bound: e.bound,
+                bw_utilization: e.bw_gbs / d.dram.peak_bw_gbs,
+                area_mm2: d.area_mm2(),
+                peak_power_w: d.peak_power_w(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(n: usize) -> Workload {
+        Workload::new(n, 256)
+    }
+
+    #[test]
+    fn tracks_table2_natsa_anchors() {
+        // Table 2: NATSA-DP 2.47 / 42.45 / 690.65 s, NATSA-SP 1.41 / 393.45.
+        for (prec, anchors) in [
+            (
+                Precision::Dp,
+                vec![(131_072, 2.47), (524_288, 42.45), (2_097_152, 690.65)],
+            ),
+            (Precision::Sp, vec![(131_072, 1.41), (2_097_152, 393.45)]),
+        ] {
+            let d = NatsaDesign::hbm(prec);
+            for (n, paper) in anchors {
+                let e = d.estimate(&t2(n));
+                let ratio = e.time_s / paper;
+                assert!(
+                    (0.7..1.3).contains(&ratio),
+                    "{:?} n={n}: model {:.2}s vs paper {paper}s",
+                    prec,
+                    e.time_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn table3_totals() {
+        let dp = NatsaDesign::hbm(Precision::Dp);
+        assert_eq!(dp.pus, 48);
+        assert!((dp.area_mm2() - 77.76).abs() < 0.01);
+        assert!((dp.peak_power_w() - 4.8).abs() < 0.01);
+        let sp = NatsaDesign::hbm(Precision::Sp);
+        assert!((sp.area_mm2() - 72.48).abs() < 0.01);
+        assert!((sp.peak_power_w() - 3.84).abs() < 0.01);
+    }
+
+    #[test]
+    fn dse_balance_at_48_pus() {
+        // Section 6.3: 32 PUs compute-bound, 64 memory-bound, 48 balanced.
+        let pts = design_space(
+            Precision::Dp,
+            DramConfig::hbm2(),
+            &[32, 48, 64],
+            &t2(524_288),
+        );
+        assert_eq!(pts[0].bound, Bound::Compute, "32 PUs");
+        assert_eq!(pts[2].bound, Bound::Memory, "64 PUs");
+        // 48 is the knee: adding PUs beyond it buys little
+        let gain_32_48 = pts[0].time_s / pts[1].time_s;
+        let gain_48_64 = pts[1].time_s / pts[2].time_s;
+        assert!(gain_32_48 > 1.25, "{gain_32_48}");
+        assert!(gain_48_64 < 1.12, "{gain_48_64}");
+    }
+
+    #[test]
+    fn ddr4_variant_saturates_with_8_pus() {
+        // Footnote 2: 8 PUs are enough for dual-channel DDR4.
+        let d = NatsaDesign::ddr4(Precision::Dp);
+        assert_eq!(d.pus, 8);
+        let e = d.estimate(&t2(524_288));
+        assert_eq!(e.bound, Bound::Memory);
+        // adding more PUs gains <10%
+        let e16 = NatsaDesign::ddr4(Precision::Dp)
+            .with_pus(16)
+            .estimate(&t2(524_288));
+        assert!(e.time_s / e16.time_s < 1.10);
+    }
+
+    #[test]
+    fn des_agrees_with_closed_form() {
+        let d = NatsaDesign::hbm(Precision::Dp);
+        let w = t2(131_072);
+        let a = d.estimate(&w);
+        let (b, events) = d.simulate(&w, None);
+        let ratio = b.time_s / a.time_s;
+        assert!(
+            (0.9..1.15).contains(&ratio),
+            "DES {:.3}s vs closed form {:.3}s",
+            b.time_s,
+            a.time_s
+        );
+        assert!(events > 1000, "expected a meaningful event count: {events}");
+    }
+
+    #[test]
+    fn sp_speedup_over_dp_matches_paper_band() {
+        // Table 2: NATSA-SP outperforms NATSA-DP by up to 1.75x.
+        let w = t2(2_097_152);
+        let dp = NatsaDesign::hbm(Precision::Dp).estimate(&w);
+        let sp = NatsaDesign::hbm(Precision::Sp).estimate(&w);
+        let s = dp.time_s / sp.time_s;
+        assert!((1.4..2.0).contains(&s), "SP speedup {s}");
+    }
+
+    #[test]
+    fn power_dominated_by_memory() {
+        // Fig. 8: "most of its power is consumed by memory".
+        let d = NatsaDesign::hbm(Precision::Dp);
+        let e = d.estimate(&t2(524_288));
+        let mem_w = d.dram.dynamic_power_w(e.bw_gbs);
+        assert!(
+            mem_w > e.power_w - mem_w,
+            "memory {mem_w}W vs compute {}W",
+            e.power_w - mem_w
+        );
+    }
+
+    #[test]
+    fn speedup_grows_with_series_length() {
+        // Fig. 7: NATSA speedup over the baseline increases with n.
+        let base = crate::sim::platform::GpPlatform::ddr4_ooo();
+        let d = NatsaDesign::hbm(Precision::Dp);
+        let mut last = 0.0;
+        for n in [131_072, 524_288, 2_097_152] {
+            let w = t2(n);
+            let s = base.estimate(&w, Precision::Dp).time_s / d.estimate(&w).time_s;
+            assert!(s > last, "speedup must grow: {s} after {last}");
+            last = s;
+        }
+        assert!(last > 8.0, "2M speedup {last}");
+    }
+}

@@ -1,0 +1,169 @@
+//! DRAM device models — the Ramulator + Micron-power-calculator substitute.
+//!
+//! Each [`DramConfig`] carries the timing/energy parameters the higher-level
+//! models consume: peak bandwidth, channel organization, effective-bandwidth
+//! derating (row-buffer conflicts and scheduling losses under many request
+//! streams), loaded access latency, and access energy per byte.
+//!
+//! Energy constants follow public figures: DDR4 access energy in the tens
+//! of pJ/bit once I/O + activation are included; HBM2 roughly 3.9 pJ/bit
+//! thanks to TSV I/O (Lee+ ISSCC'14 [55], JEDEC [46]).  Background power
+//! scales with capacity.
+
+/// A DRAM subsystem (device + channel organization).
+#[derive(Clone, Debug)]
+pub struct DramConfig {
+    pub name: &'static str,
+    /// Independent channels (HBM2: 8; dual-channel DDR4: 2).
+    pub channels: usize,
+    /// Peak aggregate bandwidth (GB/s).
+    pub peak_bw_gbs: f64,
+    /// Fraction of peak sustainable by a many-stream diagonal workload
+    /// (row-buffer locality is poor; HBM's channel count absorbs more).
+    pub efficiency: f64,
+    /// Loaded access latency (ns) — drives the in-order stall model.
+    pub latency_ns: f64,
+    /// Access energy (pJ per byte, read ≈ write for our purposes).
+    pub energy_pj_per_byte: f64,
+    /// Background + refresh power for the fitted capacity (W).
+    pub background_w: f64,
+    /// Capacity (GiB), for reporting.
+    pub capacity_gib: usize,
+}
+
+impl DramConfig {
+    /// Dual-channel DDR4-2400: 38.4 GB/s peak (paper Section 5.1).
+    pub fn ddr4_2400_dual() -> Self {
+        DramConfig {
+            name: "DDR4-2400x2",
+            channels: 2,
+            peak_bw_gbs: 38.4,
+            efficiency: 0.70,
+            latency_ns: 75.0,
+            energy_pj_per_byte: 62.0, // ~7.75 pJ/bit incl. I/O + ACT share
+            background_w: 1.9,
+            capacity_gib: 16,
+        }
+    }
+
+    /// 4 GB HBM2 stack: 256 GB/s peak over 8 channels (paper Section 5.1).
+    pub fn hbm2() -> Self {
+        DramConfig {
+            name: "HBM2",
+            channels: 8,
+            peak_bw_gbs: 256.0,
+            efficiency: 0.90,
+            latency_ns: 60.0,
+            energy_pj_per_byte: 31.0, // ~3.9 pJ/bit (ISSCC'14)
+            background_w: 1.2,
+            capacity_gib: 4,
+        }
+    }
+
+    /// KNL's 6-channel DDR4-2400 (Figs. 3-4 testbed): 115.2 GB/s peak,
+    /// ~90 GB/s sustained.
+    pub fn knl_ddr4() -> Self {
+        DramConfig {
+            name: "KNL-DDR4x6",
+            channels: 6,
+            peak_bw_gbs: 115.2,
+            efficiency: 0.78,
+            latency_ns: 85.0,
+            energy_pj_per_byte: 62.0,
+            background_w: 4.5,
+            capacity_gib: 96,
+        }
+    }
+
+    /// KNL's on-package MCDRAM (8 stacks, ~450 GB/s streaming).
+    pub fn knl_mcdram() -> Self {
+        DramConfig {
+            name: "KNL-MCDRAM",
+            channels: 8,
+            peak_bw_gbs: 450.0,
+            efficiency: 0.80,
+            latency_ns: 95.0, // MCDRAM trades latency for bandwidth
+            energy_pj_per_byte: 38.0,
+            background_w: 3.0,
+            capacity_gib: 16,
+        }
+    }
+
+    /// Bandwidth actually sustainable for our access pattern (GB/s).
+    pub fn effective_bw_gbs(&self) -> f64 {
+        self.peak_bw_gbs * self.efficiency
+    }
+
+    /// Time (s) to move `bytes` at effective bandwidth.
+    pub fn transfer_time_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.effective_bw_gbs() * 1e9)
+    }
+
+    /// Dynamic memory power (W) when serving `bw_gbs` of traffic.
+    pub fn dynamic_power_w(&self, bw_gbs: f64) -> f64 {
+        self.background_w + bw_gbs * 1e9 * self.energy_pj_per_byte * 1e-12
+    }
+
+    /// Energy (J) for moving `bytes` over `time_s` seconds.
+    pub fn energy_j(&self, bytes: u64, time_s: f64) -> f64 {
+        self.background_w * time_s + bytes as f64 * self.energy_pj_per_byte * 1e-12
+    }
+
+    /// Per-channel effective bandwidth (GB/s).
+    pub fn channel_bw_gbs(&self) -> f64 {
+        self.effective_bw_gbs() / self.channels as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_peak_bandwidths() {
+        assert!((DramConfig::ddr4_2400_dual().peak_bw_gbs - 38.4).abs() < 1e-9);
+        assert!((DramConfig::hbm2().peak_bw_gbs - 256.0).abs() < 1e-9);
+        assert_eq!(DramConfig::hbm2().channels, 8);
+    }
+
+    #[test]
+    fn hbm_more_efficient_per_byte() {
+        let ddr = DramConfig::ddr4_2400_dual();
+        let hbm = DramConfig::hbm2();
+        assert!(hbm.energy_pj_per_byte < ddr.energy_pj_per_byte / 1.5);
+    }
+
+    #[test]
+    fn transfer_time_linear() {
+        let hbm = DramConfig::hbm2();
+        let t1 = hbm.transfer_time_s(1 << 30);
+        let t2 = hbm.transfer_time_s(2 << 30);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        // 230.4 GB/s effective: 1 GiB in ~4.7 ms
+        assert!((t1 - (1u64 << 30) as f64 / 230.4e9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn power_scales_with_bandwidth() {
+        let hbm = DramConfig::hbm2();
+        let idle = hbm.dynamic_power_w(0.0);
+        let busy = hbm.dynamic_power_w(230.0);
+        assert!((idle - hbm.background_w).abs() < 1e-12);
+        assert!(busy > idle + 6.0, "HBM at full tilt ~7W dynamic: {busy}");
+    }
+
+    #[test]
+    fn energy_consistent_with_power() {
+        let d = DramConfig::ddr4_2400_dual();
+        let bytes = 26_880_000_000u64; // 26.88 GB/s for 1 s
+        let e = d.energy_j(bytes, 1.0);
+        let p = d.dynamic_power_w(26.88);
+        assert!((e - p).abs() / p < 1e-6, "{e} vs {p}");
+    }
+
+    #[test]
+    fn channel_bw_split() {
+        let hbm = DramConfig::hbm2();
+        assert!((hbm.channel_bw_gbs() * 8.0 - hbm.effective_bw_gbs()).abs() < 1e-9);
+    }
+}

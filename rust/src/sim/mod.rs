@@ -1,0 +1,179 @@
+//! Timing / power / energy / area models — the evaluation substrate.
+//!
+//! The paper evaluated NATSA with ZSim + Ramulator (general-purpose
+//! platforms), gem5 + Aladdin (the accelerator), McPAT + the Micron power
+//! calculator (power/energy), and real PCM/NVVP measurements (KNL / GPUs).
+//! None of those run here, so this module implements the closest analytic
+//! + discrete-event equivalents (DESIGN.md §2 substitution table):
+//!
+//! * [`dram`]     — DDR4 / HBM2 channel bandwidth + energy model (Ramulator
+//!   + Micron power-calc substitute),
+//! * [`cache`]    — working-set/LLC traffic model plus a real set-associative
+//!   LRU simulator used to validate the analytic hit-rate assumptions,
+//! * [`platform`] — general-purpose core models (OoO / in-order, the four
+//!   simulated platforms of Section 5.1 + the KNL of Figs. 3-4) evaluated
+//!   over a [`Workload`] (ZSim substitute),
+//! * [`accel`]    — the NATSA accelerator timing model with a chunk-level
+//!   discrete-event simulation of PU/channel contention (gem5-Aladdin
+//!   substitute) and the design-space exploration of Section 6.3,
+//! * [`des`]      — the small discrete-event engine behind [`accel`],
+//! * [`power`]    — dynamic power / energy models (McPAT + Micron + Galal
+//!   FPU energy substitute),
+//! * [`area`]     — area accounting (Fig. 10),
+//! * [`roofline`] — arithmetic-intensity + roofline analysis (Fig. 4).
+//!
+//! Model constants are calibrated against the paper's Table 2 / Figs. 8-11
+//! anchor points; `rust/tests/paper_shape.rs` locks the claim *shapes*.
+//! Absolute seconds are model outputs, not silicon measurements.
+
+pub mod accel;
+pub mod area;
+pub mod cache;
+pub mod dram;
+pub mod des;
+pub mod platform;
+pub mod power;
+pub mod roofline;
+
+use crate::timeseries::{default_exclusion, num_windows};
+
+/// Element precision of a run (the paper's DP/SP designs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Sp,
+    Dp,
+}
+
+impl Precision {
+    pub fn bytes(&self) -> usize {
+        match self {
+            Precision::Sp => 4,
+            Precision::Dp => 8,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Sp => "SP",
+            Precision::Dp => "DP",
+        }
+    }
+}
+
+/// Static description of one matrix profile job — everything the timing
+/// models need, derived purely from `(n, m, excl)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub n: usize,
+    pub m: usize,
+    pub excl: usize,
+    pub nw: usize,
+    /// Admissible distance-matrix cells (upper triangle).
+    pub cells: u64,
+    /// Admissible diagonals (each costs one O(m) first dot product).
+    pub diagonals: u64,
+}
+
+impl Workload {
+    pub fn new(n: usize, m: usize) -> Self {
+        Self::with_excl(n, m, default_exclusion(m))
+    }
+
+    pub fn with_excl(n: usize, m: usize, excl: usize) -> Self {
+        let nw = num_windows(n, m);
+        assert!(nw > excl, "degenerate workload: n={n} m={m} excl={excl}");
+        Workload {
+            n,
+            m,
+            excl,
+            nw,
+            cells: crate::mp::total_cells(nw, excl),
+            diagonals: (nw - excl) as u64,
+        }
+    }
+
+    /// The paper's Table 1 evaluation points with the default window used
+    /// throughout the evaluation (m = 256).
+    pub fn table1() -> Vec<(String, Workload)> {
+        crate::timeseries::generator::TABLE1_SIZES
+            .iter()
+            .map(|(n, name)| (name.to_string(), Workload::new(*n, 256)))
+            .collect()
+    }
+
+    /// Total FLOPs of the diagonal algorithm on this workload.
+    pub fn flops(&self) -> u64 {
+        self.cells * 13 + self.diagonals * 2 * self.m as u64
+    }
+}
+
+/// A platform's evaluation of a workload — one row of Table 2 plus the
+/// power/energy columns of Figs. 8-9.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    pub platform: String,
+    pub precision: Precision,
+    /// Modeled end-to-end execution time (seconds).
+    pub time_s: f64,
+    /// Average DRAM bandwidth demand actually served (GB/s).
+    pub bw_gbs: f64,
+    /// Average dynamic power (W): compute + memory.
+    pub power_w: f64,
+    /// Energy = power × time (power-delay product, as the paper computes).
+    pub energy_j: f64,
+    /// Whether the model was compute- or memory-bound.
+    pub bound: Bound,
+}
+
+/// Which resource limited the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+}
+
+impl std::fmt::Display for Bound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Bound::Compute => write!(f, "compute"),
+            Bound::Memory => write!(f, "memory"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_cell_count() {
+        let w = Workload::new(1000, 100);
+        assert_eq!(w.nw, 901);
+        assert_eq!(w.excl, 25);
+        assert_eq!(w.cells, crate::mp::total_cells(901, 25));
+        assert_eq!(w.diagonals, 876);
+    }
+
+    #[test]
+    fn table1_matches_paper_sizes() {
+        let t1 = Workload::table1();
+        assert_eq!(t1.len(), 5);
+        assert_eq!(t1[0].0, "rand_128K");
+        assert_eq!(t1[0].1.n, 131_072);
+        assert_eq!(t1[4].1.n, 2_097_152);
+    }
+
+    #[test]
+    fn flops_scale_quadratically() {
+        let small = Workload::new(10_000, 100);
+        let big = Workload::new(20_000, 100);
+        let ratio = big.flops() as f64 / small.flops() as f64;
+        assert!((ratio - 4.0).abs() < 0.1, "{ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate workload")]
+    fn degenerate_rejected() {
+        Workload::new(100, 100);
+    }
+}

@@ -1,0 +1,161 @@
+//! Power and energy models — McPAT + Micron + Galal-FPU substitute.
+//!
+//! Three granularities:
+//!
+//! * per-operation FPU energies ([`FpuEnergy`], 45 nm, after Galal &
+//!   Horowitz [29] and Salehi [83]) — used for the NATSA PU's bottom-up
+//!   energy estimate and the Fig. 9 decomposition,
+//! * per-platform dynamic power (assembled in [`crate::sim::platform`] and
+//!   [`crate::sim::accel`] from core/PU constants + the DRAM model),
+//! * technology scaling ([`tech_scale`]), for the paper's closing remark
+//!   that 15 nm would cut NATSA's energy ~4x and area ~3x [83].
+
+use crate::sim::{Estimate, Precision};
+
+/// Energy per floating-point operation at 45 nm (pJ) — energy-efficient
+/// FPU design values [29].
+#[derive(Clone, Copy, Debug)]
+pub struct FpuEnergy {
+    pub add_pj: f64,
+    pub mul_pj: f64,
+    pub div_sqrt_pj: f64,
+    pub cmp_pj: f64,
+    /// Register-file access (pJ per operand).
+    pub reg_pj: f64,
+}
+
+impl FpuEnergy {
+    pub fn at_45nm(prec: Precision) -> Self {
+        match prec {
+            Precision::Dp => FpuEnergy {
+                add_pj: 18.0,
+                mul_pj: 34.0,
+                div_sqrt_pj: 85.0,
+                cmp_pj: 4.0,
+                reg_pj: 2.2,
+            },
+            Precision::Sp => FpuEnergy {
+                add_pj: 8.0,
+                mul_pj: 14.0,
+                div_sqrt_pj: 38.0,
+                cmp_pj: 2.0,
+                reg_pj: 1.4,
+            },
+        }
+    }
+
+    /// Compute energy of one diagonal cell through the PU pipeline:
+    /// DPUU (2 mul + 2 add) + DCU (3 mul + 2 add + div + sqrt) + PUU
+    /// (2 cmp) + ~12 register operands.
+    pub fn cell_pj(&self) -> f64 {
+        2.0 * self.mul_pj
+            + 2.0 * self.add_pj
+            + 3.0 * self.mul_pj
+            + 2.0 * self.add_pj
+            + 2.0 * self.div_sqrt_pj
+            + 2.0 * self.cmp_pj
+            + 12.0 * self.reg_pj
+    }
+}
+
+/// Multiplicative savings when moving to a smaller node.  Exponents are
+/// fitted to the paper's Section 6.2 anchor (45 -> 15 nm: ~4x energy,
+/// ~3x area, after [83]).
+#[derive(Clone, Copy, Debug)]
+pub struct TechScale {
+    /// Divide energy by this.
+    pub energy_factor: f64,
+    /// Divide area by this.
+    pub area_factor: f64,
+}
+
+impl TechScale {
+    pub fn of(from_nm: f64, to_nm: f64) -> TechScale {
+        let s = from_nm / to_nm;
+        TechScale {
+            energy_factor: s.powf(1.26),
+            area_factor: s.powf(1.0), // ~3x from 45->15nm per [83]
+        }
+    }
+}
+
+/// Energy summary row for Fig. 9, decomposed into compute vs memory.
+#[derive(Clone, Debug)]
+pub struct EnergyRow {
+    pub platform: String,
+    pub total_j: f64,
+    pub compute_j: f64,
+    pub memory_j: f64,
+}
+
+impl EnergyRow {
+    /// Split an [`Estimate`] using the platform's DRAM power at its
+    /// served bandwidth.
+    pub fn from_estimate(e: &Estimate, mem_power_w: f64) -> Self {
+        let memory_j = mem_power_w * e.time_s;
+        EnergyRow {
+            platform: e.platform.clone(),
+            total_j: e.energy_j,
+            compute_j: (e.energy_j - memory_j).max(0.0),
+            memory_j,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sp_ops_cheaper_than_dp() {
+        let dp = FpuEnergy::at_45nm(Precision::Dp);
+        let sp = FpuEnergy::at_45nm(Precision::Sp);
+        assert!(sp.mul_pj < dp.mul_pj / 2.0 + 1.0);
+        assert!(sp.cell_pj() < dp.cell_pj());
+    }
+
+    #[test]
+    fn cell_energy_order_of_magnitude() {
+        // a DP cell through the pipeline: a few hundred pJ at 45 nm
+        let pj = FpuEnergy::at_45nm(Precision::Dp).cell_pj();
+        assert!((200.0..700.0).contains(&pj), "{pj}");
+    }
+
+    #[test]
+    fn bottom_up_pu_power_matches_table3() {
+        // 48 DP PUs at the balanced point compute ~3.4e9 cells/s total;
+        // bottom-up energy x rate should land near Table 3's 4.8 W peak.
+        let pj = FpuEnergy::at_45nm(Precision::Dp).cell_pj();
+        let cells_per_s = 48.0e9 / 14.0; // fleet rate at 1 GHz, 14 cyc/cell
+        let watts = pj * 1e-12 * cells_per_s;
+        assert!(
+            (0.4..2.0).contains(&(watts / 4.8 * 4.0)),
+            "bottom-up {watts:.2}W vs Table 3 4.8W peak"
+        );
+    }
+
+    #[test]
+    fn tech_scaling_matches_paper_claim() {
+        // Section 6.2: 45 -> 15 nm gives ~4x energy and ~3x area.
+        let ts = TechScale::of(45.0, 15.0);
+        assert!((3.5..4.5).contains(&ts.energy_factor), "{}", ts.energy_factor);
+        assert!((2.5..3.5).contains(&ts.area_factor), "{}", ts.area_factor);
+    }
+
+    #[test]
+    fn energy_row_decomposition_sums() {
+        let e = Estimate {
+            platform: "X".into(),
+            precision: Precision::Dp,
+            time_s: 10.0,
+            bw_gbs: 100.0,
+            power_w: 20.0,
+            energy_j: 200.0,
+            bound: crate::sim::Bound::Memory,
+        };
+        let row = EnergyRow::from_estimate(&e, 8.0);
+        assert!((row.memory_j - 80.0).abs() < 1e-9);
+        assert!((row.compute_j - 120.0).abs() < 1e-9);
+        assert!((row.total_j - (row.compute_j + row.memory_j)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,159 @@
+//! Roofline analysis (Fig. 4) — arithmetic intensity of SCRIMP on the KNL.
+//!
+//! The paper's Fig. 4 places SCRIMP far left of the ridge point on a Xeon
+//! Phi 7210 roofline: the diagonal algorithm performs ~13 flops per cell
+//! against tens of bytes of traffic, so attainable performance is the
+//! bandwidth roof at every realistic cache behaviour.  This module
+//! computes the same plot from the [`Workload`] descriptors and the
+//! platform constants — no hand-entered results.
+
+use crate::sim::cache::TrafficModel;
+use crate::sim::dram::DramConfig;
+use crate::sim::{Precision, Workload};
+
+/// A machine roofline: peak compute and one or more bandwidth ceilings.
+#[derive(Clone, Debug)]
+pub struct Roofline {
+    pub name: &'static str,
+    /// Peak floating-point throughput (GFLOP/s).
+    pub peak_gflops: f64,
+    pub mems: Vec<DramConfig>,
+}
+
+impl Roofline {
+    /// Xeon Phi 7210: 64 cores x 1.3 GHz x 32 DP flop/cycle ≈ 2662 GFLOP/s
+    /// (double precision, AVX-512 FMA), DDR4 + MCDRAM ceilings.
+    pub fn knl7210() -> Self {
+        Roofline {
+            name: "Xeon Phi 7210",
+            peak_gflops: 2662.0,
+            mems: vec![DramConfig::knl_ddr4(), DramConfig::knl_mcdram()],
+        }
+    }
+
+    /// Attainable GFLOP/s at arithmetic intensity `ai` (flop/byte) for
+    /// memory system `mem_idx`.
+    pub fn attainable_gflops(&self, ai: f64, mem_idx: usize) -> f64 {
+        (ai * self.mems[mem_idx].effective_bw_gbs()).min(self.peak_gflops)
+    }
+
+    /// Ridge point (flop/byte) where memory `mem_idx` stops binding.
+    pub fn ridge(&self, mem_idx: usize) -> f64 {
+        self.peak_gflops / self.mems[mem_idx].effective_bw_gbs()
+    }
+}
+
+/// SCRIMP's arithmetic intensity on a workload under a traffic model.
+pub fn scrimp_intensity(w: &Workload, traffic: &TrafficModel, prec: Precision) -> f64 {
+    let bytes = w.cells as f64 * traffic.bytes_per_cell(w.nw, prec)
+        + w.diagonals as f64 * 2.0 * w.m as f64 * prec.bytes() as f64;
+    w.flops() as f64 / bytes
+}
+
+/// One point of Fig. 4: measured-equivalent (AI, achieved GFLOP/s).
+#[derive(Clone, Copy, Debug)]
+pub struct RooflinePoint {
+    pub ai_flop_per_byte: f64,
+    pub achieved_gflops: f64,
+    pub attainable_gflops: f64,
+    pub peak_fraction: f64,
+}
+
+/// Evaluate SCRIMP's position on the KNL roofline using the Fig. 3
+/// scaling model at full thread count.
+pub fn fig4_points(w: &Workload) -> Vec<(String, RooflinePoint)> {
+    use crate::sim::platform::KnlModel;
+    let roof = Roofline::knl7210();
+    let traffic = TrafficModel {
+        llc_bytes: 32 << 20, // 32 MB aggregate L2 on KNL
+        hot_elems: 2.0,
+        cold_elems: 10.0,
+    };
+    let ai = scrimp_intensity(w, &traffic, Precision::Dp);
+    let mut out = Vec::new();
+    for (idx, knl) in [KnlModel::ddr4(), KnlModel::mcdram()].iter().enumerate() {
+        let (_, bw) = knl.scaling_point(256);
+        let achieved = ai * bw; // flops delivered at the served bandwidth
+        let attainable = roof.attainable_gflops(ai, idx);
+        out.push((
+            knl.dram.name.to_string(),
+            RooflinePoint {
+                ai_flop_per_byte: ai,
+                achieved_gflops: achieved,
+                attainable_gflops: attainable,
+                peak_fraction: achieved / roof.peak_gflops,
+            },
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrimp_is_far_left_of_ridge() {
+        // Fig. 4's message: AI is "significantly low" — well below the
+        // ridge on both memories.
+        let w = Workload::new(1_048_576, 256);
+        let roof = Roofline::knl7210();
+        let traffic = TrafficModel {
+            llc_bytes: 32 << 20,
+            hot_elems: 2.0,
+            cold_elems: 10.0,
+        };
+        let ai = scrimp_intensity(&w, &traffic, Precision::Dp);
+        assert!(ai < 1.0, "AI {ai} should be < 1 flop/byte");
+        assert!(ai < roof.ridge(0) / 5.0, "AI {ai} vs ridge {}", roof.ridge(0));
+        assert!(ai < roof.ridge(1) / 2.0);
+    }
+
+    #[test]
+    fn attainable_is_bandwidth_bound() {
+        let roof = Roofline::knl7210();
+        let att = roof.attainable_gflops(0.3, 0);
+        assert!(att < roof.peak_gflops / 10.0);
+        assert!((att - 0.3 * DramConfig::knl_ddr4().effective_bw_gbs()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_clamps_high_intensity() {
+        let roof = Roofline::knl7210();
+        assert_eq!(roof.attainable_gflops(1e6, 1), roof.peak_gflops);
+    }
+
+    #[test]
+    fn fig4_cores_underutilized() {
+        // "low arithmetic intensity ... leads processing cores to be
+        // underutilized": achieved is a tiny fraction of peak.
+        for (name, p) in fig4_points(&Workload::new(1_048_576, 256)) {
+            assert!(
+                p.peak_fraction < 0.10,
+                "{name}: {:.1}% of peak",
+                p.peak_fraction * 100.0
+            );
+            assert!(p.achieved_gflops <= p.attainable_gflops * 1.001);
+        }
+    }
+
+    #[test]
+    fn mcdram_achieves_more_than_ddr4() {
+        let pts = fig4_points(&Workload::new(1_048_576, 256));
+        assert!(pts[1].1.achieved_gflops > 2.0 * pts[0].1.achieved_gflops);
+    }
+
+    #[test]
+    fn intensity_rises_with_window_reuse() {
+        // larger m amortizes nothing per cell, but fewer windows shrink
+        // the working set -> less traffic -> higher AI on small series.
+        let traffic = TrafficModel {
+            llc_bytes: 8 << 20,
+            hot_elems: 2.0,
+            cold_elems: 10.0,
+        };
+        let small = scrimp_intensity(&Workload::new(100_000, 256), &traffic, Precision::Dp);
+        let large = scrimp_intensity(&Workload::new(2_000_000, 256), &traffic, Precision::Dp);
+        assert!(small > large, "hot {small} vs cold {large}");
+    }
+}

@@ -1,0 +1,284 @@
+//! Deterministic synthetic workload generators.
+//!
+//! The paper evaluates on five MATLAB-generated random series
+//! (`rand_128K` … `rand_2M`, Table 1) plus two real recordings (an ECG from
+//! the European ST-T database and a seismograph trace).  The real datasets
+//! are not redistributable, so this module generates *synthetic equivalents
+//! that plant the same event classes* (DESIGN.md §2 substitutions):
+//!
+//! * [`Pattern::RandomWalk`] — the Table 1 performance workloads,
+//! * [`Pattern::SineWithAnomaly`] — the paper's Fig. 1 demo signal,
+//! * [`Pattern::EcgLike`] — periodic PQRST-ish beats with one arrhythmic
+//!   (premature, misshapen) beat: the profile must spike there (Fig. 12
+//!   left),
+//! * [`Pattern::SeismicLike`] — background microseism noise with a planted
+//!   quake burst: profile spike at onset (Fig. 12 right),
+//! * [`Pattern::PlantedMotif`] — a pair of near-identical windows for
+//!   motif-discovery tests (profile dip to ~0 at both sites).
+//!
+//! All generators are pure functions of `(pattern, n, seed)`.
+
+use crate::prop::Rng;
+use crate::Real;
+
+/// Synthetic workload families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// Integrated white noise — the paper's `rand_*` series.
+    RandomWalk,
+    /// Sinusoid with a flattened anomaly, as in the paper's Fig. 1.
+    SineWithAnomaly,
+    /// ECG-like periodic beats, one arrhythmic beat planted mid-series.
+    EcgLike,
+    /// Low-amplitude noise with one high-energy quake burst.
+    SeismicLike,
+    /// Gaussian noise with one exact repeated window pair (a motif).
+    PlantedMotif,
+}
+
+impl Pattern {
+    /// All patterns, for sweep-style tests.
+    pub const ALL: [Pattern; 5] = [
+        Pattern::RandomWalk,
+        Pattern::SineWithAnomaly,
+        Pattern::EcgLike,
+        Pattern::SeismicLike,
+        Pattern::PlantedMotif,
+    ];
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Pattern> {
+        Some(match s {
+            "random-walk" | "rand" => Pattern::RandomWalk,
+            "sine-anomaly" | "sine" => Pattern::SineWithAnomaly,
+            "ecg" => Pattern::EcgLike,
+            "seismic" => Pattern::SeismicLike,
+            "motif" => Pattern::PlantedMotif,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::RandomWalk => "random-walk",
+            Pattern::SineWithAnomaly => "sine-anomaly",
+            Pattern::EcgLike => "ecg",
+            Pattern::SeismicLike => "seismic",
+            Pattern::PlantedMotif => "motif",
+        }
+    }
+}
+
+/// Where a generator planted its event, if any.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlantedEvent {
+    None,
+    /// Anomaly (discord) covering `[start, start+len)`.
+    Anomaly { start: usize, len: usize },
+    /// Motif pair at the two window start positions.
+    Motif { a: usize, b: usize, len: usize },
+}
+
+/// Generate a series and report the planted event location.
+pub fn generate_with_event<T: Real>(p: Pattern, n: usize, seed: u64) -> (Vec<T>, PlantedEvent) {
+    assert!(n >= 64, "generators assume n >= 64");
+    let mut rng = Rng::new(seed ^ 0xDA7A_5E7);
+    match p {
+        Pattern::RandomWalk => {
+            let mut acc = 0.0f64;
+            let t = (0..n)
+                .map(|_| {
+                    acc += rng.gauss();
+                    T::of_f64(acc)
+                })
+                .collect();
+            (t, PlantedEvent::None)
+        }
+        Pattern::SineWithAnomaly => {
+            // Fig. 1: periodic signal, anomaly ~ values [n/2, n/2 + n/25).
+            let period = 64.0;
+            let start = n / 2;
+            let len = (n / 25).max(8);
+            let t = (0..n)
+                .map(|i| {
+                    let base = (2.0 * std::f64::consts::PI * i as f64 / period).sin();
+                    let v = if (start..start + len).contains(&i) {
+                        0.15 * base + 0.05 * rng.gauss() // flattened segment
+                    } else {
+                        base + 0.02 * rng.gauss()
+                    };
+                    T::of_f64(v)
+                })
+                .collect();
+            (t, PlantedEvent::Anomaly { start, len })
+        }
+        Pattern::EcgLike => {
+            // Beats every `beat` samples: sharp R spike + smaller T hump.
+            // One premature, inverted beat in the middle = arrhythmia.
+            let beat = 96usize;
+            let anomaly_beat = (n / beat) / 2;
+            let start = anomaly_beat * beat;
+            let mut t = vec![0.0f64; n];
+            let mut k = 0usize;
+            let mut idx = 0usize;
+            while idx + beat <= n {
+                let is_anom = k == anomaly_beat;
+                // premature beat: shifted onset, inverted R, no T wave
+                let shift = if is_anom { beat / 3 } else { 0 };
+                let r_at = idx + 20 - shift.min(15);
+                let sgn = if is_anom { -0.9 } else { 1.0 };
+                for (off, amp) in [(0isize, 1.4), (-2, 0.35), (2, 0.4)] {
+                    let p = r_at as isize + off;
+                    if (0..n as isize).contains(&p) {
+                        t[p as usize] += sgn * amp;
+                    }
+                }
+                if !is_anom {
+                    for j in 0..16 {
+                        let p = idx + 50 + j;
+                        if p < n {
+                            t[p] += 0.25 * (std::f64::consts::PI * j as f64 / 16.0).sin();
+                        }
+                    }
+                }
+                idx += beat;
+                k += 1;
+            }
+            for v in t.iter_mut() {
+                *v += 0.03 * rng.gauss();
+            }
+            let t = t.into_iter().map(T::of_f64).collect();
+            (t, PlantedEvent::Anomaly { start, len: beat })
+        }
+        Pattern::SeismicLike => {
+            // Periodic microseism background + decaying *chirp* burst.
+            // The burst must be aperiodic: under z-normalization a
+            // fixed-frequency burst is self-similar (its windows match
+            // each other at one period of lag), which makes it a motif,
+            // not a discord.  A frequency sweep keeps every burst window
+            // unique, so the profile spikes at the onset.
+            let start = 2 * n / 3;
+            let len = (n / 20).max(64);
+            let t = (0..n)
+                .map(|i| {
+                    let bg = 0.1 * (2.0 * std::f64::consts::PI * i as f64 / 173.0).sin()
+                        + 0.02 * rng.gauss();
+                    let v = if (start..start + len).contains(&i) {
+                        let k = (i - start) as f64;
+                        let lf = len as f64;
+                        // instantaneous frequency sweeps 1/40 -> 1/6
+                        let phase = 2.0
+                            * std::f64::consts::PI
+                            * (k / 40.0 + (k * k) / (2.0 * lf) * (1.0 / 6.0 - 1.0 / 40.0));
+                        bg + 2.0 * (-k / (lf / 2.0)).exp() * phase.sin()
+                    } else {
+                        bg
+                    };
+                    T::of_f64(v)
+                })
+                .collect();
+            (t, PlantedEvent::Anomaly { start, len })
+        }
+        Pattern::PlantedMotif => {
+            let len = (n / 16).clamp(16, 256);
+            let a = n / 8;
+            let b = 5 * n / 8;
+            let mut t: Vec<f64> = rng.gauss_vec(n);
+            let motif: Vec<f64> = t[a..a + len].to_vec();
+            t[b..b + len].copy_from_slice(&motif);
+            let t = t.into_iter().map(T::of_f64).collect();
+            (t, PlantedEvent::Motif { a, b, len })
+        }
+    }
+}
+
+/// Generate a series, discarding the event metadata.
+pub fn generate<T: Real>(p: Pattern, n: usize, seed: u64) -> Vec<T> {
+    generate_with_event(p, n, seed).0
+}
+
+/// The paper's Table 1 synthetic sizes: 128K, 256K, 512K, 1M, 2M points.
+pub const TABLE1_SIZES: [(usize, &str); 5] = [
+    (131_072, "rand_128K"),
+    (262_144, "rand_256K"),
+    (524_288, "rand_512K"),
+    (1_048_576, "rand_1M"),
+    (2_097_152, "rand_2M"),
+];
+
+/// Generate a Table 1 workload by name (`rand_128K` …).
+pub fn table1_series<T: Real>(name: &str, seed: u64) -> Option<Vec<T>> {
+    TABLE1_SIZES
+        .iter()
+        .find(|(_, nm)| *nm == name)
+        .map(|(n, _)| generate(Pattern::RandomWalk, *n, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        for p in Pattern::ALL {
+            let a = generate::<f64>(p, 512, 42);
+            let b = generate::<f64>(p, 512, 42);
+            let c = generate::<f64>(p, 512, 43);
+            assert_eq!(a, b, "{p:?} not deterministic");
+            assert_ne!(a, c, "{p:?} ignores seed");
+        }
+    }
+
+    #[test]
+    fn lengths_match() {
+        for p in Pattern::ALL {
+            assert_eq!(generate::<f32>(p, 300, 1).len(), 300);
+        }
+    }
+
+    #[test]
+    fn motif_is_exact_pair() {
+        let (t, ev) = generate_with_event::<f64>(Pattern::PlantedMotif, 2048, 9);
+        if let PlantedEvent::Motif { a, b, len } = ev {
+            assert_eq!(&t[a..a + len], &t[b..b + len]);
+        } else {
+            panic!("expected motif event");
+        }
+    }
+
+    #[test]
+    fn anomaly_inside_series() {
+        for p in [Pattern::SineWithAnomaly, Pattern::EcgLike, Pattern::SeismicLike] {
+            let (t, ev) = generate_with_event::<f64>(p, 4096, 3);
+            if let PlantedEvent::Anomaly { start, len } = ev {
+                assert!(start + len <= t.len(), "{p:?} event out of range");
+                assert!(start > 0);
+            } else {
+                panic!("{p:?}: expected anomaly event");
+            }
+        }
+    }
+
+    #[test]
+    fn random_walk_is_nonstationary() {
+        let t = generate::<f64>(Pattern::RandomWalk, 10_000, 5);
+        let first = t[..100].iter().sum::<f64>() / 100.0;
+        let last = t[9_900..].iter().sum::<f64>() / 100.0;
+        // a walk drifts; identical means would indicate white noise
+        assert!((first - last).abs() > 1e-3);
+    }
+
+    #[test]
+    fn table1_names_resolve() {
+        assert_eq!(table1_series::<f32>("rand_128K", 1).unwrap().len(), 131_072);
+        assert!(table1_series::<f32>("rand_3M", 1).is_none());
+    }
+
+    #[test]
+    fn pattern_parse_roundtrip() {
+        for p in Pattern::ALL {
+            assert_eq!(Pattern::parse(p.name()), Some(p));
+        }
+        assert_eq!(Pattern::parse("nope"), None);
+    }
+}

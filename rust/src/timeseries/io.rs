@@ -1,0 +1,134 @@
+//! Plain-text time series I/O.
+//!
+//! Formats supported (auto-detected on load):
+//! * one value per line (comments with `#`, blank lines ignored),
+//! * single-line or multi-line comma/whitespace separated values,
+//! * an optional `value` CSV header (first non-numeric token line skipped).
+//!
+//! Kept dependency-free on purpose: the offline vendor set has no serde,
+//! and a profile dump is just numbers.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::Real;
+
+/// Load a series from a text/CSV file.
+pub fn load_series<T: Real>(path: &Path) -> crate::Result<Vec<T>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut out = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        for tok in trimmed.split(|c: char| c == ',' || c.is_whitespace()) {
+            if tok.is_empty() {
+                continue;
+            }
+            match tok.parse::<f64>() {
+                Ok(v) => out.push(T::of_f64(v)),
+                Err(_) if lineno == 0 => continue, // header tokens
+                Err(e) => {
+                    anyhow::bail!("{}:{}: bad value '{tok}': {e}", path.display(), lineno + 1)
+                }
+            }
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "{}: no data points", path.display());
+    Ok(out)
+}
+
+/// Write a series, one value per line.
+pub fn save_series<T: Real>(path: &Path, t: &[T]) -> crate::Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# series n={}", t.len())?;
+    for v in t {
+        writeln!(w, "{v}")?;
+    }
+    Ok(())
+}
+
+/// Write a matrix profile as `index,distance,neighbor` CSV.
+pub fn save_profile<T: Real>(path: &Path, p: &[T], i: &[i64]) -> crate::Result<()> {
+    anyhow::ensure!(p.len() == i.len(), "profile/index length mismatch");
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "index,distance,neighbor")?;
+    for (k, (d, j)) in p.iter().zip(i).enumerate() {
+        writeln!(w, "{k},{d},{j}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("natsa-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_lines() {
+        let path = tmp("roundtrip.txt");
+        let t = vec![1.5f64, -2.25, 3.0, 0.0];
+        save_series(&path, &t).unwrap();
+        let got: Vec<f64> = load_series(&path).unwrap();
+        assert_eq!(got, t);
+    }
+
+    #[test]
+    fn loads_csv_with_header() {
+        let path = tmp("hdr.csv");
+        std::fs::write(&path, "value\n1.0\n2.0\n3.5\n").unwrap();
+        let got: Vec<f32> = load_series(&path).unwrap();
+        assert_eq!(got, vec![1.0, 2.0, 3.5]);
+    }
+
+    #[test]
+    fn loads_comma_separated_single_line() {
+        let path = tmp("flat.csv");
+        std::fs::write(&path, "1,2,3,4\n").unwrap();
+        let got: Vec<f64> = load_series(&path).unwrap();
+        assert_eq!(got, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let path = tmp("comments.txt");
+        std::fs::write(&path, "# hello\n\n1.0\n# mid\n2.0\n").unwrap();
+        let got: Vec<f64> = load_series(&path).unwrap();
+        assert_eq!(got, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn bad_value_errors_with_location() {
+        let path = tmp("bad.txt");
+        std::fs::write(&path, "1.0\nnope\n").unwrap();
+        let err = load_series::<f64>(&path).unwrap_err().to_string();
+        assert!(err.contains(":2:"), "{err}");
+    }
+
+    #[test]
+    fn empty_file_errors() {
+        let path = tmp("empty.txt");
+        std::fs::write(&path, "# nothing\n").unwrap();
+        assert!(load_series::<f64>(&path).is_err());
+    }
+
+    #[test]
+    fn profile_csv_shape() {
+        let path = tmp("profile.csv");
+        save_profile(&path, &[1.0f64, 2.0], &[5, 0]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("index,distance,neighbor\n0,1,5\n1,2,0\n"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Time series substrate: generation, window statistics, and I/O.
+//!
+//! A time series is a plain `Vec<T>`/`&[T]` throughout the crate — the
+//! paper's `T` of `n` data points (Section 2.1).  This module provides:
+//!
+//! * [`stats`] — the O(n) sliding mean/std precompute of Algorithm 1 line 1
+//!   (host-side `precalculateMeansDevs`),
+//! * [`generator`] — deterministic synthetic workloads: the paper's
+//!   `rand_128K..rand_2M` MATLAB series plus ECG-like / seismic-like /
+//!   sinusoid-with-anomaly signals substituting for the real datasets
+//!   (DESIGN.md §2, substitution table),
+//! * [`io`] — newline/CSV loaders so users can feed real recordings.
+
+pub mod generator;
+pub mod io;
+pub mod stats;
+pub mod transform;
+
+pub use stats::{sliding_stats, WindowStats};
+
+use crate::Real;
+
+/// Number of length-`m` windows in a series of length `n`: `n - m + 1`.
+///
+/// Returns 0 when the series is shorter than the window.
+pub fn num_windows(n: usize, m: usize) -> usize {
+    (n + 1).saturating_sub(m)
+}
+
+/// Paper-default exclusion zone: `m / 4`, at least 1 (Section 2.1; the
+/// main diagonal is always excluded).
+pub fn default_exclusion(m: usize) -> usize {
+    (m / 4).max(1)
+}
+
+/// z-normalize a window in place (test/visualization helper).
+pub fn znormalize<T: Real>(w: &mut [T]) {
+    let n = T::of_f64(w.len() as f64);
+    let mu = w.iter().copied().sum::<T>() / n;
+    let var = w.iter().map(|&x| (x - mu) * (x - mu)).sum::<T>() / n;
+    let sig = var.sqrt();
+    if sig > T::zero() {
+        for x in w.iter_mut() {
+            *x = (*x - mu) / sig;
+        }
+    } else {
+        for x in w.iter_mut() {
+            *x = T::zero();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_count() {
+        assert_eq!(num_windows(10, 4), 7);
+        assert_eq!(num_windows(4, 4), 1);
+        assert_eq!(num_windows(3, 4), 0);
+    }
+
+    #[test]
+    fn exclusion_default() {
+        assert_eq!(default_exclusion(4), 1);
+        assert_eq!(default_exclusion(16), 4);
+        assert_eq!(default_exclusion(2), 1);
+    }
+
+    #[test]
+    fn znormalize_zero_mean_unit_var() {
+        let mut w = vec![1.0f64, 2.0, 3.0, 4.0, 5.0];
+        znormalize(&mut w);
+        let mean: f64 = w.iter().sum::<f64>() / 5.0;
+        let var: f64 = w.iter().map(|x| x * x).sum::<f64>() / 5.0;
+        assert!(mean.abs() < 1e-12);
+        assert!((var - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn znormalize_constant_window() {
+        let mut w = vec![3.0f32; 8];
+        znormalize(&mut w);
+        assert!(w.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,229 @@
+//! Sliding window statistics — Algorithm 1 line 1 / Algorithm 2 line 2.
+//!
+//! The paper precomputes the per-window mean and population standard
+//! deviation on the host CPU in O(n) [81] before starting the accelerator;
+//! this module is that precompute.  Two formulations are provided:
+//!
+//! * [`sliding_stats`] — cumulative-sum based, one pass, the fast path;
+//! * [`sliding_stats_exact`] — direct per-window summation, numerically
+//!   robust oracle used by tests to bound the cumsum error.
+//!
+//! The cumsum variant accumulates in `f64` regardless of the element type:
+//! for the SP design the paper's host would do the same (the statistics are
+//! tiny compared to the O(n²) profile work) and it keeps f32 series with
+//! large offsets from losing all variance digits.
+
+use crate::timeseries::num_windows;
+use crate::Real;
+
+/// Per-window statistics: `mu[i]`, `sig[i]` for window `T[i, m]`.
+#[derive(Clone, Debug)]
+pub struct WindowStats<T> {
+    pub mu: Vec<T>,
+    pub sig: Vec<T>,
+    /// 1/(m*sig) premultiplier used by the hot distance loop; zero where
+    /// the window is constant (sig == 0).
+    pub inv_msig: Vec<T>,
+    /// Folded Eq. 1 factors (perf pass): with za = sqrt(2)/sig and
+    /// zb = sqrt(2m)*mu/sig, the squared distance collapses to
+    /// `d2 = 2m - q*za_i*za_j + zb_i*zb_j` (3 mul + 2 add per cell).
+    /// Zero for constant windows, making d2 degenerate to 2m.
+    pub za: Vec<T>,
+    pub zb: Vec<T>,
+    pub m: usize,
+}
+
+impl<T: Real> WindowStats<T> {
+    /// Number of windows covered.
+    pub fn len(&self) -> usize {
+        self.mu.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mu.is_empty()
+    }
+}
+
+/// O(n) cumulative-sum sliding mean/std (population, ddof = 0).
+///
+/// Panics if `m == 0` or the series is shorter than `m`.
+pub fn sliding_stats<T: Real>(t: &[T], m: usize) -> WindowStats<T> {
+    assert!(m > 0, "window length must be positive");
+    let nw = num_windows(t.len(), m);
+    assert!(nw > 0, "series shorter than window ({} < {m})", t.len());
+
+    let mf = m as f64;
+    let mut mu = Vec::with_capacity(nw);
+    let mut sig = Vec::with_capacity(nw);
+    let mut inv_msig = Vec::with_capacity(nw);
+    let mut za = Vec::with_capacity(nw);
+    let mut zb = Vec::with_capacity(nw);
+    let sqrt2 = 2.0f64.sqrt(); // za = sqrt(2)/sigma
+    let sqrt_2m = (2.0 * mf).sqrt(); // zb = sqrt(2m)*mu/sigma
+
+    // Rolling f64 accumulators; re-anchored subtraction keeps drift bounded
+    // for the lengths we target (<= 2^21 paper sizes).
+    let mut s = 0.0f64;
+    let mut s2 = 0.0f64;
+    for &x in &t[..m] {
+        let x = x.to_f64s();
+        s += x;
+        s2 += x * x;
+    }
+    for i in 0..nw {
+        let mean = s / mf;
+        let var = (s2 / mf - mean * mean).max(0.0);
+        let sd = var.sqrt();
+        mu.push(T::of_f64(mean));
+        sig.push(T::of_f64(sd));
+        if sd > 0.0 {
+            inv_msig.push(T::of_f64(1.0 / (mf * sd)));
+            za.push(T::of_f64(sqrt2 / sd));
+            zb.push(T::of_f64(sqrt_2m * mean / sd));
+        } else {
+            inv_msig.push(T::zero());
+            za.push(T::zero());
+            zb.push(T::zero());
+        }
+        if i + 1 < nw {
+            let out = t[i].to_f64s();
+            let inc = t[i + m].to_f64s();
+            s += inc - out;
+            s2 += inc * inc - out * out;
+        }
+    }
+    WindowStats { mu, sig, inv_msig, za, zb, m }
+}
+
+/// Direct per-window two-pass mean/std — the numerically robust oracle.
+pub fn sliding_stats_exact<T: Real>(t: &[T], m: usize) -> WindowStats<T> {
+    assert!(m > 0);
+    let nw = num_windows(t.len(), m);
+    assert!(nw > 0);
+    let mf = m as f64;
+    let mut mu = Vec::with_capacity(nw);
+    let mut sig = Vec::with_capacity(nw);
+    let mut inv_msig = Vec::with_capacity(nw);
+    let mut za = Vec::with_capacity(nw);
+    let mut zb = Vec::with_capacity(nw);
+    let sqrt2 = 2.0f64.sqrt();
+    let sqrt_2m = (2.0 * mf).sqrt();
+    for i in 0..nw {
+        let w = &t[i..i + m];
+        let mean = w.iter().map(|x| x.to_f64s()).sum::<f64>() / mf;
+        let var = w
+            .iter()
+            .map(|x| {
+                let d = x.to_f64s() - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / mf;
+        let sd = var.sqrt();
+        mu.push(T::of_f64(mean));
+        sig.push(T::of_f64(sd));
+        if sd > 0.0 {
+            inv_msig.push(T::of_f64(1.0 / (mf * sd)));
+            za.push(T::of_f64(sqrt2 / sd));
+            zb.push(T::of_f64(sqrt_2m * mean / sd));
+        } else {
+            inv_msig.push(T::zero());
+            za.push(T::zero());
+            zb.push(T::zero());
+        }
+    }
+    WindowStats { mu, sig, inv_msig, za, zb, m }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, Rng};
+
+    #[test]
+    fn matches_exact_small() {
+        let t: Vec<f64> = vec![1.0, 2.0, 4.0, 7.0, 11.0, 16.0];
+        let a = sliding_stats(&t, 3);
+        let b = sliding_stats_exact(&t, 3);
+        for i in 0..a.len() {
+            assert!((a.mu[i] - b.mu[i]).abs() < 1e-12);
+            assert!((a.sig[i] - b.sig[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_window_equals_whole_series() {
+        let t = vec![2.0f64, 4.0, 6.0, 8.0];
+        let st = sliding_stats(&t, 4);
+        assert_eq!(st.len(), 1);
+        assert!((st.mu[0] - 5.0).abs() < 1e-12);
+        assert!((st.sig[0] - 5.0f64.sqrt()).abs() < 1e-12); // var = 5
+    }
+
+    #[test]
+    fn constant_window_has_zero_sig_and_inv() {
+        let t = vec![3.0f32; 10];
+        let st = sliding_stats(&t, 4);
+        for i in 0..st.len() {
+            assert_eq!(st.sig[i], 0.0);
+            assert_eq!(st.inv_msig[i], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shorter than window")]
+    fn too_short_panics() {
+        sliding_stats(&[1.0f64, 2.0], 5);
+    }
+
+    #[test]
+    fn prop_cumsum_matches_exact() {
+        check("stats-cumsum-vs-exact", 25, |rng: &mut Rng| {
+            let n = rng.range(16, 400);
+            let m = rng.range(2, (n / 2).max(3));
+            let offset = rng.gauss() * 100.0; // stress cancellation
+            let t: Vec<f64> = rng.gauss_vec(n).iter().map(|x| x + offset).collect();
+            let a = sliding_stats(&t, m);
+            let b = sliding_stats_exact(&t, m);
+            for i in 0..a.len() {
+                assert!(
+                    (a.mu[i] - b.mu[i]).abs() < 1e-8,
+                    "mu[{i}] {} vs {}",
+                    a.mu[i],
+                    b.mu[i]
+                );
+                assert!(
+                    (a.sig[i] - b.sig[i]).abs() < 1e-6,
+                    "sig[{i}] {} vs {}",
+                    a.sig[i],
+                    b.sig[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_f32_accumulates_in_f64() {
+        // A large constant offset obliterates f32 accumulation; our f64
+        // internal accumulators must keep the std-dev accurate.
+        check("stats-f32-offset", 10, |rng: &mut Rng| {
+            let n = rng.range(64, 256);
+            let m = 16;
+            let t: Vec<f32> = rng
+                .gauss_vec(n)
+                .iter()
+                .map(|x| (*x + 1.0e4) as f32)
+                .collect();
+            let st = sliding_stats(&t, m);
+            let exact = sliding_stats_exact(&t, m);
+            for i in 0..st.len() {
+                assert!(
+                    (st.sig[i] - exact.sig[i]).abs() < 2e-2,
+                    "sig[{i}] {} vs {}",
+                    st.sig[i],
+                    exact.sig[i]
+                );
+            }
+        });
+    }
+}

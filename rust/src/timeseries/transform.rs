@@ -1,0 +1,193 @@
+//! Series preprocessing — what users run before matrix profile.
+//!
+//! Matrix profile assumes a reasonably clean real-valued series; the
+//! domains the paper motivates (ECG, seismology, economics) all need the
+//! same small toolkit first: gap repair, detrending, global scaling, and
+//! downsampling.  Everything is allocation-explicit and generic over the
+//! crate's [`Real`] types.
+
+use crate::Real;
+
+/// Replace non-finite samples by linear interpolation between the nearest
+/// finite neighbors (edges: nearest finite value).  Errors if no finite
+/// sample exists.
+pub fn repair_gaps<T: Real>(t: &[T]) -> crate::Result<Vec<T>> {
+    anyhow::ensure!(
+        t.iter().any(|x| x.is_finite()),
+        "series has no finite samples"
+    );
+    let mut out = t.to_vec();
+    let n = t.len();
+    let mut i = 0usize;
+    while i < n {
+        if out[i].is_finite() {
+            i += 1;
+            continue;
+        }
+        // find gap [i, j)
+        let mut j = i;
+        while j < n && !out[j].is_finite() {
+            j += 1;
+        }
+        let left = if i > 0 { Some(out[i - 1]) } else { None };
+        let right = if j < n { Some(out[j]) } else { None };
+        match (left, right) {
+            (Some(l), Some(r)) => {
+                let span = (j - i + 1) as f64;
+                for (k, slot) in out[i..j].iter_mut().enumerate() {
+                    let w = (k + 1) as f64 / span;
+                    *slot = T::of_f64(l.to_f64s() * (1.0 - w) + r.to_f64s() * w);
+                }
+            }
+            (Some(l), None) => out[i..j].fill(l),
+            (None, Some(r)) => out[i..j].fill(r),
+            (None, None) => unreachable!("checked above"),
+        }
+        i = j;
+    }
+    Ok(out)
+}
+
+/// Remove the least-squares linear trend (in place).
+pub fn detrend<T: Real>(t: &mut [T]) {
+    let n = t.len();
+    if n < 2 {
+        return;
+    }
+    let nf = n as f64;
+    let mean_x = (nf - 1.0) / 2.0;
+    let mean_y = t.iter().map(|v| v.to_f64s()).sum::<f64>() / nf;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (i, v) in t.iter().enumerate() {
+        let dx = i as f64 - mean_x;
+        sxy += dx * (v.to_f64s() - mean_y);
+        sxx += dx * dx;
+    }
+    let slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    for (i, v) in t.iter_mut().enumerate() {
+        let fit = mean_y + slope * (i as f64 - mean_x);
+        *v = T::of_f64(v.to_f64s() - fit);
+    }
+}
+
+/// Scale to zero mean / unit variance globally (no-op on constant series).
+pub fn standardize<T: Real>(t: &mut [T]) {
+    let n = t.len() as f64;
+    if n == 0.0 {
+        return;
+    }
+    let mean = t.iter().map(|v| v.to_f64s()).sum::<f64>() / n;
+    let var = t
+        .iter()
+        .map(|v| {
+            let d = v.to_f64s() - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    let sd = var.sqrt();
+    if sd == 0.0 {
+        return;
+    }
+    for v in t.iter_mut() {
+        *v = T::of_f64((v.to_f64s() - mean) / sd);
+    }
+}
+
+/// Downsample by integer factor using block means (anti-aliasing-lite);
+/// the window length should be divided by the same factor.
+pub fn downsample<T: Real>(t: &[T], factor: usize) -> Vec<T> {
+    assert!(factor >= 1, "factor must be >= 1");
+    if factor == 1 {
+        return t.to_vec();
+    }
+    t.chunks(factor)
+        .map(|blk| {
+            let s = blk.iter().map(|v| v.to_f64s()).sum::<f64>();
+            T::of_f64(s / blk.len() as f64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, Rng};
+
+    #[test]
+    fn repair_interpolates_interior_gap() {
+        let t = vec![1.0f64, f64::NAN, f64::NAN, 4.0];
+        let r = repair_gaps(&t).unwrap();
+        assert_eq!(r, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn repair_extends_edges() {
+        let t = vec![f64::NAN, 2.0, 3.0, f64::INFINITY];
+        let r = repair_gaps(&t).unwrap();
+        assert_eq!(r, vec![2.0, 2.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn repair_all_nan_errors() {
+        assert!(repair_gaps(&[f64::NAN, f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn detrend_removes_exact_line() {
+        let mut t: Vec<f64> = (0..100).map(|i| 3.0 + 0.5 * i as f64).collect();
+        detrend(&mut t);
+        assert!(t.iter().all(|v| v.abs() < 1e-9), "max {:?}", t.iter().cloned().fold(0.0, f64::max));
+    }
+
+    #[test]
+    fn prop_detrend_kills_added_trend() {
+        check("detrend-invariance", 8, |rng: &mut Rng| {
+            let n = rng.range(50, 400);
+            let base: Vec<f64> = rng.gauss_vec(n);
+            let slope = rng.gauss();
+            let mut with_trend: Vec<f64> = base
+                .iter()
+                .enumerate()
+                .map(|(i, v)| v + slope * i as f64)
+                .collect();
+            let mut plain = base.clone();
+            detrend(&mut with_trend);
+            detrend(&mut plain);
+            for k in 0..n {
+                assert!(
+                    (with_trend[k] - plain[k]).abs() < 1e-6,
+                    "k={k}: {} vs {}",
+                    with_trend[k],
+                    plain[k]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn standardize_moments() {
+        let mut rng = Rng::new(3);
+        let mut t: Vec<f64> = rng.gauss_vec(500).iter().map(|x| 10.0 + 5.0 * x).collect();
+        standardize(&mut t);
+        let mean = t.iter().sum::<f64>() / 500.0;
+        let var = t.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 500.0;
+        assert!(mean.abs() < 1e-12);
+        assert!((var - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn standardize_constant_is_noop() {
+        let mut t = vec![2.0f32; 10];
+        standardize(&mut t);
+        assert_eq!(t, vec![2.0f32; 10]);
+    }
+
+    #[test]
+    fn downsample_block_means() {
+        let t = vec![1.0f64, 3.0, 5.0, 7.0, 9.0];
+        assert_eq!(downsample(&t, 2), vec![2.0, 6.0, 9.0]);
+        assert_eq!(downsample(&t, 1), t);
+    }
+}

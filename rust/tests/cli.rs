@@ -1,0 +1,124 @@
+//! CLI integration tests: drive the `natsa` binary end to end.
+
+use std::process::Command;
+
+fn natsa(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_natsa"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn natsa");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = natsa(&["help"]);
+    assert!(ok);
+    for cmd in ["generate", "profile", "anytime", "simulate", "repro", "artifacts"] {
+        assert!(text.contains(cmd), "help missing {cmd}:\n{text}");
+    }
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, text) = natsa(&[]);
+    assert!(ok && text.contains("usage:"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (ok, text) = natsa(&["frobnicate"]);
+    assert!(!ok && text.contains("unknown command"));
+}
+
+#[test]
+fn profile_scrimp_finds_motif() {
+    let (ok, text) = natsa(&[
+        "profile", "--engine", "scrimp", "--pattern", "motif", "--n", "2048", "--m", "32",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("motif @"), "{text}");
+    // planted motif => distance ~0
+    assert!(text.contains("d=0.0000"), "{text}");
+}
+
+#[test]
+fn profile_all_native_engines_run() {
+    for engine in ["scrimp", "stomp", "brute", "parallel", "natsa"] {
+        let (ok, text) = natsa(&[
+            "profile", "--engine", engine, "--pattern", "ecg", "--n", "1024", "--m", "32",
+        ]);
+        assert!(ok, "{engine} failed:\n{text}");
+        assert!(text.contains("discord @"), "{engine}:\n{text}");
+    }
+}
+
+#[test]
+fn profile_writes_csv() {
+    let out = std::env::temp_dir().join("natsa-cli-profile.csv");
+    let _ = std::fs::remove_file(&out);
+    let (ok, _) = natsa(&[
+        "profile", "--engine", "scrimp", "--pattern", "sine", "--n", "1024", "--m", "32",
+        "--out", out.to_str().unwrap(),
+    ]);
+    assert!(ok);
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert!(text.starts_with("index,distance,neighbor"));
+    assert!(text.lines().count() > 900);
+}
+
+#[test]
+fn generate_roundtrips_through_profile() {
+    let f = std::env::temp_dir().join("natsa-cli-series.txt");
+    let (ok, _) = natsa(&[
+        "generate", "--pattern", "seismic", "--n", "1500", "--seed", "5",
+        "--out", f.to_str().unwrap(),
+    ]);
+    assert!(ok);
+    let (ok, text) = natsa(&[
+        "profile", "--engine", "scrimp", "--input", f.to_str().unwrap(), "--m", "48",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("n=1500"));
+}
+
+#[test]
+fn simulate_all_platforms() {
+    for platform in [
+        "ddr4-ooo", "ddr4-inorder", "hbm-ooo", "hbm-inorder", "natsa", "natsa-ddr4",
+    ] {
+        let (ok, text) = natsa(&[
+            "simulate", "--platform", platform, "--n", "524288", "--m", "256",
+        ]);
+        assert!(ok, "{platform}: {text}");
+        assert!(text.contains("-bound"), "{platform}: {text}");
+    }
+}
+
+#[test]
+fn anytime_reports_progress() {
+    let (ok, text) = natsa(&[
+        "anytime", "--pattern", "motif", "--n", "4096", "--m", "64", "--fraction", "0.3",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("% of cells"), "{text}");
+}
+
+#[test]
+fn repro_single_figure() {
+    let (ok, text) = natsa(&["repro", "--id", "fig7"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("speedup"), "{text}");
+}
+
+#[test]
+fn repro_rejects_unknown_id() {
+    let (ok, text) = natsa(&["repro", "--id", "fig99"]);
+    assert!(!ok && text.contains("unknown experiment"));
+}

@@ -1,0 +1,179 @@
+//! Cross-implementation integration tests: every functional engine must
+//! produce the same matrix profile on every workload family, precision,
+//! and configuration — property-swept with the in-repo harness.
+
+use natsa::mp::parallel::{self, Partition};
+use natsa::mp::{brute, scrimp, stomp, MpConfig};
+use natsa::natsa::anytime::{run_anytime, Budget};
+use natsa::natsa::pu::{PuDatapath, PuDesign};
+use natsa::natsa::{NatsaConfig, NatsaEngine, Order};
+use natsa::prop::{check, Rng};
+use natsa::timeseries::generator::{generate, generate_with_event, Pattern, PlantedEvent};
+use natsa::timeseries::sliding_stats;
+
+#[test]
+fn all_engines_agree_on_all_patterns() {
+    for pattern in Pattern::ALL {
+        let t = generate::<f64>(pattern, 700, 17);
+        let m = 24;
+        let cfg = MpConfig::new(m);
+        let reference = brute::matrix_profile(&t, cfg).unwrap();
+        let engines: Vec<(&str, natsa::mp::MatrixProfile<f64>)> = vec![
+            ("scrimp", scrimp::matrix_profile(&t, cfg).unwrap()),
+            ("stomp", stomp::matrix_profile(&t, cfg).unwrap()),
+            ("parallel", parallel::matrix_profile(&t, cfg, 4).unwrap()),
+            (
+                "natsa",
+                NatsaEngine::new(NatsaConfig::default())
+                    .compute(&t, m)
+                    .unwrap()
+                    .profile,
+            ),
+        ];
+        for (name, mp) in engines {
+            // incremental (Eq. 2) vs explicit dot products differ by FP
+            // association; near an exact motif (d ~ 0) the cancellation
+            // leaves O(1e-7) residue in f64.
+            let d = mp.max_abs_diff(&reference);
+            assert!(d < 1e-6, "{name} vs brute on {pattern:?}: {d}");
+        }
+    }
+}
+
+#[test]
+fn prop_engines_agree_random_shapes() {
+    check("cross-engine", 10, |rng: &mut Rng| {
+        let n = rng.range(100, 600);
+        let m = rng.range(4, 40);
+        if n < 5 * m {
+            return;
+        }
+        let t: Vec<f64> = rng.gauss_vec(n);
+        let cfg = MpConfig::new(m);
+        let a = scrimp::matrix_profile(&t, cfg).unwrap();
+        let b = stomp::matrix_profile(&t, cfg).unwrap();
+        let c = NatsaEngine::new(NatsaConfig::default().with_pus(rng.range(1, 64)))
+            .compute(&t, m)
+            .unwrap()
+            .profile;
+        assert!(a.max_abs_diff(&b) < 1e-9);
+        assert!(a.max_abs_diff(&c) < 1e-9);
+    });
+}
+
+#[test]
+fn prop_f32_f64_consistent_event_detection() {
+    // Fig. 12's claim as a property: same discord region in SP and DP.
+    check("precision-detection", 6, |rng: &mut Rng| {
+        let seed = rng.next_u64();
+        for pattern in [Pattern::EcgLike, Pattern::SeismicLike] {
+            let (t64, ev) = generate_with_event::<f64>(pattern, 4096, seed);
+            let t32: Vec<f32> = t64.iter().map(|&x| x as f32).collect();
+            let m = 64;
+            let dp = scrimp::matrix_profile(&t64, MpConfig::new(m)).unwrap();
+            let sp = scrimp::matrix_profile(&t32, MpConfig::new(m)).unwrap();
+            let (pk_dp, _) = dp.discord().unwrap();
+            let (pk_sp, _) = sp.discord().unwrap();
+            let (start, len) = match ev {
+                PlantedEvent::Anomaly { start, len } => (start, len),
+                _ => unreachable!(),
+            };
+            let near = |pk: usize| pk + m >= start && pk < start + len + m;
+            assert!(near(pk_dp), "{pattern:?} DP missed: {pk_dp} vs [{start},{})", start + len);
+            assert!(near(pk_sp), "{pattern:?} SP missed: {pk_sp}");
+        }
+    });
+}
+
+#[test]
+fn pu_datapath_full_equivalence_with_engine() {
+    let t = generate::<f64>(Pattern::PlantedMotif, 900, 23);
+    let m = 16;
+    let st = sliding_stats(&t, m);
+    let nw = st.len();
+    let excl = m / 4;
+    let dp = PuDatapath::new(PuDesign::dp(), &t, &st);
+    let mut via_pu = natsa::mp::MatrixProfile::new_inf(nw, m, excl);
+    for d in excl..nw {
+        dp.run_diagonal(d, &mut via_pu);
+    }
+    let engine = NatsaEngine::new(NatsaConfig::default())
+        .compute(&t, m)
+        .unwrap();
+    // the PU datapath computes true distances per cell while the engine
+    // accumulates squared distances and sqrts once; near the planted
+    // exact motif (d ~ 0) sqrt amplifies the association residue:
+    // sqrt(1e-10) vs sqrt(0) = 1e-5.  Structural agreement is the check.
+    assert!(via_pu.max_abs_diff(&engine.profile) < 1e-4);
+}
+
+#[test]
+fn anytime_converges_to_exact_result() {
+    let t = generate::<f64>(Pattern::SeismicLike, 2000, 29);
+    let m = 32;
+    let config = NatsaConfig::default().with_order(Order::Random(5));
+    let full = run_anytime(&t, m, &config, Budget::Unlimited).unwrap();
+    let exact = brute::matrix_profile(&t, MpConfig::new(m)).unwrap();
+    assert!(full.profile.max_abs_diff(&exact) < 1e-7);
+    assert!((full.progress - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn prop_anytime_monotone_progress() {
+    // more budget => profile everywhere <= (tighter), never looser
+    check("anytime-monotone", 5, |rng: &mut Rng| {
+        let t: Vec<f64> = rng.gauss_vec(800);
+        let m = 16;
+        let config = NatsaConfig::default().with_order(Order::Random(77));
+        let p25 = run_anytime(&t, m, &config, Budget::Fraction(0.25)).unwrap();
+        let p75 = run_anytime(&t, m, &config, Budget::Fraction(0.75)).unwrap();
+        for k in 0..p25.profile.len() {
+            assert!(
+                p75.profile.p[k] <= p25.profile.p[k] + 1e-12,
+                "budget increase loosened P[{k}]"
+            );
+        }
+    });
+}
+
+#[test]
+fn partitions_agree_under_stress() {
+    let t = generate::<f64>(Pattern::RandomWalk, 3000, 31);
+    let cfg = MpConfig::new(100);
+    let want = scrimp::matrix_profile(&t, cfg).unwrap();
+    for part in [Partition::Contiguous, Partition::Strided, Partition::BalancedPairs] {
+        for threads in [1, 3, 16] {
+            let (got, _) = parallel::with_stats(&t, cfg, threads, part).unwrap();
+            assert!(
+                got.max_abs_diff(&want) < 1e-12,
+                "{part:?} x{threads} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn large_window_small_series_edge() {
+    // m close to n/2: few windows, big exclusion — still exact.
+    let t = generate::<f64>(Pattern::RandomWalk, 300, 37);
+    let cfg = MpConfig::new(100); // nw = 201, excl = 25
+    let a = brute::matrix_profile(&t, cfg).unwrap();
+    let b = scrimp::matrix_profile(&t, cfg).unwrap();
+    let c = NatsaEngine::new(NatsaConfig::default())
+        .compute(&t, 100)
+        .unwrap()
+        .profile;
+    assert!(a.max_abs_diff(&b) < 1e-8);
+    assert!(a.max_abs_diff(&c) < 1e-8);
+}
+
+#[test]
+fn constant_series_does_not_nan() {
+    // fully degenerate input: all windows constant
+    let t = vec![5.0f64; 256];
+    let mp = scrimp::matrix_profile(&t, MpConfig::new(16)).unwrap();
+    assert!(mp.p.iter().all(|d| d.is_finite()));
+    // all distances are sqrt(2m) by the degeneracy convention
+    let expect = (2.0 * 16.0f64).sqrt();
+    assert!(mp.p.iter().all(|&d| (d - expect).abs() < 1e-9));
+}

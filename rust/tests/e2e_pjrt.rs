@@ -1,0 +1,205 @@
+//! End-to-end PJRT integration: the rust coordinator executing the AOT
+//! Pallas kernels must agree with the native engines bit-tightly.
+//!
+//! These tests need `make artifacts`; when the artifact directory is
+//! missing they SKIP (print + pass) so `cargo test` works on a fresh
+//! clone, while `make test` (which builds artifacts first) runs them.
+
+use std::path::PathBuf;
+
+use natsa::coordinator::PjrtEngine;
+use natsa::mp::{scrimp, MpConfig};
+use natsa::natsa::{NatsaConfig, Order};
+use natsa::runtime::Runtime;
+use natsa::timeseries::generator::{generate, Pattern};
+use natsa::timeseries::sliding_stats;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = natsa::runtime::default_artifact_dir();
+    let dir = if dir.is_relative() {
+        // tests run from the crate root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(dir)
+    } else {
+        dir
+    };
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+#[test]
+fn runtime_loads_every_artifact() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    // compile everything once; any HLO-text or PJRT regression fails here
+    let names: Vec<String> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(names.len() >= 16, "expected the full artifact grid");
+    for name in names {
+        rt.executable(&name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+    }
+}
+
+#[test]
+fn dot_init_matches_native() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let t = generate::<f64>(Pattern::RandomWalk, 600, 3);
+    for m in [32usize, 64, 128, 256] {
+        let q = rt.dot_init(m, &t[..m], &t[m..2 * m]).unwrap();
+        let want: f64 = t[..m].iter().zip(&t[m..2 * m]).map(|(a, b)| a * b).sum();
+        assert!((q - want).abs() < 1e-9, "m={m}: {q} vs {want}");
+    }
+}
+
+#[test]
+fn diag_chunk_matches_native_distances() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let m = 64;
+    let v = rt
+        .manifest()
+        .find(natsa::runtime::ArtifactKind::DiagChunk, "f64", m)
+        .unwrap()
+        .v;
+    let n = 2 * v + 3 * m;
+    let t = generate::<f64>(Pattern::RandomWalk, n, 4);
+    let st = sliding_stats(&t, m);
+    let d = m; // diagonal offset
+    let i0 = 1usize;
+    let j0 = i0 + d;
+    let q0: f64 = t[i0..i0 + m].iter().zip(&t[j0..j0 + m]).map(|(a, b)| a * b).sum();
+    let out = rt
+        .diag_chunk(
+            m,
+            Some(v),
+            &t[i0 - 1..i0 - 1 + v + m],
+            &t[j0 - 1..j0 - 1 + v + m],
+            &st.mu[i0..i0 + v],
+            &st.sig[i0..i0 + v],
+            &st.mu[j0..j0 + v],
+            &st.sig[j0..j0 + v],
+            q0,
+            v,
+        )
+        .unwrap();
+    // reference distances straight from the definition
+    for k in (0..v).step_by(37) {
+        let (i, j) = (i0 + k, j0 + k);
+        let q: f64 = t[i..i + m].iter().zip(&t[j..j + m]).map(|(a, b)| a * b).sum();
+        let denom = m as f64 * st.sig[i] * st.sig[j];
+        let corr = (q - m as f64 * st.mu[i] * st.mu[j]) / denom;
+        let want = (2.0 * m as f64 * (1.0 - corr)).max(0.0).sqrt();
+        assert!(
+            (out.dists[k] - want).abs() < 1e-8,
+            "k={k}: {} vs {want}",
+            out.dists[k]
+        );
+    }
+    // PUU pre-reduction is the argmin of the chunk
+    let (min_k, min_v) = out
+        .dists
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    assert_eq!(out.min_idx as usize, min_k);
+    assert!((out.min_val - min_v).abs() < 1e-12);
+}
+
+#[test]
+fn coordinator_agrees_with_scrimp_dp_and_sp() {
+    let Some(dir) = artifact_dir() else { return };
+    let n = 1500;
+    let m = 32;
+    let t64 = generate::<f64>(Pattern::PlantedMotif, n, 5);
+
+    let engine = PjrtEngine::<f64>::new(NatsaConfig::default(), dir.clone()).with_workers(2);
+    let out = engine.compute(&t64, m).unwrap();
+    let want = scrimp::matrix_profile(&t64, MpConfig::new(m)).unwrap();
+    // planted exact motif => cancellation residue ~2^-23 near d=0
+    assert!(
+        out.profile.max_abs_diff(&want) < 1e-6,
+        "DP diff {}",
+        out.profile.max_abs_diff(&want)
+    );
+    assert_eq!(out.work.cells, want_cells(n, m));
+
+    let t32: Vec<f32> = t64.iter().map(|&x| x as f32).collect();
+    let engine = PjrtEngine::<f32>::new(NatsaConfig::default(), dir).with_workers(2);
+    let out32 = engine.compute(&t32, m).unwrap();
+    let want32 = scrimp::matrix_profile(&t32, MpConfig::new(m)).unwrap();
+    // f32 Eq. 2 chains accumulate ~1e-3 drift over 1.4K-cell diagonals,
+    // with kernel-vs-native association differences on top; both stay
+    // within the same few-ulp band of the f64 truth.
+    assert!(
+        out32.profile.max_abs_diff(&want32) < 0.02,
+        "SP diff {}",
+        out32.profile.max_abs_diff(&want32)
+    );
+    let truth = scrimp::matrix_profile(&t64, MpConfig::new(m)).unwrap();
+    for k in 0..truth.len() {
+        let diff = (out32.profile.p[k] as f64 - truth.p[k]).abs();
+        assert!(diff < 0.05, "SP[{k}] far from f64 truth: {diff}");
+    }
+}
+
+fn want_cells(n: usize, m: usize) -> u64 {
+    natsa::mp::total_cells(n - m + 1, m / 4)
+}
+
+#[test]
+fn coordinator_random_order_same_result() {
+    let Some(dir) = artifact_dir() else { return };
+    let t = generate::<f64>(Pattern::RandomWalk, 1200, 6);
+    let m = 64;
+    let seq = PjrtEngine::<f64>::new(NatsaConfig::default(), dir.clone())
+        .with_workers(2)
+        .compute(&t, m)
+        .unwrap();
+    let rnd = PjrtEngine::<f64>::new(
+        NatsaConfig::default().with_order(Order::Random(9)),
+        dir,
+    )
+    .with_workers(2)
+    .compute(&t, m)
+    .unwrap();
+    assert!(seq.profile.max_abs_diff(&rnd.profile) < 1e-12);
+}
+
+#[test]
+fn unsupported_window_lists_available() {
+    let Some(dir) = artifact_dir() else { return };
+    let t = generate::<f64>(Pattern::RandomWalk, 1000, 7);
+    let engine = PjrtEngine::<f64>::new(NatsaConfig::default(), dir);
+    let err = engine.compute(&t, 100).unwrap_err().to_string();
+    assert!(err.contains("available m"), "{err}");
+}
+
+#[test]
+fn mp_tile_artifact_agrees_with_scrimp() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let n = 1024;
+    let m = 64; // the lowered tile parameters
+    let t = generate::<f64>(Pattern::SineWithAnomaly, n, 8);
+    let (p, i) = rt.mp_tile(&t).unwrap();
+    let want = scrimp::matrix_profile(&t, MpConfig::new(m)).unwrap();
+    let nw = n - m + 1;
+    for k in 0..nw {
+        let diff = (p[k] - want.p[k]).abs();
+        assert!(diff < 1e-6, "P[{k}]: {} vs {}", p[k], want.p[k]);
+    }
+    // indices valid and outside the exclusion zone
+    for (k, &j) in i[..nw].iter().enumerate() {
+        assert!(j >= 0 && (j as usize) < nw);
+        assert!((k as i64 - j as i64).unsigned_abs() as usize >= m / 4);
+    }
+}

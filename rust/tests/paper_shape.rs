@@ -1,0 +1,190 @@
+//! Locks the *shape* of every headline claim in the paper's evaluation
+//! (DESIGN.md §3).  These are the regression guards for the calibrated
+//! models: if a constant drifts, the claim that breaks names the figure.
+
+use natsa::sim::accel::{design_space, NatsaDesign};
+use natsa::sim::dram::DramConfig;
+use natsa::sim::platform::{GpPlatform, KnlModel, RefPlatform};
+use natsa::sim::{Bound, Precision, Workload};
+
+fn table1() -> Vec<Workload> {
+    Workload::table1().into_iter().map(|(_, w)| w).collect()
+}
+
+#[test]
+fn claim_speedup_up_to_14x_avg_10x() {
+    // "NATSA improves performance by up to 14.2x (9.9x on average) over
+    // the state-of-the-art multi-core implementation"
+    let base = GpPlatform::ddr4_ooo();
+    let natsa = NatsaDesign::hbm(Precision::Dp);
+    let speedups: Vec<f64> = table1()
+        .iter()
+        .map(|w| base.estimate(w, Precision::Dp).time_s / natsa.estimate(w).time_s)
+        .collect();
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    let max = speedups.iter().cloned().fold(0.0, f64::max);
+    assert!((7.0..15.0).contains(&avg), "avg speedup {avg} (paper 9.9)");
+    assert!((10.0..18.0).contains(&max), "max speedup {max} (paper 14.2)");
+}
+
+#[test]
+fn claim_speedup_grows_with_n() {
+    // Fig. 7: "NATSA's speedup increases as the time series length
+    // becomes larger"
+    let base = GpPlatform::ddr4_ooo();
+    let natsa = NatsaDesign::hbm(Precision::Dp);
+    let mut last = 0.0;
+    for w in table1() {
+        let s = base.estimate(&w, Precision::Dp).time_s / natsa.estimate(&w).time_s;
+        assert!(s > last, "speedup not monotone at n={}", w.n);
+        last = s;
+    }
+}
+
+#[test]
+fn claim_6x_over_hbm_inorder() {
+    // "NATSA also improves performance by 6.3x ... over a general-purpose
+    // NDP platform with 64 in-order cores" (all sizes)
+    let ndp = GpPlatform::hbm_inorder();
+    let natsa = NatsaDesign::hbm(Precision::Dp);
+    for w in table1() {
+        let s = ndp.estimate(&w, Precision::Dp).time_s / natsa.estimate(&w).time_s;
+        assert!((4.0..9.0).contains(&s), "NDP speedup {s} at n={} (paper 6.3x)", w.n);
+    }
+}
+
+#[test]
+fn claim_energy_ratios() {
+    // "reduces energy by up to 27.2x (19.4x on average)" vs baseline and
+    // "10.2x less energy" than HBM-inOrder (rand_512K is the pivot).
+    let w = Workload::new(524_288, 256);
+    let natsa = NatsaDesign::hbm(Precision::Dp).estimate(&w);
+    let base = GpPlatform::ddr4_ooo().estimate(&w, Precision::Dp);
+    let ndp = GpPlatform::hbm_inorder().estimate(&w, Precision::Dp);
+    let r_base = base.energy_j / natsa.energy_j;
+    let r_ndp = ndp.energy_j / natsa.energy_j;
+    assert!((15.0..40.0).contains(&r_base), "baseline energy ratio {r_base} (paper 27.2)");
+    assert!((6.0..16.0).contains(&r_ndp), "NDP energy ratio {r_ndp} (paper 10.2)");
+}
+
+#[test]
+fn claim_gpu_knl_energy_ordering() {
+    // "NATSA consumes 1.7x, 4.1x, and 11.0x less energy than K40c,
+    // GTX 1050, and KNL" — enforce the ordering and rough magnitudes.
+    let w = Workload::new(524_288, 256);
+    let natsa_j = NatsaDesign::hbm(Precision::Dp).estimate(&w).energy_j;
+    let refs = RefPlatform::all();
+    let e = |n: &str| {
+        refs.iter()
+            .find(|r| r.name == n)
+            .unwrap()
+            .energy_512k_dp_j()
+            / natsa_j
+    };
+    let k40 = e("Tesla K40c");
+    let gtx = e("GTX 1050");
+    let knl = e("Xeon Phi KNL");
+    assert!(k40 < gtx && gtx < knl, "ordering {k40} {gtx} {knl}");
+    assert!((1.0..3.5).contains(&k40), "K40c ratio {k40} (paper 1.7)");
+    assert!((2.5..7.0).contains(&gtx), "GTX ratio {gtx} (paper 4.1)");
+    assert!((7.0..16.0).contains(&knl), "KNL ratio {knl} (paper 11.0)");
+}
+
+#[test]
+fn claim_natsa_sp_up_to_1_75x_over_dp() {
+    let mut best: f64 = 0.0;
+    for w in table1() {
+        let dp = NatsaDesign::hbm(Precision::Dp).estimate(&w).time_s;
+        let sp = NatsaDesign::hbm(Precision::Sp).estimate(&w).time_s;
+        best = best.max(dp / sp);
+    }
+    assert!((1.4..2.1).contains(&best), "SP/DP {best} (paper up to 1.75)");
+}
+
+#[test]
+fn claim_hbm_ooo_only_7pct() {
+    // Fig. 11: HBM-OoO improves over the baseline by only ~7%.
+    for w in table1() {
+        let a = GpPlatform::ddr4_ooo().estimate(&w, Precision::Dp).time_s;
+        let b = GpPlatform::hbm_ooo().estimate(&w, Precision::Dp).time_s;
+        let gain = a / b;
+        assert!((0.99..1.25).contains(&gain), "HBM-OoO gain {gain} at n={}", w.n);
+    }
+}
+
+#[test]
+fn claim_hbm_inorder_up_to_2_25x() {
+    let mut best: f64 = 0.0;
+    for w in table1() {
+        let a = GpPlatform::ddr4_ooo().estimate(&w, Precision::Dp).time_s;
+        let b = GpPlatform::hbm_inorder().estimate(&w, Precision::Dp).time_s;
+        best = best.max(a / b);
+    }
+    assert!((1.7..3.0).contains(&best), "HBM-inOrder best {best} (paper 2.25)");
+}
+
+#[test]
+fn claim_dse_balance() {
+    // Section 6.3: 48 PUs balanced; 32 compute-bound; 64 memory-bound;
+    // DDR4 saturated by 8 PUs (footnote 2).
+    let w = Workload::new(524_288, 256);
+    let pts = design_space(Precision::Dp, DramConfig::hbm2(), &[32, 48, 64], &w);
+    assert_eq!(pts[0].bound, Bound::Compute);
+    assert_eq!(pts[2].bound, Bound::Memory);
+    let ddr = design_space(Precision::Dp, DramConfig::ddr4_2400_dual(), &[8, 16], &w);
+    assert!(ddr[0].time_s / ddr[1].time_s < 1.1, "8 PUs should already saturate DDR4");
+}
+
+#[test]
+fn claim_knl_saturation_knees() {
+    assert!((24..=48).contains(&KnlModel::ddr4().saturation_threads()));
+    assert!((96..=160).contains(&KnlModel::mcdram().saturation_threads()));
+}
+
+#[test]
+fn claim_natsa_lowest_power_and_area() {
+    let w = Workload::new(524_288, 256);
+    let natsa = NatsaDesign::hbm(Precision::Dp);
+    let p_natsa = natsa.estimate(&w).power_w;
+    for gp in GpPlatform::all_simulated() {
+        let p = gp.estimate(&w, Precision::Dp).power_w;
+        assert!(p > p_natsa, "{} power {p} below NATSA {p_natsa}", gp.name);
+    }
+    for r in RefPlatform::all() {
+        assert!(r.dyn_power_w > p_natsa, "{} power below NATSA", r.name);
+        assert!(r.area_mm2 > natsa.area_mm2(), "{} area below NATSA", r.name);
+    }
+}
+
+#[test]
+fn table2_all_anchor_rows_within_30pct() {
+    // Every Table 2 cell must be within +-30% of the paper's value.
+    let rows: &[(&str, [f64; 5])] = &[
+        ("DDR4-OoO-DP", [14.72, 77.55, 414.55, 2089.05, 9810.30]),
+        ("DDR4-OoO-SP", [6.46, 44.47, 207.85, 1106.36, 5206.75]),
+        ("HBM-inOrder-DP", [14.95, 64.20, 262.33, 1071.03, 4347.38]),
+        ("HBM-inOrder-SP", [8.16, 35.68, 130.23, 625.27, 2466.69]),
+        ("NATSA-DP", [2.47, 10.37, 42.45, 171.72, 690.65]),
+        ("NATSA-SP", [1.41, 5.91, 24.19, 97.84, 393.45]),
+    ];
+    for (cfg, paper) in rows {
+        for (k, w) in table1().iter().enumerate() {
+            let model = match *cfg {
+                "DDR4-OoO-DP" => GpPlatform::ddr4_ooo().estimate(w, Precision::Dp).time_s,
+                "DDR4-OoO-SP" => GpPlatform::ddr4_ooo().estimate(w, Precision::Sp).time_s,
+                "HBM-inOrder-DP" => GpPlatform::hbm_inorder().estimate(w, Precision::Dp).time_s,
+                "HBM-inOrder-SP" => GpPlatform::hbm_inorder().estimate(w, Precision::Sp).time_s,
+                "NATSA-DP" => NatsaDesign::hbm(Precision::Dp).estimate(w).time_s,
+                "NATSA-SP" => NatsaDesign::hbm(Precision::Sp).estimate(w).time_s,
+                _ => unreachable!(),
+            };
+            let ratio = model / paper[k];
+            assert!(
+                (0.65..1.45).contains(&ratio),
+                "{cfg} at n={}: model {model:.1}s vs paper {:.1}s (x{ratio:.2})",
+                w.n,
+                paper[k]
+            );
+        }
+    }
+}
