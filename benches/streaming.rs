@@ -1,0 +1,87 @@
+//! Streaming throughput: incremental STAMPI append vs recomputing the
+//! batch profile from scratch on every new sample — the acceptance
+//! benchmark for the streaming subsystem (>= 10x at n = 16384, m = 64;
+//! the asymptotic gap is O(n) vs O(n²) per sample, so the measured ratio
+//! lands orders of magnitude beyond the bar).
+
+use std::time::Instant;
+
+use natsa::benchmark::{black_box, fmt_time, time_budget, Table};
+use natsa::mp::stampi::{Stampi, StampiConfig};
+use natsa::mp::{scrimp, MpConfig};
+use natsa::timeseries::generator::{generate, Pattern};
+
+fn main() {
+    let n = 16_384;
+    let m = 64;
+    let extra = 1024; // steady-state appends measured beyond n
+    let t = generate::<f64>(Pattern::RandomWalk, n + extra, 9);
+
+    // (a) batch recompute at n: what a per-sample recompute would pay.
+    let cfg = MpConfig::new(m);
+    let batch = time_budget(3.0, || {
+        black_box(scrimp::matrix_profile(&t[..n], cfg).unwrap());
+    });
+
+    // (b) build the stream to n (amortized per-sample build cost)...
+    let mut eng = Stampi::<f64>::new(StampiConfig::new(m)).unwrap();
+    let t0 = Instant::now();
+    for &x in &t[..n] {
+        eng.append(x);
+    }
+    let build_s = t0.elapsed().as_secs_f64();
+
+    // ...then measure steady-state appends at length ~n.
+    let t0 = Instant::now();
+    for &x in &t[n..n + extra] {
+        black_box(eng.append(x));
+    }
+    let append_s = t0.elapsed().as_secs_f64() / extra as f64;
+
+    // (c) bounded history: constant-size state, constant append cost.
+    let history = 4096;
+    let mut bounded = Stampi::<f64>::new(
+        StampiConfig::new(m).with_max_history(history),
+    )
+    .unwrap();
+    for &x in &t[..n] {
+        bounded.append(x);
+    }
+    let t0 = Instant::now();
+    for &x in &t[n..n + extra] {
+        black_box(bounded.append(x));
+    }
+    let bounded_append_s = t0.elapsed().as_secs_f64() / extra as f64;
+
+    let mut table = Table::new(&["path", "per new sample", "samples/s"]);
+    table.row(&[
+        "batch recompute (scrimp)".into(),
+        fmt_time(batch.median),
+        format!("{:.2}", 1.0 / batch.median),
+    ]);
+    table.row(&[
+        "STAMPI append (unbounded)".into(),
+        fmt_time(append_s),
+        format!("{:.0}", 1.0 / append_s),
+    ]);
+    table.row(&[
+        format!("STAMPI append (history {history})"),
+        fmt_time(bounded_append_s),
+        format!("{:.0}", 1.0 / bounded_append_s),
+    ]);
+    table.print(&format!("streaming vs recompute-from-scratch (n={n}, m={m})"));
+
+    println!(
+        "\nstream build 0..{n}: {} total ({:.0} samples/s amortized)",
+        fmt_time(build_s),
+        n as f64 / build_s
+    );
+    let speedup = batch.median / append_s;
+    println!(
+        "incremental append speedup over full recompute: {speedup:.0}x (acceptance bar: 10x)"
+    );
+    assert!(
+        speedup >= 10.0,
+        "streaming append must beat per-sample batch recompute by >= 10x, got {speedup:.1}x"
+    );
+}

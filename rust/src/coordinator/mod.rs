@@ -16,7 +16,10 @@
 //!
 //! [`service`] wraps the engine in a multi-client job queue (submit /
 //! await, backpressure, metrics) — the "thin driver" face of the paper's
-//! accelerator for embedding in a larger system.
+//! accelerator for embedding in a larger system.  Alongside batch jobs it
+//! hosts long-lived streaming sessions (`submit_stream` / `append_stream`
+//! / `snapshot_stream`) over the exact incremental engine in
+//! [`crate::mp::stampi`].
 
 pub mod metrics;
 pub mod service;

@@ -7,6 +7,18 @@
 //! the *native* functional engine by default (fast path); the PJRT engine
 //! is exercised by the end-to-end example and integration tests.
 //!
+//! Two job kinds share the queue:
+//!
+//! * **batch** — [`AnalysisService::submit`]: one series, one profile.
+//! * **stream** — [`AnalysisService::submit_stream`] opens a long-lived
+//!   [`StreamSession`]; [`AnalysisService::append_stream`] enqueues sample
+//!   batches against it (same bounded queue, same backpressure) and each
+//!   append's [`JobResult`] carries the post-append profile snapshot;
+//!   [`AnalysisService::snapshot_stream`] reads the live profile without
+//!   queueing.  Appends to one stream are applied in submission order
+//!   even across workers (per-stream sequence numbers), so a stream's
+//!   profile is always that of its samples in arrival order.
+//!
 //! Design notes:
 //! * `std::sync::mpsc` + worker threads (tokio is not in the offline
 //!   vendor set; the queue semantics are identical for this shape),
@@ -16,24 +28,33 @@
 //!   the service's type parameter.
 
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::mp::MatrixProfile;
-use crate::natsa::{NatsaConfig, NatsaEngine};
+use crate::natsa::{NatsaConfig, NatsaEngine, StreamSession};
 use crate::Real;
 
 /// A submitted analysis job.
 struct Job<T> {
     id: u64,
-    series: Arc<Vec<T>>,
-    m: usize,
+    payload: JobPayload<T>,
     submitted: std::time::Instant,
 }
 
-/// Completed job result.
+/// What a job asks for.
+enum JobPayload<T> {
+    /// One-shot batch profile.
+    Batch { series: Arc<Vec<T>>, m: usize },
+    /// Append samples to an open stream (applied in `seq` order).
+    StreamAppend { stream: u64, samples: Vec<T>, seq: u64 },
+}
+
+/// Completed job result.  For stream appends, `profile` is the snapshot
+/// right after the batch was applied (positions relative to the stream's
+/// oldest retained window — see [`crate::mp::stampi::Stampi::profile`]).
 #[derive(Clone, Debug)]
 pub struct JobResult<T> {
     pub id: u64,
@@ -49,6 +70,10 @@ pub enum SubmitError {
     Backpressure,
     /// Service is shutting down.
     Closed,
+    /// The stream id is unknown or was closed.
+    UnknownStream,
+    /// The stream configuration was rejected (window/history bounds).
+    Invalid(String),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -56,14 +81,35 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Backpressure => write!(f, "queue full (backpressure)"),
             SubmitError::Closed => write!(f, "service closed"),
+            SubmitError::UnknownStream => write!(f, "unknown or closed stream"),
+            SubmitError::Invalid(why) => write!(f, "invalid stream config: {why}"),
         }
     }
+}
+
+/// One open stream: the session plus the apply-order bookkeeping.
+struct StreamState<T> {
+    session: StreamSession<T>,
+    /// Next sequence number to apply (appends wait their turn on `cv`).
+    next_seq: u64,
+    /// Set by `close_stream`: wakes and fails any waiting appends.
+    closed: bool,
+}
+
+struct StreamEntry<T> {
+    state: Mutex<StreamState<T>>,
+    cv: Condvar,
+    /// Next sequence number to hand out.  Held across the (assign seq,
+    /// enqueue) pair so queue order == seq order — the structural
+    /// invariant the workers' turn-waiting relies on.
+    submit_seq: Mutex<u64>,
 }
 
 struct Shared<T> {
     results: Mutex<HashMap<u64, JobResult<T>>>,
     cv: Condvar,
     metrics: ServiceMetrics,
+    streams: Mutex<HashMap<u64, Arc<StreamEntry<T>>>>,
 }
 
 /// Multi-worker analysis service over the functional NATSA engine.
@@ -71,7 +117,9 @@ pub struct AnalysisService<T: Real> {
     tx: Option<SyncSender<Job<T>>>,
     shared: Arc<Shared<T>>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: AtomicU64,
+    next_stream_id: AtomicU64,
+    config: NatsaConfig,
 }
 
 impl<T: Real> AnalysisService<T> {
@@ -83,6 +131,7 @@ impl<T: Real> AnalysisService<T> {
             results: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
             metrics: ServiceMetrics::default(),
+            streams: Mutex::new(HashMap::new()),
         });
         let mut handles = Vec::new();
         for _ in 0..workers.max(1) {
@@ -96,19 +145,103 @@ impl<T: Real> AnalysisService<T> {
             tx: Some(tx),
             shared,
             workers: handles,
-            next_id: std::sync::atomic::AtomicU64::new(1),
+            next_id: AtomicU64::new(1),
+            next_stream_id: AtomicU64::new(1),
+            config,
         }
     }
 
-    /// Submit a job; fails fast under backpressure.
+    /// Submit a batch job; fails fast under backpressure.
     pub fn submit(&self, series: Arc<Vec<T>>, m: usize) -> Result<u64, SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let job = Job {
+        self.enqueue(Job {
             id,
-            series,
-            m,
+            payload: JobPayload::Batch { series, m },
             submitted: std::time::Instant::now(),
-        };
+        })
+    }
+
+    /// Open a streaming session with window `m` (and an optional retained
+    /// history bound in samples).  Returns the stream id to append to.
+    pub fn submit_stream(&self, m: usize, max_history: Option<usize>) -> Result<u64, SubmitError> {
+        let session = NatsaEngine::<T>::new(self.config)
+            .open_stream_bounded(m, max_history)
+            .map_err(|e| SubmitError::Invalid(e.to_string()))?;
+        let id = self.next_stream_id.fetch_add(1, Ordering::Relaxed);
+        let entry = Arc::new(StreamEntry {
+            state: Mutex::new(StreamState { session, next_seq: 0, closed: false }),
+            cv: Condvar::new(),
+            submit_seq: Mutex::new(0),
+        });
+        self.shared.streams.lock().unwrap().insert(id, entry);
+        Ok(id)
+    }
+
+    /// Enqueue a batch of samples against stream `stream`.  Returns a job
+    /// id to [`Self::wait`] on; its result's profile is the post-append
+    /// snapshot.  Appends from one client that are submitted in order are
+    /// applied in order (per-stream sequencing).
+    ///
+    /// Two usage caveats, both consequences of appends being inherently
+    /// sequential per stream while sharing the worker pool:
+    /// * a client that *pipelines* many appends to one stream can park
+    ///   several workers in turn-waiting (head-of-line blocking for
+    ///   unrelated jobs) — await each append, or size `workers` for the
+    ///   number of concurrently active streams (the planned sharded
+    ///   multi-series service lifts this properly);
+    /// * like batch jobs, every append's [`JobResult`] (which clones the
+    ///   profile snapshot) is retained until [`Self::wait`]/[`Self::poll`]
+    ///   consumes it — fire-and-forget callers should poll each id and
+    ///   read state via [`Self::snapshot_stream`] instead.
+    pub fn append_stream(&self, stream: u64, samples: &[T]) -> Result<u64, SubmitError> {
+        let entry = self
+            .shared
+            .streams
+            .lock()
+            .unwrap()
+            .get(&stream)
+            .cloned()
+            .ok_or(SubmitError::UnknownStream)?;
+        // Hold the stream's seq lock across (assign seq, enqueue) so
+        // queue order equals sequence order — the workers rely on it.
+        let mut seq_guard = entry.submit_seq.lock().unwrap();
+        let seq = *seq_guard;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let result = self.enqueue(Job {
+            id,
+            payload: JobPayload::StreamAppend { stream, samples: samples.to_vec(), seq },
+            submitted: std::time::Instant::now(),
+        });
+        if result.is_ok() {
+            *seq_guard += 1;
+        }
+        result
+    }
+
+    /// Read a stream's live profile without going through the queue.
+    /// `None` if the stream is unknown or closed.
+    pub fn snapshot_stream(&self, stream: u64) -> Option<MatrixProfile<T>> {
+        let entry = self.shared.streams.lock().unwrap().get(&stream).cloned()?;
+        let state = entry.state.lock().unwrap();
+        Some(state.session.profile())
+    }
+
+    /// Close a stream: frees its state; queued/future appends against it
+    /// fail with an error result.  Returns whether the id was open.
+    pub fn close_stream(&self, stream: u64) -> bool {
+        let entry = self.shared.streams.lock().unwrap().remove(&stream);
+        match entry {
+            Some(e) => {
+                e.state.lock().unwrap().closed = true;
+                e.cv.notify_all();
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn enqueue(&self, job: Job<T>) -> Result<u64, SubmitError> {
+        let id = job.id;
         match self.tx.as_ref().ok_or(SubmitError::Closed)?.try_send(job) {
             Ok(()) => {
                 self.shared
@@ -168,15 +301,26 @@ fn worker_loop<T: Real>(
             Ok(j) => j,
             Err(_) => return, // channel closed
         };
-        let queue_wait = job.submitted.elapsed().as_secs_f64();
+        let mut queue_wait = job.submitted.elapsed().as_secs_f64();
         let start = std::time::Instant::now();
-        let outcome = engine.compute(&job.series, job.m);
-        let exec = start.elapsed().as_secs_f64();
-
-        let (profile, failed) = match outcome {
-            Ok(o) => (Ok(o.profile), false),
-            Err(e) => (Err(e.to_string()), true),
+        let mut turn_wait = 0.0f64;
+        let profile: Result<MatrixProfile<T>, String> = match job.payload {
+            JobPayload::Batch { series, m } => engine
+                .compute(&series, m)
+                .map(|o| o.profile)
+                .map_err(|e| e.to_string()),
+            JobPayload::StreamAppend { stream, samples, seq } => {
+                let (result, waited) = run_stream_append(&shared, stream, &samples, seq);
+                // time parked waiting for this append's turn is queueing,
+                // not execution — keep the metrics split honest
+                turn_wait = waited;
+                result
+            }
         };
+        queue_wait += turn_wait;
+        let exec = (start.elapsed().as_secs_f64() - turn_wait).max(0.0);
+
+        let failed = profile.is_err();
         let m = &shared.metrics;
         if failed {
             m.jobs_failed.fetch_add(1, Ordering::Relaxed);
@@ -201,9 +345,41 @@ fn worker_loop<T: Real>(
     }
 }
 
+/// Apply one append batch in sequence order and snapshot the profile.
+/// Returns the result plus the seconds spent waiting for this append's
+/// turn (reported as queueing, not execution).
+fn run_stream_append<T: Real>(
+    shared: &Shared<T>,
+    stream: u64,
+    samples: &[T],
+    seq: u64,
+) -> (Result<MatrixProfile<T>, String>, f64) {
+    let entry = match shared.streams.lock().unwrap().get(&stream).cloned() {
+        Some(e) => e,
+        None => return (Err(format!("unknown or closed stream {stream}")), 0.0),
+    };
+    let wait_start = std::time::Instant::now();
+    let mut state = entry.state.lock().unwrap();
+    // Appends dequeued out of order (multiple workers) wait their turn;
+    // `closed` breaks the wait so close_stream never strands a worker.
+    while !state.closed && state.next_seq != seq {
+        state = entry.cv.wait(state).unwrap();
+    }
+    let turn_wait = wait_start.elapsed().as_secs_f64();
+    if state.closed {
+        return (Err(format!("stream {stream} closed")), turn_wait);
+    }
+    state.session.extend(samples);
+    let snapshot = state.session.profile();
+    state.next_seq += 1;
+    entry.cv.notify_all();
+    (Ok(snapshot), turn_wait)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mp::{stomp, MpConfig};
     use crate::prop::Rng;
     use crate::timeseries::generator::{generate, Pattern};
 
@@ -287,5 +463,113 @@ mod tests {
         s.shutdown();
         // after shutdown the channel is gone; metrics survive
         assert_eq!(shared.metrics.in_flight(), 0);
+    }
+
+    #[test]
+    fn stream_appends_match_batch_profile() {
+        let s = svc();
+        let series = generate::<f64>(Pattern::EcgLike, 2048, 8);
+        let m = 32;
+        let stream = s.submit_stream(m, None).unwrap();
+        // feed in uneven batches, awaiting each append (ordered by client)
+        let mut last = None;
+        for chunk in series.chunks(300) {
+            let id = s.append_stream(stream, chunk).unwrap();
+            last = Some(s.wait(id));
+        }
+        let streamed = last.unwrap().profile.unwrap();
+        let want = stomp::matrix_profile(&series, MpConfig::new(m)).unwrap();
+        assert_eq!(streamed.len(), want.len());
+        assert!(
+            streamed.max_abs_diff(&want) < 1e-6,
+            "{}",
+            streamed.max_abs_diff(&want)
+        );
+        // the live snapshot agrees with the last append's result
+        let snap = s.snapshot_stream(stream).unwrap();
+        assert!(snap.max_abs_diff(&streamed) < 1e-15);
+        assert!(s.close_stream(stream));
+        s.shutdown();
+    }
+
+    #[test]
+    fn stream_appends_are_applied_in_order_across_workers() {
+        // 3 workers racing on one stream: per-stream sequencing must keep
+        // the profile equal to the in-order batch run even though jobs are
+        // all enqueued before any completes.
+        let s = AnalysisService::<f64>::start(NatsaConfig::default().with_threads(1), 3, 64);
+        let series = generate::<f64>(Pattern::RandomWalk, 3000, 9);
+        let m = 16;
+        let stream = s.submit_stream(m, None).unwrap();
+        let mut ids = Vec::new();
+        for chunk in series.chunks(128) {
+            ids.push(s.append_stream(stream, chunk).unwrap());
+        }
+        for id in ids {
+            assert!(s.wait(id).profile.is_ok());
+        }
+        let got = s.snapshot_stream(stream).unwrap();
+        let want = stomp::matrix_profile(&series, MpConfig::new(m)).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-7, "{}", got.max_abs_diff(&want));
+        s.close_stream(stream);
+        s.shutdown();
+    }
+
+    #[test]
+    fn append_to_unknown_stream_is_rejected() {
+        let s = svc();
+        assert_eq!(
+            s.append_stream(999, &[1.0, 2.0]),
+            Err(SubmitError::UnknownStream)
+        );
+        s.shutdown();
+    }
+
+    #[test]
+    fn closed_stream_fails_pending_and_future_appends() {
+        let s = svc();
+        let stream = s.submit_stream(16, None).unwrap();
+        let id = s.append_stream(stream, &generate::<f64>(Pattern::RandomWalk, 64, 1)).unwrap();
+        let _ = s.wait(id);
+        assert!(s.close_stream(stream));
+        assert!(!s.close_stream(stream)); // idempotent: already gone
+        assert_eq!(
+            s.append_stream(stream, &[1.0]),
+            Err(SubmitError::UnknownStream)
+        );
+        assert!(s.snapshot_stream(stream).is_none());
+        s.shutdown();
+    }
+
+    #[test]
+    fn stream_with_bounded_history_reports_suffix_profile() {
+        let s = svc();
+        let m = 16;
+        let stream = s.submit_stream(m, Some(256)).unwrap();
+        let series = generate::<f64>(Pattern::RandomWalk, 2000, 10);
+        let id = s.append_stream(stream, &series).unwrap();
+        let snap = s.wait(id).profile.unwrap();
+        assert_eq!(snap.len(), 256 - m + 1);
+        // a bound too small to admit a pair is rejected at open time
+        assert!(matches!(
+            s.submit_stream(16, Some(8)),
+            Err(SubmitError::Invalid(_))
+        ));
+        s.close_stream(stream);
+        s.shutdown();
+    }
+
+    #[test]
+    fn batch_and_stream_jobs_share_metrics() {
+        let s = svc();
+        let stream = s.submit_stream(16, None).unwrap();
+        let a = s.append_stream(stream, &generate::<f64>(Pattern::RandomWalk, 200, 2)).unwrap();
+        let b = s.submit(Arc::new(generate::<f64>(Pattern::RandomWalk, 256, 3)), 16).unwrap();
+        let _ = s.wait(a);
+        let _ = s.wait(b);
+        assert_eq!(s.metrics().jobs_completed.load(Ordering::Relaxed), 2);
+        assert_eq!(s.metrics().in_flight(), 0);
+        s.close_stream(stream);
+        s.shutdown();
     }
 }

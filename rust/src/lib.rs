@@ -33,6 +33,36 @@
 //! println!("strongest anomaly near index {pos}");
 //! ```
 //!
+//! ## Streaming quick start
+//!
+//! The batch API above sees the whole series at once; continuous
+//! monitoring (ECG feeds, sensor streams) instead appends samples
+//! forever.  [`mp::stampi`] maintains the **exact** matrix profile under
+//! `append(sample)` at O(n) per sample (the STAMPI row update), with an
+//! optional bounded history for O(memory)-constrained monitors:
+//!
+//! ```no_run
+//! use natsa::natsa::{NatsaConfig, NatsaEngine};
+//! use natsa::timeseries::generator::{self, Pattern};
+//!
+//! let engine = NatsaEngine::<f64>::new(NatsaConfig::default());
+//! let mut session = engine.open_stream(64).unwrap();
+//! let feed = generator::generate::<f64>(Pattern::EcgLike, 8192, 5);
+//! for x in feed {
+//!     session.append(x); // O(n) per sample, profile always exact
+//!     if let Some((w, d)) = session.profile().discord() {
+//!         if d > 6.0 {
+//!             println!("anomaly developing at window {w} (d={d:.2})");
+//!         }
+//!     }
+//! }
+//! ```
+//!
+//! The same session runs behind the multi-client service
+//! ([`coordinator::service::AnalysisService::submit_stream`] /
+//! `append_stream` / `snapshot_stream`), and
+//! `benches/streaming.rs` measures the incremental-vs-recompute gap.
+//!
 //! ## Planes
 //!
 //! The crate keeps two orthogonal planes (DESIGN.md §4):

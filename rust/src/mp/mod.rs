@@ -14,6 +14,8 @@
 //! * [`parallel`] — multi-threaded SCRIMP with per-thread private profiles,
 //!   the software analogue of NATSA's PU fleet.
 //! * [`prescrimp`] — the approximate SCRIMP++ preprocessing phase.
+//! * [`stampi`] — exact *streaming* profile maintained under `append`
+//!   (STAMPI row updates, O(n) per sample, optional bounded history).
 //! * [`topk`] — ranked motif/discord extraction with trivial-match
 //!   suppression (the downstream-user API).
 
@@ -21,6 +23,7 @@ pub mod brute;
 pub mod parallel;
 pub mod prescrimp;
 pub mod scrimp;
+pub mod stampi;
 pub mod stomp;
 pub mod topk;
 
@@ -305,6 +308,71 @@ mod tests {
         assert_eq!(total_cells(10, 2), (1..=8).sum::<u64>());
         assert_eq!(total_cells(5, 1), 4 + 3 + 2 + 1);
         assert_eq!(total_cells(3, 3), 0);
+    }
+
+    #[test]
+    fn merge_disjoint_updates_keeps_both_sides() {
+        let mut a = MatrixProfile::<f64>::new_inf(6, 4, 1);
+        let mut b = MatrixProfile::<f64>::new_inf(6, 4, 1);
+        a.update(0, 2, 1.0); // touches 0 and 2
+        b.update(3, 5, 0.5); // touches 3 and 5 — disjoint from a
+        a.merge(&b);
+        assert_eq!((a.p[0], a.i[0]), (1.0, 2));
+        assert_eq!((a.p[2], a.i[2]), (1.0, 0));
+        assert_eq!((a.p[3], a.i[3]), (0.5, 5));
+        assert_eq!((a.p[5], a.i[5]), (0.5, 3));
+        assert!(a.p[1].is_infinite() && a.i[1] == -1);
+        assert!(a.p[4].is_infinite() && a.i[4] == -1);
+    }
+
+    #[test]
+    fn merge_overlapping_updates_takes_min_with_its_index() {
+        let mut a = MatrixProfile::<f64>::new_inf(4, 4, 1);
+        let mut b = MatrixProfile::<f64>::new_inf(4, 4, 1);
+        a.update(0, 2, 1.0);
+        a.update(1, 3, 0.2);
+        b.update(0, 3, 0.4); // better on 0, worse on 3
+        b.update(1, 2, 0.9); // worse on 1, better on 2
+        a.merge(&b);
+        assert_eq!((a.p[0], a.i[0]), (0.4, 3)); // b won, index follows
+        assert_eq!((a.p[1], a.i[1]), (0.2, 3)); // a kept
+        assert_eq!((a.p[2], a.i[2]), (0.9, 1)); // b won
+        assert_eq!((a.p[3], a.i[3]), (0.2, 1)); // a kept
+        // merging is idempotent
+        let snapshot = (a.p.clone(), a.i.clone());
+        let b2 = b.clone();
+        a.merge(&b2);
+        assert_eq!((a.p, a.i), snapshot);
+    }
+
+    #[test]
+    fn discord_and_motif_on_all_inf_profile_are_none() {
+        let mp = MatrixProfile::<f64>::new_inf(8, 4, 1);
+        assert_eq!(mp.discord(), None);
+        assert_eq!(mp.motif(), None);
+        // and sqrt finalization must leave the +inf entries untouched
+        let mut mp = mp;
+        mp.sqrt_in_place();
+        assert!(mp.p.iter().all(|d| d.is_infinite()));
+    }
+
+    #[test]
+    fn validate_rejects_series_shorter_than_window() {
+        // n < m: zero windows
+        assert!(MpConfig::new(8).validate(7).is_err());
+        // n == m: one window, but exclusion >= 1 always bans the only pair
+        assert!(MpConfig::new(8).validate(8).is_err());
+    }
+
+    #[test]
+    fn validate_exclusion_boundary_is_exact() {
+        // nw = n - m + 1 must strictly exceed the exclusion radius
+        let cfg = MpConfig::with_excl(8, 5);
+        assert!(cfg.validate(12).is_err()); // nw = 5 == excl
+        assert_eq!(cfg.validate(13).unwrap(), 6); // nw = 6 > excl: minimal legal
+        // minimum window length boundary
+        assert!(MpConfig::new(2).validate(100).is_err());
+        assert!(MpConfig::new(3).validate(100).is_ok());
     }
 
     #[test]

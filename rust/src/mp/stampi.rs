@@ -1,0 +1,560 @@
+//! STAMPI — exact *streaming* matrix profile under `append(sample)`.
+//!
+//! The batch engines ([`crate::mp::scrimp`], [`crate::mp::stomp`], …) walk
+//! the whole distance matrix; the flagship applications the paper motivates
+//! (arrhythmia review, seismic monitoring) instead see samples *arrive*.
+//! Yeh's incremental formulation (STAMPI, arXiv 1811.03064 §STAMPI) keeps
+//! the profile exact under appends at O(n) per sample: when sample `t[n-1]`
+//! arrives it creates exactly one new window `k = n - m`, and the dot
+//! products of `k` against every earlier window follow from the previous
+//! append's row by the same Eq. 2 recurrence STOMP uses row-wise:
+//!
+//! ```text
+//! q_new[j] = q_old[j-1] - t[j-1]·t[k-1] + t[j+m-1]·t[k+m-1]
+//! ```
+//!
+//! with one direct O(m) dot product at the oldest retained window.  One
+//! [`crate::mp::znorm_dist`] evaluation per admissible pair then updates
+//! both `P[j]` (old window gained a new candidate neighbor) and `P[k]`
+//! (new window scans all of history) — the profile after every append is
+//! bit-equal in structure to a batch run over the prefix (the differential
+//! property test in `rust/tests/cross_impl.rs` pins this at < 1e-6 against
+//! the brute-force oracle at every step).
+//!
+//! ## Bounded history
+//!
+//! With [`StampiConfig::with_max_history`] the engine keeps only the last
+//! `H` samples ([`crate::timeseries::stream::RingVec`] eviction) and the
+//! profile entries of the windows still inside them — O(H) memory on an
+//! unbounded stream.  Semantics follow streaming practice: a retained
+//! window's profile value may still *record* a distance to an evicted
+//! neighbor (computed while that neighbor was live; it remains a true
+//! pairwise distance), but new windows can only match retained history, so
+//! every bounded-profile value upper-bounds the unbounded one.  Snapshot
+//! positions are relative to [`Stampi::first_window`] and neighbor indices
+//! are rebased to match (an evicted neighbor reports `-1` — see
+//! [`Stampi::profile`]).
+
+use crate::mp::{znorm_dist, MatrixProfile, WorkStats};
+use crate::timeseries::default_exclusion;
+use crate::timeseries::stream::RingVec;
+use crate::Real;
+
+/// Configuration of a streaming matrix profile session.
+#[derive(Clone, Copy, Debug)]
+pub struct StampiConfig {
+    /// Window (subsequence) length `m`.
+    pub m: usize,
+    /// Exclusion-zone radius; `None` = paper default `m/4`.
+    pub excl: Option<usize>,
+    /// Retain only the last `max_history` samples (`None` = unbounded).
+    pub max_history: Option<usize>,
+}
+
+impl StampiConfig {
+    pub fn new(m: usize) -> Self {
+        StampiConfig { m, excl: None, max_history: None }
+    }
+
+    pub fn with_excl(mut self, excl: usize) -> Self {
+        self.excl = Some(excl);
+        self
+    }
+
+    pub fn with_max_history(mut self, samples: usize) -> Self {
+        self.max_history = Some(samples);
+        self
+    }
+
+    pub fn exclusion(&self) -> usize {
+        self.excl.unwrap_or_else(|| default_exclusion(self.m))
+    }
+
+    /// Validate the configuration (the streaming analogue of
+    /// [`crate::mp::MpConfig::validate`]; there is no length to check up
+    /// front — the profile simply stays empty until `m` samples arrived).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.m >= 3, "window length m={} too small (min 3)", self.m);
+        if let Some(h) = self.max_history {
+            // m + excl samples hold windows 0..=excl, whose pair (0, excl)
+            // is the first admissible one — same bound as the batch
+            // `MpConfig::validate` (nw > excl).
+            let need = self.m + self.exclusion();
+            anyhow::ensure!(
+                h >= need,
+                "max_history={h} too small: m={} with excl={} needs at least {need} \
+                 samples to ever hold one admissible pair",
+                self.m,
+                self.exclusion()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// What one [`Stampi::append`] did, when it completed a window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AppendOutcome {
+    /// Absolute index of the window this sample completed.
+    pub window: usize,
+    /// First column of the incremental row (oldest retained window).
+    pub row_start: usize,
+    /// Admissible cells evaluated in this row (0 while the stream is
+    /// shorter than one exclusion zone).
+    pub row_cells: u64,
+}
+
+/// The streaming engine: an exact matrix profile maintained under appends.
+#[derive(Clone, Debug)]
+pub struct Stampi<T> {
+    m: usize,
+    excl: usize,
+    max_history: Option<usize>,
+    /// Raw samples (absolute sample indexing).
+    t: RingVec<T>,
+    /// Per-window statistics (absolute window indexing; the standard
+    /// deviation itself is folded into `inv = 1/(m*sigma)` — the distance
+    /// path never needs sigma alone).
+    mu: RingVec<T>,
+    inv: RingVec<T>,
+    /// `q[j]` = dot product of window `j` with the latest window.
+    q: RingVec<T>,
+    /// The live profile (true distances, not squared) and neighbor indices.
+    p: RingVec<T>,
+    i: RingVec<i64>,
+    /// Rolling sums over the last `m` samples (f64 like the batch
+    /// [`crate::timeseries::sliding_stats`], so f32 streams with large
+    /// offsets keep their variance digits).
+    s: f64,
+    s2: f64,
+    work: WorkStats,
+}
+
+impl<T: Real> Stampi<T> {
+    pub fn new(cfg: StampiConfig) -> crate::Result<Self> {
+        cfg.validate()?;
+        Ok(Stampi {
+            m: cfg.m,
+            excl: cfg.exclusion(),
+            max_history: cfg.max_history,
+            t: RingVec::new(),
+            mu: RingVec::new(),
+            inv: RingVec::new(),
+            q: RingVec::new(),
+            p: RingVec::new(),
+            i: RingVec::new(),
+            s: 0.0,
+            s2: 0.0,
+            work: WorkStats::default(),
+        })
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn exclusion(&self) -> usize {
+        self.excl
+    }
+
+    /// Total samples appended so far (absolute stream length).
+    pub fn len(&self) -> usize {
+        self.t.next_index()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total windows completed so far (absolute count).
+    pub fn num_windows(&self) -> usize {
+        self.p.next_index()
+    }
+
+    /// Absolute index of the oldest retained window (0 when unbounded).
+    pub fn first_window(&self) -> usize {
+        self.p.first_index()
+    }
+
+    /// Retained window count (== [`Self::num_windows`] when unbounded).
+    pub fn retained_windows(&self) -> usize {
+        self.p.len()
+    }
+
+    /// Aggregate functional work — feeds the timing/energy models in
+    /// [`crate::sim`] exactly like the batch engines' accounting.
+    pub fn work(&self) -> WorkStats {
+        self.work
+    }
+
+    /// Append one sample.  Returns `Some` once the sample completes a
+    /// window (i.e. from the `m`-th sample on).
+    pub fn append(&mut self, x: T) -> Option<AppendOutcome> {
+        let m = self.m;
+        self.t.push(x);
+        let n = self.t.next_index();
+
+        // Rolling statistics over the last m samples.
+        let xf = x.to_f64s();
+        self.s += xf;
+        self.s2 += xf * xf;
+        if n > m {
+            let old = self.t.get(n - 1 - m).to_f64s();
+            self.s -= old;
+            self.s2 -= old * old;
+        }
+        if n < m {
+            return None;
+        }
+
+        // Window k = n - m is now complete; push its statistics.
+        let k = n - m;
+        let mf = m as f64;
+        let mean = self.s / mf;
+        let var = (self.s2 / mf - mean * mean).max(0.0);
+        let sd = var.sqrt();
+        self.mu.push(T::of_f64(mean));
+        self.inv.push(if sd > 0.0 { T::of_f64(1.0 / (mf * sd)) } else { T::zero() });
+        self.p.push(T::infinity());
+        self.i.push(-1);
+
+        if k == 0 {
+            // First window: seed q with its self-dot (feeds the recurrence
+            // of the next append; no admissible pair yet).
+            let w = self.t.slice(0, m);
+            self.q.push(dot(w, w));
+            self.work.first_dots += 1;
+            return Some(AppendOutcome { window: 0, row_start: 0, row_cells: 0 });
+        }
+
+        // Advance q in place: entering this append, q[j] = dot(window j,
+        // window k-1) for retained j; leaving it, q[j] = dot(window j,
+        // window k).  Walking j downward keeps q[j-1] at its old value
+        // until consumed (same trick as STOMP's row walk).
+        let j0 = self.q.first_index();
+        self.q.push(T::zero()); // slot for window k
+        let tk1 = self.t.get(k - 1);
+        let tkm1 = self.t.get(k + m - 1);
+        for j in ((j0 + 1)..=k).rev() {
+            let v = self.q.get(j - 1) - self.t.get(j - 1) * tk1 + self.t.get(j + m - 1) * tkm1;
+            self.q.set(j, v);
+        }
+        let q0 = dot(self.t.slice(j0, j0 + m), self.t.slice(k, k + m));
+        self.q.set(j0, q0);
+        self.work.first_dots += 1;
+        self.work.diagonals += 1;
+
+        // Profile row: window k against every admissible retained window.
+        let mut row_cells = 0u64;
+        if k >= self.excl + j0 {
+            let hi = k - self.excl; // inclusive
+            let mu_k = self.mu.get(k);
+            let inv_k = self.inv.get(k);
+            let mut pk = self.p.get(k);
+            let mut ik = self.i.get(k);
+            for j in j0..=hi {
+                let d = znorm_dist(self.q.get(j), m, self.mu.get(j), self.inv.get(j), mu_k, inv_k);
+                if d < self.p.get(j) {
+                    self.p.set(j, d);
+                    self.i.set(j, k as i64);
+                }
+                if d < pk {
+                    pk = d;
+                    ik = j as i64;
+                }
+            }
+            self.p.set(k, pk);
+            self.i.set(k, ik);
+            row_cells = (hi + 1 - j0) as u64;
+            self.work.cells += row_cells;
+            self.work.updates += 2 * row_cells;
+        }
+
+        // Bounded history: evict samples beyond the bound and the windows
+        // no longer fully inside the retained samples.
+        if let Some(h) = self.max_history {
+            if self.t.len() > h {
+                let sample_base = n - h;
+                self.t.evict_to(sample_base);
+                let window_base = sample_base.min(k);
+                self.mu.evict_to(window_base);
+                self.inv.evict_to(window_base);
+                self.q.evict_to(window_base);
+                self.p.evict_to(window_base);
+                self.i.evict_to(window_base);
+            }
+        }
+
+        Some(AppendOutcome { window: k, row_start: j0, row_cells })
+    }
+
+    /// Append a batch of samples; returns how many windows were completed.
+    pub fn extend(&mut self, xs: &[T]) -> usize {
+        xs.iter().filter(|&&x| self.append(x).is_some()).count()
+    }
+
+    /// Snapshot the live profile.  Position `r` of the result is window
+    /// `first_window() + r`, and neighbor indices are rebased to the same
+    /// positions, so the snapshot is a self-consistent [`MatrixProfile`]
+    /// that every downstream consumer ([`crate::mp::topk`], CSV dumps, …)
+    /// can index directly.  A neighbor that has been *evicted* cannot be
+    /// named in-snapshot: its entry keeps the (true, historical) distance
+    /// but reports index `-1`.  With unbounded history the rebasing is the
+    /// identity and `-1` only ever means "no admissible pair yet".
+    pub fn profile(&self) -> MatrixProfile<T> {
+        let base = self.p.first_index() as i64;
+        let i = self
+            .i
+            .to_vec()
+            .iter()
+            .map(|&j| if j >= base { j - base } else { -1 })
+            .collect();
+        MatrixProfile {
+            p: self.p.to_vec(),
+            i,
+            m: self.m,
+            excl: self.excl,
+        }
+    }
+}
+
+#[inline]
+fn dot<T: Real>(a: &[T], b: &[T]) -> T {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mp::{brute, stomp, total_cells, MpConfig};
+    use crate::prop::{check, Rng};
+    use crate::timeseries::generator::{generate_with_event, Pattern, PlantedEvent};
+
+    fn feed(t: &[f64], cfg: StampiConfig) -> Stampi<f64> {
+        let mut eng = Stampi::new(cfg).unwrap();
+        eng.extend(t);
+        eng
+    }
+
+    #[test]
+    fn matches_batch_on_full_series() {
+        let mut rng = Rng::new(71);
+        let t: Vec<f64> = rng.gauss_vec(500);
+        let eng = feed(&t, StampiConfig::new(16));
+        let want = stomp::matrix_profile(&t, MpConfig::new(16)).unwrap();
+        let got = eng.profile();
+        assert_eq!(got.len(), want.len());
+        assert!(got.max_abs_diff(&want) < 1e-9, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn no_window_before_m_samples() {
+        let mut eng = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+        for s in 0..7 {
+            assert!(eng.append(s as f64).is_none(), "sample {s}");
+        }
+        let out = eng.append(7.0).unwrap();
+        assert_eq!(out.window, 0);
+        assert_eq!(eng.num_windows(), 1);
+        assert!(eng.profile().p[0].is_infinite());
+    }
+
+    #[test]
+    fn work_stats_count_each_pair_once() {
+        let mut rng = Rng::new(72);
+        let t: Vec<f64> = rng.gauss_vec(300);
+        let eng = feed(&t, StampiConfig::new(12));
+        let nw = 300 - 12 + 1;
+        let excl = 3;
+        assert_eq!(eng.work().cells, total_cells(nw, excl));
+        assert_eq!(eng.work().updates, 2 * eng.work().cells);
+        // one O(m) seed dot per completed window
+        assert_eq!(eng.work().first_dots, nw as u64);
+    }
+
+    #[test]
+    fn finds_planted_motif_incrementally() {
+        let (t, ev) = generate_with_event::<f64>(Pattern::PlantedMotif, 2048, 13);
+        let (a, b) = match ev {
+            PlantedEvent::Motif { a, b, .. } => (a, b),
+            _ => unreachable!(),
+        };
+        let eng = feed(&t, StampiConfig::new(32));
+        let mp = eng.profile();
+        assert!(mp.p[a] < 1e-6, "p[a] = {}", mp.p[a]);
+        assert_eq!(mp.i[a], b as i64);
+    }
+
+    #[test]
+    fn constant_stream_does_not_nan() {
+        let eng = feed(&[5.0; 256], StampiConfig::new(16));
+        let mp = eng.profile();
+        let expect = (2.0 * 16.0f64).sqrt(); // Eq. 1 degeneracy convention
+        for &d in &mp.p {
+            assert!(d.is_finite());
+            assert!((d - expect).abs() < 1e-9, "{d}");
+        }
+    }
+
+    #[test]
+    fn custom_exclusion_respected() {
+        let mut rng = Rng::new(73);
+        let t: Vec<f64> = rng.gauss_vec(240);
+        let eng = feed(&t, StampiConfig::new(10).with_excl(7));
+        let mp = eng.profile();
+        for (r, &j) in mp.i.iter().enumerate() {
+            if j >= 0 {
+                assert!((r as i64 - j).unsigned_abs() >= 7);
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_history_is_upper_bound_with_true_distances() {
+        let mut rng = Rng::new(74);
+        let t: Vec<f64> = rng.gauss_vec(400);
+        let m = 16;
+        let bounded = feed(&t, StampiConfig::new(m).with_max_history(120));
+        let full = feed(&t, StampiConfig::new(m));
+        let fp = full.profile();
+        let bp = bounded.profile();
+        let base = bounded.first_window();
+        assert!(base > 0, "history bound never kicked in");
+        assert_eq!(base + bp.len(), full.num_windows());
+        let mut named_neighbors = 0;
+        for r in 0..bp.len() {
+            let w = base + r;
+            // (a) bounded can only miss pairs, never invent them
+            assert!(bp.p[r] >= fp.p[w] - 1e-9, "window {w}");
+            // (b) neighbor indices are snapshot positions; every named
+            //     neighbor gives back a true pairwise distance on the
+            //     full stream (evicted neighbors report -1 but keep
+            //     their recorded distance)
+            if bp.i[r] >= 0 && bp.p[r].is_finite() {
+                let nb = base + bp.i[r] as usize;
+                assert!((bp.i[r] as usize) < bp.len(), "neighbor not in snapshot");
+                let d = brute_pair(&t, w, nb, m);
+                assert!((bp.p[r] - d).abs() < 1e-9, "window {w} vs neighbor {nb}");
+                named_neighbors += 1;
+            }
+        }
+        assert!(named_neighbors > 0, "no in-snapshot neighbor survived");
+    }
+
+    #[test]
+    fn bounded_snapshot_is_safe_for_downstream_consumers() {
+        // regression: neighbor indices used to be absolute, which made
+        // topk's exclusion-zone masking slice out of bounds on bounded
+        // snapshots; rebased indices must keep every consumer in range
+        let mut rng = Rng::new(79);
+        let t: Vec<f64> = rng.gauss_vec(3000);
+        let m = 16;
+        let bounded = feed(&t, StampiConfig::new(m).with_max_history(400));
+        let mp = bounded.profile();
+        for (r, &j) in mp.i.iter().enumerate() {
+            assert!(j < mp.len() as i64, "neighbor {j} out of snapshot at {r}");
+        }
+        let motifs = crate::mp::topk::top_motifs(&mp, 3);
+        let discords = crate::mp::topk::top_discords(&mp, 3);
+        assert!(!motifs.is_empty() && !discords.is_empty());
+        for ev in motifs.iter().chain(&discords) {
+            assert!(ev.index < mp.len());
+        }
+    }
+
+    #[test]
+    fn history_bound_larger_than_stream_is_exact() {
+        let mut rng = Rng::new(75);
+        let t: Vec<f64> = rng.gauss_vec(300);
+        let a = feed(&t, StampiConfig::new(12).with_max_history(10_000));
+        let b = feed(&t, StampiConfig::new(12));
+        assert_eq!(a.first_window(), 0);
+        assert!(a.profile().max_abs_diff(&b.profile()) < 1e-12);
+        assert_eq!(a.profile().i, b.profile().i);
+    }
+
+    #[test]
+    fn prop_bounded_memory_and_exactness_on_suffix_pairs() {
+        check("stampi-bounded", 6, |rng: &mut Rng| {
+            let m = rng.range(4, 12);
+            let h = rng.range(3 * m, 6 * m);
+            let n = rng.range(4 * h, 6 * h);
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let mut eng = Stampi::new(StampiConfig::new(m).with_max_history(h)).unwrap();
+            for &x in &t {
+                eng.append(x);
+                assert!(eng.retained_windows() <= h, "window state leaked");
+            }
+            assert_eq!(eng.num_windows(), n - m + 1);
+            assert!(eng.first_window() >= n - h);
+        });
+    }
+
+    #[test]
+    fn config_rejections() {
+        assert!(Stampi::<f64>::new(StampiConfig::new(2)).is_err());
+        // m=16, excl=4: needs at least m + excl = 20 samples of history
+        // (the same boundary batch MpConfig::validate accepts: nw > excl)
+        assert!(Stampi::<f64>::new(StampiConfig::new(16).with_max_history(19)).is_err());
+        assert!(Stampi::<f64>::new(StampiConfig::new(16).with_max_history(20)).is_ok());
+    }
+
+    #[test]
+    fn minimal_history_bound_still_admits_pairs() {
+        // at the exact minimum h = m + excl, the engine must keep finding
+        // (finite) profile values rather than degenerating to all-inf
+        let mut rng = Rng::new(78);
+        let m = 16;
+        let h = m + 4; // excl defaults to 4
+        let mut eng = Stampi::<f64>::new(StampiConfig::new(m).with_max_history(h)).unwrap();
+        for &x in rng.gauss_vec(200).iter() {
+            eng.append(x);
+        }
+        let mp = eng.profile();
+        assert!(mp.p.iter().any(|d| d.is_finite()), "no admissible pair survived");
+    }
+
+    #[test]
+    fn f32_stream_tracks_f32_batch() {
+        // single-precision streaming must agree with the single-precision
+        // batch engine (both run the same Eq. 2 diagonal chains in f32;
+        // only the f64 stat accumulation order differs slightly)
+        let mut rng = Rng::new(76);
+        let t32: Vec<f32> = rng.gauss_vec(300).iter().map(|&x| x as f32).collect();
+        let eng = {
+            let mut e = Stampi::<f32>::new(StampiConfig::new(16)).unwrap();
+            e.extend(&t32);
+            e
+        };
+        let want = stomp::matrix_profile(&t32, MpConfig::new(16)).unwrap();
+        assert!(eng.profile().max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn matches_brute_at_final_prefix() {
+        let mut rng = Rng::new(77);
+        let t: Vec<f64> = rng.gauss_vec(256);
+        let eng = feed(&t, StampiConfig::new(8));
+        let want = brute::matrix_profile(&t, MpConfig::new(8)).unwrap();
+        assert!(eng.profile().max_abs_diff(&want) < 1e-7);
+    }
+
+    fn brute_pair(t: &[f64], a: usize, b: usize, m: usize) -> f64 {
+        let z = |s: usize| -> Vec<f64> {
+            let w = &t[s..s + m];
+            let mu = w.iter().sum::<f64>() / m as f64;
+            let sig = (w.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / m as f64).sqrt();
+            if sig > 0.0 {
+                w.iter().map(|x| (x - mu) / sig).collect()
+            } else {
+                vec![0.0; m]
+            }
+        };
+        let (za, zb) = (z(a), z(b));
+        za.iter()
+            .zip(&zb)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+            .sqrt()
+    }
+}

@@ -148,6 +148,44 @@ mod tests {
     }
 
     #[test]
+    fn exclusion_zone_deduplicates_trivial_matches() {
+        // Hand-built profile: a "plateau" of near-identical minima around
+        // index 10 (the same motif shifted by one sample — the trivial
+        // matches §topk must suppress), plus one genuinely distinct motif
+        // at index 40.  suppress radius = max(excl, m/2) = 8.
+        let nw = 64;
+        let m = 16;
+        let mut p = vec![5.0f64; nw];
+        let mut i = vec![-1i64; nw];
+        for (off, d) in [(8usize, 0.11), (9, 0.10), (10, 0.09), (11, 0.10), (12, 0.12)] {
+            p[off] = d;
+            i[off] = (off + 30) as i64; // matches live around 38..42
+        }
+        p[40] = 0.2;
+        i[40] = 9; // its match is inside the first plateau
+        let mp = MatrixProfile { p, i, m, excl: 4 };
+        let motifs = top_motifs(&mp, 5);
+        // rank 1 is the plateau minimum; the rest of the plateau AND the
+        // neighborhoods of both occurrences (10±8, 40±8) are masked, so
+        // no second event from either zone may appear.
+        assert_eq!(motifs[0].index, 10);
+        let radius = mp.excl.max(mp.m / 2);
+        for ev in &motifs[1..] {
+            assert!(ev.index.abs_diff(10) > radius, "trivial match at {}", ev.index);
+            assert!(ev.index.abs_diff(40) > radius, "match zone at {}", ev.index);
+        }
+        // every survivor has the background distance
+        assert!(motifs[1..].iter().all(|e| e.distance == 5.0));
+    }
+
+    #[test]
+    fn discords_on_all_inf_profile_are_empty() {
+        let mp = MatrixProfile::<f64>::new_inf(32, 8, 2);
+        assert!(top_discords(&mp, 3).is_empty());
+        assert!(top_motifs(&mp, 3).is_empty());
+    }
+
+    #[test]
     fn k_larger_than_events_truncates() {
         let (_, mp) = profile(200, 16, 6);
         let motifs = top_motifs(&mp, 1000);

@@ -23,6 +23,7 @@ pub mod pu;
 pub mod scheduler;
 
 use crate::mp::scrimp::compute_diagonal;
+use crate::mp::stampi::{Stampi, StampiConfig};
 use crate::mp::{MatrixProfile, MpConfig, WorkStats};
 use crate::timeseries::sliding_stats;
 use crate::Real;
@@ -142,6 +143,129 @@ impl<T: Real> NatsaEngine<T> {
         profile.sqrt_in_place(); // diagonals accumulate squared distances
         Ok(NatsaOutput { profile, work, pu_cells, schedule_imbalance: imbalance })
     }
+
+    /// Open a continuous-monitoring session on this engine: an exact
+    /// matrix profile maintained under `append(sample)` with unbounded
+    /// history (see [`crate::mp::stampi`] for the algorithm).
+    pub fn open_stream(&self, m: usize) -> crate::Result<StreamSession<T>> {
+        self.open_stream_bounded(m, None)
+    }
+
+    /// Like [`Self::open_stream`], retaining only the last `max_history`
+    /// samples when a bound is given (O(history) memory on an unbounded
+    /// stream; see the bounded-history semantics in [`crate::mp::stampi`]).
+    pub fn open_stream_bounded(
+        &self,
+        m: usize,
+        max_history: Option<usize>,
+    ) -> crate::Result<StreamSession<T>> {
+        let mut cfg = StampiConfig::new(m);
+        if let Some(e) = self.config.excl {
+            cfg = cfg.with_excl(e);
+        }
+        if let Some(h) = max_history {
+            cfg = cfg.with_max_history(h);
+        }
+        let pus = self.config.pus.max(1);
+        Ok(StreamSession {
+            core: Stampi::new(cfg)?,
+            pu_cells: vec![0; pus],
+            rr: 0,
+        })
+    }
+}
+
+/// A streaming analysis session bound to a PU fleet.
+///
+/// Each appended sample produces one incremental row of distance-matrix
+/// cells; the session deals the row to the PUs round-robin (whole-share
+/// split plus a rotating remainder cursor), the streaming analogue of the
+/// diagonal-pair scheme: every PU's cell count stays within one cell of
+/// every other's across the whole stream.  The attribution is
+/// *accounting* — rows are far too short to be worth host-thread fan-out,
+/// so execution is in-line — but it gives the timing/energy plane
+/// ([`crate::sim`]) the same per-PU [`WorkStats`] evidence the batch
+/// engine emits, so streaming workloads can be costed on the paper's
+/// platform models.
+pub struct StreamSession<T> {
+    core: Stampi<T>,
+    pu_cells: Vec<u64>,
+    /// Round-robin cursor for remainder cells (keeps loads within 1).
+    rr: usize,
+}
+
+impl<T: Real> StreamSession<T> {
+    /// Append one sample; returns the completed window's absolute index
+    /// once the stream is at least `m` samples long.
+    pub fn append(&mut self, x: T) -> Option<usize> {
+        let out = self.core.append(x)?;
+        if out.row_cells > 0 {
+            self.rr = stride_deal(self.rr, out.row_cells, &mut self.pu_cells);
+        }
+        Some(out.window)
+    }
+
+    /// Append a batch; returns how many windows were completed.
+    pub fn extend(&mut self, xs: &[T]) -> usize {
+        xs.iter().filter(|&&x| self.append(x).is_some()).count()
+    }
+
+    /// Snapshot the live profile (see [`Stampi::profile`] for indexing).
+    pub fn profile(&self) -> MatrixProfile<T> {
+        self.core.profile()
+    }
+
+    /// Total samples appended.
+    pub fn len(&self) -> usize {
+        self.core.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.core.is_empty()
+    }
+
+    /// Absolute index of the oldest retained window (0 when unbounded).
+    pub fn first_window(&self) -> usize {
+        self.core.first_window()
+    }
+
+    /// Aggregate functional work so far (drives the timing models).
+    pub fn work(&self) -> WorkStats {
+        self.core.work()
+    }
+
+    /// Cells attributed to each PU (load-balance evidence, like
+    /// [`NatsaOutput::pu_cells`]).
+    pub fn pu_cells(&self) -> &[u64] {
+        &self.pu_cells
+    }
+
+    /// max/min PU load ratio so far (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let max = *self.pu_cells.iter().max().unwrap_or(&0) as f64;
+        let min = *self.pu_cells.iter().min().unwrap_or(&0) as f64;
+        if min == 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
+    }
+}
+
+/// Deal `cells` to the PUs: the whole share to everyone, the remainder to
+/// `rem` PUs starting at the rotating cursor `rr`.  Returns the advanced
+/// cursor, so cumulative loads never diverge by more than one cell.
+fn stride_deal(rr: usize, cells: u64, pu_cells: &mut [u64]) -> usize {
+    let pus = pu_cells.len();
+    let full = cells / pus as u64;
+    for c in pu_cells.iter_mut() {
+        *c += full;
+    }
+    let rem = (cells % pus as u64) as usize;
+    for k in 0..rem {
+        pu_cells[(rr + k) % pus] += 1;
+    }
+    (rr + rem) % pus
 }
 
 /// Execute every PU's work list on `threads` host threads.  Returns one
@@ -284,6 +408,66 @@ mod tests {
         let engine = NatsaEngine::<f64>::new(NatsaConfig::default());
         assert!(engine.compute(&[1.0; 14], 12).is_err()); // nw(3) <= excl(3)
         assert!(engine.compute(&[1.0; 100], 2).is_err()); // m too small
+    }
+
+    #[test]
+    fn stream_session_matches_batch_compute() {
+        let mut rng = Rng::new(46);
+        let t: Vec<f64> = rng.gauss_vec(600);
+        let m = 16;
+        let engine = NatsaEngine::new(NatsaConfig::default());
+        let batch = engine.compute(&t, m).unwrap();
+        let mut session = engine.open_stream(m).unwrap();
+        assert_eq!(session.extend(&t), 600 - m + 1);
+        let streamed = session.profile();
+        assert!(streamed.max_abs_diff(&batch.profile) < 1e-7);
+        // identical pair coverage => identical cell counts
+        assert_eq!(session.work().cells, batch.work.cells);
+    }
+
+    #[test]
+    fn stream_session_pu_accounting_is_balanced_and_consistent() {
+        let mut rng = Rng::new(47);
+        let t: Vec<f64> = rng.gauss_vec(4000);
+        let engine = NatsaEngine::<f64>::new(NatsaConfig::default()); // 48 PUs
+        let mut session = engine.open_stream(32).unwrap();
+        session.extend(&t);
+        assert_eq!(session.pu_cells().len(), 48);
+        let total: u64 = session.pu_cells().iter().sum();
+        assert_eq!(total, session.work().cells);
+        assert!(session.imbalance() < 1.01, "{}", session.imbalance());
+        // the sim plane can cost this workload from the emitted stats
+        assert!(session.work().flops(32) > 0);
+    }
+
+    #[test]
+    fn stream_session_respects_engine_exclusion_override() {
+        let mut rng = Rng::new(48);
+        let t: Vec<f64> = rng.gauss_vec(300);
+        let mut config = NatsaConfig::default();
+        config.excl = Some(9);
+        let mut session = NatsaEngine::new(config).open_stream(12).unwrap();
+        session.extend(&t);
+        let mp = session.profile();
+        assert_eq!(mp.excl, 9);
+        for (k, &j) in mp.i.iter().enumerate() {
+            if j >= 0 {
+                assert!((k as i64 - j).unsigned_abs() >= 9);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_session_bounded_history() {
+        let mut rng = Rng::new(49);
+        let t: Vec<f64> = rng.gauss_vec(2000);
+        let engine = NatsaEngine::<f64>::new(NatsaConfig::default());
+        let mut session = engine.open_stream_bounded(16, Some(256)).unwrap();
+        session.extend(&t);
+        assert!(session.first_window() >= 2000 - 256);
+        assert_eq!(session.profile().len(), 256 - 16 + 1);
+        // rejects bounds too small to ever admit a pair
+        assert!(engine.open_stream_bounded(16, Some(10)).is_err());
     }
 
     #[test]

@@ -6,23 +6,28 @@
 //! needs at run time:
 //!
 //! * [`Manifest`] — parse the TSV, resolve `(kind, dtype, m)` to a file;
-//! * [`Runtime`]  — a PJRT CPU client that compiles each HLO module once
-//!   (lazily, cached) and executes it with [`xla::Literal`] inputs.
+//! * [`Runtime`]  — executes the artifact set.
 //!
-//! Interchange is HLO *text*, never serialized protos: jax >= 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md and
-//! `python/compile/aot.py`).
+//! Two interchangeable backends sit behind the same [`Runtime`] API:
 //!
-//! The xla wrapper types hold raw pointers and are not `Send`; the
-//! coordinator therefore gives each worker thread its own [`Runtime`]
-//! (PJRT CPU executions are cheap to duplicate; compilation is per-worker
-//! but amortized over the whole run).
+//! * **`xla-pjrt` feature** — the real thing: a PJRT CPU client that
+//!   compiles each HLO module once (lazily, cached) and executes it with
+//!   `xla::Literal` inputs.  Interchange is HLO *text*, never serialized
+//!   protos: jax >= 0.5 emits 64-bit instruction ids that xla_extension
+//!   0.5.1 rejects; the text parser reassigns ids (see
+//!   /opt/xla-example/README.md and `python/compile/aot.py`).  The xla
+//!   wrapper types hold raw pointers and are not `Send`; the coordinator
+//!   therefore gives each worker thread its own [`Runtime`].  Enabling the
+//!   feature requires the `xla` bindings crate, which is not in the
+//!   offline vendor set — add it to `[dependencies]` by hand.
+//! * **default (native interpreter)** — a dependency-free evaluator with
+//!   the *same kernel semantics* (Eq. 2 dot-product chaining, Eq. 1
+//!   distances, masked-lane +inf, PUU argmin pre-reduction), validated by
+//!   the same `rust/tests/e2e_pjrt.rs` suite.  It still requires the
+//!   artifact manifest so variant selection, error paths, and window
+//!   support discovery behave identically to the PJRT backend.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 use anyhow::Context;
 
@@ -106,7 +111,7 @@ impl Manifest {
 
     /// Find an artifact by kind/dtype and exact window length.  For the
     /// hot-path chunk kernel the *largest* available V is preferred:
-    /// fewer PJRT invocations per diagonal (perf pass, EXPERIMENTS.md).
+    /// fewer kernel invocations per diagonal (perf pass, EXPERIMENTS.md).
     pub fn find(&self, kind: ArtifactKind, dtype: &str, m: usize) -> Option<&Artifact> {
         self.artifacts
             .iter()
@@ -150,183 +155,358 @@ pub struct DiagChunkOut<T> {
     pub min_idx: i32,
 }
 
-/// Element types the runtime can feed to PJRT.
-pub trait XlaReal: Real + xla::NativeType + xla::ArrayElement {}
-impl XlaReal for f32 {}
-impl XlaReal for f64 {}
-
-/// A PJRT CPU runtime over one artifact directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl Runtime {
-    /// Create a runtime for `artifacts/` (compiles lazily on first use).
-    pub fn new(artifact_dir: &Path) -> crate::Result<Runtime> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-        })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile (or fetch from cache) an executable by artifact name.
-    pub fn executable(&self, name: &str) -> crate::Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
-            return Ok(exe.clone());
-        }
-        let art = self
-            .manifest
-            .artifacts
-            .iter()
-            .find(|a| a.name == name)
-            .with_context(|| format!("unknown artifact '{name}'"))?;
-        let proto = xla::HloModuleProto::from_text_file(&art.path)
-            .with_context(|| format!("parse HLO text {}", art.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("PJRT compile {name}"))?,
-        );
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    fn run(&self, name: &str, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("execute {name}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetch result of {name}"))?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        Ok(lit.to_tuple()?)
-    }
-
-    /// Execute the DPU first-dot-product kernel.
-    pub fn dot_init<T: XlaReal>(&self, m: usize, ta: &[T], tb: &[T]) -> crate::Result<T> {
-        anyhow::ensure!(ta.len() == m && tb.len() == m, "dot_init wants length-m slices");
-        let art = self
-            .manifest
-            .find(ArtifactKind::DotInit, T::DTYPE, m)
-            .with_context(|| format!("no dot_init artifact for {} m={m}", T::DTYPE))?;
-        let name = art.name.clone();
-        let out = self.run(&name, &[xla::Literal::vec1(ta), xla::Literal::vec1(tb)])?;
-        Ok(out[0].to_vec::<T>()?[0])
-    }
-
-    /// Execute the PU pipeline over one diagonal chunk.
-    #[allow(clippy::too_many_arguments)]
-    pub fn diag_chunk<T: XlaReal>(
-        &self,
-        m: usize,
-        v_want: Option<usize>,
-        ta: &[T],
-        tb: &[T],
-        mu_a: &[T],
-        sig_a: &[T],
-        mu_b: &[T],
-        sig_b: &[T],
-        q0: T,
-        nvalid: usize,
-    ) -> crate::Result<DiagChunkOut<T>> {
-        let art = match v_want {
-            Some(vw) => self
-                .manifest
-                .artifacts
-                .iter()
-                .find(|a| {
-                    a.kind == ArtifactKind::DiagChunk && a.dtype == T::DTYPE && a.m == m && a.v == vw
-                })
-                .with_context(|| format!("no diag_chunk for {} m={m} v={vw}", T::DTYPE))?,
-            None => self
-                .manifest
-                .find(ArtifactKind::DiagChunk, T::DTYPE, m)
-                .with_context(|| format!("no diag_chunk artifact for {} m={m}", T::DTYPE))?,
-        };
-        let v = art.v;
-        anyhow::ensure!(ta.len() == v + m && tb.len() == v + m, "ta/tb must be V+m");
-        anyhow::ensure!(
-            mu_a.len() == v && sig_a.len() == v && mu_b.len() == v && sig_b.len() == v,
-            "stats slices must be V"
-        );
-        anyhow::ensure!(nvalid >= 1 && nvalid <= v, "nvalid out of range");
-        let name = art.name.clone();
-        let out = self.run(
-            &name,
-            &[
-                xla::Literal::vec1(ta),
-                xla::Literal::vec1(tb),
-                xla::Literal::vec1(mu_a),
-                xla::Literal::vec1(sig_a),
-                xla::Literal::vec1(mu_b),
-                xla::Literal::vec1(sig_b),
-                xla::Literal::vec1(&[q0]),
-                xla::Literal::vec1(&[nvalid as i32]),
-            ],
-        )?;
-        Ok(DiagChunkOut {
-            dists: out[0].to_vec::<T>()?,
-            q_last: out[1].to_vec::<T>()?[0],
-            min_val: out[2].to_vec::<T>()?[0],
-            min_idx: out[3].to_vec::<i32>()?[0],
-        })
-    }
-
-    /// Execute the offloaded stats precompute (fixed demo length).
-    pub fn stats<T: XlaReal>(&self, t: &[T]) -> crate::Result<(Vec<T>, Vec<T>)> {
-        let art = self
-            .manifest
-            .artifacts
-            .iter()
-            .find(|a| a.kind == ArtifactKind::Stats && a.dtype == T::DTYPE)
-            .with_context(|| format!("no stats artifact for {}", T::DTYPE))?;
-        anyhow::ensure!(
-            t.len() == art.n,
-            "stats artifact is fixed at n={}, got {}",
-            art.n,
-            t.len()
-        );
-        let name = art.name.clone();
-        let out = self.run(&name, &[xla::Literal::vec1(t)])?;
-        Ok((out[0].to_vec::<T>()?, out[1].to_vec::<T>()?))
-    }
-
-    /// Execute the self-contained MXU-tile matrix profile (fixed n).
-    pub fn mp_tile<T: XlaReal>(&self, t: &[T]) -> crate::Result<(Vec<T>, Vec<i32>)> {
-        let art = self
-            .manifest
-            .artifacts
-            .iter()
-            .find(|a| a.kind == ArtifactKind::MpTile && a.dtype == T::DTYPE)
-            .with_context(|| format!("no mp_tile artifact for {}", T::DTYPE))?;
-        anyhow::ensure!(
-            t.len() == art.n,
-            "mp_tile artifact is fixed at n={}, got {}",
-            art.n,
-            t.len()
-        );
-        let name = art.name.clone();
-        let out = self.run(&name, &[xla::Literal::vec1(t)])?;
-        Ok((out[0].to_vec::<T>()?, out[1].to_vec::<i32>()?))
-    }
-}
-
 /// Default artifact directory: `$NATSA_ARTIFACTS` or `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
     std::env::var_os("NATSA_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (feature `xla-pjrt`): compile + execute the HLO artifacts.
+// ---------------------------------------------------------------------------
+#[cfg(feature = "xla-pjrt")]
+mod backend {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::rc::Rc;
+
+    use anyhow::Context;
+
+    use super::{ArtifactKind, DiagChunkOut, Manifest};
+    use crate::Real;
+
+    /// Element types the runtime can feed to PJRT.
+    pub trait XlaReal: Real + xla::NativeType + xla::ArrayElement {}
+    impl XlaReal for f32 {}
+    impl XlaReal for f64 {}
+
+    /// A PJRT CPU runtime over one artifact directory.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    }
+
+    impl Runtime {
+        /// Create a runtime for `artifacts/` (compiles lazily on first use).
+        pub fn new(artifact_dir: &Path) -> crate::Result<Runtime> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                manifest,
+                cache: RefCell::new(HashMap::new()),
+            })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Compile (or fetch from cache) an executable by artifact name.
+        pub fn executable(&self, name: &str) -> crate::Result<Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.borrow().get(name) {
+                return Ok(exe.clone());
+            }
+            let art = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == name)
+                .with_context(|| format!("unknown artifact '{name}'"))?;
+            let proto = xla::HloModuleProto::from_text_file(&art.path)
+                .with_context(|| format!("parse HLO text {}", art.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Rc::new(
+                self.client
+                    .compile(&comp)
+                    .with_context(|| format!("PJRT compile {name}"))?,
+            );
+            self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        fn run(&self, name: &str, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+            let exe = self.executable(name)?;
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("execute {name}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetch result of {name}"))?;
+            // aot.py lowers with return_tuple=True: always a tuple.
+            Ok(lit.to_tuple()?)
+        }
+
+        /// Execute the DPU first-dot-product kernel.
+        pub fn dot_init<T: XlaReal>(&self, m: usize, ta: &[T], tb: &[T]) -> crate::Result<T> {
+            anyhow::ensure!(ta.len() == m && tb.len() == m, "dot_init wants length-m slices");
+            let art = self
+                .manifest
+                .find(ArtifactKind::DotInit, T::DTYPE, m)
+                .with_context(|| format!("no dot_init artifact for {} m={m}", T::DTYPE))?;
+            let name = art.name.clone();
+            let out = self.run(&name, &[xla::Literal::vec1(ta), xla::Literal::vec1(tb)])?;
+            Ok(out[0].to_vec::<T>()?[0])
+        }
+
+        /// Execute the PU pipeline over one diagonal chunk.
+        #[allow(clippy::too_many_arguments)]
+        pub fn diag_chunk<T: XlaReal>(
+            &self,
+            m: usize,
+            v_want: Option<usize>,
+            ta: &[T],
+            tb: &[T],
+            mu_a: &[T],
+            sig_a: &[T],
+            mu_b: &[T],
+            sig_b: &[T],
+            q0: T,
+            nvalid: usize,
+        ) -> crate::Result<DiagChunkOut<T>> {
+            let art = super::resolve_chunk_artifact(&self.manifest, T::DTYPE, m, v_want)?;
+            let v = art.v;
+            super::check_chunk_inputs(v, m, ta, tb, mu_a, sig_a, mu_b, sig_b, nvalid)?;
+            let name = art.name.clone();
+            let out = self.run(
+                &name,
+                &[
+                    xla::Literal::vec1(ta),
+                    xla::Literal::vec1(tb),
+                    xla::Literal::vec1(mu_a),
+                    xla::Literal::vec1(sig_a),
+                    xla::Literal::vec1(mu_b),
+                    xla::Literal::vec1(sig_b),
+                    xla::Literal::vec1(&[q0]),
+                    xla::Literal::vec1(&[nvalid as i32]),
+                ],
+            )?;
+            Ok(DiagChunkOut {
+                dists: out[0].to_vec::<T>()?,
+                q_last: out[1].to_vec::<T>()?[0],
+                min_val: out[2].to_vec::<T>()?[0],
+                min_idx: out[3].to_vec::<i32>()?[0],
+            })
+        }
+
+        /// Execute the offloaded stats precompute (fixed demo length).
+        pub fn stats<T: XlaReal>(&self, t: &[T]) -> crate::Result<(Vec<T>, Vec<T>)> {
+            let art = super::resolve_fixed_artifact(&self.manifest, ArtifactKind::Stats, T::DTYPE, t.len())?;
+            let name = art.name.clone();
+            let out = self.run(&name, &[xla::Literal::vec1(t)])?;
+            Ok((out[0].to_vec::<T>()?, out[1].to_vec::<T>()?))
+        }
+
+        /// Execute the self-contained MXU-tile matrix profile (fixed n).
+        pub fn mp_tile<T: XlaReal>(&self, t: &[T]) -> crate::Result<(Vec<T>, Vec<i32>)> {
+            let art = super::resolve_fixed_artifact(&self.manifest, ArtifactKind::MpTile, T::DTYPE, t.len())?;
+            let name = art.name.clone();
+            let out = self.run(&name, &[xla::Literal::vec1(t)])?;
+            Ok((out[0].to_vec::<T>()?, out[1].to_vec::<i32>()?))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native backend (default): dependency-free evaluator with identical
+// semantics — what the lowered kernels compute, computed directly.
+// ---------------------------------------------------------------------------
+#[cfg(not(feature = "xla-pjrt"))]
+mod backend {
+    use std::path::Path;
+
+    use anyhow::Context;
+
+    use super::{ArtifactKind, DiagChunkOut, Manifest};
+    use crate::mp::znorm_dist;
+    use crate::Real;
+
+    /// Element types the runtime can execute (no extra bounds natively).
+    pub trait XlaReal: Real {}
+    impl XlaReal for f32 {}
+    impl XlaReal for f64 {}
+
+    /// A native runtime over one artifact directory.  The manifest is
+    /// still mandatory — variant selection and the error surface must
+    /// match the PJRT backend exactly.
+    pub struct Runtime {
+        manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn new(artifact_dir: &Path) -> crate::Result<Runtime> {
+            Ok(Runtime { manifest: Manifest::load(artifact_dir)? })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// "Compile" an artifact by name: resolve it and verify its HLO
+        /// text is present and readable (the native stand-in for a PJRT
+        /// compile, so missing/broken artifact files still fail loudly).
+        pub fn executable(&self, name: &str) -> crate::Result<()> {
+            let art = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == name)
+                .with_context(|| format!("unknown artifact '{name}'"))?;
+            std::fs::metadata(&art.path)
+                .with_context(|| format!("parse HLO text {}", art.path.display()))?;
+            Ok(())
+        }
+
+        /// The DPU first dot product.
+        pub fn dot_init<T: XlaReal>(&self, m: usize, ta: &[T], tb: &[T]) -> crate::Result<T> {
+            anyhow::ensure!(ta.len() == m && tb.len() == m, "dot_init wants length-m slices");
+            self.manifest
+                .find(ArtifactKind::DotInit, T::DTYPE, m)
+                .with_context(|| format!("no dot_init artifact for {} m={m}", T::DTYPE))?;
+            Ok(ta.iter().zip(tb).map(|(&a, &b)| a * b).sum())
+        }
+
+        /// The PU pipeline over one diagonal chunk: Eq. 2 chains the dot
+        /// product across the chunk, Eq. 1 turns each into a distance,
+        /// masked lanes are +inf, and the PUU pre-reduces to the argmin.
+        ///
+        /// Input layout (same as the lowered kernel): `ta[x] = t[i0-1+x]`
+        /// where `i0` is the chunk's first row — `ta[0]` is a dummy when
+        /// `i0 == 0` and is never read (cell 0 uses `q0` directly).
+        #[allow(clippy::too_many_arguments)]
+        pub fn diag_chunk<T: XlaReal>(
+            &self,
+            m: usize,
+            v_want: Option<usize>,
+            ta: &[T],
+            tb: &[T],
+            mu_a: &[T],
+            sig_a: &[T],
+            mu_b: &[T],
+            sig_b: &[T],
+            q0: T,
+            nvalid: usize,
+        ) -> crate::Result<DiagChunkOut<T>> {
+            let art = super::resolve_chunk_artifact(&self.manifest, T::DTYPE, m, v_want)?;
+            let v = art.v;
+            super::check_chunk_inputs(v, m, ta, tb, mu_a, sig_a, mu_b, sig_b, nvalid)?;
+
+            let mf = m as f64;
+            let inv = |sig: T| {
+                if sig > T::zero() {
+                    T::of_f64(1.0 / (mf * sig.to_f64s()))
+                } else {
+                    T::zero()
+                }
+            };
+            let mut dists = vec![T::infinity(); v];
+            let mut q = q0;
+            let mut q_last = q0;
+            for k in 0..nvalid {
+                if k > 0 {
+                    // Eq. 2: advance (i, j) -> (i+1, j+1) via the shifted
+                    // views (t[i-1] = ta[k], t[i+m-1] = ta[k+m]).
+                    q = q - ta[k] * tb[k] + ta[k + m] * tb[k + m];
+                }
+                dists[k] = znorm_dist(q, m, mu_a[k], inv(sig_a[k]), mu_b[k], inv(sig_b[k]));
+                q_last = q;
+            }
+            let (min_idx, min_val) = dists
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, &d)| (k as i32, d))
+                .unwrap_or((0, T::infinity()));
+            Ok(DiagChunkOut { dists, q_last, min_val, min_idx })
+        }
+
+        /// The offloaded stats precompute (fixed demo length).
+        pub fn stats<T: XlaReal>(&self, t: &[T]) -> crate::Result<(Vec<T>, Vec<T>)> {
+            let art = super::resolve_fixed_artifact(&self.manifest, ArtifactKind::Stats, T::DTYPE, t.len())?;
+            let st = crate::timeseries::sliding_stats(t, art.m);
+            Ok((st.mu, st.sig))
+        }
+
+        /// The self-contained MXU-tile matrix profile (fixed n).
+        pub fn mp_tile<T: XlaReal>(&self, t: &[T]) -> crate::Result<(Vec<T>, Vec<i32>)> {
+            let art = super::resolve_fixed_artifact(&self.manifest, ArtifactKind::MpTile, T::DTYPE, t.len())?;
+            let mp = crate::mp::stomp::matrix_profile(t, crate::mp::MpConfig::new(art.m))?;
+            let i: Vec<i32> = mp.i.iter().map(|&j| j as i32).collect();
+            Ok((mp.p, i))
+        }
+    }
+}
+
+pub use backend::{Runtime, XlaReal};
+
+/// Resolve the diag_chunk artifact for `(dtype, m)`, honoring an exact-V
+/// request when given (shared by both backends so errors are identical).
+fn resolve_chunk_artifact<'a>(
+    manifest: &'a Manifest,
+    dtype: &str,
+    m: usize,
+    v_want: Option<usize>,
+) -> crate::Result<&'a Artifact> {
+    match v_want {
+        Some(vw) => manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::DiagChunk && a.dtype == dtype && a.m == m && a.v == vw)
+            .with_context(|| format!("no diag_chunk for {dtype} m={m} v={vw}")),
+        None => manifest
+            .find(ArtifactKind::DiagChunk, dtype, m)
+            .with_context(|| format!("no diag_chunk artifact for {dtype} m={m}")),
+    }
+}
+
+/// Resolve a fixed-length artifact (stats / mp_tile) and check the length.
+fn resolve_fixed_artifact<'a>(
+    manifest: &'a Manifest,
+    kind: ArtifactKind,
+    dtype: &str,
+    n: usize,
+) -> crate::Result<&'a Artifact> {
+    let label = match kind {
+        ArtifactKind::Stats => "stats",
+        ArtifactKind::MpTile => "mp_tile",
+        _ => "artifact",
+    };
+    let art = manifest
+        .artifacts
+        .iter()
+        .find(|a| a.kind == kind && a.dtype == dtype)
+        .with_context(|| format!("no {label} artifact for {dtype}"))?;
+    anyhow::ensure!(
+        n == art.n,
+        "{label} artifact is fixed at n={}, got {n}",
+        art.n
+    );
+    Ok(art)
+}
+
+/// Validate the diag_chunk input slice lengths against variant V.
+#[allow(clippy::too_many_arguments)]
+fn check_chunk_inputs<T>(
+    v: usize,
+    m: usize,
+    ta: &[T],
+    tb: &[T],
+    mu_a: &[T],
+    sig_a: &[T],
+    mu_b: &[T],
+    sig_b: &[T],
+    nvalid: usize,
+) -> crate::Result<()> {
+    anyhow::ensure!(ta.len() == v + m && tb.len() == v + m, "ta/tb must be V+m");
+    anyhow::ensure!(
+        mu_a.len() == v && sig_a.len() == v && mu_b.len() == v && sig_b.len() == v,
+        "stats slices must be V"
+    );
+    anyhow::ensure!(nvalid >= 1 && nvalid <= v, "nvalid out of range");
+    Ok(())
 }
 
 #[cfg(test)]
@@ -375,5 +555,182 @@ mod tests {
         let dir = std::env::temp_dir().join("natsa-manifest-empty");
         write_manifest(&dir, "# header only\n");
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    // ---- native-backend semantics (cheap enough to run everywhere; the
+    // PJRT backend is pinned by rust/tests/e2e_pjrt.rs against real
+    // artifacts, which exercise these exact same contracts) ----
+    #[cfg(not(feature = "xla-pjrt"))]
+    mod native {
+        use super::*;
+        use crate::prop::Rng;
+        use crate::timeseries::sliding_stats;
+
+        fn runtime(tag: &str, body: &str) -> Runtime {
+            let dir = std::env::temp_dir().join(format!("natsa-native-rt-{tag}"));
+            write_manifest(&dir, body);
+            Runtime::new(&dir).unwrap()
+        }
+
+        #[test]
+        fn dot_init_native() {
+            let rt = runtime(
+                "dot",
+                "dot_init_f64_m8\tdot.hlo.txt\tdot_init\tf64\t8\t0\t0\tx\n",
+            );
+            let a: Vec<f64> = (0..8).map(|k| k as f64).collect();
+            let b: Vec<f64> = (0..8).map(|k| (k * 2) as f64).collect();
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert_eq!(rt.dot_init(8, &a, &b).unwrap(), want);
+            // missing variant errors like the PJRT backend
+            let err = rt.dot_init::<f32>(8, &[0.0; 8], &[0.0; 8]).unwrap_err();
+            assert!(err.to_string().contains("no dot_init artifact"), "{err}");
+        }
+
+        #[test]
+        fn diag_chunk_native_matches_definition() {
+            let m = 16;
+            let v = 32;
+            let rt = runtime(
+                "chunk",
+                "diag_chunk_f64_m16_v32\tc.hlo.txt\tdiag_chunk\tf64\t16\t32\t0\tx\n",
+            );
+            let mut rng = Rng::new(5);
+            let t: Vec<f64> = rng.gauss_vec(2 * v + 3 * m);
+            let st = sliding_stats(&t, m);
+            let d = m; // diagonal offset
+            let i0 = 1usize;
+            let j0 = i0 + d;
+            let q0: f64 = t[i0..i0 + m].iter().zip(&t[j0..j0 + m]).map(|(a, b)| a * b).sum();
+            let out = rt
+                .diag_chunk(
+                    m,
+                    Some(v),
+                    &t[i0 - 1..i0 - 1 + v + m],
+                    &t[j0 - 1..j0 - 1 + v + m],
+                    &st.mu[i0..i0 + v],
+                    &st.sig[i0..i0 + v],
+                    &st.mu[j0..j0 + v],
+                    &st.sig[j0..j0 + v],
+                    q0,
+                    v,
+                )
+                .unwrap();
+            for k in 0..v {
+                let (i, j) = (i0 + k, j0 + k);
+                let q: f64 = t[i..i + m].iter().zip(&t[j..j + m]).map(|(a, b)| a * b).sum();
+                let corr = (q - m as f64 * st.mu[i] * st.mu[j]) / (m as f64 * st.sig[i] * st.sig[j]);
+                let want = (2.0 * m as f64 * (1.0 - corr)).max(0.0).sqrt();
+                assert!(
+                    (out.dists[k] - want).abs() < 1e-8,
+                    "k={k}: {} vs {want}",
+                    out.dists[k]
+                );
+            }
+            // PUU pre-reduction is the argmin of the chunk
+            let (min_k, min_v) = out
+                .dists
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            assert_eq!(out.min_idx as usize, min_k);
+            assert_eq!(out.min_val, *min_v);
+            // q_last chains: it is the dot product AT the last valid cell
+            let i_last = i0 + v - 1;
+            let j_last = j0 + v - 1;
+            let q_want: f64 = t[i_last..i_last + m]
+                .iter()
+                .zip(&t[j_last..j_last + m])
+                .map(|(a, b)| a * b)
+                .sum();
+            assert!((out.q_last - q_want).abs() < 1e-7, "{} vs {q_want}", out.q_last);
+        }
+
+        #[test]
+        fn diag_chunk_masks_invalid_lanes() {
+            let m = 8;
+            let rt = runtime(
+                "mask",
+                "diag_chunk_f64_m8_v16\tc.hlo.txt\tdiag_chunk\tf64\t8\t16\t0\tx\n",
+            );
+            let v = 16;
+            let mut rng = Rng::new(6);
+            let t: Vec<f64> = rng.gauss_vec(v + 3 * m);
+            let st = sliding_stats(&t, m);
+            let nvalid = 5;
+            let q0: f64 = t[1..1 + m].iter().zip(&t[m..2 * m]).map(|(a, b)| a * b).sum();
+            let out = rt
+                .diag_chunk(
+                    m,
+                    None,
+                    &t[0..v + m],
+                    &t[m - 1..m - 1 + v + m],
+                    &st.mu[1..1 + v],
+                    &st.sig[1..1 + v],
+                    &st.mu[m..m + v],
+                    &st.sig[m..m + v],
+                    q0,
+                    nvalid,
+                )
+                .unwrap();
+            assert!(out.dists[..nvalid].iter().all(|d| d.is_finite()));
+            assert!(out.dists[nvalid..].iter().all(|d| d.is_infinite()));
+            assert!((out.min_idx as usize) < nvalid);
+        }
+
+        #[test]
+        fn executable_requires_artifact_file() {
+            let dir = std::env::temp_dir().join("natsa-native-rt-exe");
+            write_manifest(&dir, "k1\tmissing.hlo.txt\tdot_init\tf64\t8\t0\t0\tx\n");
+            std::fs::write(dir.join("present.hlo.txt"), "HloModule x").unwrap();
+            write_manifest(
+                &dir,
+                "k1\tmissing.hlo.txt\tdot_init\tf64\t8\t0\t0\tx\n\
+                 k2\tpresent.hlo.txt\tdot_init\tf64\t16\t0\t0\tx\n",
+            );
+            let rt = Runtime::new(&dir).unwrap();
+            assert!(rt.executable("k2").is_ok());
+            assert!(rt.executable("k1").is_err());
+            assert!(rt.executable("nope").is_err());
+        }
+
+        #[test]
+        fn mp_tile_native_matches_scrimp() {
+            let n = 256;
+            let m = 16;
+            let rt = runtime(
+                "tile",
+                "mp_tile_f64\ttile.hlo.txt\tmp_tile\tf64\t16\t0\t256\tx\n",
+            );
+            let mut rng = Rng::new(7);
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let (p, i) = rt.mp_tile(&t).unwrap();
+            let want = crate::mp::scrimp::matrix_profile(&t, crate::mp::MpConfig::new(m)).unwrap();
+            for k in 0..want.len() {
+                assert!((p[k] - want.p[k]).abs() < 1e-8);
+                assert!(i[k] >= 0);
+            }
+            // wrong length is rejected with the fixed-n message
+            let err = rt.mp_tile(&t[..100]).unwrap_err().to_string();
+            assert!(err.contains("fixed at n=256"), "{err}");
+        }
+
+        #[test]
+        fn stats_native_matches_host_precompute() {
+            let rt = runtime(
+                "stats",
+                "stats_f64\tstats.hlo.txt\tstats\tf64\t32\t0\t512\tx\n",
+            );
+            let mut rng = Rng::new(8);
+            let t: Vec<f64> = rng.gauss_vec(512);
+            let (mu, sig) = rt.stats(&t).unwrap();
+            let st = sliding_stats(&t, 32);
+            assert_eq!(mu.len(), st.mu.len());
+            for k in 0..mu.len() {
+                assert!((mu[k] - st.mu[k]).abs() < 1e-12);
+                assert!((sig[k] - st.sig[k]).abs() < 1e-12);
+            }
+        }
     }
 }

@@ -9,11 +9,14 @@
 //!   `rand_128K..rand_2M` MATLAB series plus ECG-like / seismic-like /
 //!   sinusoid-with-anomaly signals substituting for the real datasets
 //!   (DESIGN.md §2, substitution table),
-//! * [`io`] — newline/CSV loaders so users can feed real recordings.
+//! * [`io`] — newline/CSV loaders so users can feed real recordings,
+//! * [`stream`] — the absolute-indexed ring buffer with bounded-history
+//!   eviction that backs the streaming engine ([`crate::mp::stampi`]).
 
 pub mod generator;
 pub mod io;
 pub mod stats;
+pub mod stream;
 pub mod transform;
 
 pub use stats::{sliding_stats, WindowStats};

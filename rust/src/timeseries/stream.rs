@@ -1,0 +1,216 @@
+//! Streaming substrate: an absolute-indexed growable buffer with optional
+//! head eviction — the ring/window abstraction under [`crate::mp::stampi`].
+//!
+//! A live stream only ever *appends*; what changes over its lifetime is how
+//! much history is retained.  [`RingVec`] therefore addresses elements by
+//! their **absolute stream index** (the index the element had when it was
+//! appended, stable forever), while [`RingVec::evict_to`] drops the oldest
+//! retained elements in O(1) amortized time.  Contiguous slices over the
+//! retained region are always available (the buffer compacts itself when
+//! the evicted prefix grows past half the allocation), which is what the
+//! O(m) dot products of the STAMPI row update need.
+
+/// Growable, absolute-indexed vector with amortized-O(1) head eviction.
+///
+/// Invariant: live elements are `buf[head..]`; `buf[i]` holds absolute
+/// index `off + i`; the first retained absolute index is `off + head`.
+#[derive(Clone, Debug)]
+pub struct RingVec<T> {
+    buf: Vec<T>,
+    off: usize,
+    head: usize,
+}
+
+impl<T: Copy> RingVec<T> {
+    pub fn new() -> Self {
+        RingVec { buf: Vec::new(), off: 0, head: 0 }
+    }
+
+    /// Append one element; it receives absolute index [`Self::next_index`].
+    pub fn push(&mut self, x: T) {
+        self.buf.push(x);
+    }
+
+    /// Absolute index of the oldest retained element.
+    pub fn first_index(&self) -> usize {
+        self.off + self.head
+    }
+
+    /// Absolute index the next [`Self::push`] will receive.
+    pub fn next_index(&self) -> usize {
+        self.off + self.buf.len()
+    }
+
+    /// Number of retained elements.
+    pub fn len(&self) -> usize {
+        self.buf.len() - self.head
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read the element at absolute index `abs`.  Panics (in every build
+    /// profile) when `abs` falls outside the retained range: an evicted
+    /// index must fail deterministically, never return stale data.
+    #[inline]
+    pub fn get(&self, abs: usize) -> T {
+        assert!(
+            abs >= self.first_index() && abs < self.next_index(),
+            "index {abs} outside retained range [{}, {})",
+            self.first_index(),
+            self.next_index()
+        );
+        self.buf[abs - self.off]
+    }
+
+    /// Overwrite the element at absolute index `abs` (must be retained;
+    /// panics otherwise, like [`Self::get`]).
+    #[inline]
+    pub fn set(&mut self, abs: usize, x: T) {
+        assert!(
+            abs >= self.first_index() && abs < self.next_index(),
+            "index {abs} outside retained range [{}, {})",
+            self.first_index(),
+            self.next_index()
+        );
+        self.buf[abs - self.off] = x;
+    }
+
+    /// Contiguous retained slice covering absolute indices `[lo, hi)`.
+    pub fn slice(&self, lo: usize, hi: usize) -> &[T] {
+        assert!(
+            lo >= self.first_index() && hi <= self.next_index() && lo <= hi,
+            "slice [{lo}, {hi}) outside retained range [{}, {})",
+            self.first_index(),
+            self.next_index()
+        );
+        &self.buf[lo - self.off..hi - self.off]
+    }
+
+    /// Clone the whole retained region into a plain `Vec`.
+    pub fn to_vec(&self) -> Vec<T> {
+        self.buf[self.head..].to_vec()
+    }
+
+    /// Drop every element with absolute index below `new_first`.  No-op if
+    /// the boundary is at or before the current head; the boundary may not
+    /// exceed [`Self::next_index`].  Storage is reclaimed lazily: once the
+    /// evicted prefix outgrows the live region it is compacted away, so a
+    /// bounded stream uses O(retained) memory.
+    pub fn evict_to(&mut self, new_first: usize) {
+        assert!(
+            new_first <= self.next_index(),
+            "cannot evict past the end ({new_first} > {})",
+            self.next_index()
+        );
+        if new_first <= self.first_index() {
+            return;
+        }
+        self.head = new_first - self.off;
+        if self.head >= 64 && self.head > self.buf.len() - self.head {
+            self.buf.drain(..self.head);
+            self.off += self.head;
+            self.head = 0;
+        }
+    }
+}
+
+impl<T: Copy> Default for RingVec<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absolute_indices_survive_eviction() {
+        let mut r = RingVec::new();
+        for v in 0..200u32 {
+            r.push(v);
+        }
+        assert_eq!(r.first_index(), 0);
+        assert_eq!(r.next_index(), 200);
+        r.evict_to(150);
+        assert_eq!(r.first_index(), 150);
+        assert_eq!(r.len(), 50);
+        // absolute addressing is unchanged by eviction/compaction
+        for abs in 150..200 {
+            assert_eq!(r.get(abs), abs as u32);
+        }
+        for v in 200..400u32 {
+            r.push(v);
+        }
+        r.evict_to(380);
+        assert_eq!(r.get(399), 399);
+        assert_eq!(r.slice(390, 395), &[390, 391, 392, 393, 394]);
+    }
+
+    #[test]
+    fn eviction_is_monotone_and_idempotent() {
+        let mut r = RingVec::new();
+        for v in 0..100u64 {
+            r.push(v);
+        }
+        r.evict_to(40);
+        r.evict_to(10); // backwards: no-op
+        assert_eq!(r.first_index(), 40);
+        r.evict_to(40); // same boundary: no-op
+        assert_eq!(r.len(), 60);
+        r.evict_to(100); // evict everything retained
+        assert!(r.is_empty());
+        assert_eq!(r.next_index(), 100);
+        r.push(7);
+        assert_eq!(r.get(100), 7);
+    }
+
+    #[test]
+    fn bounded_stream_memory_stays_bounded() {
+        let mut r = RingVec::new();
+        let bound = 256usize;
+        for v in 0..100_000usize {
+            r.push(v);
+            let n = r.next_index();
+            if n > bound {
+                r.evict_to(n - bound);
+            }
+            // the backing allocation never holds more than ~2x the bound
+            assert!(r.buf.len() <= 2 * bound + 64, "buf grew to {}", r.buf.len());
+        }
+        assert_eq!(r.len(), bound);
+        assert_eq!(r.get(99_999), 99_999);
+    }
+
+    #[test]
+    fn set_and_to_vec() {
+        let mut r = RingVec::new();
+        for v in 0..10i64 {
+            r.push(v);
+        }
+        r.evict_to(5);
+        r.set(7, -1);
+        assert_eq!(r.to_vec(), vec![5, 6, -1, 8, 9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside retained range")]
+    fn slice_below_head_panics() {
+        let mut r = RingVec::new();
+        for v in 0..10u32 {
+            r.push(v);
+        }
+        r.evict_to(5);
+        let _ = r.slice(3, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot evict past the end")]
+    fn evict_past_end_panics() {
+        let mut r = RingVec::<u32>::new();
+        r.push(1);
+        r.evict_to(5);
+    }
+}

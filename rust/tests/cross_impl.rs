@@ -3,13 +3,14 @@
 //! and configuration — property-swept with the in-repo harness.
 
 use natsa::mp::parallel::{self, Partition};
+use natsa::mp::stampi::{Stampi, StampiConfig};
 use natsa::mp::{brute, scrimp, stomp, MpConfig};
 use natsa::natsa::anytime::{run_anytime, Budget};
 use natsa::natsa::pu::{PuDatapath, PuDesign};
 use natsa::natsa::{NatsaConfig, NatsaEngine, Order};
 use natsa::prop::{check, Rng};
 use natsa::timeseries::generator::{generate, generate_with_event, Pattern, PlantedEvent};
-use natsa::timeseries::sliding_stats;
+use natsa::timeseries::{num_windows, sliding_stats};
 
 #[test]
 fn all_engines_agree_on_all_patterns() {
@@ -165,6 +166,63 @@ fn large_window_small_series_edge() {
         .profile;
     assert!(a.max_abs_diff(&b) < 1e-8);
     assert!(a.max_abs_diff(&c) < 1e-8);
+}
+
+#[test]
+fn prop_streaming_matches_batch_on_every_prefix() {
+    // The STAMPI differential property: append samples one at a time and
+    // the live profile must equal an independent batch run (the brute
+    // oracle) over the full prefix, at every single step.
+    check("stampi-vs-brute-every-prefix", 6, |rng: &mut Rng| {
+        let n = rng.range(60, 140);
+        let m = rng.range(4, 13);
+        if n < 5 * m {
+            return;
+        }
+        let t: Vec<f64> = rng.gauss_vec(n);
+        let mut eng = Stampi::new(StampiConfig::new(m)).unwrap();
+        let excl = eng.exclusion();
+        for (s, &x) in t.iter().enumerate() {
+            eng.append(x);
+            let len = s + 1;
+            if num_windows(len, m) <= excl {
+                continue; // no admissible pair yet — batch would reject
+            }
+            let want = brute::matrix_profile(&t[..len], MpConfig::new(m)).unwrap();
+            let got = eng.profile();
+            assert_eq!(got.len(), want.len(), "prefix {len}");
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-6, "n={n} m={m} prefix {len}: diff {d}");
+        }
+    });
+}
+
+#[test]
+fn streaming_matches_every_batch_engine_on_larger_series() {
+    // One bigger cross-check against the production batch engines (the
+    // per-prefix property above uses small n to keep the oracle cheap).
+    let t = generate::<f64>(Pattern::EcgLike, 1500, 19);
+    let m = 48;
+    let cfg = MpConfig::new(m);
+    let mut eng = Stampi::new(StampiConfig::new(m)).unwrap();
+    for &x in &t {
+        eng.append(x);
+    }
+    let streamed = eng.profile();
+    for (name, mp) in [
+        ("scrimp", scrimp::matrix_profile(&t, cfg).unwrap()),
+        ("stomp", stomp::matrix_profile(&t, cfg).unwrap()),
+        (
+            "natsa",
+            NatsaEngine::new(NatsaConfig::default())
+                .compute(&t, m)
+                .unwrap()
+                .profile,
+        ),
+    ] {
+        let d = streamed.max_abs_diff(&mp);
+        assert!(d < 1e-6, "stampi vs {name}: {d}");
+    }
 }
 
 #[test]
