@@ -1,116 +1,207 @@
-//! Hot-path microbenchmarks — the L3 perf-pass instrument.
+//! Hot-path benchmark — the acceptance instrument for the unified
+//! diagonal kernel (PR 2) and the L3 perf-pass trajectory record.
 //!
-//! Covers the kernels the profile shows hottest: the SCRIMP diagonal walk
-//! (cells/s), the per-chunk batch size, the stats precompute, scheduling,
-//! and profile reduction.  EXPERIMENTS.md §Perf records these before and
-//! after each optimization step.
+//! Headline measurement: full single-thread matrix profile at n = 65536,
+//! m = 256 (f64) through three paths sharing one statistics precompute:
+//!
+//! * `scalar`      — the retained pre-kernel per-cell loop
+//!   (`kernel::scalar_diagonal`): the baseline every speedup is quoted
+//!   against (the acceptance bar is >= 2x for `kernel-band`);
+//! * `kernel-diag` — the per-diagonal delta-form path scheduled/anytime
+//!   execution uses (`kernel::compute_diagonal`);
+//! * `kernel-band` — the BAND-lane SIMD path sequential sweeps use
+//!   (`kernel::compute_triangle`).
+//!
+//! Pass `--json` to (re)write `BENCH_hotpath.json` with the measured
+//! rows so future PRs have a trajectory to compare against.
 
 use natsa::benchmark::{black_box, fmt_time, time_budget, Table};
-use natsa::mp::scrimp::compute_diagonal;
-use natsa::mp::{MatrixProfile, MpConfig, WorkStats};
+use natsa::mp::kernel::scalar_diagonal;
+use natsa::mp::{kernel, scrimp, MatrixProfile, MpConfig, WorkStats};
 use natsa::natsa::scheduler;
 use natsa::timeseries::generator::{generate, Pattern};
 use natsa::timeseries::sliding_stats;
 use natsa::timeseries::stats::sliding_stats_exact;
+use natsa::Real;
+
+/// One measured engine row at the headline shape.
+struct Row {
+    engine: &'static str,
+    dtype: &'static str,
+    ns_per_cell: f64,
+    speedup_vs_scalar: f64,
+}
+
+/// A per-diagonal kernel entry point (`compute_diagonal` / `scalar_diagonal`).
+type DiagFn<T> = fn(
+    &[T],
+    &natsa::timeseries::WindowStats<T>,
+    usize,
+    &mut MatrixProfile<T>,
+    &mut WorkStats,
+);
+
+fn profile_cells(n: usize, m: usize) -> u64 {
+    let cfg = MpConfig::new(m);
+    natsa::mp::total_cells(n - m + 1, cfg.exclusion())
+}
+
+/// Compile-time SIMD class, recorded so trajectory rows from
+/// target-cpu=native and x86-64-v3 builds stay distinguishable
+/// (matches the vocabulary of the committed BENCH_hotpath.json rows).
+fn isa() -> &'static str {
+    if cfg!(target_feature = "avx512f") {
+        "avx512"
+    } else if cfg!(target_feature = "avx2") {
+        "avx2"
+    } else if cfg!(target_arch = "x86_64") {
+        "sse2"
+    } else {
+        std::env::consts::ARCH
+    }
+}
+
+/// Full single-thread profile through a per-diagonal function.
+fn diag_profile<T: Real>(t: &[T], m: usize, f: DiagFn<T>) -> MatrixProfile<T> {
+    let cfg = MpConfig::new(m);
+    let nw = cfg.validate(t.len()).unwrap();
+    let excl = cfg.exclusion();
+    let st = sliding_stats(t, m);
+    let mut mp = MatrixProfile::new_inf(nw, m, excl);
+    let mut work = WorkStats::default();
+    for d in excl..nw {
+        f(t, &st, d, &mut mp, &mut work);
+    }
+    mp.sqrt_in_place();
+    mp
+}
+
+/// Full single-thread profile through the banded sequential driver —
+/// exactly `scrimp::matrix_profile` (SCRIMP sequential order IS the
+/// band path), so the bench measures the engine users actually call.
+fn band_profile<T: Real>(t: &[T], m: usize) -> MatrixProfile<T> {
+    scrimp::matrix_profile(t, MpConfig::new(m)).unwrap()
+}
+
+/// Record one engine row: table line + JSON entry; returns ns/cell.
+fn push_row(
+    table: &mut Table,
+    rows: &mut Vec<Row>,
+    engine: &'static str,
+    dtype: &'static str,
+    median: f64,
+    cells: u64,
+    scalar_ns: Option<f64>,
+) -> f64 {
+    let ns = median / cells as f64 * 1e9;
+    let speedup = scalar_ns.map_or(1.0, |s| s / ns);
+    table.row(&[
+        engine.to_string(),
+        dtype.to_string(),
+        fmt_time(median),
+        format!("{ns:.3}"),
+        format!("{speedup:.2}x"),
+    ]);
+    rows.push(Row { engine, dtype, ns_per_cell: ns, speedup_vs_scalar: speedup });
+    ns
+}
 
 fn main() {
-    let n = 262_144;
+    let json = std::env::args().any(|a| a == "--json");
+    let n = 65_536;
     let m = 256;
+    let cells = profile_cells(n, m);
     let t64 = generate::<f64>(Pattern::RandomWalk, n, 9);
     let t32: Vec<f32> = t64.iter().map(|&x| x as f32).collect();
-    let st64 = sliding_stats(&t64, m);
-    let st32 = sliding_stats(&t32, m);
-    let nw = st64.len();
-    let excl = m / 4;
 
-    // 1. diagonal walk throughput (the inner loop of everything)
-    let mut table = Table::new(&["kernel", "median", "cells/s"]);
-    {
-        let mut mp = MatrixProfile::<f64>::new_inf(nw, m, excl);
-        let mut work = WorkStats::default();
-        let d = excl; // longest diagonal: nw - excl cells
-        let cells = (nw - d) as u64;
-        let s = time_budget(2.0, || {
-            compute_diagonal(&t64, &st64, d, &mut mp, &mut work);
-            black_box(&mp);
-        });
-        table.row(&[
-            "diag walk f64".into(),
-            fmt_time(s.median),
-            format!("{:.2e}", s.throughput(cells)),
-        ]);
-    }
-    {
-        let mut mp = MatrixProfile::<f32>::new_inf(nw, m, excl);
-        let mut work = WorkStats::default();
-        let d = excl;
-        let cells = (nw - d) as u64;
-        let s = time_budget(2.0, || {
-            compute_diagonal(&t32, &st32, d, &mut mp, &mut work);
-            black_box(&mp);
-        });
-        table.row(&[
-            "diag walk f32".into(),
-            fmt_time(s.median),
-            format!("{:.2e}", s.throughput(cells)),
-        ]);
-    }
+    let mut table = Table::new(&["engine", "dtype", "median", "ns/cell", "vs scalar"]);
+    let mut rows: Vec<Row> = Vec::new();
 
-    // 2. stats precompute: cumsum vs exact
-    {
-        let s = time_budget(1.0, || {
-            black_box(sliding_stats(&t64, m));
-        });
-        table.row(&[
-            "stats cumsum".into(),
-            fmt_time(s.median),
-            format!("{:.2e}", s.throughput(n as u64)),
-        ]);
-        let s = time_budget(1.0, || {
-            black_box(sliding_stats_exact(&t64[..32_768], m));
-        });
-        table.row(&[
-            "stats exact (32K)".into(),
-            fmt_time(s.median),
-            format!("{:.2e}", s.throughput(32_768)),
-        ]);
-    }
+    // f64: the acceptance shape.
+    let s = time_budget(4.0, || {
+        black_box(diag_profile(&t64, m, scalar_diagonal));
+    });
+    let scalar_ns = push_row(&mut table, &mut rows, "scalar", "f64", s.median, cells, None);
+    let s = time_budget(4.0, || {
+        black_box(diag_profile(&t64, m, kernel::compute_diagonal));
+    });
+    push_row(&mut table, &mut rows, "kernel-diag", "f64", s.median, cells, Some(scalar_ns));
+    let s = time_budget(4.0, || {
+        black_box(band_profile(&t64, m));
+    });
+    push_row(&mut table, &mut rows, "kernel-band", "f64", s.median, cells, Some(scalar_ns));
 
-    // 3. scheduling + reduction
-    {
-        let s = time_budget(1.0, || {
-            black_box(scheduler::schedule(nw, excl, 48));
-        });
-        table.row(&[
-            "schedule 48 PUs".into(),
-            fmt_time(s.median),
-            format!("{:.2e}", s.throughput((nw - excl) as u64)),
-        ]);
-        let mut a = MatrixProfile::<f64>::new_inf(nw, m, excl);
-        let b = MatrixProfile::<f64>::new_inf(nw, m, excl);
-        let s = time_budget(1.0, || {
-            a.merge(black_box(&b));
-        });
-        table.row(&[
-            "profile merge".into(),
-            fmt_time(s.median),
-            format!("{:.2e}", s.throughput(nw as u64)),
-        ]);
-    }
+    // f32: the SP design point.
+    let s = time_budget(3.0, || {
+        black_box(diag_profile(&t32, m, scalar_diagonal));
+    });
+    let scalar32 = push_row(&mut table, &mut rows, "scalar", "f32", s.median, cells, None);
+    let s = time_budget(3.0, || {
+        black_box(band_profile(&t32, m));
+    });
+    push_row(&mut table, &mut rows, "kernel-band", "f32", s.median, cells, Some(scalar32));
 
-    // 4. end-to-end small profile (scrimp serial), the workhorse number
-    {
-        let small = generate::<f64>(Pattern::RandomWalk, 32_768, 10);
-        let cfg = MpConfig::new(m);
-        let cells = natsa::mp::total_cells(32_768 - m + 1, excl);
-        let s = time_budget(2.0, || {
-            black_box(natsa::mp::scrimp::matrix_profile(&small, cfg).unwrap());
-        });
-        table.row(&[
-            "scrimp 32K e2e".into(),
-            fmt_time(s.median),
-            format!("{:.2e}", s.throughput(cells)),
-        ]);
+    table.print(&format!("unified kernel vs scalar (n={n}, m={m}, single thread)"));
+
+    // Supporting micro rows: precompute, scheduling, reduction.
+    let mut aux = Table::new(&["kernel", "median", "items/s"]);
+    let nw = n - m + 1;
+    let s = time_budget(1.0, || {
+        black_box(sliding_stats(&t64, m));
+    });
+    aux.row(&[
+        "stats cumsum".into(),
+        fmt_time(s.median),
+        format!("{:.2e}", s.throughput(n as u64)),
+    ]);
+    let s = time_budget(1.0, || {
+        black_box(sliding_stats_exact(&t64[..32_768], m));
+    });
+    aux.row(&[
+        "stats exact (32K)".into(),
+        fmt_time(s.median),
+        format!("{:.2e}", s.throughput(32_768)),
+    ]);
+    let s = time_budget(1.0, || {
+        black_box(scheduler::schedule(nw, m / 4, 48));
+    });
+    aux.row(&[
+        "schedule 48 PUs".into(),
+        fmt_time(s.median),
+        format!("{:.2e}", s.throughput((nw - m / 4) as u64)),
+    ]);
+    let mut a = MatrixProfile::<f64>::new_inf(nw, m, m / 4);
+    let b = MatrixProfile::<f64>::new_inf(nw, m, m / 4);
+    let s = time_budget(1.0, || {
+        a.merge(black_box(&b));
+    });
+    aux.row(&[
+        "profile merge".into(),
+        fmt_time(s.median),
+        format!("{:.2e}", s.throughput(nw as u64)),
+    ]);
+    aux.print("supporting hot paths");
+
+    if json {
+        let mut out = String::from(
+            "{\n  \"bench\": \"hotpath\",\n  \
+             \"harness\": \"cargo bench --bench hotpath -- --json\",\n  \
+             \"entries\": [\n",
+        );
+        for (k, r) in rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"n\": {n}, \"m\": {m}, \"dtype\": \"{}\", \"engine\": \"{}\", \
+                 \"isa\": \"{}\", \"ns_per_cell\": {:.3}, \"speedup_vs_scalar\": {:.2}}}{}\n",
+                r.dtype,
+                r.engine,
+                isa(),
+                r.ns_per_cell,
+                r.speedup_vs_scalar,
+                if k + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write("BENCH_hotpath.json", &out).expect("write BENCH_hotpath.json");
+        println!("\nwrote BENCH_hotpath.json");
     }
-    table.print("hot paths (n=256K series context, m=256)");
 }

@@ -1,0 +1,513 @@
+//! The unified diagonal kernel — the single hot path shared by every
+//! exact engine (SCRIMP, STOMP, the parallel fleet, the NATSA PU
+//! datapath, and anytime execution).
+//!
+//! # Performance architecture (the paper's vectFact pipeline in software)
+//!
+//! NATSA's speedup story (Figs. 7–9) rests on a dense, vectorized
+//! Eq. 2 / Eq. 1 diagonal pipeline.  This module is that pipeline as one
+//! reusable software kernel with two entry points that compute
+//! **bit-identical** cell values:
+//!
+//! * [`compute_band`] — the SIMD autobahn.  A tile of [`BAND`] adjacent
+//!   diagonals advances row by row: the Eq. 2 product deltas are applied
+//!   element-wise across the lanes (each lane runs its own serial
+//!   dot-product accumulation — the one unavoidable serial step of
+//!   Alg. 1, here amortized across [`BAND`] independent chains), the
+//!   z-normalized *squared* distances land in a flat lane buffer via the
+//!   folded Eq. 1 factors (`d² = 2m − q·za_i·za_j + zb_i·zb_j`, 3 mul +
+//!   2 add, branch-free; see [`crate::timeseries::WindowStats`]), and the
+//!   buffer is merged into the profile in two *separate* branchless
+//!   min/argmin passes: the column direction is a conditional-move vector
+//!   merge into the contiguous slice `P[j0..j0+BAND]`, and the row
+//!   direction collapses into a min-tree reduction with one update of
+//!   `P[i]` per row (the argmin lane scan runs only on the rare
+//!   improvement).  No interleaved two-sided `update`, no per-cell
+//!   branches on the hot path.
+//! * [`compute_diagonal`] — the same cell math for a *single* diagonal,
+//!   the work unit the NATSA scheduler assigns to PUs and the anytime /
+//!   random-order engines interleave.  It exists because scheduled work
+//!   lists are not contiguous; sequential sweeps should prefer
+//!   [`compute_triangle`], which rides the band path.
+//!
+//! Both paths evaluate every cell with the exact same expressions in the
+//! exact same association order (the delta-form recurrence
+//! `q += t[i+m-1]·t[j+m-1] − t[i-1]·t[j-1]`, then the folded Eq. 1), so
+//! any mix of engines, thread counts, schedules, and visiting orders
+//! yields bit-identical profile *values*; neighbor *indices* can differ
+//! only on exact distance ties (e.g. all-constant input).  The
+//! conformance suite in `tests/cross_impl.rs` pins this down.
+//!
+//! [`WorkStats`] are charged in closed form per diagonal or per band —
+//! never per cell.
+//!
+//! PERF CONTRACT: the profile accumulates **squared** z-norm distances —
+//! min is monotone under sqrt, so the per-cell `sqrt` of Eq. 1 is
+//! deferred to one [`MatrixProfile::sqrt_in_place`] per window after all
+//! diagonals merge (the same trick SCAMP uses via correlations).  Every
+//! caller must finalize.
+//!
+//! [`scalar_diagonal`] retains the pre-kernel per-cell hot loop (one
+//! `znorm_sqdist` + branchy two-sided `update` + per-cell stats per
+//! cell — the shape the old STOMP row walk and PU datapath ran) as the
+//! differential-test oracle and the baseline `benches/hotpath.rs`
+//! measures speedup against.  The third pre-kernel loop, SCRIMP's
+//! chunked buffer pipeline, was deleted outright: its three extra
+//! buffer passes cost more than the blocked prefix saved, and the
+//! delta-form chain of [`compute_diagonal`] outruns it on the same
+//! scattered work units.
+
+use crate::mp::{znorm_sqdist, MatrixProfile, WorkStats};
+use crate::timeseries::WindowStats;
+use crate::Real;
+
+/// Lanes per band: adjacent diagonals advanced together by
+/// [`compute_band`].  8 f64 lanes fill an AVX-512 register (two AVX2
+/// registers) while the lane state (`q`, `d²`) stays register-resident.
+pub const BAND: usize = 8;
+
+/// O(m) seed dot product of a diagonal: `sum_k t[k] * t[d+k]` (the DPU
+/// step, Alg. 1 line 7).  Four sub-accumulators keep the reduction off
+/// the FP-add latency chain.
+#[inline]
+pub fn seed_dot<T: Real>(t: &[T], d: usize, m: usize) -> T {
+    let a = &t[..m];
+    let b = &t[d..d + m];
+    let (mut s0, mut s1, mut s2, mut s3) = (T::zero(), T::zero(), T::zero(), T::zero());
+    let mut k = 0;
+    while k + 4 <= m {
+        s0 = s0 + a[k] * b[k];
+        s1 = s1 + a[k + 1] * b[k + 1];
+        s2 = s2 + a[k + 2] * b[k + 2];
+        s3 = s3 + a[k + 3] * b[k + 3];
+        k += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while k < m {
+        s = s + a[k] * b[k];
+        k += 1;
+    }
+    s
+}
+
+/// Walk the whole admissible triangle `excl..nw` in ascending diagonal
+/// order: whole [`BAND`]-wide tiles through [`compute_band`], the
+/// remainder through [`compute_diagonal`].  This is the driver sequential
+/// engines (SCRIMP sequential order, STOMP) share.
+pub fn compute_triangle<T: Real>(
+    t: &[T],
+    st: &WindowStats<T>,
+    excl: usize,
+    mp: &mut MatrixProfile<T>,
+    work: &mut WorkStats,
+) {
+    let nw = st.len();
+    let mut d = excl;
+    while d + BAND <= nw {
+        compute_band(t, st, d, mp, work);
+        d += BAND;
+    }
+    while d < nw {
+        compute_diagonal(t, st, d, mp, work);
+        d += 1;
+    }
+}
+
+/// Advance the band of diagonals `d0..d0+BAND` (requires
+/// `d0 + BAND <= nw`) row by row, updating the profile in place.
+///
+/// See the module docs for the pipeline; see [`compute_diagonal`] for the
+/// identical-value single-diagonal form.  PERF CONTRACT: squared
+/// distances (callers finalize with [`MatrixProfile::sqrt_in_place`]).
+pub fn compute_band<T: Real>(
+    t: &[T],
+    st: &WindowStats<T>,
+    d0: usize,
+    mp: &mut MatrixProfile<T>,
+    work: &mut WorkStats,
+) {
+    let m = st.m;
+    let nw = st.len();
+    assert!(d0 + BAND <= nw, "band {d0}..{} out of range (nw={nw})", d0 + BAND);
+
+    // Closed-form accounting: one charge per band, never per cell.
+    let band_cells: u64 = (0..BAND).map(|dd| (nw - d0 - dd) as u64).sum();
+    work.cells += band_cells;
+    work.updates += 2 * band_cells;
+    work.diagonals += BAND as u64;
+    work.first_dots += BAND as u64;
+
+    // Per-lane seed dot products (the DPU step, once per diagonal).
+    let mut q = [T::zero(); BAND];
+    for (dd, qd) in q.iter_mut().enumerate() {
+        *qd = seed_dot(t, d0 + dd, m);
+    }
+
+    let two_m = T::of_f64(2.0 * m as f64);
+    let zero = T::zero();
+    let mut d2 = [T::zero(); BAND];
+    // Rows where all BAND lanes are active (the shortest lane's length).
+    let len_short = nw - (d0 + BAND - 1);
+    for i in 0..len_short {
+        let j0 = i + d0;
+        // Eq. 2 delta, element-wise across the lanes; each lane is its
+        // own serial accumulation chain (row 0 uses the seeds directly).
+        if i > 0 {
+            let hi = t[i + m - 1];
+            let lo = t[i - 1];
+            let tj_hi: &[T; BAND] = (&t[j0 + m - 1..j0 + m - 1 + BAND]).try_into().unwrap();
+            let tj_lo: &[T; BAND] = (&t[j0 - 1..j0 - 1 + BAND]).try_into().unwrap();
+            for dd in 0..BAND {
+                q[dd] = q[dd] + (hi * tj_hi[dd] - lo * tj_lo[dd]);
+            }
+        }
+        // Folded Eq. 1 into the lane buffer + column-direction branchless
+        // merge (conditional moves into the contiguous profile slice).
+        let za_i = st.za[i];
+        let zb_i = st.zb[i];
+        let za_j: &[T; BAND] = (&st.za[j0..j0 + BAND]).try_into().unwrap();
+        let zb_j: &[T; BAND] = (&st.zb[j0..j0 + BAND]).try_into().unwrap();
+        {
+            let pc: &mut [T; BAND] = (&mut mp.p[j0..j0 + BAND]).try_into().unwrap();
+            let ic: &mut [i64; BAND] = (&mut mp.i[j0..j0 + BAND]).try_into().unwrap();
+            for dd in 0..BAND {
+                let v = (two_m - q[dd] * za_i * za_j[dd] + zb_i * zb_j[dd]).max(zero);
+                d2[dd] = v;
+                let take = v < pc[dd];
+                pc[dd] = if take { v } else { pc[dd] };
+                ic[dd] = if take { i as i64 } else { ic[dd] };
+            }
+        }
+        // Row-direction merge: branchless min tree, then one profile
+        // update per row; the argmin lane scan runs only on the rare
+        // improvement (first-equal lane = lowest diagonal = the same
+        // tie order as ascending per-diagonal processing).
+        let mut best = d2[0];
+        for &v in d2.iter().skip(1) {
+            best = if v < best { v } else { best };
+        }
+        if best < mp.p[i] {
+            let mut bdd = 0;
+            while d2[bdd] != best {
+                bdd += 1;
+            }
+            mp.p[i] = best;
+            mp.i[i] = (j0 + bdd) as i64;
+        }
+    }
+    // Ragged tail: lanes 0..BAND-1 outlive the shortest lane; finish each
+    // with the identical-value single-diagonal recurrence.
+    for dd in 0..BAND - 1 {
+        let d = d0 + dd;
+        let mut q_d = q[dd];
+        for i in len_short..nw - d {
+            let j = i + d;
+            q_d = q_d + (t[i + m - 1] * t[j + m - 1] - t[i - 1] * t[j - 1]);
+            let v = (two_m - q_d * st.za[i] * st.za[j] + st.zb[i] * st.zb[j]).max(zero);
+            mp.update(i, j, v);
+        }
+    }
+}
+
+/// Walk one diagonal `d` (cells `(i, i+d)` for `i = 0..nw-d`), updating
+/// the profile in place — the unit of work NATSA assigns to a PU and the
+/// loop body of scheduled, random-order, and anytime execution.
+///
+/// Cell values are bit-identical to [`compute_band`]'s: the same
+/// delta-form Eq. 2 chain (`q += hi·hj − lo·lj`, one dependent add per
+/// cell — half the chain latency of the classic `q − lo·lj + hi·hj`
+/// form) and the same folded Eq. 1 expression.  PERF CONTRACT: squared
+/// distances (callers finalize with [`MatrixProfile::sqrt_in_place`]).
+pub fn compute_diagonal<T: Real>(
+    t: &[T],
+    st: &WindowStats<T>,
+    d: usize,
+    mp: &mut MatrixProfile<T>,
+    work: &mut WorkStats,
+) {
+    let m = st.m;
+    let nw = st.len();
+    debug_assert!(d < nw, "diagonal {d} out of range (nw={nw})");
+    let len = nw - d;
+
+    // Closed-form accounting: one charge per diagonal, never per cell.
+    work.cells += len as u64;
+    work.updates += 2 * len as u64;
+    work.diagonals += 1;
+    work.first_dots += 1;
+
+    let two_m = T::of_f64(2.0 * m as f64);
+    let zero = T::zero();
+    let mut q = seed_dot(t, d, m);
+    let v0 = (two_m - q * st.za[0] * st.za[d] + st.zb[0] * st.zb[d]).max(zero);
+    mp.update(0, d, v0);
+    for i in 1..len {
+        let j = i + d;
+        q = q + (t[i + m - 1] * t[j + m - 1] - t[i - 1] * t[j - 1]);
+        let v = (two_m - q * st.za[i] * st.za[j] + st.zb[i] * st.zb[j]).max(zero);
+        mp.update(i, j, v);
+    }
+}
+
+/// The pre-kernel per-cell hot loop, retained as the differential oracle
+/// and the perf baseline: one `znorm_sqdist` + branchy two-sided
+/// [`MatrixProfile::update`] + per-cell [`WorkStats`] charges, with the
+/// classic two-dependent-add dot-product chain.  Same PERF CONTRACT
+/// (squared distances) as [`compute_diagonal`].
+pub fn scalar_diagonal<T: Real>(
+    t: &[T],
+    st: &WindowStats<T>,
+    d: usize,
+    mp: &mut MatrixProfile<T>,
+    work: &mut WorkStats,
+) {
+    let m = st.m;
+    let nw = st.len();
+    debug_assert!(d < nw);
+    let len = nw - d;
+    let mut q = (0..m).map(|k| t[k] * t[d + k]).sum::<T>();
+    let d0 = znorm_sqdist(q, m, st.mu[0], st.inv_msig[0], st.mu[d], st.inv_msig[d]);
+    mp.update(0, d, d0);
+    work.first_dots += 1;
+    work.diagonals += 1;
+    work.cells += 1;
+    work.updates += 2;
+    for i in 1..len {
+        let j = i + d;
+        q = q - t[i - 1] * t[j - 1] + t[i + m - 1] * t[j + m - 1];
+        let dist = znorm_sqdist(q, m, st.mu[i], st.inv_msig[i], st.mu[j], st.inv_msig[j]);
+        mp.update(i, j, dist);
+        work.cells += 1;
+        work.updates += 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mp::{brute, MpConfig};
+    use crate::prop::{check, Rng};
+    use crate::timeseries::sliding_stats;
+
+    /// Full profile through the banded sequential driver.
+    fn banded_profile<T: Real>(t: &[T], cfg: MpConfig) -> (MatrixProfile<T>, WorkStats) {
+        let nw = cfg.validate(t.len()).unwrap();
+        let excl = cfg.exclusion();
+        let st = sliding_stats(t, cfg.m);
+        let mut mp = MatrixProfile::new_inf(nw, cfg.m, excl);
+        let mut work = WorkStats::default();
+        compute_triangle(t, &st, excl, &mut mp, &mut work);
+        mp.sqrt_in_place();
+        (mp, work)
+    }
+
+    type DiagFn<T> = fn(&[T], &WindowStats<T>, usize, &mut MatrixProfile<T>, &mut WorkStats);
+
+    /// Full profile through a per-diagonal function (kernel or scalar).
+    fn diag_profile<T: Real>(
+        t: &[T],
+        cfg: MpConfig,
+        f: DiagFn<T>,
+    ) -> (MatrixProfile<T>, WorkStats) {
+        let nw = cfg.validate(t.len()).unwrap();
+        let excl = cfg.exclusion();
+        let st = sliding_stats(t, cfg.m);
+        let mut mp = MatrixProfile::new_inf(nw, cfg.m, excl);
+        let mut work = WorkStats::default();
+        for d in excl..nw {
+            f(t, &st, d, &mut mp, &mut work);
+        }
+        mp.sqrt_in_place();
+        (mp, work)
+    }
+
+    #[test]
+    fn prop_band_and_diagonal_bit_identical_f64() {
+        // the tentpole invariant: the SIMD band path and the scheduled
+        // per-diagonal path compute the same cells to the bit
+        check("band-vs-diag-bits", 10, |rng: &mut Rng| {
+            let n = rng.range(60, 2000);
+            let m = rng.range(4, 65);
+            if n < 5 * m {
+                return;
+            }
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let cfg = MpConfig::new(m);
+            let (band, wb) = banded_profile(&t, cfg);
+            let (diag, wd) = diag_profile(&t, cfg, compute_diagonal);
+            assert_eq!(
+                band.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                diag.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "n={n} m={m}"
+            );
+            assert_eq!(band.i, diag.i, "n={n} m={m}");
+            assert_eq!(wb, wd, "closed-form accounting must not depend on tiling");
+        });
+    }
+
+    #[test]
+    fn prop_kernel_vs_brute_and_scalar_f64() {
+        // The satellite differential property: kernel vs the brute oracle
+        // AND vs the retained scalar reference, m in {4, 16, 64}, n to 2k.
+        check("kernel-vs-brute-scalar-f64", 6, |rng: &mut Rng| {
+            for m in [4usize, 16, 64] {
+                let n = rng.range(5 * m.max(16), 2000);
+                let t: Vec<f64> = rng.gauss_vec(n);
+                let cfg = MpConfig::new(m);
+                let (got, wk) = banded_profile(&t, cfg);
+                let want = brute::matrix_profile(&t, cfg).unwrap();
+                assert!(
+                    got.max_abs_diff(&want) < 1e-8,
+                    "m={m} n={n} vs brute: {}",
+                    got.max_abs_diff(&want)
+                );
+                let (sca, ws) = diag_profile(&t, cfg, scalar_diagonal);
+                assert!(
+                    got.max_abs_diff(&sca) < 1e-8,
+                    "m={m} n={n} vs scalar: {}",
+                    got.max_abs_diff(&sca)
+                );
+                // closed-form accounting must equal the per-cell counts
+                assert_eq!(wk, ws, "m={m} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_kernel_vs_brute_and_scalar_f32() {
+        check("kernel-vs-brute-scalar-f32", 4, |rng: &mut Rng| {
+            for m in [4usize, 16, 64] {
+                let n = rng.range(5 * m.max(16), 2000);
+                let t: Vec<f32> = rng.gauss_vec(n).iter().map(|&x| x as f32).collect();
+                let cfg = MpConfig::new(m);
+                let (got, _) = banded_profile(&t, cfg);
+                let want = brute::matrix_profile(&t, cfg).unwrap();
+                assert!(
+                    got.max_abs_diff(&want) < 2e-2,
+                    "m={m} n={n} vs brute: {}",
+                    got.max_abs_diff(&want)
+                );
+                let (sca, _) = diag_profile(&t, cfg, scalar_diagonal);
+                assert!(
+                    got.max_abs_diff(&sca) < 2e-2,
+                    "m={m} n={n} vs scalar: {}",
+                    got.max_abs_diff(&sca)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn band_seam_lengths_agree_with_brute() {
+        // window counts straddling BAND multiples exercise every driver
+        // fallback (whole bands, partial remainder, no band at all)
+        let mut rng = Rng::new(61);
+        let m = 8;
+        for n in (12..46).chain([
+            2 * m + 8 * BAND,
+            2 * m + 8 * BAND + 1,
+            2 * m + 8 * BAND + BAND - 1,
+        ]) {
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let cfg = MpConfig::with_excl(m, 2);
+            let (got, _) = banded_profile(&t, cfg);
+            let (diag, _) = diag_profile(&t, cfg, compute_diagonal);
+            assert!(got.max_abs_diff(&diag) == 0.0, "n={n}");
+            assert_eq!(got.i, diag.i, "n={n}");
+            let want = brute::matrix_profile(&t, cfg).unwrap();
+            assert!(got.max_abs_diff(&want) < 1e-7, "n={n}");
+        }
+    }
+
+    #[test]
+    fn all_constant_series_degenerates_to_sqrt_2m() {
+        // every window constant: za = zb = 0, so every distance must be
+        // exactly sqrt(2m) by the degeneracy convention (inv_msig edge);
+        // indices may differ between paths (every cell ties) but values
+        // must not
+        for m in [4usize, 16, 64] {
+            let t = vec![3.25f64; 6 * m + 8 * BAND];
+            let cfg = MpConfig::new(m);
+            let (got, _) = banded_profile(&t, cfg);
+            let expect = (2.0 * m as f64).sqrt();
+            assert!(got.p.iter().all(|&d| (d - expect).abs() < 1e-12), "m={m}");
+            let (diag, _) = diag_profile(&t, cfg, compute_diagonal);
+            assert!(got.max_abs_diff(&diag) == 0.0, "m={m}");
+            let (sca, _) = diag_profile(&t, cfg, scalar_diagonal);
+            assert!(got.max_abs_diff(&sca) < 1e-12, "m={m}");
+        }
+    }
+
+    #[test]
+    fn constant_window_inside_noise_matches_scalar() {
+        // a flat plateau long enough to make some (not all) windows
+        // constant: the za = zb = 0 rows must mix correctly with live
+        // ones.  NOTE: the brute oracle z-normalizes constant windows to
+        // zeros — a different degeneracy convention from the engines'
+        // corr = 0 => d² = 2m — so plateau inputs are only comparable
+        // within the engine family.
+        let mut rng = Rng::new(62);
+        let m = 16;
+        let mut t: Vec<f64> = rng.gauss_vec(700);
+        for x in t[200..200 + 3 * m].iter_mut() {
+            *x = 1.5;
+        }
+        let cfg = MpConfig::new(m);
+        let (got, _) = banded_profile(&t, cfg);
+        let (diag, _) = diag_profile(&t, cfg, compute_diagonal);
+        assert!(got.max_abs_diff(&diag) == 0.0);
+        let (sca, _) = diag_profile(&t, cfg, scalar_diagonal);
+        assert!(got.max_abs_diff(&sca) < 1e-9, "{}", got.max_abs_diff(&sca));
+        assert!(got.p.iter().all(|d| d.is_finite()));
+    }
+
+    #[test]
+    fn seed_dot_matches_naive() {
+        let mut rng = Rng::new(63);
+        let t: Vec<f64> = rng.gauss_vec(200);
+        for (d, m) in [(5usize, 7usize), (9, 16), (50, 33), (1, 4)] {
+            let naive = (0..m).map(|k| t[k] * t[d + k]).sum::<f64>();
+            assert!((seed_dot(&t, d, m) - naive).abs() < 1e-10, "d={d} m={m}");
+        }
+    }
+
+    #[test]
+    fn small_exclusion_overlapping_directions_match_scalar() {
+        // excl << BAND: row and column targets interleave densely; the
+        // two-pass merges must still produce the exact two-sided min
+        let mut rng = Rng::new(64);
+        let t: Vec<f64> = rng.gauss_vec(900);
+        let cfg = MpConfig::with_excl(8, 2);
+        let (got, _) = banded_profile(&t, cfg);
+        let (sca, _) = diag_profile(&t, cfg, scalar_diagonal);
+        assert!(got.max_abs_diff(&sca) < 1e-9);
+        for (k, &j) in got.i.iter().enumerate() {
+            assert!(j >= 0 && (k as i64 - j).unsigned_abs() >= 2);
+        }
+    }
+
+    #[test]
+    fn shuffled_diagonal_order_is_bit_stable() {
+        // scheduled execution visits diagonals in arbitrary order; values
+        // must not depend on it
+        let mut rng = Rng::new(65);
+        let t: Vec<f64> = rng.gauss_vec(600);
+        let cfg = MpConfig::new(12);
+        let nw = cfg.validate(t.len()).unwrap();
+        let excl = cfg.exclusion();
+        let st = sliding_stats(&t, 12);
+        let mut fwd = MatrixProfile::new_inf(nw, 12, excl);
+        let mut rev = MatrixProfile::new_inf(nw, 12, excl);
+        let mut w = WorkStats::default();
+        for d in excl..nw {
+            compute_diagonal(&t, &st, d, &mut fwd, &mut w);
+        }
+        for d in (excl..nw).rev() {
+            compute_diagonal(&t, &st, d, &mut rev, &mut w);
+        }
+        fwd.sqrt_in_place();
+        rev.sqrt_in_place();
+        assert!(fwd.max_abs_diff(&rev) == 0.0);
+        assert_eq!(fwd.i, rev.i);
+    }
+}

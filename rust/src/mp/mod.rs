@@ -6,11 +6,16 @@
 //! zone, and `I[i]` is that neighbor's index.
 //!
 //! Implementations (all exact, all checked against each other):
+//! * [`kernel`] — the unified tiled diagonal kernel: the single SIMD-
+//!   friendly hot path every exact batch engine executes (tile →
+//!   distance buffer → two branchless merge passes).
 //! * [`brute`] — textbook O(n²·m) with explicit z-normalization; the
 //!   independent oracle (deliberately does *not* use Eq. 1).
-//! * [`stomp`]  — row-streaming O(n²) incremental dot products (STOMP [44]).
-//! * [`scrimp`] — the paper's baseline: diagonal-order SCRIMP (Alg. 1),
-//!   serial and chunk-"vectorized".
+//! * [`stomp`]  — STOMP [44], its Eq. 2 row recurrence re-expressed as
+//!   per-diagonal kernel walks in descending order (deliberately the
+//!   opposite schedule from SCRIMP — see the module docs).
+//! * [`scrimp`] — the paper's baseline: diagonal-order SCRIMP (Alg. 1)
+//!   driving the kernel serially, with pluggable diagonal order.
 //! * [`parallel`] — multi-threaded SCRIMP with per-thread private profiles,
 //!   the software analogue of NATSA's PU fleet.
 //! * [`prescrimp`] — the approximate SCRIMP++ preprocessing phase.
@@ -20,6 +25,7 @@
 //!   suppression (the downstream-user API).
 
 pub mod brute;
+pub mod kernel;
 pub mod parallel;
 pub mod prescrimp;
 pub mod scrimp;
@@ -110,7 +116,7 @@ impl<T: Real> MatrixProfile<T> {
 
     /// Replace every finite profile value with its square root — the
     /// deferred Eq. 1 finalization for engines that accumulate squared
-    /// distances (see `scrimp::compute_diagonal`'s PERF CONTRACT).
+    /// distances (see `kernel::compute_diagonal`'s PERF CONTRACT).
     pub fn sqrt_in_place(&mut self) {
         for v in self.p.iter_mut() {
             if v.is_finite() {
@@ -172,7 +178,7 @@ impl MpConfig {
     }
 }
 
-/// Squared Eq. 1 distance (sqrt deferred — see `scrimp::compute_diagonal`).
+/// Squared Eq. 1 distance (sqrt deferred — see `kernel::compute_diagonal`).
 #[inline(always)]
 pub fn znorm_sqdist<T: Real>(q: T, m: usize, mu_i: T, inv_i: T, mu_j: T, inv_j: T) -> T {
     let mf = T::of_f64(m as f64);

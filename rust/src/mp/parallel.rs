@@ -10,7 +10,7 @@
 //! split (load-imbalanced: diagonal lengths vary) against NATSA's
 //! balanced pair scheme from [`crate::natsa::scheduler`].
 
-use crate::mp::scrimp::compute_diagonal;
+use crate::mp::kernel::compute_diagonal;
 use crate::mp::{MatrixProfile, MpConfig, WorkStats};
 use crate::timeseries::sliding_stats;
 use crate::Real;

@@ -1,26 +1,27 @@
 //! SCRIMP [112] — the paper's CPU baseline (Algorithm 1), diagonal order.
 //!
-//! The distance matrix is walked along diagonals; within a diagonal the
-//! dot product is advanced incrementally (Eq. 2), and the inner loop is
-//! *chunked* exactly like the paper's vectorized formulation: a batch of
-//! `CHUNK` product deltas is computed element-wise (auto-vectorizable),
-//! prefix-summed (the one serial step, Alg. 1 lines 16-17), and the batch
-//! of distances + profile updates follows element-wise.
+//! The distance matrix is walked along diagonals through the unified
+//! kernel ([`crate::mp::kernel`]): sequential order rides the
+//! [`crate::mp::kernel::compute_band`] SIMD path via
+//! [`crate::mp::kernel::compute_triangle`]; random order interleaves
+//! single diagonals through [`compute_diagonal`].  Both produce
+//! bit-identical profile values (the kernel's core invariant), and the
+//! same kernel executes inside STOMP, the parallel fleet, the NATSA PU
+//! datapath, and anytime runs — one hot path everywhere.
 //!
 //! Diagonal order is pluggable ([`DiagOrder`]): `Sequential` enables the
 //! locality optimizations, `Random(seed)` preserves the anytime property
 //! (Section 2.2) — interrupting a random-order run yields a uniform
 //! partial exploration.
 
-use crate::mp::{znorm_sqdist, MatrixProfile, MpConfig, WorkStats};
+use crate::mp::{MatrixProfile, MpConfig, WorkStats};
 use crate::prop::Rng;
-use crate::timeseries::{sliding_stats, WindowStats};
+use crate::timeseries::sliding_stats;
 use crate::Real;
 
-/// Inner-loop batch length — the software stand-in for the paper's AVX-512
-/// `vectFact` (Alg. 1 line 2).  64 elements keeps the delta/dist scratch in
-/// L1 while amortizing the serial prefix step.
-pub const CHUNK: usize = 64;
+/// The kernel's per-diagonal entry point, re-exported where the paper's
+/// Algorithm 1 loop body historically lived.
+pub use crate::mp::kernel::compute_diagonal;
 
 /// Diagonal visiting order (Section 2.2 / 4.2 discussion).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,186 +49,26 @@ pub fn with_stats<T: Real>(
     let mut mp = MatrixProfile::new_inf(nw, cfg.m, excl);
     let mut work = WorkStats::default();
 
-    let mut diags: Vec<usize> = (excl..nw).collect();
-    if let DiagOrder::Random(seed) = order {
-        Rng::new(seed).shuffle(&mut diags);
+    match order {
+        DiagOrder::Sequential => {
+            crate::mp::kernel::compute_triangle(t, &st, excl, &mut mp, &mut work);
+        }
+        DiagOrder::Random(seed) => {
+            let mut diags: Vec<usize> = (excl..nw).collect();
+            Rng::new(seed).shuffle(&mut diags);
+            for d in diags {
+                compute_diagonal(t, &st, d, &mut mp, &mut work);
+            }
+        }
     }
-    for d in diags {
-        compute_diagonal(t, &st, d, &mut mp, &mut work);
-    }
-    mp.sqrt_in_place();
+    mp.sqrt_in_place(); // diagonals accumulate squared distances
     Ok((mp, work))
-}
-
-/// Walk one diagonal `d` (cells `(i, i+d)` for `i = 0..nw-d`), updating the
-/// profile in place.  This is the unit of work NATSA assigns to a PU and
-/// the paper's per-thread loop body (Alg. 1 lines 5-23).
-///
-/// PERF CONTRACT: the profile accumulates **squared** z-norm distances —
-/// min is monotone under sqrt, so the per-cell `sqrt` of Eq. 1 is deferred
-/// to one [`MatrixProfile::sqrt_in_place`] per window after all diagonals
-/// merge (the same trick SCAMP [113] uses via correlations).  Every caller
-/// must finalize; `with_stats` does it for the serial path.
-pub fn compute_diagonal<T: Real>(
-    t: &[T],
-    st: &WindowStats<T>,
-    d: usize,
-    mp: &mut MatrixProfile<T>,
-    work: &mut WorkStats,
-) {
-    let m = st.m;
-    let nw = st.len();
-    debug_assert!(d < nw, "diagonal {d} out of range (nw={nw})");
-    let len = nw - d;
-
-    // First cell: direct O(m) dot product (the DPU step, Alg. 1 line 7).
-    let mut q = (0..m).map(|k| t[k] * t[d + k]).sum::<T>();
-    let d0 = znorm_sqdist(q, m, st.mu[0], st.inv_msig[0], st.mu[d], st.inv_msig[d]);
-    mp.update(0, d, d0);
-    work.first_dots += 1;
-    work.diagonals += 1;
-    work.cells += 1;
-    work.updates += 2;
-
-    // Remaining cells in CHUNK batches (the vectorized loops of Alg. 1).
-    // Constants are hoisted out of the loop: `Real::of_f64` conversions
-    // per cell cost more than the FLOPs themselves (perf pass, see
-    // EXPERIMENTS.md §Perf).
-    let two_m = T::of_f64(2.0 * m as f64);
-    let zero = T::zero();
-    let mut deltas = [T::zero(); CHUNK];
-    let mut dists = [T::zero(); CHUNK];
-    let mut i = 1usize;
-    while i < len {
-        let c = CHUNK.min(len - i);
-        let j = i + d;
-        // 1) element-wise product deltas (lines 13-14) — slice views give
-        //    the compiler provable bounds, so this loop auto-vectorizes.
-        let lo_i = &t[i - 1..i - 1 + c];
-        let lo_j = &t[j - 1..j - 1 + c];
-        let hi_i = &t[i + m - 1..i + m - 1 + c];
-        let hi_j = &t[j + m - 1..j + m - 1 + c];
-        for k in 0..c {
-            deltas[k] = hi_i[k] * hi_j[k] - lo_i[k] * lo_j[k];
-        }
-        // 2) propagate q (lines 15-18): a blocked prefix sum.  The naive
-        //    chain serializes on FP-add latency (~4 cycles/cell); block
-        //    partial sums first, then LANES independent chains.
-        q = prefix_sum_blocked(&mut deltas[..c], q);
-        // 3) distances (lines 19-20) — branch-free, vectorizable, using
-        //    the folded factors from WindowStats: 3 mul + 2 add per cell.
-        let za_i = &st.za[i..i + c];
-        let za_j = &st.za[j..j + c];
-        let zb_i = &st.zb[i..i + c];
-        let zb_j = &st.zb[j..j + c];
-        for k in 0..c {
-            let d2 = two_m - deltas[k] * za_i[k] * za_j[k] + zb_i[k] * zb_j[k];
-            dists[k] = d2.max(zero); // squared: sqrt deferred
-        }
-        // 4) profile updates (lines 21-22) — branchy but rarely taken.
-        //    When the row and column ranges are disjoint (d >= c, true for
-        //    any chunk once the exclusion zone >= CHUNK), split the profile
-        //    into two slices so the compares run without bounds checks.
-        if d >= c {
-            let (pl, pr) = mp.p.split_at_mut(j);
-            let (il, ir) = mp.i.split_at_mut(j);
-            let prow = &mut pl[i..i + c];
-            let irow = &mut il[i..i + c];
-            let pcol = &mut pr[..c];
-            let icol = &mut ir[..c];
-            for k in 0..c {
-                let dist = dists[k];
-                if dist < prow[k] {
-                    prow[k] = dist;
-                    irow[k] = (j + k) as i64;
-                }
-                if dist < pcol[k] {
-                    pcol[k] = dist;
-                    icol[k] = (i + k) as i64;
-                }
-            }
-        } else {
-            for (k, &dist) in dists.iter().take(c).enumerate() {
-                mp.update(i + k, j + k, dist);
-            }
-        }
-        work.cells += c as u64;
-        work.updates += 2 * c as u64;
-        i += c;
-    }
-}
-
-/// Blocked inclusive prefix sum: `xs[k] <- q0 + xs[0] + .. + xs[k]`;
-/// returns the final running value.
-///
-/// Splitting the chunk into `LANES` blocks turns one latency-bound FP-add
-/// chain of length `c` into (a) a vectorizable block-sum pass and (b)
-/// `LANES` shorter chains with independent starting offsets, recovering
-/// ~2-3x on the serial step of Algorithm 1 (lines 16-17).
-#[inline]
-fn prefix_sum_blocked<T: Real>(xs: &mut [T], q0: T) -> T {
-    const LANES: usize = 4;
-    let c = xs.len();
-    let b = c / LANES;
-    if b < 8 {
-        // short tail: plain chain
-        let mut q = q0;
-        for x in xs.iter_mut() {
-            q = q + *x;
-            *x = q;
-        }
-        return q;
-    }
-    // (a) per-block totals, 4 sub-accumulators each so the reduction is
-    //     not one long FP-add dependency chain
-    let mut offs = [T::zero(); LANES];
-    for l in 0..LANES {
-        let blk = &xs[l * b..(l + 1) * b];
-        let (mut a0, mut a1, mut a2, mut a3) = (T::zero(), T::zero(), T::zero(), T::zero());
-        let mut k = 0;
-        while k + 4 <= b {
-            a0 = a0 + blk[k];
-            a1 = a1 + blk[k + 1];
-            a2 = a2 + blk[k + 2];
-            a3 = a3 + blk[k + 3];
-            k += 4;
-        }
-        let mut s = (a0 + a1) + (a2 + a3);
-        while k < b {
-            s = s + blk[k];
-            k += 1;
-        }
-        offs[l] = s;
-    }
-    // (b) exclusive block offsets
-    let mut run = q0;
-    for off in offs.iter_mut() {
-        let total = *off;
-        *off = run;
-        run = run + total;
-    }
-    // (c) LANES chains advanced in lock-step: 4 independent FP adds in
-    //     flight per iteration instead of one
-    let mut qs = offs;
-    for k in 0..b {
-        for (l, ql) in qs.iter_mut().enumerate() {
-            let idx = l * b + k;
-            *ql = *ql + xs[idx];
-            xs[idx] = *ql;
-        }
-    }
-    // tail (c % LANES cells) continues the last chain
-    let mut q = xs[LANES * b - 1];
-    for x in xs[LANES * b..].iter_mut() {
-        q = q + *x;
-        *x = q;
-    }
-    q
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mp::kernel::BAND;
     use crate::mp::{brute, stomp, total_cells};
     use crate::prop::{check, Rng};
     use crate::timeseries::generator::{generate, generate_with_event, Pattern, PlantedEvent};
@@ -243,24 +84,32 @@ mod tests {
     }
 
     #[test]
-    fn matches_stomp_exactly_in_structure() {
+    fn matches_stomp_bit_for_bit() {
+        // scrimp (ascending band tiles) and stomp (descending single
+        // diagonals) schedule the kernel as differently as it allows;
+        // the kernel invariant says the profiles must still be
+        // identical to the bit, not merely close
         let mut rng = Rng::new(9);
         let t: Vec<f64> = rng.gauss_vec(350);
         let cfg = MpConfig::new(14);
         let a = matrix_profile(&t, cfg).unwrap();
         let b = stomp::matrix_profile(&t, cfg).unwrap();
-        assert!(a.max_abs_diff(&b) < 1e-9);
+        assert!(a.max_abs_diff(&b) == 0.0);
+        assert_eq!(a.i, b.i);
     }
 
     #[test]
     fn random_order_same_result() {
+        // sequential rides the band path, random the per-diagonal path;
+        // the kernel guarantees bit-identical values between them
         let mut rng = Rng::new(10);
         let t: Vec<f64> = rng.gauss_vec(300);
         let cfg = MpConfig::new(12);
-        let (seq, _) = with_stats(&t, cfg, DiagOrder::Sequential).unwrap();
-        let (rnd, _) = with_stats(&t, cfg, DiagOrder::Random(123)).unwrap();
-        assert!(seq.max_abs_diff(&rnd) < 1e-12);
+        let (seq, wseq) = with_stats(&t, cfg, DiagOrder::Sequential).unwrap();
+        let (rnd, wrnd) = with_stats(&t, cfg, DiagOrder::Random(123)).unwrap();
+        assert!(seq.max_abs_diff(&rnd) == 0.0);
         assert_eq!(seq.i, rnd.i);
+        assert_eq!(wseq, wrnd);
     }
 
     #[test]
@@ -310,13 +159,14 @@ mod tests {
     }
 
     #[test]
-    fn prop_chunk_boundary_interior_equivalence() {
-        // diagonal lengths straddling CHUNK multiples must all agree with
-        // brute force (catches off-by-ones at batch edges)
-        check("scrimp-chunk-edges", 6, |rng: &mut Rng| {
+    fn prop_band_boundary_interior_equivalence() {
+        // window counts straddling BAND multiples must all agree with
+        // brute force (catches off-by-ones at band seams and the
+        // partial-remainder driver fallback)
+        check("scrimp-band-edges", 3, |rng: &mut Rng| {
             let m = 8;
-            for extra in [0usize, 1, CHUNK - 1, CHUNK, CHUNK + 1] {
-                let n = 2 * m + CHUNK + extra + 16;
+            for extra in [0usize, 1, BAND - 1, BAND, BAND + 1] {
+                let n = 2 * m + 8 * BAND + extra + 16;
                 let t: Vec<f64> = rng.gauss_vec(n);
                 let cfg = MpConfig::new(m);
                 let got = matrix_profile(&t, cfg).unwrap();

@@ -1,16 +1,32 @@
-//! STOMP [44]: row-streaming exact matrix profile, O(n²) time, O(n) space.
+//! STOMP [44]: the exact O(n²)-time, O(n)-space incremental-dot-product
+//! profile, re-expressed over the unified diagonal kernel.
 //!
-//! The GPU-oriented predecessor of SCRIMP.  Row `i`'s dot products are
-//! derived from row `i-1`'s in O(1) per cell (the same Eq. 2 recurrence,
-//! applied row-wise instead of diagonal-wise).  Included as the second
-//! exact baseline the paper compares against (STOMP/GPU rows of Figs. 8-10)
-//! and as another cross-check on SCRIMP.
+//! STOMP's classic formulation streams *rows*: row `i`'s dot products are
+//! derived from row `i-1`'s in O(1) per cell.  But each cell `(i, j)`
+//! depends on `(i-1, j-1)` — the recurrence chains run **along
+//! diagonals** either way, and the set of Eq. 2 updates a row walk
+//! performs is cell-for-cell the set a diagonal walk performs.  This
+//! engine therefore executes the same chains through
+//! [`crate::mp::kernel::compute_diagonal`] (the per-cell row loop —
+//! branchy two-sided updates, per-cell stats, and a dead `j == 0` guard
+//! in its hot loop — is gone).
+//!
+//! Deliberately scheduled as *differently* from SCRIMP as the kernel
+//! allows: the single-diagonal form (not the band path) in **descending**
+//! diagonal order.  The kernel's core invariant says cell values are
+//! bit-identical under any mix of entry points and visiting orders, so
+//! the stomp↔scrimp equality tests pin that invariant against maximally
+//! divergent schedules — a real cross-check, not a comparison of one
+//! code path with itself.  (The pre-kernel row-walk's role as an
+//! *algorithmically* independent oracle is carried by [`crate::mp::brute`],
+//! which shares no Eq. 1/Eq. 2 code at all.)
 
-use crate::mp::{znorm_sqdist, MatrixProfile, MpConfig, WorkStats};
+use crate::mp::kernel::compute_diagonal;
+use crate::mp::{MatrixProfile, MpConfig, WorkStats};
 use crate::timeseries::sliding_stats;
 use crate::Real;
 
-/// Compute the matrix profile with row-streaming STOMP.
+/// Compute the matrix profile with STOMP (diagonal-order execution).
 pub fn matrix_profile<T: Real>(t: &[T], cfg: MpConfig) -> crate::Result<MatrixProfile<T>> {
     Ok(with_stats(t, cfg)?.0)
 }
@@ -26,41 +42,8 @@ pub fn with_stats<T: Real>(
     let st = sliding_stats(t, m);
     let mut mp = MatrixProfile::new_inf(nw, m, excl);
     let mut work = WorkStats::default();
-
-    // Row 0: direct dot products for all admissible columns.
-    let mut q_row: Vec<T> = vec![T::zero(); nw];
-    for j in excl..nw {
-        let q = (0..m).map(|k| t[k] * t[j + k]).sum::<T>();
-        q_row[j] = q;
-        let d = znorm_sqdist(q, m, st.mu[0], st.inv_msig[0], st.mu[j], st.inv_msig[j]);
-        mp.update(0, j, d);
-        work.cells += 1;
-        work.updates += 2;
-    }
-    work.first_dots += (nw - excl) as u64;
-    work.diagonals += 1; // row 0 counts once for accounting symmetry
-
-    // Rows 1..: q[i][j] = q[i-1][j-1] - t[i-1] t[j-1] + t[i+m-1] t[j+m-1].
-    // Only the upper triangle j >= i + excl is computed (symmetry handles
-    // the rest through the two-sided update).
-    for i in 1..nw {
-        // walk j downward so q_row[j-1] is still row i-1's value
-        let jlo = i + excl;
-        if jlo >= nw {
-            break;
-        }
-        for j in (jlo..nw).rev() {
-            let q = if j == 0 {
-                unreachable!()
-            } else {
-                q_row[j - 1] - t[i - 1] * t[j - 1] + t[i + m - 1] * t[j + m - 1]
-            };
-            q_row[j] = q;
-            let d = znorm_sqdist(q, m, st.mu[i], st.inv_msig[i], st.mu[j], st.inv_msig[j]);
-            mp.update(i, j, d);
-            work.cells += 1;
-            work.updates += 2;
-        }
+    for d in (excl..nw).rev() {
+        compute_diagonal(t, &st, d, &mut mp, &mut work);
     }
     mp.sqrt_in_place(); // cells accumulate squared distances
     Ok((mp, work))
@@ -69,7 +52,7 @@ pub fn with_stats<T: Real>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mp::brute;
+    use crate::mp::{brute, scrimp};
     use crate::prop::{check, Rng};
 
     #[test]
@@ -128,5 +111,18 @@ mod tests {
         let nw = 93;
         let excl = 2;
         assert_eq!(work.cells, crate::mp::total_cells(nw, excl));
+    }
+
+    #[test]
+    fn work_stats_identical_to_scrimp() {
+        // different tiling (descending single diagonals vs ascending band
+        // tiles), same closed-form accounting — a real invariant, since
+        // the two engines take different code paths through the kernel
+        let mut rng = Rng::new(8);
+        let t: Vec<f64> = rng.gauss_vec(300);
+        let cfg = MpConfig::new(12);
+        let (_, ws) = with_stats(&t, cfg).unwrap();
+        let (_, wk) = scrimp::with_stats(&t, cfg, scrimp::DiagOrder::Sequential).unwrap();
+        assert_eq!(ws, wk);
     }
 }

@@ -14,7 +14,7 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
-use crate::mp::scrimp::compute_diagonal;
+use crate::mp::kernel::compute_diagonal;
 use crate::mp::{total_cells, MatrixProfile, MpConfig, WorkStats};
 use crate::natsa::{scheduler, NatsaConfig, Order};
 use crate::timeseries::sliding_stats;

@@ -22,7 +22,7 @@ pub mod anytime;
 pub mod pu;
 pub mod scheduler;
 
-use crate::mp::scrimp::compute_diagonal;
+use crate::mp::kernel::compute_diagonal;
 use crate::mp::stampi::{Stampi, StampiConfig};
 use crate::mp::{MatrixProfile, MpConfig, WorkStats};
 use crate::timeseries::sliding_stats;

@@ -19,7 +19,8 @@
 //!    cycle and DRAM-traffic accounting consumed by the timing/energy
 //!    models in [`crate::sim::accel`] (gem5-Aladdin substitute).
 
-use crate::mp::{znorm_dist, MatrixProfile, WorkStats};
+use crate::mp::kernel;
+use crate::mp::{MatrixProfile, WorkStats};
 use crate::timeseries::WindowStats;
 use crate::Real;
 
@@ -168,69 +169,39 @@ impl<'a, T: Real> PuDatapath<'a, T> {
 
     /// Execute diagonal `d` against private profile `pp` following the six
     /// steps of Section 4.1.  Returns the stage trace and work stats.
+    ///
+    /// The arithmetic is [`kernel::compute_diagonal`] — the exact cell
+    /// math every other engine runs, so a PU-fleet profile is
+    /// bit-identical to a SCRIMP/STOMP one.  The stage occupancy is
+    /// charged in closed form: one DPU burst (steps 1-3: seed dot,
+    /// first distance, first update), then `lanes` cells per
+    /// DPUU/DCU/PUU cycle at II=1 over the pipelined remainder
+    /// (steps 4-6).
+    ///
+    /// PERF CONTRACT: `pp` accumulates **squared** distances; callers
+    /// finalize with one [`MatrixProfile::sqrt_in_place`] after all
+    /// diagonals merge.
     pub fn run_diagonal(&self, d: usize, pp: &mut MatrixProfile<T>) -> (PuTrace, WorkStats) {
         let m = self.st.m;
         let nw = self.st.len();
         let len = nw - d;
         let lanes = self.design.lanes as u64;
-        let mut trace = PuTrace::default();
         let mut work = WorkStats::default();
 
-        // Step 1 — DPU: first dot product (vectorized tree reduce).
-        let mut q = (0..m).map(|k| self.t[k] * self.t[d + k]).sum::<T>();
-        trace.dpu_cycles += (m as u64).div_ceil(lanes) + (lanes.trailing_zeros() as u64);
-        work.first_dots += 1;
-        work.diagonals += 1;
+        // Steps 1-6, functionally: the unified kernel (closed-form stats).
+        kernel::compute_diagonal(self.t, self.st, d, pp, &mut work);
 
-        // Step 2 — DCU: first distance.
-        let dist = znorm_dist(
-            q,
-            m,
-            self.st.mu[0],
-            self.st.inv_msig[0],
-            self.st.mu[d],
-            self.st.inv_msig[d],
-        );
-        trace.dcu_cycles += 1;
-
-        // Step 3 — PUU: first profile update (both directions).
-        pp.update(0, d, dist);
-        trace.puu_cycles += 1;
-        work.cells += 1;
-        work.updates += 2;
-
-        // Steps 4-6 — DPUU + DCU + PUU pipelined over remaining cells,
-        // `lanes` at a time.
-        let mut i = 1usize;
-        while i < len {
-            let c = (self.design.lanes).min(len - i);
-            for k in 0..c {
-                let ii = i + k;
-                let jj = d + ii;
-                // Step 4: DPUU incremental dot product (serial within the
-                // lane group in hardware via a carry chain; semantics are
-                // sequential regardless).
-                q = q - self.t[ii - 1] * self.t[jj - 1]
-                    + self.t[ii + m - 1] * self.t[jj + m - 1];
-                // Step 5: DCU distance.
-                let dist = znorm_dist(
-                    q,
-                    m,
-                    self.st.mu[ii],
-                    self.st.inv_msig[ii],
-                    self.st.mu[jj],
-                    self.st.inv_msig[jj],
-                );
-                // Step 6: PUU update.
-                pp.update(ii, jj, dist);
-            }
-            trace.dpuu_cycles += 1;
-            trace.dcu_cycles += 1;
-            trace.puu_cycles += 1;
-            work.cells += c as u64;
-            work.updates += 2 * c as u64;
-            i += c;
-        }
+        // Stage occupancy in closed form.  Step 1 (DPU): vectorized tree
+        // reduce over the m-point seed dot.  Steps 2-3 (DCU, PUU): one
+        // cycle each for the seed cell.  Steps 4-6 (DPUU->DCU->PUU):
+        // `lanes` cells per cycle at II=1 over the len-1 remaining cells.
+        let vec_groups = (len as u64 - 1).div_ceil(lanes);
+        let trace = PuTrace {
+            dpu_cycles: (m as u64).div_ceil(lanes) + (lanes.trailing_zeros() as u64),
+            dpuu_cycles: vec_groups,
+            dcu_cycles: 1 + vec_groups,
+            puu_cycles: 1 + vec_groups,
+        };
         (trace, work)
     }
 }
@@ -278,8 +249,11 @@ mod tests {
                 dp.run_diagonal(d, &mut via_pu);
                 scrimp::compute_diagonal(&t, &st, d, &mut via_scrimp, &mut w);
             }
-            via_scrimp.sqrt_in_place(); // scrimp path defers the sqrt
-            assert!(via_pu.max_abs_diff(&via_scrimp) < 1e-7);
+            // both paths run the unified kernel and defer the sqrt
+            via_pu.sqrt_in_place();
+            via_scrimp.sqrt_in_place();
+            assert!(via_pu.max_abs_diff(&via_scrimp) == 0.0);
+            assert_eq!(via_pu.i, via_scrimp.i);
         });
     }
 
@@ -295,8 +269,9 @@ mod tests {
         for d in cfg.exclusion()..nw {
             dp.run_diagonal(d, &mut mp);
         }
+        mp.sqrt_in_place(); // the datapath defers the sqrt like every engine
         let want = scrimp::matrix_profile(&t, cfg).unwrap();
-        assert!(mp.max_abs_diff(&want) < 1e-12);
+        assert!(mp.max_abs_diff(&want) == 0.0);
     }
 
     #[test]

@@ -98,14 +98,51 @@ fn pu_datapath_full_equivalence_with_engine() {
     for d in excl..nw {
         dp.run_diagonal(d, &mut via_pu);
     }
+    via_pu.sqrt_in_place(); // the datapath defers the sqrt like every engine
     let engine = NatsaEngine::new(NatsaConfig::default())
         .compute(&t, m)
         .unwrap();
-    // the PU datapath computes true distances per cell while the engine
-    // accumulates squared distances and sqrts once; near the planted
-    // exact motif (d ~ 0) sqrt amplifies the association residue:
-    // sqrt(1e-10) vs sqrt(0) = 1e-5.  Structural agreement is the check.
-    assert!(via_pu.max_abs_diff(&engine.profile) < 1e-4);
+    // datapath and engine both execute the unified tiled kernel, so the
+    // profile values must be identical to the bit, even at the planted
+    // exact motif where FP-association residue used to show
+    assert!(via_pu.max_abs_diff(&engine.profile) == 0.0);
+}
+
+#[test]
+fn unified_kernel_engines_bit_identical_and_track_brute() {
+    // The PR 2 conformance bar: SCRIMP (ascending band tiles), STOMP
+    // (descending single diagonals), the parallel fleet (per-thread
+    // partitions + min-merge), and the NATSA PU-fleet engine (scheduled
+    // work lists) all drive mp::kernel under maximally different
+    // schedules, so their profiles must agree to the BIT (values and
+    // neighbor indices), and all must sit within 1e-9 of the independent
+    // brute-force oracle (which shares no Eq. 1 / Eq. 2 code).
+    let mut rng = Rng::new(71);
+    let t: Vec<f64> = rng.gauss_vec(1500);
+    let m = 32;
+    let cfg = MpConfig::new(m);
+    let reference = scrimp::matrix_profile(&t, cfg).unwrap();
+    let engines: Vec<(&str, natsa::mp::MatrixProfile<f64>)> = vec![
+        ("stomp", stomp::matrix_profile(&t, cfg).unwrap()),
+        ("parallel", parallel::matrix_profile(&t, cfg, 4).unwrap()),
+        (
+            "natsa",
+            NatsaEngine::new(NatsaConfig::default())
+                .compute(&t, m)
+                .unwrap()
+                .profile,
+        ),
+    ];
+    let bits = |mp: &natsa::mp::MatrixProfile<f64>| -> Vec<u64> {
+        mp.p.iter().map(|x| x.to_bits()).collect()
+    };
+    for (name, mp) in &engines {
+        assert_eq!(bits(&reference), bits(mp), "{name} not bit-identical");
+        assert_eq!(reference.i, mp.i, "{name} neighbor indices diverge");
+    }
+    let oracle = brute::matrix_profile(&t, cfg).unwrap();
+    let d = reference.max_abs_diff(&oracle);
+    assert!(d < 1e-9, "kernel engines vs brute oracle: {d}");
 }
 
 #[test]
