@@ -4,11 +4,15 @@
 //! the asymptotic gap is O(n) vs O(n²) per sample, so the measured ratio
 //! lands orders of magnitude beyond the bar).
 
+use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use natsa::benchmark::{black_box, fmt_time, time_budget, Table};
+use natsa::coordinator::service::{AnalysisService, ServiceConfig};
 use natsa::mp::stampi::{Stampi, StampiConfig};
 use natsa::mp::{scrimp, MpConfig};
+use natsa::natsa::NatsaConfig;
 use natsa::timeseries::generator::{generate, Pattern};
 
 fn main() {
@@ -84,4 +88,58 @@ fn main() {
         speedup >= 10.0,
         "streaming append must beat per-sample batch recompute by >= 10x, got {speedup:.1}x"
     );
+
+    // (d) the deployment face: S concurrent streams pipelining appends
+    // through the sharded AnalysisService.  More shards = fewer streams
+    // per queue and a private worker pool per shard, so one stream's
+    // turn-waiting can't park the fleet (scaling is machine-dependent —
+    // this section reports, it does not gate).
+    let streams = 8usize;
+    let packets = 16usize;
+    let chunk = 256usize;
+    let mut shard_table = Table::new(&["shards", "wall", "samples/s"]);
+    for &shards in &[1usize, 2, 4] {
+        let svc = Arc::new(AnalysisService::<f64>::start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default()
+                .with_shards(shards)
+                .with_workers(2)
+                .with_queue_depth(8),
+        ));
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..streams)
+            .map(|c| {
+                let svc = svc.clone();
+                std::thread::spawn(move || {
+                    let t = generate::<f64>(Pattern::RandomWalk, packets * chunk, c as u64);
+                    let stream = svc.submit_stream(m, None).unwrap();
+                    let mut pending = VecDeque::new();
+                    for packet in t.chunks(chunk) {
+                        let _ = svc
+                            .append_stream_pipelined(stream, packet, &mut pending)
+                            .unwrap();
+                    }
+                    for id in pending {
+                        let _ = svc.wait(id);
+                    }
+                    svc.close_stream(stream);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total = (streams * packets * chunk) as f64;
+        shard_table.row(&[
+            format!("{shards}"),
+            fmt_time(wall),
+            format!("{:.0}", total / wall),
+        ]);
+        assert_eq!(svc.metrics().in_flight(), 0, "shard bench left jobs in flight");
+        assert_eq!(svc.retained_results(), 0, "shard bench leaked results");
+    }
+    shard_table.print(&format!(
+        "sharded service: {streams} concurrent streams x {packets} packets x {chunk} samples (m={m})"
+    ));
 }

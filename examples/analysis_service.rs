@@ -1,20 +1,25 @@
 //! Serving demo: many clients submitting time series analysis jobs to a
-//! bounded-queue NATSA service (the L3 coordinator as a deployable
-//! component: workers, backpressure, latency metrics).
+//! sharded bounded-queue NATSA service (the L3 coordinator as a
+//! deployable component: engine shards, workers, backpressure, per-shard
+//! + aggregate latency metrics).
 //!
 //! Run: `cargo run --release --example analysis_service`
 
 use std::sync::Arc;
 
-use natsa::coordinator::service::{AnalysisService, SubmitError};
+use natsa::coordinator::service::{shard_of, AnalysisService, ServiceConfig, SubmitError};
 use natsa::natsa::NatsaConfig;
 use natsa::timeseries::generator::{generate, Pattern};
 
 fn main() {
-    let service: Arc<AnalysisService<f64>> = Arc::new(AnalysisService::start(
+    // 2 shards x 2 workers: the 48-PU fleet is sliced 24 PUs per shard,
+    // batch jobs route least-loaded-first and spill when a queue fills.
+    let service: Arc<AnalysisService<f64>> = Arc::new(AnalysisService::start_sharded(
         NatsaConfig::default(),
-        /* workers */ 3,
-        /* queue depth */ 8,
+        ServiceConfig::default()
+            .with_shards(2)
+            .with_workers(2)
+            .with_queue_depth(8),
     ));
 
     // 4 client threads, 6 jobs each, mixed workloads.
@@ -32,7 +37,8 @@ fn main() {
                     };
                     let n = 2048 + 512 * ((c as usize + k as usize) % 4);
                     let series = Arc::new(generate::<f64>(pattern, n, 100 * c + k));
-                    // retry loop under backpressure
+                    // retry loop under backpressure (only hit when EVERY
+                    // shard's queue is full)
                     let id = loop {
                         match svc.submit(series.clone(), 64) {
                             Ok(id) => break id,
@@ -43,12 +49,13 @@ fn main() {
                             Err(e) => panic!("{e}"),
                         }
                     };
-                    let result = svc.wait(id);
+                    let result = svc.wait(id).expect("result consumed exactly once");
                     let profile = result.profile.expect("job must succeed");
                     let (disc, d) = profile.discord().unwrap();
                     println!(
-                        "client {c}: job {id} ({} n={n}) -> discord @{disc} d={d:.3} \
+                        "client {c}: job {id} (shard {}, {} n={n}) -> discord @{disc} d={d:.3} \
                          (wait {:.1}ms, exec {:.1}ms)",
+                        shard_of(id),
                         pattern.name(),
                         result.queue_wait_s * 1e3,
                         result.exec_s * 1e3,
@@ -68,6 +75,11 @@ fn main() {
         total_retries += rejected;
     }
     println!("\nall clients done: {total_done} jobs, {total_retries} backpressure retries");
-    println!("service metrics: {}", service.metrics().summary());
+    for k in 0..service.num_shards() {
+        println!("shard {k} metrics: {}", service.shard_metrics(k).summary());
+    }
+    println!("aggregate metrics: {}", service.metrics().summary());
     assert_eq!(total_done, 24);
+    assert_eq!(service.metrics().in_flight(), 0);
+    assert_eq!(service.retained_results(), 0, "every result was consumed");
 }

@@ -88,6 +88,7 @@ fn main() -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("append_stream: {e}"))?;
         let snap = service
             .wait(id)
+            .map_err(|e| anyhow::anyhow!("wait: {e}"))?
             .profile
             .map_err(|e| anyhow::anyhow!("append failed: {e}"))?;
         final_snapshot = Some(snap);

@@ -2,33 +2,63 @@
 //!
 //! Lock-free counters + a fixed-bucket latency histogram.  No external
 //! deps; everything is readable at any time from any thread.
+//!
+//! The sharded service keeps one `ServiceMetrics` **per shard** plus one
+//! **aggregate** instance ticked alongside (both lock-free, so the
+//! aggregate view needs no cross-shard reads); the invariant `aggregate
+//! counter == Σ shard counters` is pinned by the cross-shard stress test.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Service-level counters.
+/// Service-level counters (one instance per shard + one aggregate).
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
     pub jobs_submitted: AtomicU64,
     pub jobs_completed: AtomicU64,
     pub jobs_failed: AtomicU64,
     pub jobs_rejected: AtomicU64,
-    /// Sum of queue-wait nanoseconds (divide by completed for the mean).
+    /// Sum of queue-wait nanoseconds over every *finished* job — failed
+    /// ones included (divide by [`Self::finished`] for the mean).
     pub queue_wait_ns: AtomicU64,
-    /// Sum of execution nanoseconds.
+    /// Sum of execution nanoseconds over every finished job, failed
+    /// included.
     pub exec_ns: AtomicU64,
+    /// End-to-end latency of every finished job, failed included: error
+    /// load must show up in p50/p99, not hide behind `jobs_failed`
+    /// (failed jobs used to skip the histogram entirely, skewing tail
+    /// latency optimistic exactly when the service was unhealthy).
     pub latency: LatencyHistogram,
 }
 
 impl ServiceMetrics {
     pub fn in_flight(&self) -> u64 {
-        let submitted = self.jobs_submitted.load(Ordering::Relaxed);
-        let done = self.jobs_completed.load(Ordering::Relaxed)
-            + self.jobs_failed.load(Ordering::Relaxed);
-        submitted.saturating_sub(done)
+        self.jobs_submitted
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.finished())
+    }
+
+    /// Jobs that ran to an outcome: completed + failed.
+    pub fn finished(&self) -> u64 {
+        self.jobs_completed.load(Ordering::Relaxed) + self.jobs_failed.load(Ordering::Relaxed)
+    }
+
+    /// Record one finished job (worker-side hook; ticks outcome counter,
+    /// wait/exec sums and the latency histogram consistently).
+    pub fn record_outcome(&self, failed: bool, queue_wait_s: f64, exec_s: f64) {
+        if failed {
+            self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.exec_ns
+            .fetch_add((exec_s * 1e9) as u64, Ordering::Relaxed);
+        self.queue_wait_ns
+            .fetch_add((queue_wait_s * 1e9) as u64, Ordering::Relaxed);
+        self.latency.record(queue_wait_s + exec_s);
     }
 
     pub fn mean_exec_seconds(&self) -> f64 {
-        let done = self.jobs_completed.load(Ordering::Relaxed);
+        let done = self.finished();
         if done == 0 {
             0.0
         } else {
@@ -141,6 +171,26 @@ mod tests {
         m.jobs_failed.store(1, Ordering::Relaxed);
         assert_eq!(m.in_flight(), 2);
         assert!(m.summary().contains("5 submitted"));
+    }
+
+    #[test]
+    fn failed_jobs_are_visible_in_latency_and_exec() {
+        // regression: failed jobs used to tick only jobs_failed, leaving
+        // p50/p99 and the wait/exec sums blind to error load
+        let m = ServiceMetrics::default();
+        m.jobs_submitted.store(2, Ordering::Relaxed);
+        m.record_outcome(false, 0.001, 0.002);
+        m.record_outcome(true, 0.5, 0.25);
+        assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.jobs_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.finished(), 2);
+        assert_eq!(m.in_flight(), 0);
+        assert_eq!(m.latency.count(), 2, "failed job missing from histogram");
+        // the slow failure dominates the tail
+        assert!(m.latency.quantile(0.99) > 0.5, "{}", m.latency.quantile(0.99));
+        // mean exec averages over completed AND failed
+        let want = (0.002 + 0.25) / 2.0;
+        assert!((m.mean_exec_seconds() - want).abs() < 1e-4, "{}", m.mean_exec_seconds());
     }
 
     #[test]

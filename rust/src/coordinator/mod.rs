@@ -14,12 +14,16 @@
 //!
 //! Python is never involved: the kernels were lowered at build time.
 //!
-//! [`service`] wraps the engine in a multi-client job queue (submit /
-//! await, backpressure, metrics) — the "thin driver" face of the paper's
-//! accelerator for embedding in a larger system.  Alongside batch jobs it
+//! [`service`] wraps the engine in a **sharded** multi-client job queue
+//! (submit / await, backpressure, per-shard + aggregate metrics) — the
+//! "thin driver" face of the paper's accelerator for embedding in a
+//! larger system, scaled across engine shards the way the journal
+//! extension (arXiv 2206.00938) scales NATSA across accelerator stacks.
+//! Alongside batch jobs (routed least-loaded-first with spill-over) it
 //! hosts long-lived streaming sessions (`submit_stream` / `append_stream`
 //! / `snapshot_stream`) over the exact incremental engine in
-//! [`crate::mp::stampi`].
+//! [`crate::mp::stampi`]; each stream lives on one shard, so pipelined
+//! appends can never head-of-line block the rest of the fleet.
 
 pub mod metrics;
 pub mod service;

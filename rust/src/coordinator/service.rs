@@ -1,13 +1,30 @@
-//! The analysis service: a multi-client job queue over the NATSA engine.
+//! The analysis service: a sharded multi-client job queue over the NATSA
+//! engine.
 //!
-//! The accelerator itself computes one profile at a time per PU fleet;
-//! a deployment wraps it in a service that accepts jobs from many clients,
-//! applies backpressure when the queue is full, and reports metrics —
-//! the same role the vLLM router plays for model replicas.  Workers run
-//! the *native* functional engine by default (fast path); the PJRT engine
-//! is exercised by the end-to-end example and integration tests.
+//! The accelerator itself computes one profile at a time per PU fleet; a
+//! deployment wraps it in a service that accepts jobs from many clients,
+//! applies backpressure when queues fill, and reports metrics — the same
+//! role the vLLM router plays for model replicas.  The paper's flagship
+//! workloads (arrhythmia review, seismic monitoring) are *many concurrent
+//! streams*, and the journal extension of NATSA (arXiv 2206.00938) scales
+//! the design across multiple accelerator stacks; this service mirrors
+//! that shape with **engine shards**:
 //!
-//! Two job kinds share the queue:
+//! * each shard owns a bounded queue, a worker pool, and a slice of the
+//!   PU fleet ([`crate::natsa::NatsaConfig::shard_slice`] — 48 PUs over
+//!   4 shards model 4 stacks of 12 PUs; a non-dividing count deals the
+//!   remainder to the first shards, so no PU is lost);
+//! * a **stream** is routed to one shard for its whole life at
+//!   [`AnalysisService::submit_stream`] (hash of the stream id), so its
+//!   inherently-sequential appends can only ever park workers of *that*
+//!   shard — a client pipelining appends head-of-line blocks its own
+//!   shard at worst, never the fleet (the old single-queue service parked
+//!   every worker in turn-waiting);
+//! * **batch** jobs go to the least-loaded shard at submit time and spill
+//!   to the next shard when its queue is full, so they flow around a
+//!   stream storm instead of queueing behind it.
+//!
+//! Two job kinds share each shard's queue:
 //!
 //! * **batch** — [`AnalysisService::submit`]: one series, one profile.
 //! * **stream** — [`AnalysisService::submit_stream`] opens a long-lived
@@ -19,29 +36,139 @@
 //!   even across workers (per-stream sequence numbers), so a stream's
 //!   profile is always that of its samples in arrival order.
 //!
+//! Results are delivered through **per-job completion slots**: a slot is
+//! reserved at submit, filled by the worker, and consumed (freed) by
+//! [`AnalysisService::wait`] / [`AnalysisService::poll`].  Unconsumed
+//! results are *bounded* — at most [`ServiceConfig::result_cap`] finished
+//! results are retained per shard (oldest evicted first), and
+//! [`ServiceConfig::result_ttl`] expires them by age — so fire-and-forget
+//! clients can no longer leak the result map (previously every unconsumed
+//! [`JobResult`] lived forever).  Waiting on an id that was never
+//! enqueued, was already consumed, or was evicted returns
+//! [`WaitError::Unknown`] instead of blocking forever.
+//!
+//! [`ServiceMetrics`] are kept **per shard** plus one aggregate instance
+//! (ticked alongside, both lock-free): `metrics()` is the fleet view,
+//! `shard_metrics(k)` the per-shard one, and `aggregate == Σ shards`
+//! always reconciles.
+//!
 //! Design notes:
 //! * `std::sync::mpsc` + worker threads (tokio is not in the offline
 //!   vendor set; the queue semantics are identical for this shape),
-//! * bounded queue => `submit` fails fast with [`SubmitError::Backpressure`]
-//!   instead of buffering unboundedly,
+//! * bounded queues => `submit` fails fast with
+//!   [`SubmitError::Backpressure`] instead of buffering unboundedly,
 //! * each job may carry its own window length and precision is fixed by
 //!   the service's type parameter.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::mp::MatrixProfile;
 use crate::natsa::{NatsaConfig, NatsaEngine, StreamSession};
 use crate::Real;
 
+/// Shard index bits folded into every job/stream id (low bits), so id →
+/// shard routing is a mask, not a table.
+const SHARD_BITS: u32 = 8;
+
+/// Hard shard-count ceiling implied by [`SHARD_BITS`].
+pub const MAX_SHARDS: usize = 1 << SHARD_BITS;
+
+/// The shard that owns a job or stream id (valid for ids handed out by
+/// [`AnalysisService::submit`] / `append_stream` / `submit_stream`).
+pub fn shard_of(id: u64) -> usize {
+    (id & (MAX_SHARDS as u64 - 1)) as usize
+}
+
+/// Stream-id hash for shard routing (splitmix64 finalizer: cheap, well
+/// mixed, stable — a stream keeps its shard for life).
+fn route_hash(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deployment shape of the service: how many shards, how big each one is,
+/// and how long unconsumed results may live.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Engine shards (clamped to 1..=[`MAX_SHARDS`]).  Streams hash to a
+    /// shard; batch jobs go least-loaded-first.
+    pub shards: usize,
+    /// Worker threads per shard (>= 1).  A stream's pipelined appends can
+    /// park at most this many workers in turn-waiting — and only on the
+    /// stream's own shard.
+    pub workers_per_shard: usize,
+    /// Bounded queue depth per shard.
+    pub queue_depth: usize,
+    /// Most finished-but-unconsumed results retained per shard; beyond
+    /// it, oldest results are evicted (their ids then report
+    /// [`WaitError::Unknown`]).  Fire-and-forget clients should read
+    /// state via [`AnalysisService::snapshot_stream`] instead.
+    pub result_cap: usize,
+    /// Optional age bound on unconsumed results.
+    pub result_ttl: Option<Duration>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            shards: 1,
+            workers_per_shard: 2,
+            queue_depth: 16,
+            result_cap: 1024,
+            result_ttl: None,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    pub fn with_workers(mut self, workers_per_shard: usize) -> Self {
+        self.workers_per_shard = workers_per_shard;
+        self
+    }
+
+    pub fn with_queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    pub fn with_result_cap(mut self, cap: usize) -> Self {
+        self.result_cap = cap;
+        self
+    }
+
+    pub fn with_result_ttl(mut self, ttl: Duration) -> Self {
+        self.result_ttl = Some(ttl);
+        self
+    }
+
+    fn normalized(mut self) -> Self {
+        self.shards = self.shards.clamp(1, MAX_SHARDS);
+        self.workers_per_shard = self.workers_per_shard.max(1);
+        self.queue_depth = self.queue_depth.max(1);
+        self.result_cap = self.result_cap.max(1);
+        self
+    }
+}
+
 /// A submitted analysis job.
 struct Job<T> {
     id: u64,
     payload: JobPayload<T>,
-    submitted: std::time::Instant,
+    submitted: Instant,
+    /// The completion slot reserved at submit time; the worker fills it.
+    slot: Arc<JobSlot<T>>,
 }
 
 /// What a job asks for.
@@ -66,7 +193,8 @@ pub struct JobResult<T> {
 /// Why a submission was rejected.
 #[derive(Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    /// Queue full — caller should retry later (backpressure).
+    /// Queue full — caller should retry later (backpressure).  For batch
+    /// jobs this means *every* shard's queue was full.
     Backpressure,
     /// Service is shutting down.
     Closed,
@@ -83,6 +211,107 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Closed => write!(f, "service closed"),
             SubmitError::UnknownStream => write!(f, "unknown or closed stream"),
             SubmitError::Invalid(why) => write!(f, "invalid stream config: {why}"),
+        }
+    }
+}
+
+/// Why [`AnalysisService::wait`] / `wait_timeout` did not return a result.
+#[derive(Debug, PartialEq, Eq)]
+pub enum WaitError {
+    /// The id was never enqueued (e.g. the submit was rejected), its
+    /// result was already consumed by an earlier `wait`/`poll`, or the
+    /// unconsumed result aged out of the bounded retention
+    /// ([`ServiceConfig::result_cap`] / [`ServiceConfig::result_ttl`]).
+    /// The old service blocked forever on every one of these.
+    Unknown,
+    /// The deadline of [`AnalysisService::wait_timeout`] passed first;
+    /// the job is still in flight and can be waited on again.
+    Timeout,
+}
+
+impl std::fmt::Display for WaitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WaitError::Unknown => write!(f, "unknown job id (never enqueued, consumed, or evicted)"),
+            WaitError::Timeout => write!(f, "timed out waiting for job"),
+        }
+    }
+}
+
+/// Per-job completion slot: reserved at submit, filled once by a worker,
+/// consumed exactly once by `wait`/`poll`.
+struct JobSlot<T> {
+    state: Mutex<SlotState<T>>,
+    cv: Condvar,
+}
+
+enum SlotState<T> {
+    Pending,
+    Done(JobResult<T>),
+    Consumed,
+}
+
+impl<T> JobSlot<T> {
+    fn new() -> Arc<Self> {
+        Arc::new(JobSlot { state: Mutex::new(SlotState::Pending), cv: Condvar::new() })
+    }
+
+    /// Worker-side: publish the result and wake every waiter.
+    fn fill(&self, result: JobResult<T>) {
+        let mut state = self.state.lock().unwrap();
+        *state = SlotState::Done(result);
+        self.cv.notify_all();
+    }
+}
+
+/// One shard's slot registry: every live slot (pending + finished) plus
+/// the finished-but-unconsumed ids in completion order, so retention can
+/// be bounded by count and by age.
+struct SlotStore<T> {
+    map: HashMap<u64, Arc<JobSlot<T>>>,
+    /// Finished ids in completion order (may contain ids since consumed;
+    /// those are skipped during eviction).
+    done: VecDeque<(u64, Instant)>,
+    /// Finished-and-still-retained results (the number the cap bounds).
+    retained: usize,
+}
+
+impl<T> SlotStore<T> {
+    fn new() -> Self {
+        SlotStore { map: HashMap::new(), done: VecDeque::new(), retained: 0 }
+    }
+
+    /// Drop finished results beyond `cap` (oldest first) or older than
+    /// `ttl`.  Pending jobs are never evicted.
+    fn evict(&mut self, cap: usize, ttl: Option<Duration>) {
+        while let Some(&(id, at)) = self.done.front() {
+            if !self.map.contains_key(&id) {
+                // consumed by wait/poll already: stale bookkeeping
+                self.done.pop_front();
+                continue;
+            }
+            let over_cap = self.retained > cap;
+            let expired = ttl.is_some_and(|limit| at.elapsed() >= limit);
+            if over_cap || expired {
+                self.done.pop_front();
+                self.map.remove(&id);
+                self.retained = self.retained.saturating_sub(1);
+            } else {
+                break;
+            }
+        }
+        // An old-but-unevictable result at the front would otherwise
+        // shield every stale (consumed) entry behind it forever; compact
+        // so the bookkeeping stays O(retained), amortized O(1) per job.
+        if self.done.len() > 2 * self.retained + 16 {
+            self.done.retain(|&(id, _)| self.map.contains_key(&id));
+        }
+    }
+
+    /// Consume (remove) `id`'s slot after its result was taken.
+    fn consumed(&mut self, id: u64) {
+        if self.map.remove(&id).is_some() {
+            self.retained = self.retained.saturating_sub(1);
         }
     }
 }
@@ -105,97 +334,152 @@ struct StreamEntry<T> {
     submit_seq: Mutex<u64>,
 }
 
-struct Shared<T> {
-    results: Mutex<HashMap<u64, JobResult<T>>>,
-    cv: Condvar,
-    metrics: ServiceMetrics,
+/// One engine shard: queue-fed workers, its own streams, slots, metrics.
+struct Shard<T> {
+    slots: Mutex<SlotStore<T>>,
     streams: Mutex<HashMap<u64, Arc<StreamEntry<T>>>>,
+    metrics: ServiceMetrics,
 }
 
-/// Multi-worker analysis service over the functional NATSA engine.
+/// Sharded multi-worker analysis service over the functional NATSA engine.
 pub struct AnalysisService<T: Real> {
-    tx: Option<SyncSender<Job<T>>>,
-    shared: Arc<Shared<T>>,
+    /// Per-shard bounded queues (taken on shutdown).
+    txs: Vec<Option<SyncSender<Job<T>>>>,
+    shards: Vec<Arc<Shard<T>>>,
+    aggregate: Arc<ServiceMetrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    next_id: AtomicU64,
-    next_stream_id: AtomicU64,
-    config: NatsaConfig,
+    next_job_seq: AtomicU64,
+    next_stream_seq: AtomicU64,
+    /// Rotating tie-breaker for least-loaded batch routing.
+    rr: AtomicU64,
+    /// Shard k's slice of the engine configuration (remainder PUs are
+    /// dealt to the first shards, so the slices sum to the whole fleet).
+    shard_configs: Vec<NatsaConfig>,
+    svc: ServiceConfig,
 }
 
 impl<T: Real> AnalysisService<T> {
-    /// Start `workers` worker threads with a bounded queue of `depth`.
+    /// Start a single-shard service: `workers` worker threads over one
+    /// bounded queue of `depth` (the pre-sharding shape; see
+    /// [`Self::start_sharded`] for multi-shard deployments).
     pub fn start(config: NatsaConfig, workers: usize, depth: usize) -> Self {
-        let (tx, rx) = sync_channel::<Job<T>>(depth);
-        let rx = Arc::new(Mutex::new(rx));
-        let shared = Arc::new(Shared {
-            results: Mutex::new(HashMap::new()),
-            cv: Condvar::new(),
-            metrics: ServiceMetrics::default(),
-            streams: Mutex::new(HashMap::new()),
-        });
-        let mut handles = Vec::new();
-        for _ in 0..workers.max(1) {
-            let rx = rx.clone();
-            let shared = shared.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(rx, shared, config);
-            }));
+        Self::start_sharded(
+            config,
+            ServiceConfig::default()
+                .with_shards(1)
+                .with_workers(workers.max(1))
+                .with_queue_depth(depth),
+        )
+    }
+
+    /// Start the sharded service.  `config` describes the *whole* PU
+    /// fleet; shard `k` runs `config.shard_slice(svc.shards, k)`, so the
+    /// shard fleets together still sum to the configured one.
+    pub fn start_sharded(config: NatsaConfig, svc: ServiceConfig) -> Self {
+        let svc = svc.normalized();
+        let shard_configs: Vec<NatsaConfig> = (0..svc.shards)
+            .map(|k| config.shard_slice(svc.shards, k))
+            .collect();
+        let aggregate = Arc::new(ServiceMetrics::default());
+        let mut txs = Vec::with_capacity(svc.shards);
+        let mut shards = Vec::with_capacity(svc.shards);
+        let mut workers = Vec::with_capacity(svc.shards * svc.workers_per_shard);
+        for &shard_config in &shard_configs {
+            let (tx, rx) = sync_channel::<Job<T>>(svc.queue_depth);
+            let rx = Arc::new(Mutex::new(rx));
+            let shard = Arc::new(Shard {
+                slots: Mutex::new(SlotStore::new()),
+                streams: Mutex::new(HashMap::new()),
+                metrics: ServiceMetrics::default(),
+            });
+            for _ in 0..svc.workers_per_shard {
+                let rx = rx.clone();
+                let shard = shard.clone();
+                let aggregate = aggregate.clone();
+                workers.push(std::thread::spawn(move || {
+                    worker_loop(rx, shard, aggregate, shard_config, svc);
+                }));
+            }
+            txs.push(Some(tx));
+            shards.push(shard);
         }
         AnalysisService {
-            tx: Some(tx),
-            shared,
-            workers: handles,
-            next_id: AtomicU64::new(1),
-            next_stream_id: AtomicU64::new(1),
-            config,
+            txs,
+            shards,
+            aggregate,
+            workers,
+            next_job_seq: AtomicU64::new(1),
+            next_stream_seq: AtomicU64::new(1),
+            rr: AtomicU64::new(0),
+            shard_configs,
+            svc,
         }
     }
 
-    /// Submit a batch job; fails fast under backpressure.
+    /// Submit a batch job to the least-loaded shard, spilling to the next
+    /// shard when a queue is full; fails fast with
+    /// [`SubmitError::Backpressure`] only when *every* shard is full.
     pub fn submit(&self, series: Arc<Vec<T>>, m: usize) -> Result<u64, SubmitError> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.enqueue(Job {
-            id,
-            payload: JobPayload::Batch { series, m },
-            submitted: std::time::Instant::now(),
-        })
+        let n = self.shards.len();
+        let start = (self.rr.fetch_add(1, Ordering::Relaxed) % n as u64) as usize;
+        let mut order: Vec<usize> = (0..n).map(|k| (start + k) % n).collect();
+        // cached keys: each shard's load is snapshotted once, so the
+        // comparator stays a total order even while workers tick the
+        // atomics; stable sort keeps the rotated order among equal loads
+        order.sort_by_cached_key(|&k| self.shards[k].metrics.in_flight());
+        for &k in &order {
+            match self.try_enqueue(k, JobPayload::Batch { series: series.clone(), m }) {
+                Ok(id) => return Ok(id),
+                Err(SubmitError::Backpressure) => continue, // spill to next shard
+                Err(e) => return Err(e),
+            }
+        }
+        self.shards[order[0]]
+            .metrics
+            .jobs_rejected
+            .fetch_add(1, Ordering::Relaxed);
+        self.aggregate.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+        Err(SubmitError::Backpressure)
     }
 
     /// Open a streaming session with window `m` (and an optional retained
     /// history bound in samples).  Returns the stream id to append to.
+    /// The stream is routed to one shard for its whole life (hash of the
+    /// id), so its sequential appends can never park another shard's
+    /// workers.
     pub fn submit_stream(&self, m: usize, max_history: Option<usize>) -> Result<u64, SubmitError> {
-        let session = NatsaEngine::<T>::new(self.config)
+        let seq = self.next_stream_seq.fetch_add(1, Ordering::Relaxed);
+        let shard_idx = (route_hash(seq) % self.shards.len() as u64) as usize;
+        let session = NatsaEngine::<T>::new(self.shard_configs[shard_idx])
             .open_stream_bounded(m, max_history)
             .map_err(|e| SubmitError::Invalid(e.to_string()))?;
-        let id = self.next_stream_id.fetch_add(1, Ordering::Relaxed);
+        let id = (seq << SHARD_BITS) | shard_idx as u64;
         let entry = Arc::new(StreamEntry {
             state: Mutex::new(StreamState { session, next_seq: 0, closed: false }),
             cv: Condvar::new(),
             submit_seq: Mutex::new(0),
         });
-        self.shared.streams.lock().unwrap().insert(id, entry);
+        self.shards[shard_idx].streams.lock().unwrap().insert(id, entry);
         Ok(id)
     }
 
-    /// Enqueue a batch of samples against stream `stream`.  Returns a job
-    /// id to [`Self::wait`] on; its result's profile is the post-append
-    /// snapshot.  Appends from one client that are submitted in order are
-    /// applied in order (per-stream sequencing).
+    /// Enqueue a batch of samples against stream `stream`, onto the
+    /// stream's own shard.  Returns a job id to [`Self::wait`] on; its
+    /// result's profile is the post-append snapshot.  Appends from one
+    /// client that are submitted in order are applied in order
+    /// (per-stream sequencing).
     ///
-    /// Two usage caveats, both consequences of appends being inherently
-    /// sequential per stream while sharing the worker pool:
-    /// * a client that *pipelines* many appends to one stream can park
-    ///   several workers in turn-waiting (head-of-line blocking for
-    ///   unrelated jobs) — await each append, or size `workers` for the
-    ///   number of concurrently active streams (the planned sharded
-    ///   multi-series service lifts this properly);
-    /// * like batch jobs, every append's [`JobResult`] (which clones the
-    ///   profile snapshot) is retained until [`Self::wait`]/[`Self::poll`]
-    ///   consumes it — fire-and-forget callers should poll each id and
-    ///   read state via [`Self::snapshot_stream`] instead.
+    /// A client that *pipelines* many appends to one stream can park up
+    /// to `workers_per_shard` workers in turn-waiting — on this stream's
+    /// shard only; other shards (and batch jobs, which route around load)
+    /// are unaffected.  Unconsumed append results are bounded by
+    /// [`ServiceConfig::result_cap`]/[`ServiceConfig::result_ttl`], so
+    /// fire-and-forget feeding plus [`Self::snapshot_stream`] reads no
+    /// longer leak.
     pub fn append_stream(&self, stream: u64, samples: &[T]) -> Result<u64, SubmitError> {
-        let entry = self
-            .shared
+        let shard_idx = shard_of(stream);
+        let shard = self.shards.get(shard_idx).ok_or(SubmitError::UnknownStream)?;
+        let entry = shard
             .streams
             .lock()
             .unwrap()
@@ -206,22 +490,101 @@ impl<T: Real> AnalysisService<T> {
         // queue order equals sequence order — the workers rely on it.
         let mut seq_guard = entry.submit_seq.lock().unwrap();
         let seq = *seq_guard;
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let result = self.enqueue(Job {
-            id,
-            payload: JobPayload::StreamAppend { stream, samples: samples.to_vec(), seq },
-            submitted: std::time::Instant::now(),
-        });
-        if result.is_ok() {
-            *seq_guard += 1;
+        let result = self.try_enqueue(
+            shard_idx,
+            JobPayload::StreamAppend { stream, samples: samples.to_vec(), seq },
+        );
+        match result {
+            Ok(_) => *seq_guard += 1,
+            Err(SubmitError::Backpressure) => {
+                shard.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+                self.aggregate.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {}
         }
         result
+    }
+
+    /// The standard pipelined feeding loop over [`Self::append_stream`]:
+    /// try to append; while the stream's shard is backpressured, consume
+    /// (block on) the *oldest* in-flight ack from `pending` and retry.
+    /// On success the accepted job id is pushed onto `pending` and
+    /// returned together with every result consumed along the way, for
+    /// the caller to inspect (acks that were already consumed or evicted
+    /// are skipped).  This is the one place the client-side backpressure
+    /// contract lives — the CLI `serve` demo, the shard-scaling bench,
+    /// and the stress tests all feed through it.
+    pub fn append_stream_pipelined(
+        &self,
+        stream: u64,
+        samples: &[T],
+        pending: &mut VecDeque<u64>,
+    ) -> Result<(u64, Vec<JobResult<T>>), SubmitError> {
+        let mut drained = Vec::new();
+        loop {
+            match self.append_stream(stream, samples) {
+                Ok(id) => {
+                    pending.push_back(id);
+                    return Ok((id, drained));
+                }
+                Err(SubmitError::Backpressure) => match pending.pop_front() {
+                    Some(oldest) => {
+                        if let Ok(r) = self.wait(oldest) {
+                            drained.push(r);
+                        }
+                    }
+                    // queue full with nothing of ours in flight: other
+                    // clients own the queue — back off briefly
+                    None => std::thread::sleep(Duration::from_micros(200)),
+                },
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Reserve a completion slot and enqueue onto shard `shard_idx`.
+    /// `jobs_submitted` is ticked for accepted jobs (pre-send, rolled
+    /// back on rejection); the *caller* accounts rejections (batch
+    /// submits spill across shards first).
+    fn try_enqueue(&self, shard_idx: usize, payload: JobPayload<T>) -> Result<u64, SubmitError> {
+        let shard = &self.shards[shard_idx];
+        let tx = self.txs[shard_idx].as_ref().ok_or(SubmitError::Closed)?;
+        let seq = self.next_job_seq.fetch_add(1, Ordering::Relaxed);
+        let id = (seq << SHARD_BITS) | shard_idx as u64;
+        let slot = JobSlot::new();
+        {
+            let mut store = shard.slots.lock().unwrap();
+            store.map.insert(id, slot.clone());
+            store.evict(self.svc.result_cap, self.svc.result_ttl);
+        }
+        let job = Job { id, payload, submitted: Instant::now(), slot };
+        // Tick submitted BEFORE the send (rolled back on rejection): a
+        // worker that finishes the job microseconds after try_send must
+        // never observe completed > submitted, or in_flight() would
+        // saturate to 0 mid-run and mislead the least-loaded router and
+        // any drained-yet probe.  The rollback window only ever
+        // over-counts, which is the conservative direction for both.
+        shard.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        self.aggregate.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        match tx.try_send(job) {
+            Ok(()) => Ok(id),
+            Err(e) => {
+                shard.metrics.jobs_submitted.fetch_sub(1, Ordering::Relaxed);
+                self.aggregate.jobs_submitted.fetch_sub(1, Ordering::Relaxed);
+                shard.slots.lock().unwrap().map.remove(&id);
+                match e {
+                    TrySendError::Full(_) => Err(SubmitError::Backpressure),
+                    TrySendError::Disconnected(_) => Err(SubmitError::Closed),
+                }
+            }
+        }
     }
 
     /// Read a stream's live profile without going through the queue.
     /// `None` if the stream is unknown or closed.
     pub fn snapshot_stream(&self, stream: u64) -> Option<MatrixProfile<T>> {
-        let entry = self.shared.streams.lock().unwrap().get(&stream).cloned()?;
+        let shard = self.shards.get(shard_of(stream))?;
+        let entry = shard.streams.lock().unwrap().get(&stream).cloned()?;
         let state = entry.state.lock().unwrap();
         Some(state.session.profile())
     }
@@ -229,7 +592,10 @@ impl<T: Real> AnalysisService<T> {
     /// Close a stream: frees its state; queued/future appends against it
     /// fail with an error result.  Returns whether the id was open.
     pub fn close_stream(&self, stream: u64) -> bool {
-        let entry = self.shared.streams.lock().unwrap().remove(&stream);
+        let Some(shard) = self.shards.get(shard_of(stream)) else {
+            return false;
+        };
+        let entry = shard.streams.lock().unwrap().remove(&stream);
         match entry {
             Some(e) => {
                 e.state.lock().unwrap().closed = true;
@@ -240,50 +606,109 @@ impl<T: Real> AnalysisService<T> {
         }
     }
 
-    fn enqueue(&self, job: Job<T>) -> Result<u64, SubmitError> {
-        let id = job.id;
-        match self.tx.as_ref().ok_or(SubmitError::Closed)?.try_send(job) {
-            Ok(()) => {
-                self.shared
-                    .metrics
-                    .jobs_submitted
-                    .fetch_add(1, Ordering::Relaxed);
-                Ok(id)
-            }
-            Err(TrySendError::Full(_)) => {
-                self.shared
-                    .metrics
-                    .jobs_rejected
-                    .fetch_add(1, Ordering::Relaxed);
-                Err(SubmitError::Backpressure)
-            }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
-        }
+    /// Block until job `id` completes and take its result.  Errors with
+    /// [`WaitError::Unknown`] — immediately, never blocking — when the id
+    /// was never enqueued (e.g. its submit was rejected with
+    /// backpressure), was already consumed, or was evicted from the
+    /// bounded result retention.
+    pub fn wait(&self, id: u64) -> Result<JobResult<T>, WaitError> {
+        self.wait_deadline(id, None)
     }
 
-    /// Block until job `id` completes.
-    pub fn wait(&self, id: u64) -> JobResult<T> {
-        let mut results = self.shared.results.lock().unwrap();
+    /// Like [`Self::wait`], giving up with [`WaitError::Timeout`] after
+    /// `timeout` (the job stays in flight and can be waited on again).
+    pub fn wait_timeout(&self, id: u64, timeout: Duration) -> Result<JobResult<T>, WaitError> {
+        self.wait_deadline(id, Some(Instant::now() + timeout))
+    }
+
+    fn wait_deadline(&self, id: u64, deadline: Option<Instant>) -> Result<JobResult<T>, WaitError> {
+        let shard = self.shards.get(shard_of(id)).ok_or(WaitError::Unknown)?;
+        let slot = shard
+            .slots
+            .lock()
+            .unwrap()
+            .map
+            .get(&id)
+            .cloned()
+            .ok_or(WaitError::Unknown)?;
+        let mut state = slot.state.lock().unwrap();
         loop {
-            if let Some(r) = results.remove(&id) {
-                return r;
+            match &*state {
+                SlotState::Done(_) => break,
+                // a racing wait on the same id consumed it first
+                SlotState::Consumed => return Err(WaitError::Unknown),
+                SlotState::Pending => {}
             }
-            results = self.shared.cv.wait(results).unwrap();
+            state = match deadline {
+                None => slot.cv.wait(state).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return Err(WaitError::Timeout);
+                    }
+                    slot.cv.wait_timeout(state, dl - now).unwrap().0
+                }
+            };
+        }
+        let done = std::mem::replace(&mut *state, SlotState::Consumed);
+        drop(state);
+        shard.slots.lock().unwrap().consumed(id);
+        match done {
+            SlotState::Done(result) => Ok(result),
+            _ => unreachable!("checked Done above"),
         }
     }
 
-    /// Non-blocking poll.
+    /// Non-blocking poll; takes (and frees) the result when finished.
+    /// `None` while the job is in flight — and also for unknown/consumed/
+    /// evicted ids (use [`Self::wait`] to distinguish).
     pub fn poll(&self, id: u64) -> Option<JobResult<T>> {
-        self.shared.results.lock().unwrap().remove(&id)
+        let shard = self.shards.get(shard_of(id))?;
+        let slot = shard.slots.lock().unwrap().map.get(&id).cloned()?;
+        let mut state = slot.state.lock().unwrap();
+        if !matches!(&*state, SlotState::Done(_)) {
+            return None;
+        }
+        let done = std::mem::replace(&mut *state, SlotState::Consumed);
+        drop(state);
+        shard.slots.lock().unwrap().consumed(id);
+        match done {
+            SlotState::Done(result) => Some(result),
+            _ => unreachable!("checked Done above"),
+        }
     }
 
+    /// Fleet-wide (aggregate) metrics — always `Σ` of the per-shard ones.
     pub fn metrics(&self) -> &ServiceMetrics {
-        &self.shared.metrics
+        &self.aggregate
     }
 
-    /// Stop accepting jobs, drain the queue, join workers.
+    /// Number of engine shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Metrics of shard `k` (panics when `k >= num_shards()`).
+    pub fn shard_metrics(&self, k: usize) -> &ServiceMetrics {
+        &self.shards[k].metrics
+    }
+
+    /// Completion slots currently held across all shards (in-flight jobs
+    /// plus finished-but-unconsumed results).  After a full drain with
+    /// every result consumed this is 0 — no [`JobResult`] survives its
+    /// consumer.
+    pub fn retained_results(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.slots.lock().unwrap().map.len())
+            .sum()
+    }
+
+    /// Stop accepting jobs, drain every shard's queue, join workers.
     pub fn shutdown(mut self) {
-        self.tx.take(); // close channel
+        for tx in &mut self.txs {
+            tx.take(); // close the shard's channel
+        }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -292,8 +717,10 @@ impl<T: Real> AnalysisService<T> {
 
 fn worker_loop<T: Real>(
     rx: Arc<Mutex<Receiver<Job<T>>>>,
-    shared: Arc<Shared<T>>,
+    shard: Arc<Shard<T>>,
+    aggregate: Arc<ServiceMetrics>,
     config: NatsaConfig,
+    svc: ServiceConfig,
 ) {
     let engine = NatsaEngine::<T>::new(config);
     loop {
@@ -302,7 +729,7 @@ fn worker_loop<T: Real>(
             Err(_) => return, // channel closed
         };
         let mut queue_wait = job.submitted.elapsed().as_secs_f64();
-        let start = std::time::Instant::now();
+        let start = Instant::now();
         let mut turn_wait = 0.0f64;
         let profile: Result<MatrixProfile<T>, String> = match job.payload {
             JobPayload::Batch { series, m } => engine
@@ -310,7 +737,7 @@ fn worker_loop<T: Real>(
                 .map(|o| o.profile)
                 .map_err(|e| e.to_string()),
             JobPayload::StreamAppend { stream, samples, seq } => {
-                let (result, waited) = run_stream_append(&shared, stream, &samples, seq);
+                let (result, waited) = run_stream_append(&shard, stream, &samples, seq);
                 // time parked waiting for this append's turn is queueing,
                 // not execution — keep the metrics split honest
                 turn_wait = waited;
@@ -320,28 +747,34 @@ fn worker_loop<T: Real>(
         queue_wait += turn_wait;
         let exec = (start.elapsed().as_secs_f64() - turn_wait).max(0.0);
 
+        // Failed jobs are finished jobs: they count toward latency and
+        // the wait/exec sums too (see ServiceMetrics), on both the shard
+        // and the aggregate view.
         let failed = profile.is_err();
-        let m = &shared.metrics;
-        if failed {
-            m.jobs_failed.fetch_add(1, Ordering::Relaxed);
-        } else {
-            m.jobs_completed.fetch_add(1, Ordering::Relaxed);
-            m.exec_ns
-                .fetch_add((exec * 1e9) as u64, Ordering::Relaxed);
-            m.queue_wait_ns
-                .fetch_add((queue_wait * 1e9) as u64, Ordering::Relaxed);
-            m.latency.record(queue_wait + exec);
+        shard.metrics.record_outcome(failed, queue_wait, exec);
+        aggregate.record_outcome(failed, queue_wait, exec);
+
+        // Bounded retention: count the finished result BEFORE publishing
+        // it, so a fast waiter can never consume (and decrement) a result
+        // that was not yet counted — `consumed()`'s decrement must always
+        // pair with this increment.  Until `fill` below, nothing can
+        // consume the slot; eviction may race ahead of the fill, which
+        // only means an unconsumed result aged out at the instant it was
+        // produced (waiters already holding the slot still receive it).
+        {
+            let mut store = shard.slots.lock().unwrap();
+            if store.map.contains_key(&job.id) {
+                store.done.push_back((job.id, Instant::now()));
+                store.retained += 1;
+            }
+            store.evict(svc.result_cap, svc.result_ttl);
         }
-        shared.results.lock().unwrap().insert(
-            job.id,
-            JobResult {
-                id: job.id,
-                profile,
-                queue_wait_s: queue_wait,
-                exec_s: exec,
-            },
-        );
-        shared.cv.notify_all();
+        job.slot.fill(JobResult {
+            id: job.id,
+            profile,
+            queue_wait_s: queue_wait,
+            exec_s: exec,
+        });
     }
 }
 
@@ -349,16 +782,16 @@ fn worker_loop<T: Real>(
 /// Returns the result plus the seconds spent waiting for this append's
 /// turn (reported as queueing, not execution).
 fn run_stream_append<T: Real>(
-    shared: &Shared<T>,
+    shard: &Shard<T>,
     stream: u64,
     samples: &[T],
     seq: u64,
 ) -> (Result<MatrixProfile<T>, String>, f64) {
-    let entry = match shared.streams.lock().unwrap().get(&stream).cloned() {
+    let entry = match shard.streams.lock().unwrap().get(&stream).cloned() {
         Some(e) => e,
         None => return (Err(format!("unknown or closed stream {stream}")), 0.0),
     };
-    let wait_start = std::time::Instant::now();
+    let wait_start = Instant::now();
     let mut state = entry.state.lock().unwrap();
     // Appends dequeued out of order (multiple workers) wait their turn;
     // `closed` breaks the wait so close_stream never strands a worker.
@@ -387,15 +820,26 @@ mod tests {
         AnalysisService::start(NatsaConfig::default().with_threads(2), 2, 4)
     }
 
+    /// Spin until the aggregate view shows nothing in flight.
+    fn drain(s: &AnalysisService<f64>) {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while s.metrics().in_flight() > 0 {
+            assert!(Instant::now() < deadline, "service never drained");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
     #[test]
     fn submit_and_wait_roundtrip() {
         let s = svc();
         let series = Arc::new(generate::<f64>(Pattern::PlantedMotif, 1024, 3));
         let id = s.submit(series, 32).unwrap();
-        let r = s.wait(id);
+        let r = s.wait(id).unwrap();
         let profile = r.profile.unwrap();
         assert_eq!(profile.len(), 1024 - 32 + 1);
         assert_eq!(s.metrics().jobs_completed.load(Ordering::Relaxed), 1);
+        // consuming the result freed its slot
+        assert_eq!(s.retained_results(), 0);
         s.shutdown();
     }
 
@@ -412,20 +856,67 @@ mod tests {
             ids.push(s.submit(series, 16).unwrap());
         }
         for id in ids {
-            let r = s.wait(id);
+            let r = s.wait(id).unwrap();
             assert!(r.profile.is_ok());
         }
         assert_eq!(s.metrics().jobs_completed.load(Ordering::Relaxed), 12);
         assert_eq!(s.metrics().in_flight(), 0);
+        assert_eq!(s.retained_results(), 0);
     }
 
     #[test]
     fn bad_job_reports_error_not_panic() {
         let s = svc();
         let id = s.submit(Arc::new(vec![1.0f64; 9]), 8).unwrap(); // nw(2) <= excl(2)
-        let r = s.wait(id);
+        let r = s.wait(id).unwrap();
         assert!(r.profile.is_err());
         assert_eq!(s.metrics().jobs_failed.load(Ordering::Relaxed), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn failed_jobs_show_up_in_latency_metrics() {
+        // regression: failed jobs ticked only jobs_failed, leaving the
+        // latency histogram and wait/exec sums blind under error load
+        let s = svc();
+        let id = s.submit(Arc::new(vec![1.0f64; 9]), 8).unwrap();
+        let r = s.wait(id).unwrap();
+        assert!(r.profile.is_err());
+        assert_eq!(s.metrics().jobs_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(s.metrics().latency.count(), 1, "failed job missing from histogram");
+        assert_eq!(s.metrics().finished(), 1);
+        assert_eq!(s.metrics().in_flight(), 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn wait_on_unknown_id_errors_instead_of_blocking() {
+        // regression: wait() used to block forever on an id that was
+        // never enqueued (rejected submit) or was already consumed
+        let s = svc();
+        assert_eq!(s.wait(0xdead_beef).unwrap_err(), WaitError::Unknown);
+        let id = s.submit(Arc::new(generate::<f64>(Pattern::RandomWalk, 256, 1)), 16).unwrap();
+        assert!(s.wait(id).is_ok());
+        // second wait on the same id: consumed, not a hang
+        assert_eq!(s.wait(id).unwrap_err(), WaitError::Unknown);
+        assert!(s.poll(id).is_none());
+        s.shutdown();
+    }
+
+    #[test]
+    fn wait_timeout_gives_up_and_can_retry() {
+        let s = AnalysisService::<f64>::start(NatsaConfig::default().with_threads(1), 1, 4);
+        let mut rng = Rng::new(11);
+        let series = Arc::new(rng.gauss_vec(20_000));
+        let id = s.submit(series, 16).unwrap();
+        // far too short for a 20k-sample profile: must time out, not hang
+        assert_eq!(
+            s.wait_timeout(id, Duration::from_micros(10)).unwrap_err(),
+            WaitError::Timeout
+        );
+        // the job is still in flight; a real wait gets the result
+        let r = s.wait(id).unwrap();
+        assert!(r.profile.is_ok());
         s.shutdown();
     }
 
@@ -450,19 +941,68 @@ mod tests {
         }
         assert!(saw_backpressure, "queue never filled");
         for id in accepted {
-            let _ = s.wait(id);
+            let _ = s.wait(id).unwrap();
         }
         assert!(s.metrics().jobs_rejected.load(Ordering::Relaxed) >= 1);
         s.shutdown();
     }
 
     #[test]
+    fn fire_and_forget_results_are_bounded() {
+        // regression: unconsumed JobResults used to accumulate forever;
+        // the per-shard retention cap must bound them
+        let s = AnalysisService::<f64>::start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default()
+                .with_workers(1)
+                .with_queue_depth(32)
+                .with_result_cap(4),
+        );
+        let mut ids = Vec::new();
+        for k in 0..16 {
+            let series = Arc::new(generate::<f64>(Pattern::RandomWalk, 256, k));
+            ids.push(s.submit(series, 16).unwrap()); // never waited on
+        }
+        drain(&s);
+        // one more enqueue triggers a final eviction pass
+        let last = s.submit(Arc::new(generate::<f64>(Pattern::RandomWalk, 256, 99)), 16).unwrap();
+        let _ = s.wait(last).unwrap();
+        assert!(
+            s.retained_results() <= 4,
+            "retained {} results, cap 4",
+            s.retained_results()
+        );
+        // evicted ids answer Unknown, they don't hang
+        assert_eq!(s.wait(ids[0]).unwrap_err(), WaitError::Unknown);
+        s.shutdown();
+    }
+
+    #[test]
+    fn result_ttl_expires_unconsumed_results() {
+        let s = AnalysisService::<f64>::start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default()
+                .with_workers(1)
+                .with_result_ttl(Duration::from_millis(20)),
+        );
+        let id = s.submit(Arc::new(generate::<f64>(Pattern::RandomWalk, 256, 1)), 16).unwrap();
+        drain(&s);
+        std::thread::sleep(Duration::from_millis(40));
+        // a later enqueue runs the eviction pass; the stale result is gone
+        let fresh = s.submit(Arc::new(generate::<f64>(Pattern::RandomWalk, 256, 2)), 16).unwrap();
+        assert!(s.wait(fresh).is_ok());
+        assert_eq!(s.wait(id).unwrap_err(), WaitError::Unknown);
+        assert_eq!(s.retained_results(), 0);
+        s.shutdown();
+    }
+
+    #[test]
     fn shutdown_closes_submission() {
         let s = svc();
-        let shared = s.shared.clone();
+        let aggregate = s.aggregate.clone();
         s.shutdown();
-        // after shutdown the channel is gone; metrics survive
-        assert_eq!(shared.metrics.in_flight(), 0);
+        // after shutdown the channels are gone; metrics survive
+        assert_eq!(aggregate.in_flight(), 0);
     }
 
     #[test]
@@ -475,7 +1015,7 @@ mod tests {
         let mut last = None;
         for chunk in series.chunks(300) {
             let id = s.append_stream(stream, chunk).unwrap();
-            last = Some(s.wait(id));
+            last = Some(s.wait(id).unwrap());
         }
         let streamed = last.unwrap().profile.unwrap();
         let want = stomp::matrix_profile(&series, MpConfig::new(m)).unwrap();
@@ -506,8 +1046,40 @@ mod tests {
             ids.push(s.append_stream(stream, chunk).unwrap());
         }
         for id in ids {
-            assert!(s.wait(id).profile.is_ok());
+            assert!(s.wait(id).unwrap().profile.is_ok());
         }
+        let got = s.snapshot_stream(stream).unwrap();
+        let want = stomp::matrix_profile(&series, MpConfig::new(m)).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-7, "{}", got.max_abs_diff(&want));
+        s.close_stream(stream);
+        s.shutdown();
+    }
+
+    #[test]
+    fn pipelined_append_consumes_oldest_acks_under_backpressure() {
+        // tiny queue, 1 worker: the shared feeding loop must keep making
+        // progress by draining its own acks, delivering every result
+        // exactly once
+        let s = AnalysisService::<f64>::start(NatsaConfig::default().with_threads(1), 1, 2);
+        let series = generate::<f64>(Pattern::RandomWalk, 2000, 12);
+        let m = 16;
+        let stream = s.submit_stream(m, None).unwrap();
+        let mut pending = VecDeque::new();
+        let mut seen = 0usize;
+        for packet in series.chunks(100) {
+            let (_, drained) = s
+                .append_stream_pipelined(stream, packet, &mut pending)
+                .unwrap();
+            for r in &drained {
+                assert!(r.profile.is_ok());
+            }
+            seen += drained.len();
+        }
+        for id in pending {
+            assert!(s.wait(id).unwrap().profile.is_ok());
+            seen += 1;
+        }
+        assert_eq!(seen, 20); // 2000 / 100 appends, each consumed once
         let got = s.snapshot_stream(stream).unwrap();
         let want = stomp::matrix_profile(&series, MpConfig::new(m)).unwrap();
         assert!(got.max_abs_diff(&want) < 1e-7, "{}", got.max_abs_diff(&want));
@@ -530,7 +1102,7 @@ mod tests {
         let s = svc();
         let stream = s.submit_stream(16, None).unwrap();
         let id = s.append_stream(stream, &generate::<f64>(Pattern::RandomWalk, 64, 1)).unwrap();
-        let _ = s.wait(id);
+        let _ = s.wait(id).unwrap();
         assert!(s.close_stream(stream));
         assert!(!s.close_stream(stream)); // idempotent: already gone
         assert_eq!(
@@ -548,7 +1120,7 @@ mod tests {
         let stream = s.submit_stream(m, Some(256)).unwrap();
         let series = generate::<f64>(Pattern::RandomWalk, 2000, 10);
         let id = s.append_stream(stream, &series).unwrap();
-        let snap = s.wait(id).profile.unwrap();
+        let snap = s.wait(id).unwrap().profile.unwrap();
         assert_eq!(snap.len(), 256 - m + 1);
         // a bound too small to admit a pair is rejected at open time
         assert!(matches!(
@@ -565,11 +1137,61 @@ mod tests {
         let stream = s.submit_stream(16, None).unwrap();
         let a = s.append_stream(stream, &generate::<f64>(Pattern::RandomWalk, 200, 2)).unwrap();
         let b = s.submit(Arc::new(generate::<f64>(Pattern::RandomWalk, 256, 3)), 16).unwrap();
-        let _ = s.wait(a);
-        let _ = s.wait(b);
+        let _ = s.wait(a).unwrap();
+        let _ = s.wait(b).unwrap();
         assert_eq!(s.metrics().jobs_completed.load(Ordering::Relaxed), 2);
         assert_eq!(s.metrics().in_flight(), 0);
         s.close_stream(stream);
+        s.shutdown();
+    }
+
+    #[test]
+    fn streams_route_stably_across_shards() {
+        let s = AnalysisService::<f64>::start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default().with_shards(4).with_workers(1).with_queue_depth(16),
+        );
+        assert_eq!(s.num_shards(), 4);
+        let mut hit = [false; 4];
+        let mut streams = Vec::new();
+        for _ in 0..32 {
+            let id = s.submit_stream(16, None).unwrap();
+            assert!(shard_of(id) < 4);
+            hit[shard_of(id)] = true;
+            streams.push(id);
+        }
+        assert!(
+            hit.iter().filter(|&&h| h).count() >= 3,
+            "hash routing left shards cold: {hit:?}"
+        );
+        // every append job lands on its stream's shard
+        for &stream in streams.iter().take(6) {
+            let id = s.append_stream(stream, &generate::<f64>(Pattern::RandomWalk, 128, 4)).unwrap();
+            assert_eq!(shard_of(id), shard_of(stream), "append left its stream's shard");
+            assert!(s.wait(id).unwrap().profile.is_ok());
+        }
+        // aggregate reconciles with the per-shard counters
+        let per_shard: u64 = (0..4)
+            .map(|k| s.shard_metrics(k).jobs_completed.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(s.metrics().jobs_completed.load(Ordering::Relaxed), per_shard);
+        for stream in streams {
+            s.close_stream(stream);
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn shard_config_invariants() {
+        // shard count is clamped, ids round-trip their shard
+        let s = AnalysisService::<f64>::start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default().with_shards(0).with_workers(1),
+        );
+        assert_eq!(s.num_shards(), 1);
+        let id = s.submit(Arc::new(generate::<f64>(Pattern::RandomWalk, 256, 5)), 16).unwrap();
+        assert_eq!(shard_of(id), 0);
+        assert!(s.wait(id).is_ok());
         s.shutdown();
     }
 }

@@ -58,10 +58,12 @@
 //! }
 //! ```
 //!
-//! The same session runs behind the multi-client service
+//! The same session runs behind the **sharded** multi-client service
 //! ([`coordinator::service::AnalysisService::submit_stream`] /
-//! `append_stream` / `snapshot_stream`), and
-//! `benches/streaming.rs` measures the incremental-vs-recompute gap.
+//! `append_stream` / `snapshot_stream` — each stream pinned to one
+//! engine shard so pipelined appends never head-of-line block the
+//! fleet), and `benches/streaming.rs` measures the
+//! incremental-vs-recompute gap plus shard scaling.
 //!
 //! ## Planes
 //!

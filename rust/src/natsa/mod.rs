@@ -86,6 +86,26 @@ impl NatsaConfig {
                 .unwrap_or(4)
         })
     }
+
+    /// Shard `k`'s slice of this configuration: the PU fleet (and any
+    /// explicit host-thread budget) divided across `shards` slices with
+    /// the remainder dealt to the first shards, so the slices sum back to
+    /// the whole fleet (48 PUs over 5 shards = 10+10+10+9+9, never 45).
+    /// The sharded analysis service uses this so N shards together still
+    /// model the paper's single fleet, the same way the journal extension
+    /// (arXiv 2206.00938) splits work across accelerator stacks.  Each
+    /// slice keeps at least one PU/thread, so with more shards than PUs
+    /// the slices oversubscribe rather than starve.
+    pub fn shard_slice(mut self, shards: usize, k: usize) -> Self {
+        let shards = shards.max(1);
+        let k = k % shards;
+        let split = |total: usize| (total / shards + usize::from(k < total % shards)).max(1);
+        self.pus = split(self.pus);
+        if let Some(t) = self.threads {
+            self.threads = Some(split(t));
+        }
+        self
+    }
 }
 
 /// Result of a NATSA run.
@@ -240,15 +260,30 @@ impl<T: Real> StreamSession<T> {
         &self.pu_cells
     }
 
-    /// max/min PU load ratio so far (1.0 = perfectly balanced).
+    /// max/min load ratio over the PUs that received cells so far (1.0 =
+    /// perfectly balanced).  PUs still idle — the stream is young, or
+    /// shorter than one exclusion zone — are excluded, like
+    /// [`scheduler::Schedule::imbalance`]; their count is
+    /// [`Self::idle_pus`].
     pub fn imbalance(&self) -> f64 {
-        let max = *self.pu_cells.iter().max().unwrap_or(&0) as f64;
-        let min = *self.pu_cells.iter().min().unwrap_or(&0) as f64;
-        if min == 0.0 {
-            f64::INFINITY
-        } else {
-            max / min
+        let mut max = 0u64;
+        let mut min = u64::MAX;
+        for &c in &self.pu_cells {
+            if c > 0 {
+                max = max.max(c);
+                min = min.min(c);
+            }
         }
+        if max == 0 {
+            1.0
+        } else {
+            max as f64 / min as f64
+        }
+    }
+
+    /// PUs that have not been dealt any cells yet.
+    pub fn idle_pus(&self) -> usize {
+        self.pu_cells.iter().filter(|&&c| c == 0).count()
     }
 }
 
@@ -468,6 +503,43 @@ mod tests {
         assert_eq!(session.profile().len(), 256 - 16 + 1);
         // rejects bounds too small to ever admit a pair
         assert!(engine.open_stream_bounded(16, Some(10)).is_err());
+    }
+
+    #[test]
+    fn young_stream_imbalance_is_finite() {
+        // regression: before any cells were dealt (or while the remainder
+        // cursor left some PUs untouched) min load 0 pinned the ratio at
+        // infinity; idle PUs are now excluded and counted separately
+        let engine = NatsaEngine::<f64>::new(NatsaConfig::default());
+        let session = engine.open_stream(16).unwrap();
+        assert_eq!(session.imbalance(), 1.0);
+        assert_eq!(session.idle_pus(), 48);
+        let mut session = engine.open_stream(16).unwrap();
+        session.extend(&crate::prop::Rng::new(50).gauss_vec(40));
+        assert!(session.imbalance().is_finite(), "{}", session.imbalance());
+    }
+
+    #[test]
+    fn shard_slice_divides_the_fleet_without_losing_pus() {
+        let base = NatsaConfig::default().with_pus(48).with_threads(8);
+        let slice = base.shard_slice(4, 0);
+        assert_eq!(slice.pus, 12);
+        assert_eq!(slice.threads, Some(2));
+        // a non-dividing shard count deals the remainder to the first
+        // shards: the slices must sum back to the whole fleet
+        let pus: Vec<usize> = (0..5).map(|k| base.shard_slice(5, k).pus).collect();
+        assert_eq!(pus, vec![10, 10, 10, 9, 9]);
+        assert_eq!(pus.iter().sum::<usize>(), 48);
+        let threads: usize = (0..5)
+            .map(|k| base.shard_slice(5, k).threads.unwrap())
+            .sum();
+        assert_eq!(threads, 8);
+        // never below one PU/thread, even with more shards than PUs
+        let tiny = NatsaConfig::default().with_pus(2).with_threads(1).shard_slice(8, 7);
+        assert_eq!(tiny.pus, 1);
+        assert_eq!(tiny.threads, Some(1));
+        // shards = 0 is treated as 1 (no division)
+        assert_eq!(base.shard_slice(0, 0).pus, 48);
     }
 
     #[test]

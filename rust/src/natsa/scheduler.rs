@@ -43,16 +43,32 @@ impl Schedule {
             .sum()
     }
 
-    /// max/min PU load ratio (1.0 = perfectly balanced).
+    /// max/min load ratio over the PUs that received work (1.0 = perfectly
+    /// balanced).  PUs left idle because pairs ran out (more PUs than
+    /// pairs) are *excluded* — an idle PU is a capacity question, not a
+    /// balance one, and folding its zero load in used to pin the metric at
+    /// infinity exactly when balance mattered.  Idle capacity is reported
+    /// separately by [`Self::idle_pus`].
     pub fn imbalance(&self) -> f64 {
-        let loads: Vec<u64> = (0..self.per_pu.len()).map(|k| self.load(k)).collect();
-        let max = *loads.iter().max().unwrap_or(&0) as f64;
-        let min = *loads.iter().min().unwrap_or(&0) as f64;
-        if min == 0.0 {
-            f64::INFINITY
-        } else {
-            max / min
+        let mut max = 0u64;
+        let mut min = u64::MAX;
+        for k in 0..self.per_pu.len() {
+            let l = self.load(k);
+            if l > 0 {
+                max = max.max(l);
+                min = min.min(l);
+            }
         }
+        if max == 0 {
+            1.0 // no work at all: vacuously balanced
+        } else {
+            max as f64 / min as f64
+        }
+    }
+
+    /// PUs that received no diagonals (happens when PUs outnumber pairs).
+    pub fn idle_pus(&self) -> usize {
+        self.per_pu.iter().filter(|l| l.is_empty()).count()
     }
 
     /// Shuffle each PU's list in place (anytime mode, Section 4.2 way 1).
@@ -210,6 +226,20 @@ mod tests {
         assert_eq!(s.pairs.len(), 2);
         let nonempty = s.per_pu.iter().filter(|l| !l.is_empty()).count();
         assert_eq!(nonempty, 2);
+        assert_eq!(s.idle_pus(), 14);
+    }
+
+    #[test]
+    fn imbalance_is_finite_with_idle_pus() {
+        // regression: idle PUs (min load 0) used to pin imbalance at
+        // infinity — the metric must rate the *working* PUs instead
+        let s = schedule(8, 4, 16); // 2 pairs, each (8-4)+(8-7) = 5 cells
+        assert_eq!(s.imbalance(), 1.0);
+        assert!(s.imbalance().is_finite());
+        // a single-PU schedule is trivially balanced, never infinite
+        let one = schedule(100, 4, 1);
+        assert_eq!(one.imbalance(), 1.0);
+        assert_eq!(one.idle_pus(), 0);
     }
 
     #[test]

@@ -98,21 +98,28 @@ impl<T: Copy> RingVec<T> {
     /// exceed [`Self::next_index`].  Storage is reclaimed lazily: once the
     /// evicted prefix outgrows the live region it is compacted away, so a
     /// bounded stream uses O(retained) memory.
-    pub fn evict_to(&mut self, new_first: usize) {
+    ///
+    /// Returns whether this call physically compacted the storage — a
+    /// natural (amortized, every ~len) hook for periodic O(retained)
+    /// maintenance in callers (e.g. [`crate::mp::stampi`] re-anchors its
+    /// rolling sums on compaction to cancel float drift).
+    pub fn evict_to(&mut self, new_first: usize) -> bool {
         assert!(
             new_first <= self.next_index(),
             "cannot evict past the end ({new_first} > {})",
             self.next_index()
         );
         if new_first <= self.first_index() {
-            return;
+            return false;
         }
         self.head = new_first - self.off;
         if self.head >= 64 && self.head > self.buf.len() - self.head {
             self.buf.drain(..self.head);
             self.off += self.head;
             self.head = 0;
+            return true;
         }
+        false
     }
 }
 
@@ -182,6 +189,19 @@ mod tests {
         }
         assert_eq!(r.len(), bound);
         assert_eq!(r.get(99_999), 99_999);
+    }
+
+    #[test]
+    fn evict_reports_compaction() {
+        let mut r = RingVec::new();
+        for v in 0..300u32 {
+            r.push(v);
+        }
+        assert!(!r.evict_to(10)); // small prefix: storage untouched
+        assert!(r.evict_to(200)); // prefix outgrew live region: compacted
+        assert_eq!(r.first_index(), 200);
+        assert_eq!(r.get(299), 299);
+        assert!(!r.evict_to(200)); // no-op boundary
     }
 
     #[test]

@@ -20,7 +20,7 @@ fn natsa(args: &[&str]) -> (bool, String) {
 fn help_lists_commands() {
     let (ok, text) = natsa(&["help"]);
     assert!(ok);
-    for cmd in ["generate", "profile", "anytime", "simulate", "repro", "artifacts"] {
+    for cmd in ["generate", "profile", "anytime", "serve", "simulate", "repro", "artifacts"] {
         assert!(text.contains(cmd), "help missing {cmd}:\n{text}");
     }
 }
@@ -86,6 +86,18 @@ fn generate_roundtrips_through_profile() {
     ]);
     assert!(ok, "{text}");
     assert!(text.contains("n=1500"));
+}
+
+#[test]
+fn serve_drains_and_reconciles() {
+    let (ok, text) = natsa(&[
+        "serve", "--shards", "2", "--workers", "1", "--depth", "4", "--streams", "2",
+        "--packets", "4", "--chunk", "256", "--jobs", "2", "--m", "32", "--pus", "8",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("shard 0:"), "{text}");
+    assert!(text.contains("shard 1:"), "{text}");
+    assert!(text.contains("aggregate:"), "{text}");
 }
 
 #[test]

@@ -1,0 +1,209 @@
+//! Cross-shard service tests: many concurrent streams with pipelined
+//! appends routed across engine shards must each stay exact against the
+//! batch engine, while batch jobs flow around stream storms instead of
+//! queueing behind them — the head-of-line regression pin for the sharded
+//! `AnalysisService`.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use natsa::coordinator::service::{shard_of, AnalysisService, ServiceConfig, SubmitError};
+use natsa::mp::{stomp, MpConfig};
+use natsa::natsa::NatsaConfig;
+use natsa::timeseries::generator::{generate, Pattern};
+
+/// Aggregate counters must always equal the sum of the per-shard ones.
+fn assert_reconciled(svc: &AnalysisService<f64>) {
+    let sum = |get: &dyn Fn(usize) -> u64| (0..svc.num_shards()).map(get).sum::<u64>();
+    let agg = svc.metrics();
+    assert_eq!(
+        agg.jobs_submitted.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).jobs_submitted.load(Ordering::Relaxed)),
+        "submitted skewed"
+    );
+    assert_eq!(
+        agg.jobs_completed.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).jobs_completed.load(Ordering::Relaxed)),
+        "completed skewed"
+    );
+    assert_eq!(
+        agg.jobs_failed.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).jobs_failed.load(Ordering::Relaxed)),
+        "failed skewed"
+    );
+    assert_eq!(
+        agg.jobs_rejected.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).jobs_rejected.load(Ordering::Relaxed)),
+        "rejected skewed"
+    );
+    assert_eq!(
+        agg.latency.count(),
+        sum(&|k| svc.shard_metrics(k).latency.count()),
+        "latency histogram skewed"
+    );
+}
+
+/// Pipeline every chunk of `t` into `stream` through the service's
+/// shared feeding loop; waits the tail so every result is consumed, and
+/// checks every drained result on the way.
+fn pipeline_stream(svc: &AnalysisService<f64>, stream: u64, t: &[f64], chunk: usize) {
+    let mut pending = std::collections::VecDeque::new();
+    for packet in t.chunks(chunk) {
+        let (id, drained) = svc
+            .append_stream_pipelined(stream, packet, &mut pending)
+            .expect("append rejected");
+        assert_eq!(shard_of(id), shard_of(stream), "append strayed off-shard");
+        for r in drained {
+            r.profile.unwrap();
+        }
+    }
+    for id in pending {
+        svc.wait(id).expect("pending append vanished").profile.unwrap();
+    }
+}
+
+#[test]
+fn concurrent_streams_across_shards_match_batch_bit_for_bit_in_structure() {
+    let svc = Arc::new(AnalysisService::<f64>::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default()
+            .with_shards(3)
+            .with_workers(2)
+            .with_queue_depth(8),
+    ));
+    let m = 16;
+    let n = 3000;
+    let clients: Vec<_> = (0..6u64)
+        .map(|c| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let t = generate::<f64>(Pattern::RandomWalk, n, c);
+                let stream = svc.submit_stream(m, None).unwrap();
+                pipeline_stream(&svc, stream, &t, 128);
+                let got = svc.snapshot_stream(stream).expect("stream open");
+                let want = stomp::matrix_profile(&t, MpConfig::new(m)).unwrap();
+                assert_eq!(got.len(), want.len());
+                assert!(
+                    got.max_abs_diff(&want) < 1e-7,
+                    "stream {stream} diverged: {}",
+                    got.max_abs_diff(&want)
+                );
+                assert!(svc.close_stream(stream));
+                shard_of(stream)
+            })
+        })
+        .collect();
+
+    // a batch job submitted mid-storm keeps flowing (retry only if every
+    // shard is momentarily full)
+    let series = Arc::new(generate::<f64>(Pattern::PlantedMotif, 1024, 99));
+    let batch = loop {
+        match svc.submit(series.clone(), m) {
+            Ok(id) => break id,
+            Err(SubmitError::Backpressure) => std::thread::sleep(Duration::from_micros(200)),
+            Err(e) => panic!("submit: {e}"),
+        }
+    };
+    assert!(svc.wait(batch).unwrap().profile.is_ok());
+
+    let shards_used: std::collections::HashSet<usize> =
+        clients.into_iter().map(|c| c.join().unwrap()).collect();
+    assert!(
+        shards_used.len() >= 2,
+        "6 streams landed on one shard: routing is not spreading"
+    );
+
+    assert_eq!(svc.metrics().in_flight(), 0, "jobs unaccounted after drain");
+    assert_eq!(svc.metrics().jobs_failed.load(Ordering::Relaxed), 0);
+    assert_eq!(
+        svc.retained_results(),
+        0,
+        "JobResults survived their consumers"
+    );
+    assert_reconciled(&svc);
+}
+
+#[test]
+fn batch_jobs_are_not_head_of_line_blocked_by_a_stream_storm() {
+    // THE regression pin: one client pipelines more appends than the
+    // queue holds into a single stream; with >= 2 shards a batch job
+    // submitted mid-storm must (a) be accepted first try — no
+    // Backpressure, (b) route off the busy shard, and (c) complete while
+    // the stream is still draining, i.e. without waiting its turn behind
+    // the stream (the old single-queue service parked every worker).
+    let depth = 4;
+    let svc = Arc::new(AnalysisService::<f64>::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default()
+            .with_shards(2)
+            .with_workers(1)
+            .with_queue_depth(depth),
+    ));
+    let m = 16;
+    let stream = svc.submit_stream(m, None).unwrap();
+    let busy = shard_of(stream);
+
+    let t = generate::<f64>(Pattern::RandomWalk, 10_000, 7);
+    let storm = {
+        let svc = svc.clone();
+        let t = t.clone();
+        std::thread::spawn(move || {
+            pipeline_stream(&svc, stream, &t, 1000);
+        })
+    };
+
+    // wait until the stream owns its whole shard: >= queue-depth appends
+    // in flight there
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while svc.shard_metrics(busy).in_flight() < depth as u64 {
+        assert!(
+            Instant::now() < deadline,
+            "stream never saturated its shard"
+        );
+        std::thread::sleep(Duration::from_micros(200));
+    }
+
+    let series = Arc::new(generate::<f64>(Pattern::RandomWalk, 512, 9));
+    let batch = svc
+        .submit(series, m)
+        .expect("batch job must not see backpressure while one shard is stormed");
+    assert_ne!(
+        shard_of(batch),
+        busy,
+        "least-loaded routing sent the batch job into the storm"
+    );
+    assert!(svc.wait(batch).unwrap().profile.is_ok());
+    // the stream is still draining: the batch job did not wait for it
+    assert!(
+        svc.shard_metrics(busy).in_flight() >= 1,
+        "batch job only completed after the stream drained — head-of-line blocked"
+    );
+
+    storm.join().unwrap();
+    let got = svc.snapshot_stream(stream).expect("stream open");
+    let want = stomp::matrix_profile(&t, MpConfig::new(m)).unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-7, "{}", got.max_abs_diff(&want));
+    assert!(svc.close_stream(stream));
+
+    assert_eq!(svc.metrics().in_flight(), 0);
+    assert_eq!(svc.retained_results(), 0);
+    assert_reconciled(&svc);
+}
+
+#[test]
+fn per_shard_pu_fleets_still_compute_exact_profiles() {
+    // the shard slice of the PU fleet (48 / 4 = 12 PUs per shard) is an
+    // accounting split, never a numerical one
+    let svc = AnalysisService::<f64>::start_sharded(
+        NatsaConfig::default().with_pus(48).with_threads(1),
+        ServiceConfig::default().with_shards(4).with_workers(1),
+    );
+    let t = generate::<f64>(Pattern::EcgLike, 2048, 21);
+    let m = 32;
+    let id = svc.submit(Arc::new(t.clone()), m).unwrap();
+    let got = svc.wait(id).unwrap().profile.unwrap();
+    let want = stomp::matrix_profile(&t, MpConfig::new(m)).unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-9, "{}", got.max_abs_diff(&want));
+    svc.shutdown();
+}
