@@ -19,9 +19,10 @@ fn main() {
     let series = generate::<f64>(Pattern::RandomWalk, n, 12);
     let cfg = MpConfig::new(m);
 
-    let mut t = Table::new(&["partition", "imbalance", "median", "vs balanced"]);
+    let mut t = Table::new(&["partition", "imbalance", "median", "vs banded"]);
     let mut balanced = 0.0f64;
     for part in [
+        Partition::BandedPairs,
         Partition::BalancedPairs,
         Partition::Strided,
         Partition::Contiguous,
@@ -37,7 +38,7 @@ fn main() {
         let s = time_budget(2.0, || {
             black_box(with_stats(&series, cfg, threads, part).unwrap());
         });
-        if part == Partition::BalancedPairs {
+        if part == Partition::BandedPairs {
             balanced = s.median;
         }
         t.row(&[

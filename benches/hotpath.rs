@@ -2,15 +2,22 @@
 //! diagonal kernel (PR 2) and the L3 perf-pass trajectory record.
 //!
 //! Headline measurement: full single-thread matrix profile at n = 65536,
-//! m = 256 (f64) through three paths sharing one statistics precompute:
+//! m = 256 (f64) through five paths sharing one statistics precompute:
 //!
 //! * `scalar`      — the retained pre-kernel per-cell loop
 //!   (`kernel::scalar_diagonal`): the baseline every speedup is quoted
 //!   against (the acceptance bar is >= 2x for `kernel-band`);
-//! * `kernel-diag` — the per-diagonal delta-form path scheduled/anytime
-//!   execution uses (`kernel::compute_diagonal`);
+//! * `kernel-diag` — the per-diagonal delta-form path
+//!   (`kernel::compute_diagonal`);
 //! * `kernel-band` — the BAND-lane SIMD path sequential sweeps use
-//!   (`kernel::compute_triangle`).
+//!   (`kernel::compute_triangle`);
+//! * `fleet-diag`  — the 48-PU work lists of the LEGACY per-diagonal
+//!   scheduler (`scheduler::schedule`), executed serially: what every
+//!   scheduled/anytime engine ran before band-granular scheduling;
+//! * `fleet-band`  — the 48-PU band-tile work lists
+//!   (`scheduler::schedule_banded` + `kernel::compute_band_n`): the
+//!   fleet's new hot path.  `fleet-band` vs `fleet-diag` isolates what
+//!   band-granular scheduling buys the fleet.
 //!
 //! Pass `--json` to (re)write `BENCH_hotpath.json` with the measured
 //! rows so future PRs have a trajectory to compare against.
@@ -83,6 +90,37 @@ fn band_profile<T: Real>(t: &[T], m: usize) -> MatrixProfile<T> {
     scrimp::matrix_profile(t, MpConfig::new(m)).unwrap()
 }
 
+/// Full profile through the 48-PU fleet work lists, executed serially on
+/// one thread so the rows isolate *schedule shape* (per-diagonal vs
+/// band-tile) from thread scaling.  `banded=false` walks the legacy
+/// per-diagonal schedule; `banded=true` walks `schedule_banded` tiles
+/// through the variable-width band kernel.
+fn fleet_profile<T: Real>(t: &[T], m: usize, banded: bool) -> MatrixProfile<T> {
+    let cfg = MpConfig::new(m);
+    let nw = cfg.validate(t.len()).unwrap();
+    let excl = cfg.exclusion();
+    let st = sliding_stats(t, m);
+    let mut mp = MatrixProfile::new_inf(nw, m, excl);
+    let mut work = WorkStats::default();
+    if banded {
+        let sched = scheduler::schedule_banded(nw, excl, 48);
+        for tiles in &sched.per_pu {
+            for tile in tiles {
+                kernel::compute_band_n(t, &st, tile.d0, tile.width, &mut mp, &mut work);
+            }
+        }
+    } else {
+        let sched = scheduler::schedule(nw, excl, 48);
+        for diags in &sched.per_pu {
+            for &d in diags {
+                kernel::compute_diagonal(t, &st, d, &mut mp, &mut work);
+            }
+        }
+    }
+    mp.sqrt_in_place();
+    mp
+}
+
 /// Record one engine row: table line + JSON entry; returns ns/cell.
 fn push_row(
     table: &mut Table,
@@ -130,6 +168,17 @@ fn main() {
         black_box(band_profile(&t64, m));
     });
     push_row(&mut table, &mut rows, "kernel-band", "f64", s.median, cells, Some(scalar_ns));
+
+    // Fleet-scheduled rows: 48-PU work lists executed serially, so the
+    // delta between them is purely per-diagonal vs band-tile dealing.
+    let s = time_budget(4.0, || {
+        black_box(fleet_profile(&t64, m, false));
+    });
+    push_row(&mut table, &mut rows, "fleet-diag", "f64", s.median, cells, Some(scalar_ns));
+    let s = time_budget(4.0, || {
+        black_box(fleet_profile(&t64, m, true));
+    });
+    push_row(&mut table, &mut rows, "fleet-band", "f64", s.median, cells, Some(scalar_ns));
 
     // f32: the SP design point.
     let s = time_budget(3.0, || {

@@ -1,13 +1,18 @@
-//! PU datapath trace (paper Section 4.1 / Fig. 5): execute diagonals
-//! through the functional PU state machine and print the pipeline-stage
-//! occupancy (DPU / DPUU / DCU / PUU) plus the per-chunk cycle and
-//! DRAM-traffic accounting the Aladdin-substitute model consumes.
+//! PU datapath trace (paper Section 4.1 / Fig. 5): execute band tiles
+//! and single diagonals through the functional PU state machine and
+//! print the pipeline-stage occupancy (DPU / DPUU / DCU / PUU) plus the
+//! per-chunk cycle and DRAM-traffic accounting the Aladdin-substitute
+//! model consumes.  The trace total and the descriptor model charge the
+//! SAME closed-form cycles (`PuTrace::cycles == ChunkWork::cycles`) —
+//! the "model cyc" column is printed from the descriptor to show it.
 //!
 //! Run: `cargo run --release --example pu_trace`
 
 use natsa::benchmark::Table;
+use natsa::mp::kernel::BAND;
 use natsa::mp::MatrixProfile;
 use natsa::natsa::pu::{ChunkWork, PuDatapath, PuDesign};
+use natsa::natsa::scheduler::BandTile;
 use natsa::prop::Rng;
 use natsa::timeseries::sliding_stats;
 
@@ -24,18 +29,31 @@ fn main() {
         let dp = PuDatapath::new(design, &t, &st);
         let mut profile = MatrixProfile::new_inf(nw, m, excl);
         let mut table = Table::new(&[
-            "diagonal", "cells", "DPU cyc", "DPUU cyc", "DCU cyc", "PUU cyc", "model cyc", "DRAM B",
+            "tile", "width", "cells", "DPU cyc", "DPUU cyc", "DCU cyc", "PUU cyc",
+            "trace cyc", "model cyc", "DRAM B",
         ]);
-        for d in [excl, nw / 4, nw / 2, nw - 64] {
-            let (trace, work) = dp.run_diagonal(d, &mut profile);
-            let chunk = ChunkWork { cells: work.cells, first_dot: true, m };
+        for tile in [
+            BandTile { d0: excl, width: BAND },
+            BandTile { d0: nw / 4, width: BAND },
+            BandTile { d0: nw / 2, width: 4 },
+            BandTile { d0: nw - 64, width: 1 },
+        ] {
+            let (trace, work) = dp.run_band(tile, &mut profile);
+            let chunk = ChunkWork {
+                cells: work.cells,
+                first_dots: tile.width as u64,
+                m,
+            };
+            assert_eq!(trace.cycles(), chunk.cycles(&design), "models diverged");
             table.row(&[
-                d.to_string(),
+                format!("{}..{}", tile.d0, tile.d0 + tile.width),
+                tile.width.to_string(),
                 work.cells.to_string(),
                 trace.dpu_cycles.to_string(),
                 trace.dpuu_cycles.to_string(),
                 trace.dcu_cycles.to_string(),
                 trace.puu_cycles.to_string(),
+                trace.cycles().to_string(),
                 chunk.cycles(&design).to_string(),
                 chunk.traffic_bytes(&design).to_string(),
             ]);
@@ -47,7 +65,8 @@ fn main() {
         ));
     }
     println!(
-        "\nThe six-step execution flow of Section 4.1: one DPU burst per\n\
-         diagonal, then DPUU->DCU->PUU pipelined groups of `lanes` cells."
+        "\nThe six-step execution flow of Section 4.1 over band tiles: one\n\
+         DPU burst per diagonal the tile begins, then DPUU->DCU->PUU\n\
+         pipelined groups of `lanes` cells at II=1 across the whole tile."
     );
 }

@@ -4,13 +4,17 @@
 //! for Time Series Analysis* (Fernandez et al., ICCD 2020) as a three-layer
 //! rust + JAX + Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — the coordinator: NATSA's diagonal-pair
-//!   workload partitioning ([`natsa::scheduler`]), the PU fleet and its
-//!   functional datapath ([`natsa::pu`]), the host API of Algorithm 2
-//!   ([`natsa`]), software baselines ([`mp`]), the evaluation substrates
-//!   the paper ran on ZSim/gem5/Ramulator/McPAT/Aladdin ([`sim`]), and the
-//!   request-path runtime that executes AOT-compiled kernels through
-//!   xla/PJRT ([`runtime`], [`coordinator`]).
+//! * **Layer 3 (this crate)** — the coordinator: NATSA's workload
+//!   partitioning at diagonal and band-tile granularity
+//!   ([`natsa::scheduler`] — the fleet deals balanced pairs of
+//!   adjacent-diagonal tiles so every PU rides the SIMD band kernel,
+//!   and a tile is the anytime interruption quantum), the PU fleet and
+//!   its functional datapath ([`natsa::pu`]), the host API of
+//!   Algorithm 2 ([`natsa`]), software baselines ([`mp`]), the
+//!   evaluation substrates the paper ran on
+//!   ZSim/gem5/Ramulator/McPAT/Aladdin ([`sim`]), and the request-path
+//!   runtime that executes AOT-compiled kernels through xla/PJRT
+//!   ([`runtime`], [`coordinator`]).
 //! * **Layer 2 (python/compile/model.py, build-time only)** — the JAX
 //!   compute graphs the host offloads, lowered once to HLO text in
 //!   `artifacts/`.

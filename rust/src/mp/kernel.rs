@@ -24,11 +24,17 @@
 //!   `P[i]` per row (the argmin lane scan runs only on the rare
 //!   improvement).  No interleaved two-sided `update`, no per-cell
 //!   branches on the hot path.
-//! * [`compute_diagonal`] — the same cell math for a *single* diagonal,
-//!   the work unit the NATSA scheduler assigns to PUs and the anytime /
-//!   random-order engines interleave.  It exists because scheduled work
-//!   lists are not contiguous; sequential sweeps should prefer
-//!   [`compute_triangle`], which rides the band path.
+//! * [`compute_band_n`] — the same pipeline at any width `1..=BAND`.
+//!   The band-granular scheduler ([`crate::natsa::scheduler`]) deals
+//!   *tiles* of adjacent diagonals to PUs, and remainder tiles / short
+//!   schedule tails are narrower than [`BAND`]; this entry point keeps
+//!   them on the multi-lane path instead of degrading to per-diagonal
+//!   walking.
+//! * [`compute_diagonal`] — the same cell math for a *single* diagonal
+//!   (== [`compute_band_n`] at width 1), the finest work unit the NATSA
+//!   scheduler deals and the anytime / random-order engines interleave.
+//!   Sequential sweeps should prefer [`compute_triangle`], which rides
+//!   the band path.
 //!
 //! Both paths evaluate every cell with the exact same expressions in the
 //! exact same association order (the delta-form recurrence
@@ -91,8 +97,9 @@ pub fn seed_dot<T: Real>(t: &[T], d: usize, m: usize) -> T {
 }
 
 /// Walk the whole admissible triangle `excl..nw` in ascending diagonal
-/// order: whole [`BAND`]-wide tiles through [`compute_band`], the
-/// remainder through [`compute_diagonal`].  This is the driver sequential
+/// order: whole [`BAND`]-wide tiles through [`compute_band`], the final
+/// remainder as one narrower tile through [`compute_band_n`] — no path
+/// falls back to single-diagonal walking.  This is the driver sequential
 /// engines (SCRIMP sequential order, STOMP) share.
 pub fn compute_triangle<T: Real>(
     t: &[T],
@@ -107,9 +114,8 @@ pub fn compute_triangle<T: Real>(
         compute_band(t, st, d, mp, work);
         d += BAND;
     }
-    while d < nw {
-        compute_diagonal(t, st, d, mp, work);
-        d += 1;
+    if d < nw {
+        compute_band_n(t, st, d, nw - d, mp, work);
     }
 }
 
@@ -117,9 +123,55 @@ pub fn compute_triangle<T: Real>(
 /// `d0 + BAND <= nw`) row by row, updating the profile in place.
 ///
 /// See the module docs for the pipeline; see [`compute_diagonal`] for the
-/// identical-value single-diagonal form.  PERF CONTRACT: squared
-/// distances (callers finalize with [`MatrixProfile::sqrt_in_place`]).
+/// identical-value single-diagonal form and [`compute_band_n`] for
+/// narrower tiles.  PERF CONTRACT: squared distances (callers finalize
+/// with [`MatrixProfile::sqrt_in_place`]).
 pub fn compute_band<T: Real>(
+    t: &[T],
+    st: &WindowStats<T>,
+    d0: usize,
+    mp: &mut MatrixProfile<T>,
+    work: &mut WorkStats,
+) {
+    band_w::<T, BAND>(t, st, d0, mp, work);
+}
+
+/// Advance a tile of `width` adjacent diagonals `d0..d0+width`
+/// (`1 <= width <= BAND`, `d0 + width <= nw`), updating the profile in
+/// place.  The band-granular scheduler deals tiles of any admissible
+/// width, so remainder tiles and short tails ride the same multi-lane
+/// pipeline as full [`BAND`]-wide tiles instead of degrading to
+/// one-diagonal-at-a-time execution.  Width 1 is exactly
+/// [`compute_diagonal`]; every width computes bit-identical cell values
+/// (same association order — see the module docs).  PERF CONTRACT:
+/// squared distances (callers finalize with
+/// [`MatrixProfile::sqrt_in_place`]).
+pub fn compute_band_n<T: Real>(
+    t: &[T],
+    st: &WindowStats<T>,
+    d0: usize,
+    width: usize,
+    mp: &mut MatrixProfile<T>,
+    work: &mut WorkStats,
+) {
+    // Monomorphized per width: the lane state must stay a fixed-size
+    // array for the compiler to keep it register-resident.
+    match width {
+        1 => compute_diagonal(t, st, d0, mp, work),
+        2 => band_w::<T, 2>(t, st, d0, mp, work),
+        3 => band_w::<T, 3>(t, st, d0, mp, work),
+        4 => band_w::<T, 4>(t, st, d0, mp, work),
+        5 => band_w::<T, 5>(t, st, d0, mp, work),
+        6 => band_w::<T, 6>(t, st, d0, mp, work),
+        7 => band_w::<T, 7>(t, st, d0, mp, work),
+        8 => band_w::<T, 8>(t, st, d0, mp, work),
+        _ => panic!("band width {width} out of range 1..={BAND}"),
+    }
+}
+
+/// The width-generic band pipeline behind [`compute_band`] /
+/// [`compute_band_n`] (see the module docs for the stages).
+fn band_w<T: Real, const W: usize>(
     t: &[T],
     st: &WindowStats<T>,
     d0: usize,
@@ -128,26 +180,26 @@ pub fn compute_band<T: Real>(
 ) {
     let m = st.m;
     let nw = st.len();
-    assert!(d0 + BAND <= nw, "band {d0}..{} out of range (nw={nw})", d0 + BAND);
+    assert!(d0 + W <= nw, "band {d0}..{} out of range (nw={nw})", d0 + W);
 
     // Closed-form accounting: one charge per band, never per cell.
-    let band_cells: u64 = (0..BAND).map(|dd| (nw - d0 - dd) as u64).sum();
+    let band_cells: u64 = (0..W).map(|dd| (nw - d0 - dd) as u64).sum();
     work.cells += band_cells;
     work.updates += 2 * band_cells;
-    work.diagonals += BAND as u64;
-    work.first_dots += BAND as u64;
+    work.diagonals += W as u64;
+    work.first_dots += W as u64;
 
     // Per-lane seed dot products (the DPU step, once per diagonal).
-    let mut q = [T::zero(); BAND];
+    let mut q = [T::zero(); W];
     for (dd, qd) in q.iter_mut().enumerate() {
         *qd = seed_dot(t, d0 + dd, m);
     }
 
     let two_m = T::of_f64(2.0 * m as f64);
     let zero = T::zero();
-    let mut d2 = [T::zero(); BAND];
-    // Rows where all BAND lanes are active (the shortest lane's length).
-    let len_short = nw - (d0 + BAND - 1);
+    let mut d2 = [T::zero(); W];
+    // Rows where all W lanes are active (the shortest lane's length).
+    let len_short = nw - (d0 + W - 1);
     for i in 0..len_short {
         let j0 = i + d0;
         // Eq. 2 delta, element-wise across the lanes; each lane is its
@@ -155,9 +207,9 @@ pub fn compute_band<T: Real>(
         if i > 0 {
             let hi = t[i + m - 1];
             let lo = t[i - 1];
-            let tj_hi: &[T; BAND] = (&t[j0 + m - 1..j0 + m - 1 + BAND]).try_into().unwrap();
-            let tj_lo: &[T; BAND] = (&t[j0 - 1..j0 - 1 + BAND]).try_into().unwrap();
-            for dd in 0..BAND {
+            let tj_hi: &[T; W] = (&t[j0 + m - 1..j0 + m - 1 + W]).try_into().unwrap();
+            let tj_lo: &[T; W] = (&t[j0 - 1..j0 - 1 + W]).try_into().unwrap();
+            for dd in 0..W {
                 q[dd] = q[dd] + (hi * tj_hi[dd] - lo * tj_lo[dd]);
             }
         }
@@ -165,12 +217,12 @@ pub fn compute_band<T: Real>(
         // merge (conditional moves into the contiguous profile slice).
         let za_i = st.za[i];
         let zb_i = st.zb[i];
-        let za_j: &[T; BAND] = (&st.za[j0..j0 + BAND]).try_into().unwrap();
-        let zb_j: &[T; BAND] = (&st.zb[j0..j0 + BAND]).try_into().unwrap();
+        let za_j: &[T; W] = (&st.za[j0..j0 + W]).try_into().unwrap();
+        let zb_j: &[T; W] = (&st.zb[j0..j0 + W]).try_into().unwrap();
         {
-            let pc: &mut [T; BAND] = (&mut mp.p[j0..j0 + BAND]).try_into().unwrap();
-            let ic: &mut [i64; BAND] = (&mut mp.i[j0..j0 + BAND]).try_into().unwrap();
-            for dd in 0..BAND {
+            let pc: &mut [T; W] = (&mut mp.p[j0..j0 + W]).try_into().unwrap();
+            let ic: &mut [i64; W] = (&mut mp.i[j0..j0 + W]).try_into().unwrap();
+            for dd in 0..W {
                 let v = (two_m - q[dd] * za_i * za_j[dd] + zb_i * zb_j[dd]).max(zero);
                 d2[dd] = v;
                 let take = v < pc[dd];
@@ -195,9 +247,9 @@ pub fn compute_band<T: Real>(
             mp.i[i] = (j0 + bdd) as i64;
         }
     }
-    // Ragged tail: lanes 0..BAND-1 outlive the shortest lane; finish each
+    // Ragged tail: lanes 0..W-1 outlive the shortest lane; finish each
     // with the identical-value single-diagonal recurrence.
-    for dd in 0..BAND - 1 {
+    for dd in 0..W.saturating_sub(1) {
         let d = d0 + dd;
         let mut q_d = q[dd];
         for i in len_short..nw - d {
@@ -395,6 +447,71 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn prop_every_band_width_bit_identical_to_diagonal() {
+        // the tentpole generalization: a tile of ANY width 1..=BAND
+        // computes the same cells to the bit as per-diagonal walking, so
+        // the band-granular scheduler may deal tiles of arbitrary width
+        check("band-width-bits", 8, |rng: &mut Rng| {
+            let n = rng.range(80, 900);
+            let m = rng.range(4, 33);
+            if n < 5 * m {
+                return;
+            }
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let cfg = MpConfig::new(m);
+            let nw = cfg.validate(t.len()).unwrap();
+            let excl = cfg.exclusion();
+            let st = sliding_stats(&t, m);
+            let (diag, wd) = diag_profile(&t, cfg, compute_diagonal);
+            for width in 1..=BAND {
+                let mut mp = MatrixProfile::new_inf(nw, m, excl);
+                let mut work = WorkStats::default();
+                // tile the admissible range at this width (ragged tail
+                // becomes a narrower tile)
+                let mut d = excl;
+                while d < nw {
+                    let w = width.min(nw - d);
+                    compute_band_n(&t, &st, d, w, &mut mp, &mut work);
+                    d += w;
+                }
+                mp.sqrt_in_place();
+                assert_eq!(
+                    mp.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    diag.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "width={width} n={n} m={m}"
+                );
+                assert_eq!(mp.i, diag.i, "width={width} n={n} m={m}");
+                assert_eq!(work, wd, "width={width}: accounting must not depend on tiling");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn band_tile_overhanging_nw_panics() {
+        // legal width, but the tile hangs past the last diagonal
+        let t: Vec<f64> = Rng::new(60).gauss_vec(64);
+        let st = sliding_stats(&t, 8);
+        let nw = st.len();
+        let mut mp = MatrixProfile::new_inf(nw, 8, 2);
+        let mut w = WorkStats::default();
+        compute_band_n(&t, &st, nw - 2, 3, &mut mp, &mut w);
+    }
+
+    #[test]
+    #[should_panic(expected = "band width")]
+    fn band_width_above_band_panics() {
+        // the width-dispatch guard itself: widths beyond BAND have no
+        // monomorphization and must be rejected
+        let t: Vec<f64> = Rng::new(60).gauss_vec(64);
+        let st = sliding_stats(&t, 8);
+        let nw = st.len();
+        let mut mp = MatrixProfile::new_inf(nw, 8, 2);
+        let mut w = WorkStats::default();
+        compute_band_n(&t, &st, 2, BAND + 1, &mut mp, &mut w);
     }
 
     #[test]

@@ -7,11 +7,17 @@
 //! or atomics on the hot path.
 //!
 //! Partitioning is pluggable so benches can contrast the naive contiguous
-//! split (load-imbalanced: diagonal lengths vary) against NATSA's
-//! balanced pair scheme from [`crate::natsa::scheduler`].
+//! split (load-imbalanced: diagonal lengths vary) and per-diagonal work
+//! lists against NATSA's balanced pair schemes from
+//! [`crate::natsa::scheduler`].  The default is the band-granular scheme
+//! ([`Partition::BandedPairs`]): each thread receives balanced pairs of
+//! *adjacent-diagonal tiles* and executes them through the kernel's
+//! multi-lane band path — same cells, same bits, ~2x fewer instructions
+//! per cell than per-diagonal walking.
 
-use crate::mp::kernel::compute_diagonal;
+use crate::mp::kernel::compute_band_n;
 use crate::mp::{MatrixProfile, MpConfig, WorkStats};
+use crate::natsa::scheduler::BandTile;
 use crate::timeseries::sliding_stats;
 use crate::Real;
 
@@ -23,17 +29,22 @@ pub enum Partition {
     Contiguous,
     /// Round-robin by index (better but still unbalanced at the tail).
     Strided,
-    /// NATSA's balanced diagonal-pair scheme (Section 4.2).
+    /// NATSA's balanced diagonal-pair scheme (Section 4.2), one diagonal
+    /// per work unit (the pre-band fleet baseline).
     BalancedPairs,
+    /// The band-granular scheme: balanced pairs of adjacent-diagonal
+    /// tiles, so every thread rides the kernel's multi-lane band path
+    /// ([`crate::natsa::scheduler::schedule_banded`]).
+    BandedPairs,
 }
 
-/// Parallel SCRIMP with `threads` workers.
+/// Parallel SCRIMP with `threads` workers (band-granular work lists).
 pub fn matrix_profile<T: Real>(
     t: &[T],
     cfg: MpConfig,
     threads: usize,
 ) -> crate::Result<MatrixProfile<T>> {
-    Ok(with_stats(t, cfg, threads, Partition::BalancedPairs)?.0)
+    Ok(with_stats(t, cfg, threads, Partition::BandedPairs)?.0)
 }
 
 /// Parallel SCRIMP with explicit partitioning and aggregate work stats.
@@ -48,17 +59,17 @@ pub fn with_stats<T: Real>(
     let excl = cfg.exclusion();
     let m = cfg.m;
     let st = sliding_stats(t, m);
-    let assignments = assign(nw, excl, threads, partition);
+    let assignments = assign_tiles(nw, excl, threads, partition);
 
     let results: Vec<(MatrixProfile<T>, WorkStats)> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(threads);
-        for diags in &assignments {
+        for tiles in &assignments {
             let st = &st;
             handles.push(scope.spawn(move || {
                 let mut local = MatrixProfile::new_inf(nw, m, excl);
                 let mut work = WorkStats::default();
-                for &d in diags {
-                    compute_diagonal(t, st, d, &mut local, &mut work);
+                for tile in tiles {
+                    compute_band_n(t, st, tile.d0, tile.width, &mut local, &mut work);
                 }
                 (local, work)
             }));
@@ -77,32 +88,56 @@ pub fn with_stats<T: Real>(
     Ok((mp, work))
 }
 
-/// Split diagonals `excl..nw` into per-thread work lists.
-pub fn assign(nw: usize, excl: usize, threads: usize, partition: Partition) -> Vec<Vec<usize>> {
+/// Split diagonals `excl..nw` into per-thread band-tile work lists.
+/// Only [`Partition::BandedPairs`] produces multi-diagonal tiles; the
+/// other schemes deal width-1 tiles (one diagonal per work unit), which
+/// keeps them meaningful as per-diagonal baselines for the ablation
+/// bench.
+pub fn assign_tiles(
+    nw: usize,
+    excl: usize,
+    threads: usize,
+    partition: Partition,
+) -> Vec<Vec<BandTile>> {
+    if partition == Partition::BandedPairs {
+        // Delegate to the NATSA scheduler so the software fleet and the
+        // accelerator share one band-granular partitioning implementation.
+        return crate::natsa::scheduler::schedule_banded(nw, excl, threads).per_pu;
+    }
+    let solo = |d: usize| BandTile { d0: d, width: 1 };
     let diags: Vec<usize> = (excl..nw).collect();
     let mut out = vec![Vec::new(); threads];
     match partition {
         Partition::Contiguous => {
             let per = diags.len().div_ceil(threads);
             for (k, chunk) in diags.chunks(per.max(1)).enumerate() {
-                out[k.min(threads - 1)].extend_from_slice(chunk);
+                out[k.min(threads - 1)].extend(chunk.iter().map(|&d| solo(d)));
             }
         }
         Partition::Strided => {
             for (k, d) in diags.into_iter().enumerate() {
-                out[k % threads].push(d);
+                out[k % threads].push(solo(d));
             }
         }
         Partition::BalancedPairs => {
-            // Delegate to the NATSA scheduler so the software fleet and the
-            // accelerator share one partitioning implementation.
             let sched = crate::natsa::scheduler::schedule(nw, excl, threads);
             for (k, pu) in sched.per_pu.into_iter().enumerate() {
-                out[k] = pu;
+                out[k] = pu.into_iter().map(solo).collect();
             }
         }
+        Partition::BandedPairs => unreachable!("handled above"),
     }
     out
+}
+
+/// Split diagonals `excl..nw` into per-thread diagonal lists (the tile
+/// assignment of [`assign_tiles`], expanded to individual diagonals —
+/// load/coverage analysis and the ablation bench consume this view).
+pub fn assign(nw: usize, excl: usize, threads: usize, partition: Partition) -> Vec<Vec<usize>> {
+    assign_tiles(nw, excl, threads, partition)
+        .into_iter()
+        .map(|tiles| tiles.iter().flat_map(|t| t.diagonals()).collect())
+        .collect()
 }
 
 #[cfg(test)]
@@ -121,6 +156,7 @@ mod tests {
             Partition::Contiguous,
             Partition::Strided,
             Partition::BalancedPairs,
+            Partition::BandedPairs,
         ] {
             let (got, _) = with_stats(&t, cfg, 4, part).unwrap();
             assert!(
@@ -153,6 +189,7 @@ mod tests {
                 Partition::Contiguous,
                 Partition::Strided,
                 Partition::BalancedPairs,
+                Partition::BandedPairs,
             ] {
                 let lists = assign(nw, excl, threads, part);
                 assert_eq!(lists.len(), threads);
@@ -186,6 +223,14 @@ mod tests {
             "balanced pairs imbalance {imb_b} (max {max_b}, min {min_b})"
         );
         assert!(imb_b < imb_c, "balanced {imb_b} vs contiguous {imb_c}");
+        // the band-granular scheme must not give up the static balance
+        // the per-diagonal pairing delivers
+        let (max_t, min_t) = load(&assign(nw, excl, threads, Partition::BandedPairs));
+        let imb_t = max_t as f64 / min_t.max(1) as f64;
+        assert!(
+            imb_t < 1.01,
+            "banded pairs imbalance {imb_t} (max {max_t}, min {min_t})"
+        );
     }
 
     #[test]
@@ -197,5 +242,8 @@ mod tests {
         let (_, w4) = with_stats(&t, cfg, 4, Partition::BalancedPairs).unwrap();
         assert_eq!(w1.cells, w4.cells);
         assert_eq!(w1.first_dots, w4.first_dots);
+        // tiling must not change the closed-form accounting either
+        let (_, wb) = with_stats(&t, cfg, 4, Partition::BandedPairs).unwrap();
+        assert_eq!(w1, wb);
     }
 }

@@ -539,6 +539,55 @@ mod tests {
     }
 
     #[test]
+    fn minimal_history_survives_repeated_compactions_with_rebased_snapshots() {
+        // The smallest legal bound, h == m + excl, keeps exactly
+        // excl + 1 windows alive, so the ring compacts roughly every
+        // `h` appends forever.  Across hundreds of compactions: appends
+        // must never panic, every snapshot must rebase its positions to
+        // first_window (self-consistent, in-range), and windows whose
+        // recorded best neighbor has been evicted must report -1 while
+        // keeping the (true, historical) distance.
+        let m = 16;
+        let excl = 4; // default m/4
+        let h = m + excl;
+        let mut eng = Stampi::<f64>::new(StampiConfig::new(m).with_max_history(h)).unwrap();
+        let mut rng = Rng::new(80);
+        let mut evicted_neighbor_seen = false;
+        let mut in_snapshot_neighbor_seen = false;
+        for (s, x) in rng.gauss_vec(600).into_iter().enumerate() {
+            eng.append(x);
+            if s + 1 < m {
+                continue;
+            }
+            let mp = eng.profile();
+            // snapshot indexing: position r == window first_window() + r
+            assert_eq!(mp.len(), eng.retained_windows());
+            assert_eq!(eng.first_window() + mp.len(), eng.num_windows());
+            for (r, &j) in mp.i.iter().enumerate() {
+                assert!(
+                    (-1..mp.len() as i64).contains(&j),
+                    "append {s}: neighbor {j} out of snapshot (len {})",
+                    mp.len()
+                );
+                if j >= 0 {
+                    // a named neighbor is in-snapshot and admissible
+                    assert!((r as i64 - j).unsigned_abs() >= excl as u64);
+                    in_snapshot_neighbor_seen = true;
+                } else if mp.p[r].is_finite() {
+                    evicted_neighbor_seen = true;
+                }
+            }
+        }
+        assert_eq!(eng.retained_windows(), excl + 1);
+        assert!(eng.first_window() >= 600 - h, "compaction never engaged");
+        // at h == m + excl only the (first, last) retained pair is
+        // admissible, so most finite entries must have outlived their
+        // neighbor — and some must still name one
+        assert!(evicted_neighbor_seen, "no evicted neighbor ever reported -1");
+        assert!(in_snapshot_neighbor_seen, "no in-snapshot neighbor survived");
+    }
+
+    #[test]
     fn minimal_history_bound_still_admits_pairs() {
         // at the exact minimum h = m + excl, the engine must keep finding
         // (finite) profile values rather than degenerating to all-inf

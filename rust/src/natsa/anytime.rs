@@ -8,13 +8,19 @@
 //! randomizing each PU's visiting order, so any prefix of execution covers
 //! the distance matrix roughly uniformly.
 //!
-//! [`run_anytime`] executes PU work lists round-robin, one diagonal per PU
-//! per round, checking the [`Budget`] between rounds — mirroring how the
-//! host would interrupt the accelerator.
+//! [`run_anytime`] executes PU work lists round-robin, one **band tile**
+//! per PU per turn (the tile is the interruption quantum — the same work
+//! unit the band-granular scheduler deals and the kernel executes in one
+//! call), checking the [`Budget`] after *every* quantum.  Checking per
+//! quantum matters: budgets used to be checked only between whole PU
+//! rounds (`Flag`) or whole diagonals (`Cells`), so a pre-set
+//! interruption flag still executed up to `pus` full diagonals before
+//! stopping — on a 48-PU fleet, ~48x the promised interruption latency.
+//! Now an interruption costs at most one in-flight tile.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
-use crate::mp::kernel::compute_diagonal;
+use crate::mp::kernel::compute_band_n;
 use crate::mp::{total_cells, MatrixProfile, MpConfig, WorkStats};
 use crate::natsa::{scheduler, NatsaConfig, Order};
 use crate::timeseries::sliding_stats;
@@ -61,7 +67,7 @@ pub fn run_anytime<T: Real>(
     let st = sliding_stats(t, m);
     let total = total_cells(nw, excl);
 
-    let mut sched = scheduler::schedule(nw, excl, config.pus);
+    let mut sched = scheduler::schedule_banded(nw, excl, config.pus);
     match config.order {
         Order::Sequential => sched.sequentialize(),
         Order::Random(seed) => sched.randomize(seed),
@@ -83,17 +89,20 @@ pub fn run_anytime<T: Real>(
 
     'outer: for round in 0..longest {
         for list in &sched.per_pu {
-            if let Some(&d) = list.get(round) {
-                compute_diagonal(t, &st, d, &mut mp, &mut work);
-                done += 1;
+            if let Some(&tile) = list.get(round) {
+                compute_band_n(t, &st, tile.d0, tile.width, &mut mp, &mut work);
+                done += tile.width;
+                // Budget check per work quantum (tile), never coarser:
+                // an interruption — cell budget or external flag — must
+                // cost at most the one tile already in flight.
                 if work.cells >= stop_at {
                     break 'outer;
                 }
-            }
-        }
-        if let Budget::Flag(flag) = budget {
-            if flag.load(Ordering::Relaxed) {
-                break;
+                if let Budget::Flag(flag) = budget {
+                    if flag.load(Ordering::Relaxed) {
+                        break 'outer;
+                    }
+                }
             }
         }
     }
@@ -154,7 +163,7 @@ mod tests {
         let t: Vec<f64> = rng.gauss_vec(600);
         let out = run_anytime(&t, 16, &config_random(), Budget::Fraction(0.25)).unwrap();
         assert!(out.progress >= 0.25, "{}", out.progress);
-        // one diagonal of overshoot at most per PU round
+        // at most one band tile of overshoot (the work quantum)
         assert!(out.progress < 0.30, "{}", out.progress);
     }
 
@@ -184,10 +193,43 @@ mod tests {
     fn flag_interruption_stops_early() {
         let mut rng = Rng::new(53);
         let t: Vec<f64> = rng.gauss_vec(800);
-        let flag = AtomicBool::new(true); // pre-set: stop after round 1
+        let flag = AtomicBool::new(true); // pre-set: stop after one quantum
         let out = run_anytime(&t, 16, &config_random(), Budget::Flag(&flag)).unwrap();
         assert!(out.progress < 1.0);
         assert!(out.diagonals_done >= 1);
+    }
+
+    #[test]
+    fn preset_flag_executes_at_most_one_quantum() {
+        // Regression: the flag used to be checked only between whole PU
+        // rounds, so a pre-set flag still executed up to `pus` (48) full
+        // diagonals.  The budget is now honored per work quantum: a
+        // pre-set flag stops after the single tile already in flight.
+        use crate::mp::kernel::BAND;
+        let mut rng = Rng::new(55);
+        let t: Vec<f64> = rng.gauss_vec(800);
+        let m = 16;
+        let nw = 800 - m + 1;
+        let excl = m / 4;
+        let flag = AtomicBool::new(true);
+        let out = run_anytime(&t, m, &config_random(), Budget::Flag(&flag)).unwrap();
+        // at most one tile: <= BAND diagonals, <= BAND longest-diagonal
+        // cells (conservative bound on any tile in the schedule)
+        assert!(
+            out.diagonals_done >= 1 && out.diagonals_done <= BAND,
+            "{} diagonals after pre-set flag",
+            out.diagonals_done
+        );
+        let max_tile_cells: u64 = (0..BAND).map(|dd| (nw - excl - dd) as u64).sum();
+        assert!(
+            out.work.cells <= max_tile_cells,
+            "{} cells after pre-set flag (one quantum is <= {max_tile_cells})",
+            out.work.cells
+        );
+        // the same granularity must hold for cell budgets: a 1-cell
+        // budget stops after one tile too
+        let out = run_anytime(&t, m, &config_random(), Budget::Cells(1)).unwrap();
+        assert!(out.work.cells <= max_tile_cells, "{}", out.work.cells);
     }
 
     #[test]

@@ -21,8 +21,18 @@
 
 use crate::mp::kernel;
 use crate::mp::{MatrixProfile, WorkStats};
+use crate::natsa::scheduler::BandTile;
 use crate::timeseries::WindowStats;
 use crate::Real;
+
+/// DPUU→DCU→PUU pipeline depth (Fig. 5): the fill cycles charged once
+/// per chunk.  This is THE closed-form constant — both the functional
+/// [`PuTrace`] and the descriptor [`ChunkWork`] charge it, so the two
+/// faces of the PU model can never disagree on the cycle count of the
+/// same work (they used to: the trace charged a `log2(lanes)` tree depth
+/// where the descriptor charged 12, skewing `examples/pu_trace.rs`
+/// against the [`crate::sim::accel`] timing model).
+pub const PIPE_FILL: u64 = 12;
 
 /// Static design parameters of one PU (paper Table 3, per-PU columns).
 #[derive(Clone, Copy, Debug)]
@@ -97,30 +107,40 @@ impl PuDesign {
     pub fn peak_cells_per_sec(&self) -> f64 {
         self.lanes as f64 * self.freq_ghz * 1e9
     }
+
+    /// Cycles of one O(m) seed dot product (the DPU burst): `m/lanes`
+    /// vectorized multiply-adds plus the `log2(lanes)` reduction-tree
+    /// depth.  The single closed form shared by [`PuTrace`] and
+    /// [`ChunkWork::cycles`].
+    pub fn seed_dot_cycles(&self, m: usize) -> u64 {
+        (m as u64).div_ceil(self.lanes as u64) + u64::from((self.lanes as u64).trailing_zeros())
+    }
 }
 
-/// One unit of PU work: a contiguous run of cells on one diagonal.
+/// One unit of PU work: a contiguous run of cells on a band tile of
+/// adjacent diagonals (width 1 = the classic single-diagonal chunk).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkWork {
     /// Cells computed (incremental, Eq. 2 path).
     pub cells: u64,
-    /// Whether this chunk begins a diagonal (O(m) DPU dot product).
-    pub first_dot: bool,
+    /// O(m) DPU seed dot products at the head of this chunk — one per
+    /// diagonal the chunk *begins* (a [`BAND`](crate::mp::kernel::BAND)
+    /// tile charges its width, a continuation chunk charges 0).
+    pub first_dots: u64,
     /// Window length.
     pub m: usize,
 }
 
 impl ChunkWork {
-    /// PU cycles: DPU startup (m / lanes, vectorized reduce) + pipeline
-    /// fill + II=1 vector iterations over the cells.
+    /// PU cycles under the unified closed-form model: one DPU burst per
+    /// seed dot ([`PuDesign::seed_dot_cycles`]), one pipeline fill
+    /// ([`PIPE_FILL`]), then II=1 vector iterations over the cells.
+    /// Pinned equal to the functional [`PuTrace::cycles`] of the same
+    /// work by `trace_and_descriptor_agree_on_cycles`.
     pub fn cycles(&self, d: &PuDesign) -> u64 {
-        const PIPE_FILL: u64 = 12; // DPUU->DCU->PUU depth, Fig. 5
-        let dot = if self.first_dot {
-            (self.m as u64).div_ceil(d.lanes as u64) + PIPE_FILL
-        } else {
-            0
-        };
-        dot + self.cells.div_ceil(d.lanes as u64) + PIPE_FILL
+        self.first_dots * d.seed_dot_cycles(self.m)
+            + self.cells.div_ceil(d.lanes as u64)
+            + PIPE_FILL
     }
 
     /// DRAM bytes moved for this chunk.  Per cell the PU streams the two
@@ -134,14 +154,12 @@ impl ChunkWork {
             + 4 * e               // mu_i, mu_j, inv_msig_i, inv_msig_j
             + 2 * e               // P_i, P_j read
             + e;                  // amortized P/I write-back
-        let dot = if self.first_dot { 2 * self.m as u64 * e } else { 0 };
-        dot + self.cells * per_cell
+        self.first_dots * 2 * self.m as u64 * e + self.cells * per_cell
     }
 
     /// FLOPs executed (Eq. 2: 4, Eq. 1: ~7, compares: 2 per cell).
     pub fn flops(&self) -> u64 {
-        let dot = if self.first_dot { 2 * self.m as u64 } else { 0 };
-        dot + self.cells * 13
+        self.first_dots * 2 * self.m as u64 + self.cells * 13
     }
 }
 
@@ -152,6 +170,18 @@ pub struct PuTrace {
     pub dpuu_cycles: u64,
     pub dcu_cycles: u64,
     pub puu_cycles: u64,
+}
+
+impl PuTrace {
+    /// Total latency of the traced run under the unified closed-form
+    /// model: the DPU bursts, one pipeline fill, then one II=1 vector
+    /// group per cycle through the deepest pipelined stage.  By
+    /// construction equal to [`ChunkWork::cycles`] for the same work —
+    /// the functional trace and the descriptor model can no longer
+    /// charge different cycles for the same diagonal.
+    pub fn cycles(&self) -> u64 {
+        self.dpu_cycles + PIPE_FILL + self.dcu_cycles.max(self.puu_cycles)
+    }
 }
 
 /// Functional PU: executes one diagonal exactly as the Section 4.1 flow
@@ -167,42 +197,49 @@ impl<'a, T: Real> PuDatapath<'a, T> {
         PuDatapath { design, t, st }
     }
 
-    /// Execute diagonal `d` against private profile `pp` following the six
-    /// steps of Section 4.1.  Returns the stage trace and work stats.
+    /// Execute the band tile `tile` (adjacent diagonals
+    /// `tile.d0..tile.d0+tile.width`) against private profile `pp`
+    /// following the six steps of Section 4.1, width lanes at a time.
+    /// Returns the stage trace and work stats.
     ///
-    /// The arithmetic is [`kernel::compute_diagonal`] — the exact cell
+    /// The arithmetic is [`kernel::compute_band_n`] — the exact cell
     /// math every other engine runs, so a PU-fleet profile is
     /// bit-identical to a SCRIMP/STOMP one.  The stage occupancy is
-    /// charged in closed form: one DPU burst (steps 1-3: seed dot,
-    /// first distance, first update), then `lanes` cells per
-    /// DPUU/DCU/PUU cycle at II=1 over the pipelined remainder
-    /// (steps 4-6).
+    /// charged in closed form under the unified model: one DPU burst per
+    /// diagonal in the tile (steps 1-3: seed dots, first distances,
+    /// first updates), then `lanes` cells per DPUU/DCU/PUU cycle at II=1
+    /// over the pipelined cells (steps 4-6); [`PuTrace::cycles`] equals
+    /// [`ChunkWork::cycles`] of the same work by construction.
     ///
     /// PERF CONTRACT: `pp` accumulates **squared** distances; callers
     /// finalize with one [`MatrixProfile::sqrt_in_place`] after all
-    /// diagonals merge.
-    pub fn run_diagonal(&self, d: usize, pp: &mut MatrixProfile<T>) -> (PuTrace, WorkStats) {
+    /// tiles merge.
+    pub fn run_band(&self, tile: BandTile, pp: &mut MatrixProfile<T>) -> (PuTrace, WorkStats) {
         let m = self.st.m;
-        let nw = self.st.len();
-        let len = nw - d;
         let lanes = self.design.lanes as u64;
         let mut work = WorkStats::default();
 
         // Steps 1-6, functionally: the unified kernel (closed-form stats).
-        kernel::compute_diagonal(self.t, self.st, d, pp, &mut work);
+        kernel::compute_band_n(self.t, self.st, tile.d0, tile.width, pp, &mut work);
 
-        // Stage occupancy in closed form.  Step 1 (DPU): vectorized tree
-        // reduce over the m-point seed dot.  Steps 2-3 (DCU, PUU): one
-        // cycle each for the seed cell.  Steps 4-6 (DPUU->DCU->PUU):
-        // `lanes` cells per cycle at II=1 over the len-1 remaining cells.
-        let vec_groups = (len as u64 - 1).div_ceil(lanes);
+        // Stage occupancy in closed form.  Step 1 (DPU): one vectorized
+        // tree reduce per diagonal's m-point seed dot.  Steps 4-6
+        // (DPUU->DCU->PUU): `lanes` cells per cycle at II=1; the width
+        // seed cells skip the DPUU (their dot IS the seed).
+        let vec_groups = work.cells.div_ceil(lanes);
         let trace = PuTrace {
-            dpu_cycles: (m as u64).div_ceil(lanes) + (lanes.trailing_zeros() as u64),
-            dpuu_cycles: vec_groups,
-            dcu_cycles: 1 + vec_groups,
-            puu_cycles: 1 + vec_groups,
+            dpu_cycles: tile.width as u64 * self.design.seed_dot_cycles(m),
+            dpuu_cycles: (work.cells - tile.width as u64).div_ceil(lanes),
+            dcu_cycles: vec_groups,
+            puu_cycles: vec_groups,
         };
         (trace, work)
+    }
+
+    /// Execute one diagonal — [`Self::run_band`] at width 1, the classic
+    /// Section 4.1 flow.
+    pub fn run_diagonal(&self, d: usize, pp: &mut MatrixProfile<T>) -> (PuTrace, WorkStats) {
+        self.run_band(BandTile { d0: d, width: 1 }, pp)
     }
 }
 
@@ -276,25 +313,32 @@ mod tests {
 
     #[test]
     fn chunk_cycles_scale_with_lanes() {
-        let w = ChunkWork { cells: 1024, first_dot: false, m: 128 };
+        let w = ChunkWork { cells: 1024, first_dots: 0, m: 128 };
         let dp_cycles = w.cycles(&PuDesign::dp());
         let sp_cycles = w.cycles(&PuDesign::sp());
         assert!(sp_cycles < dp_cycles);
-        assert_eq!(w.cycles(&PuDesign::dp()), 1024 / 8 + 12);
+        assert_eq!(w.cycles(&PuDesign::dp()), 1024 / 8 + PIPE_FILL);
     }
 
     #[test]
-    fn first_dot_adds_startup() {
-        let a = ChunkWork { cells: 100, first_dot: false, m: 256 };
-        let b = ChunkWork { cells: 100, first_dot: true, m: 256 };
+    fn first_dots_add_startup() {
+        let a = ChunkWork { cells: 100, first_dots: 0, m: 256 };
+        let b = ChunkWork { cells: 100, first_dots: 1, m: 256 };
+        let band = ChunkWork { cells: 100, first_dots: 8, m: 256 };
         let d = PuDesign::dp();
         assert!(b.cycles(&d) > a.cycles(&d));
         assert!(b.traffic_bytes(&d) > a.traffic_bytes(&d));
+        // a band tile charges one DPU burst per diagonal it begins
+        assert_eq!(
+            band.cycles(&d) - a.cycles(&d),
+            8 * d.seed_dot_cycles(256)
+        );
+        assert_eq!(band.flops() - a.flops(), 8 * 2 * 256);
     }
 
     #[test]
     fn sp_traffic_half_of_dp() {
-        let w = ChunkWork { cells: 1000, first_dot: false, m: 64 };
+        let w = ChunkWork { cells: 1000, first_dots: 0, m: 64 };
         assert_eq!(
             w.traffic_bytes(&PuDesign::dp()),
             2 * w.traffic_bytes(&PuDesign::sp())
@@ -310,10 +354,76 @@ mod tests {
         let nw = st.len();
         let mut pp = MatrixProfile::new_inf(nw, 8, 2);
         let (trace, work) = dp.run_diagonal(10, &mut pp);
-        // one DPU burst, then ceil((len-1)/lanes) vector groups
+        // one DPU burst, then II=1 vector groups over the cells (the
+        // seed cell skips the DPUU: its dot product IS the seed)
         let len = (nw - 10) as u64;
-        assert_eq!(trace.dpuu_cycles, (len - 1).div_ceil(8));
-        assert_eq!(trace.dcu_cycles, 1 + trace.dpuu_cycles);
         assert_eq!(work.cells, len);
+        assert_eq!(trace.dpu_cycles, PuDesign::dp().seed_dot_cycles(8));
+        assert_eq!(trace.dpuu_cycles, (len - 1).div_ceil(8));
+        assert_eq!(trace.dcu_cycles, len.div_ceil(8));
+        assert_eq!(trace.puu_cycles, trace.dcu_cycles);
+    }
+
+    #[test]
+    fn trace_and_descriptor_agree_on_cycles() {
+        // The unified closed-form model: the functional PuTrace and the
+        // descriptor ChunkWork must charge the SAME cycles for the same
+        // work — diagonals and band tiles, DP and SP designs.  (They
+        // used to disagree: PIPE_FILL=12 in the descriptor vs a
+        // log2(lanes) tree depth in the trace.)
+        check("pu-trace-vs-descriptor", 8, |rng: &mut Rng| {
+            let n = rng.range(100, 500);
+            let m = rng.range(4, 24);
+            if n < 4 * m {
+                return;
+            }
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let st = sliding_stats(&t, m);
+            let nw = st.len();
+            for design in [PuDesign::dp(), PuDesign::sp()] {
+                let dp = PuDatapath::new(design, &t, &st);
+                let mut pp = MatrixProfile::new_inf(nw, m, (m / 4).max(1));
+                let width = rng.range(1, 9).min(nw / 2);
+                let d0 = rng.range(1, nw - width);
+                let tile = BandTile { d0, width };
+                let (trace, work) = dp.run_band(tile, &mut pp);
+                let chunk = ChunkWork {
+                    cells: work.cells,
+                    first_dots: width as u64,
+                    m,
+                };
+                assert_eq!(
+                    trace.cycles(),
+                    chunk.cycles(&design),
+                    "tile {tile:?}, lanes {}",
+                    design.lanes
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn band_tile_matches_per_diagonal_execution_bitwise() {
+        // run_band over a tile == run_diagonal over each member diagonal
+        let mut rng = Rng::new(34);
+        let t: Vec<f64> = rng.gauss_vec(400);
+        let m = 12;
+        let st = sliding_stats(&t, m);
+        let nw = st.len();
+        let dp = PuDatapath::new(PuDesign::dp(), &t, &st);
+        let mut via_band = MatrixProfile::new_inf(nw, m, 3);
+        let mut via_diag = MatrixProfile::new_inf(nw, m, 3);
+        let tile = BandTile { d0: 7, width: 8 };
+        let (_, wb) = dp.run_band(tile, &mut via_band);
+        let mut wd = WorkStats::default();
+        for d in tile.diagonals() {
+            let (_, w) = dp.run_diagonal(d, &mut via_diag);
+            wd.add(&w);
+        }
+        via_band.sqrt_in_place();
+        via_diag.sqrt_in_place();
+        assert!(via_band.max_abs_diff(&via_diag) == 0.0);
+        assert_eq!(via_band.i, via_diag.i);
+        assert_eq!(wb, wd);
     }
 }

@@ -1,4 +1,5 @@
-//! NATSA's workload partitioning scheme (paper Section 4.2).
+//! NATSA's workload partitioning scheme (paper Section 4.2), at two
+//! granularities.
 //!
 //! Diagonals of the distance matrix have different lengths (diagonal `d`
 //! has `nw - d` cells), so a naive split load-imbalances the PUs.  NATSA
@@ -14,7 +15,36 @@
 //! every PU receives the same cell count to within one pair — *static*
 //! balance, independent of the data, preserving the anytime property
 //! because each PU's list can still be visited in any order.
+//! [`schedule`] builds that classic per-diagonal scheme.
+//!
+//! ## Band-granular scheduling
+//!
+//! The unified kernel's band path ([`crate::mp::kernel::compute_band_n`])
+//! is ~2x faster per cell than per-diagonal walking, but it needs
+//! *adjacent* diagonals — which round-robin pair dealing never produces
+//! (a PU's diagonals sit `pus` apart).  [`schedule_banded`] therefore
+//! deals [`BandTile`]s — runs of up to [`BAND`] adjacent diagonals — with
+//! the same outside-in idea lifted to tile granularity:
+//!
+//! 1. the admissible range is cut into tiles of `width` adjacent
+//!    diagonals (`width` shrinks below [`BAND`] on small workloads so
+//!    banding never costs balance; at width 1 the scheme degenerates to
+//!    the classic one);
+//! 2. a *long-head* tile is paired with the mirrored *short-tail* tile.
+//!    Tile cell-count is linear in its first diagonal, so full-width
+//!    outside-in pairs have **exactly** equal sums;
+//! 3. only whole `pus`-sized rounds of coarse pairs are dealt round-robin
+//!    (the coarse part is therefore perfectly balanced), and the leftover
+//!    middle tiles plus the ragged tail are re-paired outside-in at
+//!    single-diagonal granularity — the classic scheme's quantum — so the
+//!    residual deviation stays at one diagonal-pair, not one tile-pair.
+//!
+//! The result keeps the paper's static balance and the anytime property
+//! (tile lists may be visited in any order; a tile is the interruption
+//! quantum) while putting >95% of cells on the multi-lane band path for
+//! fleet-sized workloads.
 
+use crate::mp::kernel::BAND;
 use crate::prop::Rng;
 
 /// A pair of diagonals with complementary lengths (the second is `None`
@@ -34,6 +64,36 @@ pub struct Schedule {
     pub excl: usize,
 }
 
+/// Shared balance metric: max/min load ratio over the PUs that received
+/// work (1.0 = perfectly balanced).  PUs left idle because pairs ran out
+/// (more PUs than pairs) are *excluded* — an idle PU is a capacity
+/// question, not a balance one, and folding its zero load in used to pin
+/// the metric at infinity exactly when balance mattered.
+fn imbalance_over(loads: impl Iterator<Item = u64>) -> f64 {
+    let mut max = 0u64;
+    let mut min = u64::MAX;
+    for l in loads {
+        if l > 0 {
+            max = max.max(l);
+            min = min.min(l);
+        }
+    }
+    if max == 0 {
+        1.0 // no work at all: vacuously balanced
+    } else {
+        max as f64 / min as f64
+    }
+}
+
+/// Shared per-PU shuffle (anytime mode, Section 4.2 way 1): one
+/// deterministic stream per PU so work-unit granularity doesn't change
+/// the seed mixing.
+fn randomize_lists<T>(lists: &mut [Vec<T>], seed: u64) {
+    for (k, list) in lists.iter_mut().enumerate() {
+        Rng::new(seed ^ ((k as u64) << 32)).shuffle(list);
+    }
+}
+
 impl Schedule {
     /// Cells of work assigned to PU `k`.
     pub fn load(&self, k: usize) -> u64 {
@@ -43,27 +103,11 @@ impl Schedule {
             .sum()
     }
 
-    /// max/min load ratio over the PUs that received work (1.0 = perfectly
-    /// balanced).  PUs left idle because pairs ran out (more PUs than
-    /// pairs) are *excluded* — an idle PU is a capacity question, not a
-    /// balance one, and folding its zero load in used to pin the metric at
-    /// infinity exactly when balance mattered.  Idle capacity is reported
-    /// separately by [`Self::idle_pus`].
+    /// max/min load ratio over the PUs that received work (see
+    /// [`imbalance_over`]; idle capacity is reported separately by
+    /// [`Self::idle_pus`]).
     pub fn imbalance(&self) -> f64 {
-        let mut max = 0u64;
-        let mut min = u64::MAX;
-        for k in 0..self.per_pu.len() {
-            let l = self.load(k);
-            if l > 0 {
-                max = max.max(l);
-                min = min.min(l);
-            }
-        }
-        if max == 0 {
-            1.0 // no work at all: vacuously balanced
-        } else {
-            max as f64 / min as f64
-        }
+        imbalance_over((0..self.per_pu.len()).map(|k| self.load(k)))
     }
 
     /// PUs that received no diagonals (happens when PUs outnumber pairs).
@@ -73,9 +117,7 @@ impl Schedule {
 
     /// Shuffle each PU's list in place (anytime mode, Section 4.2 way 1).
     pub fn randomize(&mut self, seed: u64) {
-        for (k, list) in self.per_pu.iter_mut().enumerate() {
-            Rng::new(seed ^ ((k as u64) << 32)).shuffle(list);
-        }
+        randomize_lists(&mut self.per_pu, seed);
     }
 
     /// Sort each PU's list ascending (sequential mode, way 2 — locality).
@@ -118,10 +160,209 @@ pub fn schedule(nw: usize, excl: usize, pus: usize) -> Schedule {
     Schedule { per_pu, pairs, nw, excl }
 }
 
+/// A tile of `width` adjacent diagonals `d0..d0+width` — the work unit
+/// the band-granular scheduler deals to PUs, executed in one call to
+/// [`crate::mp::kernel::compute_band_n`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BandTile {
+    /// First diagonal of the tile.
+    pub d0: usize,
+    /// Adjacent diagonals in the tile (`1..=BAND`).
+    pub width: usize,
+}
+
+impl BandTile {
+    /// The diagonals this tile covers.
+    pub fn diagonals(&self) -> std::ops::Range<usize> {
+        self.d0..self.d0 + self.width
+    }
+
+    /// Cells of work in this tile for a profile of `nw` windows.
+    pub fn cells(&self, nw: usize) -> u64 {
+        self.diagonals().map(|d| (nw - d) as u64).sum()
+    }
+}
+
+/// A pair of band tiles with complementary cell counts (the second is
+/// `None` for an unpaired middle tile when the count is odd).
+pub type TilePair = (BandTile, Option<BandTile>);
+
+/// The output of band-granular partitioning ([`schedule_banded`]).
+#[derive(Clone, Debug)]
+pub struct BandedSchedule {
+    /// Band tiles assigned to each PU, in assignment order
+    /// (alternating long/short so progress is spatially uniform).
+    pub per_pu: Vec<Vec<BandTile>>,
+    /// The balanced tile pairs, in dealing order (coarse pairs first,
+    /// then the single-diagonal fine tail).
+    pub pairs: Vec<TilePair>,
+    /// Window count and exclusion zone used to build the schedule.
+    pub nw: usize,
+    pub excl: usize,
+    /// Coarse tile width chosen for this workload (`1..=BAND`).
+    pub width: usize,
+}
+
+impl BandedSchedule {
+    /// Cells of work assigned to PU `k`.
+    pub fn load(&self, k: usize) -> u64 {
+        self.per_pu[k].iter().map(|t| t.cells(self.nw)).sum()
+    }
+
+    /// Diagonals assigned to PU `k` (each costs one O(m) seed dot).
+    pub fn diagonals_assigned(&self, k: usize) -> u64 {
+        self.per_pu[k].iter().map(|t| t.width as u64).sum()
+    }
+
+    /// max/min load ratio over the PUs that received work (see
+    /// [`imbalance_over`]; idle PUs are excluded and counted by
+    /// [`Self::idle_pus`]).
+    pub fn imbalance(&self) -> f64 {
+        imbalance_over((0..self.per_pu.len()).map(|k| self.load(k)))
+    }
+
+    /// PUs that received no tiles (happens when PUs outnumber pairs).
+    pub fn idle_pus(&self) -> usize {
+        self.per_pu.iter().filter(|l| l.is_empty()).count()
+    }
+
+    /// Shuffle each PU's tile list in place (anytime mode, Section 4.2
+    /// way 1 — the tile is the interruption quantum).
+    pub fn randomize(&mut self, seed: u64) {
+        randomize_lists(&mut self.per_pu, seed);
+    }
+
+    /// Sort each PU's tile list by first diagonal (sequential mode, way
+    /// 2 — locality).
+    pub fn sequentialize(&mut self) {
+        for list in &mut self.per_pu {
+            list.sort_unstable_by_key(|t| t.d0);
+        }
+    }
+}
+
+/// Build the band-granular balanced schedule for `pus` processing units
+/// over windows `nw` with exclusion radius `excl` (see the module docs
+/// for the scheme).  Panics if there is no admissible diagonal.
+pub fn schedule_banded(nw: usize, excl: usize, pus: usize) -> BandedSchedule {
+    assert!(pus >= 1, "need at least one PU");
+    assert!(nw > excl, "no admissible diagonals (nw={nw}, excl={excl})");
+
+    let d_total = nw - excl;
+    // Coarse width: BAND when every PU can receive whole coarse pairs,
+    // narrower on small workloads (width 1 == the classic scheme).
+    let width = (d_total / (2 * pus)).clamp(1, BAND);
+    let full_tiles = d_total / width;
+    // Keep only whole pus-sized rounds of coarse pairs: full-width
+    // outside-in pairs have exactly equal sums (tile cells are linear in
+    // d0), so round-robin dealing leaves the coarse part perfectly
+    // balanced.
+    let coarse_pairs = (full_tiles / 2) / pus * pus;
+    let mut pairs: Vec<TilePair> = Vec::with_capacity(coarse_pairs + d_total.div_ceil(2));
+    for j in 0..coarse_pairs {
+        let head = BandTile { d0: excl + j * width, width };
+        let tail = BandTile { d0: excl + (full_tiles - 1 - j) * width, width };
+        pairs.push((head, Some(tail)));
+    }
+
+    // Fine tail: the undealt middle tiles plus the ragged remainder, as
+    // single-diagonal tiles paired outside-in (the classic quantum), so
+    // pair-count quantization costs one diagonal-pair — not one
+    // tile-pair — of deviation.
+    let mut fine: Vec<usize> =
+        (excl + coarse_pairs * width..excl + (full_tiles - coarse_pairs) * width).collect();
+    fine.extend(excl + full_tiles * width..nw);
+    let solo = |d: usize| BandTile { d0: d, width: 1 };
+    let mut lo = 0usize;
+    let mut hi = fine.len();
+    while lo + 1 < hi {
+        pairs.push((solo(fine[lo]), Some(solo(fine[hi - 1]))));
+        lo += 1;
+        hi -= 1;
+    }
+    if lo + 1 == hi {
+        pairs.push((solo(fine[lo]), None));
+    }
+
+    let mut per_pu = vec![Vec::new(); pus];
+    for (k, (a, b)) in pairs.iter().enumerate() {
+        let list = &mut per_pu[k % pus];
+        list.push(*a);
+        if let Some(b) = b {
+            list.push(*b);
+        }
+    }
+    BandedSchedule { per_pu, pairs, nw, excl, width }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::prop::check;
+
+    /// The shared invariants both partitioning schemes must satisfy,
+    /// phrased over (per-PU diagonal lists, per-pair diagonal lists):
+    /// every admissible diagonal exactly once, total load preserved, and
+    /// every working PU within one dealing quantum (the largest pair) of
+    /// the mean.  Asserting these — rather than one dealing order —
+    /// keeps the tests meaningful for the legacy and banded schedules
+    /// alike.
+    fn assert_schedule_invariants(
+        name: &str,
+        nw: usize,
+        excl: usize,
+        per_pu_diags: &[Vec<usize>],
+        pair_loads: &[u64],
+    ) {
+        let mut all: Vec<usize> = per_pu_diags.concat();
+        all.sort_unstable();
+        assert_eq!(all, (excl..nw).collect::<Vec<_>>(), "{name}: coverage");
+
+        let load = |l: &Vec<usize>| l.iter().map(|&d| (nw - d) as u64).sum::<u64>();
+        let loads: Vec<u64> = per_pu_diags.iter().map(load).collect();
+        let total: u64 = loads.iter().sum();
+        assert_eq!(total, crate::mp::total_cells(nw, excl), "{name}: total");
+
+        let max_pair = *pair_loads.iter().max().unwrap() as f64;
+        let mean = total as f64 / loads.len() as f64;
+        for (k, &l) in loads.iter().enumerate() {
+            if l == 0 {
+                continue; // idle PU (more PUs than pairs): capacity, not balance
+            }
+            let dev = (l as f64 - mean).abs();
+            assert!(
+                dev <= max_pair,
+                "{name}: PU{k} load {l} vs mean {mean} (max pair {max_pair})"
+            );
+        }
+    }
+
+    fn legacy_diags(s: &Schedule) -> Vec<Vec<usize>> {
+        s.per_pu.clone()
+    }
+
+    fn legacy_pair_loads(s: &Schedule) -> Vec<u64> {
+        s.pairs
+            .iter()
+            .map(|(a, b)| {
+                (s.nw - a) as u64 + b.map_or(0, |b| (s.nw - b) as u64)
+            })
+            .collect()
+    }
+
+    fn banded_diags(s: &BandedSchedule) -> Vec<Vec<usize>> {
+        s.per_pu
+            .iter()
+            .map(|tiles| tiles.iter().flat_map(|t| t.diagonals()).collect())
+            .collect()
+    }
+
+    fn banded_pair_loads(s: &BandedSchedule) -> Vec<u64> {
+        s.pairs
+            .iter()
+            .map(|(a, b)| a.cells(s.nw) + b.map_or(0, |b| b.cells(s.nw)))
+            .collect()
+    }
 
     #[test]
     fn paper_example_two_pus() {
@@ -129,16 +370,24 @@ mod tests {
         // diagonal beyond the main one => diagonals 2..=9 are computed.
         // (paper indexes columns from 1; we use 0-based diagonals)
         let s = schedule(10, 2, 2);
-        // each pair must sum to (nw - excl + 1) = 9 cells
-        for (a, b) in &s.pairs {
-            if let Some(b) = b {
-                assert_eq!((s.nw - a) + (s.nw - b), 9);
-            }
+        // each legacy pair must sum to (nw - excl + 1) = 9 cells
+        for &l in &legacy_pair_loads(&s) {
+            assert_eq!(l, 9);
         }
-        // PU0 gets pairs 0 and 2; PU1 gets pairs 1 and 3
-        assert_eq!(s.per_pu[0], vec![2, 9, 4, 7]);
-        assert_eq!(s.per_pu[1], vec![3, 8, 5, 6]);
+        assert_schedule_invariants("legacy", 10, 2, &legacy_diags(&s), &legacy_pair_loads(&s));
         assert_eq!(s.load(0), s.load(1));
+
+        // the banded schedule keeps the same invariants at tile
+        // granularity (here width 2: 8 diagonals over 2 PUs), including
+        // exactly equal loads — full-width outside-in tile pairs have
+        // constant sums just like the paper's diagonal pairs
+        let b = schedule_banded(10, 2, 2);
+        assert_eq!(b.width, 2);
+        for &l in &banded_pair_loads(&b) {
+            assert_eq!(l, 18); // two diagonal-pairs' worth per tile pair
+        }
+        assert_schedule_invariants("banded", 10, 2, &banded_diags(&b), &banded_pair_loads(&b));
+        assert_eq!(b.load(0), b.load(1));
     }
 
     #[test]
@@ -149,6 +398,19 @@ mod tests {
                 assert_eq!((s.nw - a) + (s.nw - b), s.nw - s.excl + 1);
             }
         }
+        // banded: every COARSE pair (both tiles full width) sums to the
+        // same constant — the pairing invariant lifted to tiles
+        let b = schedule_banded(1000, 16, 48);
+        let coarse: Vec<u64> = b
+            .pairs
+            .iter()
+            .filter(|(x, y)| {
+                x.width == b.width && y.is_some_and(|y| y.width == b.width)
+            })
+            .map(|(x, y)| x.cells(b.nw) + y.unwrap().cells(b.nw))
+            .collect();
+        assert!(!coarse.is_empty());
+        assert!(coarse.iter().all(|&c| c == coarse[0]), "{coarse:?}");
     }
 
     #[test]
@@ -161,6 +423,11 @@ mod tests {
             let mut all: Vec<usize> = s.per_pu.concat();
             all.sort_unstable();
             assert_eq!(all, (excl..nw).collect::<Vec<_>>());
+            let b = schedule_banded(nw, excl, pus);
+            let mut all: Vec<usize> = banded_diags(&b).concat();
+            all.sort_unstable();
+            assert_eq!(all, (excl..nw).collect::<Vec<_>>(), "banded nw={nw} excl={excl} pus={pus}");
+            assert!(b.per_pu.iter().flatten().all(|t| (1..=BAND).contains(&t.width)));
         });
     }
 
@@ -171,18 +438,27 @@ mod tests {
             let excl = rng.range(1, 32);
             let pus = rng.range(2, 65);
             let s = schedule(nw, excl, pus);
-            let total: u64 = (0..pus).map(|k| s.load(k)).sum();
-            assert_eq!(total, crate::mp::total_cells(nw, excl));
-            // every PU is within one pair's worth of cells of the mean
-            let pair_cells = (nw - excl + 1) as f64;
-            let mean = total as f64 / pus as f64;
-            for k in 0..pus {
-                let dev = (s.load(k) as f64 - mean).abs();
-                assert!(
-                    dev <= pair_cells,
-                    "PU{k} load {} vs mean {mean} (pair {pair_cells})",
-                    s.load(k)
-                );
+            assert_schedule_invariants(
+                "legacy",
+                nw,
+                excl,
+                &legacy_diags(&s),
+                &legacy_pair_loads(&s),
+            );
+            let b = schedule_banded(nw, excl, pus);
+            assert_schedule_invariants(
+                "banded",
+                nw,
+                excl,
+                &banded_diags(&b),
+                &banded_pair_loads(&b),
+            );
+            // the deviation bound above is per dealing quantum; the
+            // RELATIVE imbalance must stay near-perfect for both schemes
+            // on fleet-sized workloads
+            if crate::mp::total_cells(nw, excl) / pus as u64 > 20 * (nw as u64) {
+                assert!(s.imbalance() < 1.10, "legacy {}", s.imbalance());
+                assert!(b.imbalance() < 1.10, "banded {}", b.imbalance());
             }
         });
     }
@@ -246,5 +522,65 @@ mod tests {
     #[should_panic(expected = "no admissible diagonals")]
     fn degenerate_panics() {
         schedule(4, 4, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "no admissible diagonals")]
+    fn banded_degenerate_panics() {
+        schedule_banded(4, 4, 2);
+    }
+
+    #[test]
+    fn banded_width_adapts_to_workload() {
+        // fleet-sized work: full BAND tiles; small work: narrower, down
+        // to the classic width-1 scheme, so banding never costs balance
+        assert_eq!(schedule_banded(4000, 4, 8).width, BAND);
+        assert_eq!(schedule_banded(100, 4, 1).width, BAND);
+        assert_eq!(schedule_banded(10, 2, 2).width, 2);
+        assert_eq!(schedule_banded(8, 4, 16).width, 1);
+        // a single-PU sweep is tiled almost entirely at full width
+        let s = schedule_banded(100, 4, 1);
+        assert!(s.per_pu[0].iter().all(|t| t.width == BAND));
+    }
+
+    #[test]
+    fn banded_more_pus_than_pairs_leaves_idle_pus() {
+        let s = schedule_banded(8, 4, 16); // 4 diagonals -> 2 width-1 pairs
+        assert_eq!(s.pairs.len(), 2);
+        assert_eq!(s.idle_pus(), 14);
+        assert!(s.imbalance().is_finite());
+        assert_eq!(s.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn banded_randomize_permutes_and_sequentialize_sorts() {
+        let mut s = schedule_banded(2000, 8, 7);
+        let mut before: Vec<Vec<BandTile>> = s.per_pu.clone();
+        for l in &mut before {
+            l.sort_unstable_by_key(|t| t.d0);
+        }
+        s.randomize(42);
+        for (k, list) in s.per_pu.iter().enumerate() {
+            let mut v = list.clone();
+            v.sort_unstable_by_key(|t| t.d0);
+            assert_eq!(v, before[k], "randomize must permute, not alter");
+        }
+        s.sequentialize();
+        for list in &s.per_pu {
+            assert!(list.windows(2).all(|w| w[0].d0 < w[1].d0));
+        }
+    }
+
+    #[test]
+    fn banded_loads_match_diagonal_expansion() {
+        // load()/diagonals_assigned() over tile cell-counts must agree
+        // with brute expansion to diagonals
+        let s = schedule_banded(3000, 16, 48);
+        for k in 0..48 {
+            let diags: Vec<usize> = s.per_pu[k].iter().flat_map(|t| t.diagonals()).collect();
+            let want: u64 = diags.iter().map(|&d| (s.nw - d) as u64).sum();
+            assert_eq!(s.load(k), want);
+            assert_eq!(s.diagonals_assigned(k), diags.len() as u64);
+        }
     }
 }

@@ -96,7 +96,7 @@ impl NatsaDesign {
 
     /// Closed-form evaluation (Table 2 / Fig. 7 path).
     pub fn estimate(&self, w: &Workload) -> Estimate {
-        let sched = scheduler::schedule(w.nw, w.excl, self.pus);
+        let sched = scheduler::schedule_banded(w.nw, w.excl, self.pus);
         let cyc = cycles_per_cell(self.precision);
         let bpc = bytes_per_cell(self.precision);
         let bw_pu = self.bw_per_pu_gbs() * 1e9;
@@ -108,7 +108,7 @@ impl NatsaDesign {
         let mut total_bytes = 0u64;
         for k in 0..self.pus {
             let cells = sched.load(k) as f64;
-            let diags = sched.per_pu[k].len() as f64;
+            let diags = sched.diagonals_assigned(k) as f64;
             // DPU startup per diagonal: m/lanes cycles.
             let compute_s = (cells * cyc + diags * w.m as f64 / lanes) / freq;
             let bytes = cells * bpc + diags * 2.0 * w.m as f64 * self.pu.elem_bytes as f64;
@@ -151,26 +151,28 @@ impl NatsaDesign {
     /// event (defaults keep the event count ~1e5); returns an [`Estimate`]
     /// plus the number of events processed.
     pub fn simulate(&self, w: &Workload, sim_chunk: Option<u64>) -> (Estimate, u64) {
-        let sched = scheduler::schedule(w.nw, w.excl, self.pus);
+        let sched = scheduler::schedule_banded(w.nw, w.excl, self.pus);
         let chunk = sim_chunk
             .unwrap_or_else(|| (w.cells / self.pus as u64 / 2000).clamp(512, 1 << 22));
         let freq_hz = self.pu.freq_ghz * 1e9;
         let ps_per_cycle = 1e12 / freq_hz;
         let ch_bw_bytes_per_ps = self.dram.channel_bw_gbs() * 1e9 / 1e12;
 
-        // Per-PU work: flatten its diagonals into chunk descriptors.
+        // Per-PU work: flatten its band tiles into chunk descriptors
+        // (the tile's seed dots — one per diagonal — ride its first
+        // chunk).
         let mut pu_chunks: Vec<std::vec::IntoIter<ChunkWork>> = sched
             .per_pu
             .iter()
-            .map(|diags| {
+            .map(|tiles| {
                 let mut v = Vec::new();
-                for &d in diags {
-                    let mut left = (w.nw - d) as u64;
-                    let mut first = true;
+                for tile in tiles {
+                    let mut left = tile.cells(w.nw);
+                    let mut dots = tile.width as u64;
                     while left > 0 {
                         let c = left.min(chunk);
-                        v.push(ChunkWork { cells: c, first_dot: first, m: w.m });
-                        first = false;
+                        v.push(ChunkWork { cells: c, first_dots: dots, m: w.m });
+                        dots = 0;
                         left -= c;
                     }
                 }

@@ -110,29 +110,43 @@ fn pu_datapath_full_equivalence_with_engine() {
 
 #[test]
 fn unified_kernel_engines_bit_identical_and_track_brute() {
-    // The PR 2 conformance bar: SCRIMP (ascending band tiles), STOMP
-    // (descending single diagonals), the parallel fleet (per-thread
-    // partitions + min-merge), and the NATSA PU-fleet engine (scheduled
-    // work lists) all drive mp::kernel under maximally different
-    // schedules, so their profiles must agree to the BIT (values and
-    // neighbor indices), and all must sit within 1e-9 of the independent
+    // The conformance bar: SCRIMP (ascending band tiles), STOMP
+    // (descending single diagonals), the parallel fleet (banded and
+    // per-diagonal partitions + min-merge), and the NATSA PU-fleet
+    // engine (band-granular scheduled work lists, sequential AND random
+    // tile orders, several fleet sizes — each picks a different tile
+    // width) all drive mp::kernel under maximally different schedules,
+    // so their profiles must agree to the BIT (values and neighbor
+    // indices), and all must sit within 1e-9 of the independent
     // brute-force oracle (which shares no Eq. 1 / Eq. 2 code).
     let mut rng = Rng::new(71);
     let t: Vec<f64> = rng.gauss_vec(1500);
     let m = 32;
     let cfg = MpConfig::new(m);
     let reference = scrimp::matrix_profile(&t, cfg).unwrap();
-    let engines: Vec<(&str, natsa::mp::MatrixProfile<f64>)> = vec![
-        ("stomp", stomp::matrix_profile(&t, cfg).unwrap()),
-        ("parallel", parallel::matrix_profile(&t, cfg, 4).unwrap()),
+    let mut engines: Vec<(String, natsa::mp::MatrixProfile<f64>)> = vec![
+        ("stomp".into(), stomp::matrix_profile(&t, cfg).unwrap()),
         (
-            "natsa",
-            NatsaEngine::new(NatsaConfig::default())
-                .compute(&t, m)
+            "parallel-banded".into(),
+            parallel::matrix_profile(&t, cfg, 4).unwrap(),
+        ),
+        (
+            "parallel-per-diagonal".into(),
+            parallel::with_stats(&t, cfg, 4, Partition::BalancedPairs)
                 .unwrap()
-                .profile,
+                .0,
         ),
     ];
+    for pus in [1usize, 7, 48] {
+        for order in [Order::Sequential, Order::Random(5)] {
+            let out = NatsaEngine::new(
+                NatsaConfig::default().with_pus(pus).with_order(order),
+            )
+            .compute(&t, m)
+            .unwrap();
+            engines.push((format!("natsa-{pus}pu-{order:?}"), out.profile));
+        }
+    }
     let bits = |mp: &natsa::mp::MatrixProfile<f64>| -> Vec<u64> {
         mp.p.iter().map(|x| x.to_bits()).collect()
     };
@@ -143,6 +157,27 @@ fn unified_kernel_engines_bit_identical_and_track_brute() {
     let oracle = brute::matrix_profile(&t, cfg).unwrap();
     let d = reference.max_abs_diff(&oracle);
     assert!(d < 1e-9, "kernel engines vs brute oracle: {d}");
+}
+
+#[test]
+fn banded_anytime_full_run_bit_identical_to_sequential_kernel() {
+    // anytime execution now consumes band tiles as its budget quantum;
+    // an uninterrupted run over randomized tile lists must still equal
+    // the sequential band sweep to the bit
+    let mut rng = Rng::new(72);
+    let t: Vec<f64> = rng.gauss_vec(1200);
+    let m = 24;
+    let reference = scrimp::matrix_profile(&t, MpConfig::new(m)).unwrap();
+    for seed in [1u64, 99] {
+        let config = NatsaConfig::default().with_order(Order::Random(seed));
+        let full = run_anytime(&t, m, &config, Budget::Unlimited).unwrap();
+        assert_eq!(
+            reference.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            full.profile.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "seed {seed}"
+        );
+        assert_eq!(reference.i, full.profile.i, "seed {seed}");
+    }
 }
 
 #[test]
@@ -179,7 +214,12 @@ fn partitions_agree_under_stress() {
     let t = generate::<f64>(Pattern::RandomWalk, 3000, 31);
     let cfg = MpConfig::new(100);
     let want = scrimp::matrix_profile(&t, cfg).unwrap();
-    for part in [Partition::Contiguous, Partition::Strided, Partition::BalancedPairs] {
+    for part in [
+        Partition::Contiguous,
+        Partition::Strided,
+        Partition::BalancedPairs,
+        Partition::BandedPairs,
+    ] {
         for threads in [1, 3, 16] {
             let (got, _) = parallel::with_stats(&t, cfg, threads, part).unwrap();
             assert!(
