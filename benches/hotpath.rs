@@ -22,7 +22,7 @@
 //! Pass `--json` to (re)write `BENCH_hotpath.json` with the measured
 //! rows so future PRs have a trajectory to compare against.
 
-use natsa::benchmark::{black_box, fmt_time, time_budget, Table};
+use natsa::benchmark::{black_box, fmt_time, isa, time_budget, Table};
 use natsa::mp::kernel::scalar_diagonal;
 use natsa::mp::{kernel, scrimp, MatrixProfile, MpConfig, WorkStats};
 use natsa::natsa::scheduler;
@@ -51,21 +51,6 @@ type DiagFn<T> = fn(
 fn profile_cells(n: usize, m: usize) -> u64 {
     let cfg = MpConfig::new(m);
     natsa::mp::total_cells(n - m + 1, cfg.exclusion())
-}
-
-/// Compile-time SIMD class, recorded so trajectory rows from
-/// target-cpu=native and x86-64-v3 builds stay distinguishable
-/// (matches the vocabulary of the committed BENCH_hotpath.json rows).
-fn isa() -> &'static str {
-    if cfg!(target_feature = "avx512f") {
-        "avx512"
-    } else if cfg!(target_feature = "avx2") {
-        "avx2"
-    } else if cfg!(target_arch = "x86_64") {
-        "sse2"
-    } else {
-        std::env::consts::ARCH
-    }
 }
 
 /// Full single-thread profile through a per-diagonal function.

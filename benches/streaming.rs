@@ -2,23 +2,253 @@
 //! batch profile from scratch on every new sample — the acceptance
 //! benchmark for the streaming subsystem (>= 10x at n = 16384, m = 64;
 //! the asymptotic gap is O(n) vs O(n²) per sample, so the measured ratio
-//! lands orders of magnitude beyond the bar).
+//! lands orders of magnitude beyond the bar) — plus the **row-kernel
+//! trajectory**: the pre-kernel per-cell walk (eager per-cell sqrt +
+//! per-element ring asserts) against the retained scalar-row oracle, the
+//! width-1 kernel path (`Stampi::append`), and the blocked multi-row
+//! tile path (`Stampi::extend`, up to BAND rows per tile).  Acceptance
+//! bar for this PR: blocked extend >= 1.5x over the old per-append
+//! scalar row at the bench shape.
+//!
+//! Pass `--json` to (re)write `BENCH_streaming.json` with the measured
+//! rows so future PRs have a trajectory to compare against.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use natsa::benchmark::{black_box, fmt_time, time_budget, Table};
+use natsa::benchmark::{black_box, fmt_time, isa, time_budget, Table};
 use natsa::coordinator::service::{AnalysisService, ServiceConfig};
+use natsa::mp::kernel::{self, RowTile};
 use natsa::mp::stampi::{Stampi, StampiConfig};
-use natsa::mp::{scrimp, MpConfig};
+use natsa::mp::{scrimp, znorm_dist, MpConfig, WorkStats};
 use natsa::natsa::NatsaConfig;
 use natsa::timeseries::generator::{generate, Pattern};
 
+/// Absolute-indexed buffer with the *old* RingVec-style per-element
+/// asserted access — re-created here so the pre-kernel row walk keeps a
+/// measurable baseline after the engine moved off it.
+struct CheckedBuf {
+    buf: Vec<f64>,
+    first: usize,
+}
+
+impl CheckedBuf {
+    fn new() -> Self {
+        CheckedBuf { buf: Vec::new(), first: 0 }
+    }
+
+    fn push(&mut self, x: f64) {
+        self.buf.push(x);
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> f64 {
+        assert!(
+            i >= self.first && i < self.buf.len(),
+            "index {i} outside retained range [{}, {})",
+            self.first,
+            self.buf.len()
+        );
+        self.buf[i]
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize, x: f64) {
+        assert!(
+            i >= self.first && i < self.buf.len(),
+            "index {i} outside retained range [{}, {})",
+            self.first,
+            self.buf.len()
+        );
+        self.buf[i] = x;
+    }
+}
+
+/// The pre-PR streaming row walk, verbatim in shape: per-element
+/// asserted access on every cell, eager `znorm_dist` (a sqrt per cell),
+/// branchy two-sided updates.  Perf baseline only — the engine itself
+/// now runs the row kernel.
+struct EagerRowStream {
+    m: usize,
+    excl: usize,
+    t: CheckedBuf,
+    mu: CheckedBuf,
+    inv: CheckedBuf,
+    q: CheckedBuf,
+    p: CheckedBuf,
+    i: Vec<i64>,
+    s: f64,
+    s2: f64,
+}
+
+impl EagerRowStream {
+    fn new(m: usize, excl: usize) -> Self {
+        EagerRowStream {
+            m,
+            excl,
+            t: CheckedBuf::new(),
+            mu: CheckedBuf::new(),
+            inv: CheckedBuf::new(),
+            q: CheckedBuf::new(),
+            p: CheckedBuf::new(),
+            i: Vec::new(),
+            s: 0.0,
+            s2: 0.0,
+        }
+    }
+
+    fn append(&mut self, x: f64) {
+        let m = self.m;
+        self.t.push(x);
+        let n = self.t.len();
+        self.s += x;
+        self.s2 += x * x;
+        if n > m {
+            let old = self.t.get(n - 1 - m);
+            self.s -= old;
+            self.s2 -= old * old;
+        }
+        if n < m {
+            return;
+        }
+        let k = n - m;
+        let mf = m as f64;
+        let mean = self.s / mf;
+        let var = (self.s2 / mf - mean * mean).max(0.0);
+        let sd = var.sqrt();
+        self.mu.push(mean);
+        self.inv.push(if sd > 0.0 { 1.0 / (mf * sd) } else { 0.0 });
+        self.p.push(f64::INFINITY);
+        self.i.push(-1);
+        if k == 0 {
+            let d = (0..m).map(|r| self.t.get(r) * self.t.get(r)).sum();
+            self.q.push(d);
+            return;
+        }
+        self.q.push(0.0);
+        let tk1 = self.t.get(k - 1);
+        let tkm1 = self.t.get(k + m - 1);
+        for j in (1..=k).rev() {
+            let v = self.q.get(j - 1) - self.t.get(j - 1) * tk1 + self.t.get(j + m - 1) * tkm1;
+            self.q.set(j, v);
+        }
+        let q0 = (0..m).map(|r| self.t.get(r) * self.t.get(k + r)).sum();
+        self.q.set(0, q0);
+        if k >= self.excl {
+            let hi = k - self.excl;
+            let mu_k = self.mu.get(k);
+            let inv_k = self.inv.get(k);
+            let mut pk = self.p.get(k);
+            let mut ik = self.i[k];
+            for j in 0..=hi {
+                let d = znorm_dist(self.q.get(j), m, self.mu.get(j), self.inv.get(j), mu_k, inv_k);
+                if d < self.p.get(j) {
+                    self.p.set(j, d);
+                    self.i[j] = k as i64;
+                }
+                if d < pk {
+                    pk = d;
+                    ik = j as i64;
+                }
+            }
+            self.p.set(k, pk);
+            self.i[k] = ik;
+        }
+    }
+}
+
+/// The retained scalar-row oracle (`kernel::scalar_row`) driven over
+/// plain vectors — per-cell branchy walk, but deferred sqrt and
+/// hoisted bounds, isolating what the per-cell drag alone cost.
+struct OracleRowStream {
+    m: usize,
+    excl: usize,
+    t: Vec<f64>,
+    za: Vec<f64>,
+    zb: Vec<f64>,
+    q: Vec<f64>,
+    p: Vec<f64>,
+    i: Vec<i64>,
+    s: f64,
+    s2: f64,
+    work: WorkStats,
+}
+
+impl OracleRowStream {
+    fn new(m: usize, excl: usize) -> Self {
+        OracleRowStream {
+            m,
+            excl,
+            t: Vec::new(),
+            za: Vec::new(),
+            zb: Vec::new(),
+            q: Vec::new(),
+            p: Vec::new(),
+            i: Vec::new(),
+            s: 0.0,
+            s2: 0.0,
+            work: WorkStats::default(),
+        }
+    }
+
+    fn append(&mut self, x: f64) {
+        let m = self.m;
+        self.t.push(x);
+        let n = self.t.len();
+        self.s += x;
+        self.s2 += x * x;
+        if n > m {
+            let old = self.t[n - 1 - m];
+            self.s -= old;
+            self.s2 -= old * old;
+        }
+        if n < m {
+            return;
+        }
+        let mf = m as f64;
+        let mean = self.s / mf;
+        let var = (self.s2 / mf - mean * mean).max(0.0);
+        let sd = var.sqrt();
+        if sd > 0.0 {
+            self.za.push(std::f64::consts::SQRT_2 / sd);
+            self.zb.push((2.0 * mf).sqrt() * mean / sd);
+        } else {
+            self.za.push(0.0);
+            self.zb.push(0.0);
+        }
+        self.q.push(0.0);
+        self.p.push(f64::INFINITY);
+        self.i.push(-1);
+        let nw = self.p.len();
+        let tile = RowTile {
+            t: &self.t[..nw + m - 1],
+            za: &self.za,
+            zb: &self.zb,
+            q: &mut self.q,
+            p: &mut self.p,
+            i: &mut self.i,
+            base: 0,
+        };
+        kernel::scalar_row(tile, m, self.excl, &mut self.work);
+    }
+}
+
+struct Row {
+    engine: &'static str,
+    ns_per_cell: f64,
+    speedup_vs_eager: f64,
+}
+
 fn main() {
+    let json = std::env::args().any(|a| a == "--json");
     let n = 16_384;
     let m = 64;
-    let extra = 1024; // steady-state appends measured beyond n
+    let extra = 2048; // steady-state appends measured beyond n
     let t = generate::<f64>(Pattern::RandomWalk, n + extra, 9);
 
     // (a) batch recompute at n: what a per-sample recompute would pay.
@@ -36,11 +266,13 @@ fn main() {
     let build_s = t0.elapsed().as_secs_f64();
 
     // ...then measure steady-state appends at length ~n.
+    let cells_before = eng.work().cells;
     let t0 = Instant::now();
     for &x in &t[n..n + extra] {
         black_box(eng.append(x));
     }
     let append_s = t0.elapsed().as_secs_f64() / extra as f64;
+    let measured_cells = eng.work().cells - cells_before;
 
     // (c) bounded history: constant-size state, constant append cost.
     let history = 4096;
@@ -80,16 +312,96 @@ fn main() {
         fmt_time(build_s),
         n as f64 / build_s
     );
-    let speedup = batch.median / append_s;
+    let recompute_speedup = batch.median / append_s;
     println!(
-        "incremental append speedup over full recompute: {speedup:.0}x (acceptance bar: 10x)"
+        "incremental append speedup over full recompute: {recompute_speedup:.0}x \
+         (acceptance bar: 10x)"
     );
     assert!(
-        speedup >= 10.0,
-        "streaming append must beat per-sample batch recompute by >= 10x, got {speedup:.1}x"
+        recompute_speedup >= 10.0,
+        "streaming append must beat per-sample batch recompute by >= 10x, \
+         got {recompute_speedup:.1}x"
     );
 
-    // (d) the deployment face: S concurrent streams pipelining appends
+    // (d) the row-kernel trajectory: all four row paths executing the
+    // SAME steady-state appends (t[n..n+extra] after a build to n), so
+    // ns/cell isolates the hot-loop shape.  scalar-row-eager is the
+    // pre-kernel engine loop; kernel-row-blocked is what the service's
+    // batch-append jobs run.
+    let mut rows: Vec<Row> = Vec::new();
+    let mut row_table = Table::new(&["row path", "per append", "ns/cell", "vs eager"]);
+
+    // exclusion must match the Stampi engines exactly — the four rows
+    // share `measured_cells` as their ns/cell denominator
+    let excl = StampiConfig::new(m).exclusion();
+    let mut eager = EagerRowStream::new(m, excl);
+    for &x in &t[..n] {
+        eager.append(x);
+    }
+    let t0 = Instant::now();
+    for &x in &t[n..n + extra] {
+        eager.append(x);
+    }
+    black_box(&eager.p);
+    let eager_ns = t0.elapsed().as_secs_f64() / measured_cells as f64 * 1e9;
+
+    let mut oracle = OracleRowStream::new(m, excl);
+    for &x in &t[..n] {
+        oracle.append(x);
+    }
+    let t0 = Instant::now();
+    for &x in &t[n..n + extra] {
+        oracle.append(x);
+    }
+    black_box(&oracle.p);
+    let oracle_ns = t0.elapsed().as_secs_f64() / measured_cells as f64 * 1e9;
+
+    // kernel width-1: the Stampi::append path measured in (b).
+    let kernel_row_ns = append_s * extra as f64 / measured_cells as f64 * 1e9;
+
+    // blocked multi-row tiles: Stampi::extend on the same samples.
+    let mut blocked = Stampi::<f64>::new(StampiConfig::new(m)).unwrap();
+    for &x in &t[..n] {
+        blocked.append(x);
+    }
+    let t0 = Instant::now();
+    blocked.extend(&t[n..n + extra]);
+    black_box(blocked.num_windows());
+    let blocked_s = t0.elapsed().as_secs_f64();
+    let blocked_ns = blocked_s / measured_cells as f64 * 1e9;
+
+    for (engine, ns) in [
+        ("scalar-row-eager", eager_ns),
+        ("scalar-row", oracle_ns),
+        ("kernel-row", kernel_row_ns),
+        ("kernel-row-blocked", blocked_ns),
+    ] {
+        let speedup = eager_ns / ns;
+        row_table.row(&[
+            engine.into(),
+            fmt_time(ns * measured_cells as f64 / extra as f64 / 1e9),
+            format!("{ns:.3}"),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(Row { engine, ns_per_cell: ns, speedup_vs_eager: speedup });
+    }
+    row_table.print(&format!(
+        "STAMPI row paths at steady state (n={n}, m={m}, {extra} appends, \
+         {measured_cells} cells)"
+    ));
+
+    let blocked_speedup = eager_ns / blocked_ns;
+    println!(
+        "\nblocked multi-row extend speedup over the old per-append scalar row: \
+         {blocked_speedup:.2}x (acceptance bar: 1.5x)"
+    );
+    assert!(
+        blocked_speedup >= 1.5,
+        "blocked extend must beat the pre-kernel per-append row by >= 1.5x, \
+         got {blocked_speedup:.2}x"
+    );
+
+    // (e) the deployment face: S concurrent streams pipelining appends
     // through the sharded AnalysisService.  More shards = fewer streams
     // per queue and a private worker pool per shard, so one stream's
     // turn-waiting can't park the fleet (scaling is machine-dependent —
@@ -142,4 +454,30 @@ fn main() {
     shard_table.print(&format!(
         "sharded service: {streams} concurrent streams x {packets} packets x {chunk} samples (m={m})"
     ));
+
+    if json {
+        let mut out = String::from(
+            "{\n  \"bench\": \"streaming\",\n  \
+             \"harness\": \"cargo bench --bench streaming -- --json\",\n",
+        );
+        out.push_str(&format!(
+            "  \"append_vs_recompute_speedup\": {recompute_speedup:.0},\n"
+        ));
+        out.push_str("  \"entries\": [\n");
+        for (k, r) in rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"n\": {n}, \"m\": {m}, \"extra\": {extra}, \"dtype\": \"f64\", \
+                 \"engine\": \"{}\", \"isa\": \"{}\", \"ns_per_cell\": {:.3}, \
+                 \"speedup_vs_eager\": {:.2}}}{}\n",
+                r.engine,
+                isa(),
+                r.ns_per_cell,
+                r.speedup_vs_eager,
+                if k + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write("BENCH_streaming.json", &out).expect("write BENCH_streaming.json");
+        println!("\nwrote BENCH_streaming.json");
+    }
 }

@@ -12,6 +12,23 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Compile-time SIMD class, recorded in the `BENCH_*.json` trajectory
+/// rows so numbers from target-cpu=native and baseline builds stay
+/// distinguishable.  One shared vocabulary for every bench target —
+/// `BENCH_hotpath.json` and `BENCH_streaming.json` must stay
+/// comparable.
+pub fn isa() -> &'static str {
+    if cfg!(target_feature = "avx512f") {
+        "avx512"
+    } else if cfg!(target_feature = "avx2") {
+        "avx2"
+    } else if cfg!(target_arch = "x86_64") {
+        "sse2"
+    } else {
+        std::env::consts::ARCH
+    }
+}
+
 /// One measured statistic set (seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct Sample {

@@ -34,7 +34,14 @@
 //!   [`AnalysisService::snapshot_stream`] reads the live profile without
 //!   queueing.  Appends to one stream are applied in submission order
 //!   even across workers (per-stream sequence numbers), so a stream's
-//!   profile is always that of its samples in arrival order.
+//!   profile is always that of its samples in arrival order.  A whole
+//!   sample batch is applied as blocked multi-row tiles of the unified
+//!   row kernel ([`StreamSession::extend`] →
+//!   `mp::kernel::compute_row_n`), so feeding packets through the
+//!   service rides the same SIMD hot path as the batch fleet; the
+//!   engine's live profile is kept in the kernel's squared-distance
+//!   representation and each snapshot (the append result's profile,
+//!   `snapshot_stream`) finalizes it with one deferred sqrt pass.
 //!
 //! Results are delivered through **per-job completion slots**: a slot is
 //! reserved at submit, filled by the worker, and consumed (freed) by
@@ -779,8 +786,11 @@ fn worker_loop<T: Real>(
 }
 
 /// Apply one append batch in sequence order and snapshot the profile.
-/// Returns the result plus the seconds spent waiting for this append's
-/// turn (reported as queueing, not execution).
+/// The batch rides the engine's blocked row-kernel path (up to BAND
+/// samples per tile), and the snapshot pays the one deferred sqrt pass
+/// of the squared-profile representation.  Returns the result plus the
+/// seconds spent waiting for this append's turn (reported as queueing,
+/// not execution).
 fn run_stream_append<T: Real>(
     shard: &Shard<T>,
     stream: u64,

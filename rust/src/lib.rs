@@ -43,7 +43,13 @@
 //! monitoring (ECG feeds, sensor streams) instead appends samples
 //! forever.  [`mp::stampi`] maintains the **exact** matrix profile under
 //! `append(sample)` at O(n) per sample (the STAMPI row update), with an
-//! optional bounded history for O(memory)-constrained monitors:
+//! optional bounded history for O(memory)-constrained monitors.  The
+//! row update runs on the unified kernel's row entry point
+//! ([`mp::kernel::compute_row_n`]): appends are width-1 tiles, batched
+//! appends ([`mp::stampi::Stampi::extend`], the service's append jobs)
+//! block up to `BAND` samples into one multi-row SIMD tile, and the
+//! live profile keeps the kernel's squared-distance representation with
+//! one deferred sqrt per snapshot:
 //!
 //! ```no_run
 //! use natsa::natsa::{NatsaConfig, NatsaEngine};

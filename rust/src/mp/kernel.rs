@@ -35,6 +35,18 @@
 //!   scheduler deals and the anytime / random-order engines interleave.
 //!   Sequential sweeps should prefer [`compute_triangle`], which rides
 //!   the band path.
+//! * [`compute_row_n`] — the *streaming* member of the family: the
+//!   STAMPI row update ([`crate::mp::stampi`]) as a tile of `1..=BAND`
+//!   freshly-completed windows ("rows") advanced together across the
+//!   retained history.  Lane `w` carries `q(j, k0+w)` and pulls from
+//!   lane `w-1` at the previous column, which turns Yeh's row
+//!   recurrence into the exact same delta-form Eq. 2 chain the batch
+//!   paths run; the folded Eq. 1 buffer and the two branchless merge
+//!   passes are shared verbatim (min-tree + rare argmin scan toward the
+//!   column side, register-resident running minima toward the row
+//!   side).  Any width is bit-identical to [`scalar_row`] applied once
+//!   per row, by construction (see the function docs for the
+//!   `rows <= excl` condition that makes the merges order-free).
 //!
 //! Both paths evaluate every cell with the exact same expressions in the
 //! exact same association order (the delta-form recurrence
@@ -299,6 +311,355 @@ pub fn compute_diagonal<T: Real>(
         let v = (two_m - q * st.za[i] * st.za[j] + st.zb[i] * st.zb[j]).max(zero);
         mp.update(i, j, v);
     }
+}
+
+/// Borrowed views over a streaming engine's retained state — the operand
+/// bundle of [`compute_row_n`] / [`scalar_row`].
+///
+/// Everything is **local window indexing**: window `w` of the tile reads
+/// samples `t[w..w + m]`, and `za`/`zb`/`q`/`p`/`i` line up with it, so
+/// the caller ([`crate::mp::stampi`]) acquires each slice from its ring
+/// buffers with ONE range check and the kernel's inner loops index plain
+/// slices (no per-element retained-range asserts — the bounds drag the
+/// old per-cell row walk paid on every access).  `base` is the absolute
+/// window index of local position 0: neighbor indices written into `i`
+/// are `base + local`, so profile entries stay stable across ring
+/// compactions.
+pub struct RowTile<'a, T> {
+    /// Samples: at least `za.len() + m - 1` of them.
+    pub t: &'a [T],
+    /// Folded Eq. 1 factor `sqrt(2)/sigma` per window (0 for constant).
+    pub za: &'a [T],
+    /// Folded Eq. 1 factor `sqrt(2m)*mu/sigma` per window (0 for constant).
+    pub zb: &'a [T],
+    /// Streaming dot-product state: on entry `q[j] = dot(window j,
+    /// window k0-1)` for the windows that existed before this tile
+    /// (`k0 = za.len() - rows`); on exit `q[j] = dot(window j, last
+    /// window)` for every `j` — ready for the next tile.
+    pub q: &'a mut [T],
+    /// The live profile (**squared** distances — kernel PERF CONTRACT).
+    pub p: &'a mut [T],
+    /// Neighbor indices (absolute: `base + local`).
+    pub i: &'a mut [i64],
+    /// Absolute window index of local position 0.
+    pub base: i64,
+}
+
+/// Advance the streaming profile by a tile of `rows` freshly-completed
+/// windows (`1 <= rows <= BAND`) — the STAMPI row update on the unified
+/// kernel pipeline.
+///
+/// The last `rows` entries of the tile are the new windows
+/// `k0..k0+rows` (`k0 = za.len() - rows`); every admissible cell
+/// `(j, k)` with `k - j >= excl` among them is evaluated with the exact
+/// batch-kernel expressions (delta-form Eq. 2 chains, folded Eq. 1),
+/// updating `p[j]` (an old window gained a candidate neighbor) and
+/// `p[k]` (a new window scans all of retained history).  One O(m) seed
+/// dot is computed per row at column 0, exactly like the per-append
+/// scalar walk.
+///
+/// `rows > 1` requires `rows <= excl`: then no evaluated column is
+/// itself a new row, the column- and row-direction merges touch
+/// disjoint profile entries, and the tile is **bit-identical** (values,
+/// indices, q state, and [`WorkStats`]) to `rows` successive
+/// [`scalar_row`] calls — the property test below pins every width.
+/// With `rows == 1` there is no such constraint (a single row cannot
+/// race itself).
+///
+/// [`WorkStats`] are charged in closed form per row, and only for rows
+/// with at least one admissible cell — zero-cell warm-up rows (young or
+/// heavily-excluded streams) cost nothing, matching the batch engines'
+/// accounting which starts at the first admissible diagonal.
+///
+/// PERF CONTRACT: `p` accumulates **squared** distances; the streaming
+/// engine defers the sqrt to one pass per profile snapshot.
+pub fn compute_row_n<T: Real>(
+    tile: RowTile<'_, T>,
+    rows: usize,
+    m: usize,
+    excl: usize,
+    work: &mut WorkStats,
+) {
+    // Monomorphized per width, like `compute_band_n`: the lane state
+    // (q chain values, d², row minima) must be fixed-size arrays for the
+    // compiler to keep it register-resident.
+    match rows {
+        1 => row_w::<T, 1>(tile, m, excl, work),
+        2 => row_w::<T, 2>(tile, m, excl, work),
+        3 => row_w::<T, 3>(tile, m, excl, work),
+        4 => row_w::<T, 4>(tile, m, excl, work),
+        5 => row_w::<T, 5>(tile, m, excl, work),
+        6 => row_w::<T, 6>(tile, m, excl, work),
+        7 => row_w::<T, 7>(tile, m, excl, work),
+        8 => row_w::<T, 8>(tile, m, excl, work),
+        _ => panic!("row tile of {rows} rows out of range 1..={BAND}"),
+    }
+}
+
+/// The width-generic row pipeline behind [`compute_row_n`].
+///
+/// Lane `w` walks row `k0 + w`: at column `j` it holds
+/// `q(j, k0+w) = dot(window j, window k0+w)`, obtained from lane `w-1`'s
+/// value at column `j-1` by one delta-form Eq. 2 step (`+ (hi·hiₖ −
+/// lo·loₖ)`, the row factors `hiₖ = t[k+m-1]`, `loₖ = t[k-1]` hoisted
+/// into registers).  Lane 0 pulls from the stored `q[j-1]` of the
+/// previous tile.  Lane `W-1`'s value IS the next tile's stored state,
+/// written back in place as the walk passes each column.
+fn row_w<T: Real, const W: usize>(
+    tile: RowTile<'_, T>,
+    m: usize,
+    excl: usize,
+    work: &mut WorkStats,
+) {
+    let RowTile { t, za, zb, q, p, i: idx, base } = tile;
+    let nw = za.len();
+    assert!(W >= 1 && W <= nw, "row tile of {W} rows on {nw} windows");
+    assert!(
+        W == 1 || W <= excl,
+        "row tile of {W} rows needs excl >= {W} (order-free merges); got excl={excl}"
+    );
+    assert_eq!(zb.len(), nw, "zb length");
+    assert_eq!(q.len(), nw, "q length");
+    assert_eq!(p.len(), nw, "p length");
+    assert_eq!(idx.len(), nw, "i length");
+    assert!(t.len() >= nw + m - 1, "t too short: {} < {}", t.len(), nw + m - 1);
+    let k0 = nw - W;
+
+    // Closed-form accounting: one charge per row with admissible cells,
+    // never per cell; a streaming row is the accounting twin of one
+    // batch diagonal, so full-stream totals equal the batch engines'.
+    for w in 0..W {
+        let k = k0 + w;
+        if k >= excl {
+            let c = (k - excl + 1) as u64;
+            work.cells += c;
+            work.updates += 2 * c;
+            work.diagonals += 1;
+            work.first_dots += 1;
+        }
+    }
+
+    let two_m = T::of_f64(2.0 * m as f64);
+    let zero = T::zero();
+
+    // Hoisted per-row constants: Eq. 2 factors and folded Eq. 1 stats of
+    // the W new windows stay register-resident for the whole walk.
+    let mut hi_k = [zero; W];
+    let mut lo_k = [zero; W];
+    let mut za_k = [zero; W];
+    let mut zb_k = [zero; W];
+    for w in 0..W {
+        let k = k0 + w;
+        hi_k[w] = t[k + m - 1];
+        // k == 0 only for the very first window, whose lane never
+        // advances past its seed; zero keeps the hoist in range.
+        lo_k[w] = if k > 0 { t[k - 1] } else { zero };
+        za_k[w] = za[k];
+        zb_k[w] = zb[k];
+    }
+
+    // Row-direction running minima, seeded from the rows' current
+    // entries so the final write-back is unconditional — exactly the
+    // scalar walk's `pk = p[k]; ...; p[k] = pk` shape (ties between a
+    // row's own minimum and a later column update resolve identically).
+    let mut rb = [zero; W];
+    let mut ri = [0i64; W];
+    for w in 0..W {
+        rb[w] = p[k0 + w];
+        ri[w] = idx[k0 + w];
+    }
+
+    // Column 0: one O(m) fresh seed dot per row (the DPU step in row
+    // form — dot of the oldest retained window with each new window).
+    let mut v = [zero; W];
+    for (w, vw) in v.iter_mut().enumerate() {
+        *vw = seed_dot(t, k0 + w, m);
+    }
+    // Lane 0's pull at column 1 needs the stored q[0] — save it before
+    // the in-place write of lane W-1's value.
+    let mut q_prev = if k0 > 0 { q[0] } else { zero };
+    q[0] = v[W - 1];
+    {
+        // Evaluate column 0: lanes with k0 + w >= excl (all of them on a
+        // mature stream; a shrinking prefix while the stream is young).
+        let elo = excl.saturating_sub(k0);
+        if elo < W {
+            let za_j = za[0];
+            let zb_j = zb[0];
+            let mut d2 = [T::infinity(); W];
+            for w in elo..W {
+                d2[w] = (two_m - v[w] * za_j * za_k[w] + zb_j * zb_k[w]).max(zero);
+            }
+            merge_col::<T, W>(&d2, elo, 0, p, idx, k0, base);
+            merge_rows::<T, W>(&d2, elo, 0, &mut rb, &mut ri, base);
+        }
+    }
+
+    // Full-width region: every lane alive, every lane admissible — the
+    // branchless hot path (this is where O(retained) of the work lives).
+    let jf = k0.saturating_sub(excl).min(nw - 1);
+    for j in 1..=jf {
+        let hi = t[j + m - 1];
+        let lo = t[j - 1];
+        // Lane shift + Eq. 2 delta, descending so each lane consumes its
+        // predecessor's previous-column value before it is overwritten.
+        for w in (1..W).rev() {
+            v[w] = v[w - 1] + (hi * hi_k[w] - lo * lo_k[w]);
+        }
+        v[0] = q_prev + (hi * hi_k[0] - lo * lo_k[0]);
+        q_prev = q[j];
+        q[j] = v[W - 1];
+        // Folded Eq. 1 into the lane buffer.
+        let za_j = za[j];
+        let zb_j = zb[j];
+        let mut d2 = [zero; W];
+        for w in 0..W {
+            d2[w] = (two_m - v[w] * za_j * za_k[w] + zb_j * zb_k[w]).max(zero);
+        }
+        merge_col::<T, W>(&d2, 0, j, p, idx, k0, base);
+        merge_rows::<T, W>(&d2, 0, j, &mut rb, &mut ri, base);
+    }
+
+    // Ragged tail: columns where lanes stop being admissible (within
+    // `excl` of a new row) and then stop existing (columns that are new
+    // rows themselves) — at most `excl + W` columns, off the hot path.
+    for j in (jf + 1).max(1)..nw {
+        let wlo = j.saturating_sub(k0); // lanes w >= wlo still alive
+        let hi = t[j + m - 1];
+        let lo = t[j - 1];
+        for w in (wlo.max(1)..W).rev() {
+            v[w] = v[w - 1] + (hi * hi_k[w] - lo * lo_k[w]);
+        }
+        if wlo == 0 {
+            v[0] = q_prev + (hi * hi_k[0] - lo * lo_k[0]);
+            q_prev = q[j];
+        }
+        q[j] = v[W - 1];
+        let elo = wlo.max((j + excl).saturating_sub(k0));
+        if elo < W {
+            let za_j = za[j];
+            let zb_j = zb[j];
+            let mut d2 = [T::infinity(); W];
+            for w in elo..W {
+                d2[w] = (two_m - v[w] * za_j * za_k[w] + zb_j * zb_k[w]).max(zero);
+            }
+            merge_col::<T, W>(&d2, elo, j, p, idx, k0, base);
+            merge_rows::<T, W>(&d2, elo, j, &mut rb, &mut ri, base);
+        }
+    }
+
+    // Row-direction write-back (unconditional, mirroring the scalar
+    // walk's final `p[k] = pk`): untouched rows write their seeds back.
+    for w in 0..W {
+        p[k0 + w] = rb[w];
+        idx[k0 + w] = ri[w];
+    }
+}
+
+/// Column-direction merge of one lane buffer into `p[j]`: branchless
+/// min-tree over the admissible lanes, argmin lane scan only on the rare
+/// improvement (first-equal lane = lowest row = the same tie order as
+/// processing the rows one append at a time).
+#[inline(always)]
+fn merge_col<T: Real, const W: usize>(
+    d2: &[T; W],
+    elo: usize,
+    j: usize,
+    p: &mut [T],
+    idx: &mut [i64],
+    k0: usize,
+    base: i64,
+) {
+    let mut best = d2[elo];
+    for &x in d2.iter().skip(elo + 1) {
+        best = if x < best { x } else { best };
+    }
+    if best < p[j] {
+        let mut bw = elo;
+        while d2[bw] != best {
+            bw += 1;
+        }
+        p[j] = best;
+        idx[j] = base + (k0 + bw) as i64;
+    }
+}
+
+/// Row-direction merge of one lane buffer into the register-resident
+/// running minima: conditional moves, strict `<` so the first (lowest-j)
+/// occurrence of a row's minimum keeps the argmin — the scalar walk's
+/// tie order.
+#[inline(always)]
+fn merge_rows<T: Real, const W: usize>(
+    d2: &[T; W],
+    elo: usize,
+    j: usize,
+    rb: &mut [T; W],
+    ri: &mut [i64; W],
+    base: i64,
+) {
+    for w in elo..W {
+        let take = d2[w] < rb[w];
+        rb[w] = if take { d2[w] } else { rb[w] };
+        ri[w] = if take { base + j as i64 } else { ri[w] };
+    }
+}
+
+/// The pre-kernel streaming row walk, retained as the differential
+/// oracle and the perf baseline for `benches/streaming.rs` — one row
+/// (the single newest window) advanced with per-cell evaluation and the
+/// branchy two-sided update, exactly the shape `Stampi::append` ran
+/// before the row kernel (minus its per-element ring asserts and eager
+/// per-cell sqrt, which died with the old loop; the oracle obeys the
+/// squared-distance PERF CONTRACT so it stays bit-comparable).
+///
+/// [`compute_row_n`] at any width is bit-identical to successive calls
+/// of this function — the streaming analogue of [`scalar_diagonal`].
+pub fn scalar_row<T: Real>(tile: RowTile<'_, T>, m: usize, excl: usize, work: &mut WorkStats) {
+    let RowTile { t, za, zb, q, p, i: idx, base } = tile;
+    let nw = za.len();
+    assert!(nw >= 1 && q.len() == nw && p.len() == nw && idx.len() == nw && zb.len() == nw);
+    assert!(t.len() >= nw + m - 1);
+    let k = nw - 1;
+
+    // Advance q in place: walking j downward keeps q[j-1] at its old
+    // value until consumed (the classic STOMP row trick), with the same
+    // delta-form association as the kernel chains.
+    if k > 0 {
+        let hi_k = t[k + m - 1];
+        let lo_k = t[k - 1];
+        for j in (1..=k).rev() {
+            q[j] = q[j - 1] + (t[j + m - 1] * hi_k - t[j - 1] * lo_k);
+        }
+    }
+    q[0] = seed_dot(t, k, m);
+
+    if k < excl {
+        return; // zero admissible cells: no work charged (warm-up row)
+    }
+    let hi = k - excl; // inclusive last admissible column
+    let two_m = T::of_f64(2.0 * m as f64);
+    let zero = T::zero();
+    let za_k = za[k];
+    let zb_k = zb[k];
+    let mut pk = p[k];
+    let mut ik = idx[k];
+    for j in 0..=hi {
+        let d = (two_m - q[j] * za[j] * za_k + zb[j] * zb_k).max(zero);
+        if d < p[j] {
+            p[j] = d;
+            idx[j] = base + k as i64;
+        }
+        if d < pk {
+            pk = d;
+            ik = base + j as i64;
+        }
+        work.cells += 1;
+        work.updates += 2;
+    }
+    p[k] = pk;
+    idx[k] = ik;
+    work.diagonals += 1;
+    work.first_dots += 1;
 }
 
 /// The pre-kernel per-cell hot loop, retained as the differential oracle
@@ -576,6 +937,275 @@ mod tests {
         let (sca, _) = diag_profile(&t, cfg, scalar_diagonal);
         assert!(got.max_abs_diff(&sca) < 1e-9, "{}", got.max_abs_diff(&sca));
         assert!(got.p.iter().all(|d| d.is_finite()));
+    }
+
+    /// Streaming driver for the row-kernel tests: advance a stream over
+    /// plain vectors one tile at a time through `f`, which receives the
+    /// tile view and the tile width.  Stats come from the shared batch
+    /// precompute so row results are comparable to the batch paths.
+    struct RowState<T> {
+        q: Vec<T>,
+        p: Vec<T>,
+        i: Vec<i64>,
+        work: WorkStats,
+    }
+
+    impl<T: Real> RowState<T> {
+        fn new() -> Self {
+            RowState { q: vec![], p: vec![], i: vec![], work: WorkStats::default() }
+        }
+
+        /// Grow by `rows` windows and run one tile over the whole state.
+        fn tile(&mut self, t: &[T], st: &WindowStats<T>, excl: usize, rows: usize) {
+            for _ in 0..rows {
+                self.q.push(T::zero());
+                self.p.push(T::infinity());
+                self.i.push(-1);
+            }
+            let nw = self.p.len();
+            let tile = RowTile {
+                t: &t[..nw + st.m - 1],
+                za: &st.za[..nw],
+                zb: &st.zb[..nw],
+                q: &mut self.q,
+                p: &mut self.p,
+                i: &mut self.i,
+                base: 0,
+            };
+            compute_row_n(tile, rows, st.m, excl, &mut self.work);
+        }
+
+        /// Grow by one window and run the scalar oracle row.
+        fn oracle_row(&mut self, t: &[T], st: &WindowStats<T>, excl: usize) {
+            self.q.push(T::zero());
+            self.p.push(T::infinity());
+            self.i.push(-1);
+            let nw = self.p.len();
+            let tile = RowTile {
+                t: &t[..nw + st.m - 1],
+                za: &st.za[..nw],
+                zb: &st.zb[..nw],
+                q: &mut self.q,
+                p: &mut self.p,
+                i: &mut self.i,
+                base: 0,
+            };
+            scalar_row(tile, st.m, excl, &mut self.work);
+        }
+
+        fn bits(&self) -> (Vec<u64>, Vec<u64>, Vec<i64>) {
+            (
+                self.q.iter().map(|x| x.to_f64s().to_bits()).collect(),
+                self.p.iter().map(|x| x.to_f64s().to_bits()).collect(),
+                self.i.clone(),
+            )
+        }
+    }
+
+    #[test]
+    fn prop_row_tile_every_width_bit_identical_to_scalar_row() {
+        // The streaming tentpole invariant: a multi-row tile of ANY
+        // width 1..=min(BAND, excl) leaves exactly the state (profile
+        // values, neighbor indices, q chains, WorkStats) that the
+        // retained scalar row walk leaves after the same appends —
+        // checked after EVERY tile, so young-stream edges (zero-cell
+        // warm-up rows, partially admissible columns) are pinned too.
+        check("row-tile-width-bits", 6, |rng: &mut Rng| {
+            let m = rng.range(4, 40);
+            let excl = rng.range(1, 2 * BAND + 1).min(m); // spans < and > BAND
+            let n = rng.range(3 * m + 4 * BAND, 500.max(3 * m + 4 * BAND + 1));
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let st = sliding_stats(&t, m);
+            let nw = st.len();
+            let wmax = BAND.min(excl);
+            for width in 1..=wmax {
+                let mut orc = RowState::<f64>::new();
+                let mut sub = RowState::<f64>::new();
+                let mut done = 0usize;
+                while done < nw {
+                    let rows = width.min(nw - done);
+                    sub.tile(&t, &st, excl, rows);
+                    for _ in 0..rows {
+                        orc.oracle_row(&t, &st, excl);
+                    }
+                    done += rows;
+                    assert_eq!(sub.bits(), orc.bits(), "width={width} after {done} rows");
+                    assert_eq!(sub.work, orc.work, "width={width} accounting after {done}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn row_tile_width_sweep_bit_identical_f32() {
+        // single-precision spot check of the same invariant
+        let t: Vec<f32> = Rng::new(66).gauss_vec(400).iter().map(|&x| x as f32).collect();
+        let m = 16;
+        let excl = 8;
+        let st = sliding_stats(&t, m);
+        let nw = st.len();
+        for width in 1..=BAND.min(excl) {
+            let mut orc = RowState::<f32>::new();
+            let mut sub = RowState::<f32>::new();
+            let mut done = 0usize;
+            while done < nw {
+                let rows = width.min(nw - done);
+                sub.tile(&t, &st, excl, rows);
+                for _ in 0..rows {
+                    orc.oracle_row(&t, &st, excl);
+                }
+                done += rows;
+            }
+            assert_eq!(sub.bits(), orc.bits(), "width={width}");
+            assert_eq!(sub.work, orc.work, "width={width}");
+        }
+    }
+
+    #[test]
+    fn row_tiles_on_constant_plateau_keep_scalar_tie_order() {
+        // exact distance ties (flat plateau => equal d² = 2m cells) are
+        // where merge order could diverge; indices must still match the
+        // scalar walk bit-for-bit at every width
+        let mut rng = Rng::new(67);
+        let m = 8;
+        let excl = 4;
+        let mut t: Vec<f64> = rng.gauss_vec(300);
+        for x in t[100..100 + 4 * m].iter_mut() {
+            *x = -0.75;
+        }
+        let st = sliding_stats(&t, m);
+        let nw = st.len();
+        for width in 1..=BAND.min(excl) {
+            let mut orc = RowState::<f64>::new();
+            let mut sub = RowState::<f64>::new();
+            let mut done = 0usize;
+            while done < nw {
+                let rows = width.min(nw - done);
+                sub.tile(&t, &st, excl, rows);
+                for _ in 0..rows {
+                    orc.oracle_row(&t, &st, excl);
+                }
+                done += rows;
+            }
+            assert_eq!(sub.bits(), orc.bits(), "width={width}");
+        }
+    }
+
+    #[test]
+    fn streaming_rows_reproduce_batch_kernel_to_the_bit() {
+        // The conformance keystone: a full stream driven through row
+        // tiles computes the exact same chains (seed_dot at column 0 =
+        // the batch diagonal seed; lane pulls = the delta-form Eq. 2
+        // steps) and the exact same folded Eq. 1 cells as the batch band
+        // sweep, so with shared statistics the profiles must agree to
+        // the BIT — values and neighbor indices.
+        let mut rng = Rng::new(68);
+        let t: Vec<f64> = rng.gauss_vec(1100);
+        let m = 24;
+        let cfg = MpConfig::new(m);
+        let excl = cfg.exclusion(); // 6 — admits widths up to 6
+        let (batch, wb) = banded_profile(&t, cfg);
+        let st = sliding_stats(&t, m);
+        let nw = st.len();
+        for width in [1usize, 3, BAND.min(excl)] {
+            let mut sub = RowState::<f64>::new();
+            let mut done = 0usize;
+            while done < nw {
+                let rows = width.min(nw - done);
+                sub.tile(&t, &st, excl, rows);
+                done += rows;
+            }
+            let mut p = sub.p.clone();
+            for v in p.iter_mut() {
+                if v.is_finite() {
+                    *v = v.sqrt();
+                }
+            }
+            assert_eq!(
+                p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                batch.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "width={width}"
+            );
+            assert_eq!(sub.i, batch.i, "width={width}");
+            assert_eq!(sub.work, wb, "width={width}: accounting must match batch");
+        }
+    }
+
+    #[test]
+    fn row_tile_base_offsets_neighbor_indices() {
+        // compaction story: `base` rebases every written index, nothing
+        // else — the same tile at base 0 and base 1000 differs exactly
+        // by the shift
+        let t: Vec<f64> = Rng::new(69).gauss_vec(200);
+        let m = 8;
+        let excl = 2;
+        let st = sliding_stats(&t, m);
+        let nw = st.len();
+        let run = |base: i64| -> (Vec<u64>, Vec<i64>) {
+            let mut s = RowState::<f64>::new();
+            let mut done = 0usize;
+            while done < nw {
+                let rows = 2.min(nw - done);
+                for _ in 0..rows {
+                    s.q.push(0.0);
+                    s.p.push(f64::INFINITY);
+                    s.i.push(-1);
+                }
+                let len = s.p.len();
+                let tile = RowTile {
+                    t: &t[..len + m - 1],
+                    za: &st.za[..len],
+                    zb: &st.zb[..len],
+                    q: &mut s.q,
+                    p: &mut s.p,
+                    i: &mut s.i,
+                    base,
+                };
+                compute_row_n(tile, rows, m, excl, &mut s.work);
+                done += rows;
+            }
+            (s.p.iter().map(|x| x.to_bits()).collect(), s.i)
+        };
+        let (p0, i0) = run(0);
+        let (p1, i1) = run(1000);
+        assert_eq!(p0, p1);
+        for (a, b) in i0.iter().zip(&i1) {
+            if *a >= 0 {
+                assert_eq!(*a + 1000, *b);
+            } else {
+                assert_eq!(*a, *b);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "order-free merges")]
+    fn row_tile_wider_than_exclusion_panics() {
+        // rows > excl would let column updates race row write-backs on
+        // ties; the guard must reject it
+        let t: Vec<f64> = Rng::new(60).gauss_vec(64);
+        let st = sliding_stats(&t, 8);
+        let nw = st.len();
+        let mut q = vec![0.0; nw];
+        let mut p = vec![f64::INFINITY; nw];
+        let mut i = vec![-1i64; nw];
+        let mut w = WorkStats::default();
+        let tile = RowTile { t: &t, za: &st.za, zb: &st.zb, q: &mut q, p: &mut p, i: &mut i, base: 0 };
+        compute_row_n(tile, 4, 8, 2, &mut w);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn row_tile_wider_than_band_panics() {
+        let t: Vec<f64> = Rng::new(60).gauss_vec(64);
+        let st = sliding_stats(&t, 8);
+        let nw = st.len();
+        let mut q = vec![0.0; nw];
+        let mut p = vec![f64::INFINITY; nw];
+        let mut i = vec![-1i64; nw];
+        let mut w = WorkStats::default();
+        let tile = RowTile { t: &t, za: &st.za, zb: &st.zb, q: &mut q, p: &mut p, i: &mut i, base: 0 };
+        compute_row_n(tile, BAND + 1, 8, 16, &mut w);
     }
 
     #[test]

@@ -20,7 +20,9 @@
 //!   the software analogue of NATSA's PU fleet.
 //! * [`prescrimp`] — the approximate SCRIMP++ preprocessing phase.
 //! * [`stampi`] — exact *streaming* profile maintained under `append`
-//!   (STAMPI row updates, O(n) per sample, optional bounded history).
+//!   (STAMPI row updates, O(n) per sample, optional bounded history),
+//!   executing the kernel's row entry point (`kernel::compute_row_n`):
+//!   width-1 tiles per append, blocked multi-row tiles per batch.
 //! * [`topk`] — ranked motif/discord extraction with trivial-match
 //!   suppression (the downstream-user API).
 

@@ -13,13 +13,35 @@
 //! q_new[j] = q_old[j-1] - t[j-1]·t[k-1] + t[j+m-1]·t[k+m-1]
 //! ```
 //!
-//! with one direct O(m) dot product at the oldest retained window.  One
-//! [`crate::mp::znorm_dist`] evaluation per admissible pair then updates
-//! both `P[j]` (old window gained a new candidate neighbor) and `P[k]`
-//! (new window scans all of history) — the profile after every append is
-//! bit-equal in structure to a batch run over the prefix (the differential
-//! property test in `rust/tests/cross_impl.rs` pins this at < 1e-6 against
-//! the brute-force oracle at every step).
+//! with one direct O(m) dot product at the oldest retained window.
+//!
+//! ## On the unified kernel (the streaming hot path)
+//!
+//! The row update executes on the kernel family's row entry point,
+//! [`crate::mp::kernel::compute_row_n`]: [`Stampi::append`] is a width-1
+//! row tile over contiguous [`RingVec`] slice views (bounds checked once
+//! per append, not once per cell), and [`Stampi::extend`] blocks up to
+//! [`crate::mp::kernel::BAND`] buffered samples into one multi-row tile,
+//! so batched appends amortize lane fill exactly like the batch fleet's
+//! band tiles.  The cell math is the batch kernel's verbatim: delta-form
+//! Eq. 2 chains (a row tile's lane pulls ARE the diagonal chains of the
+//! batch sweep), folded Eq. 1 factors (`za = √2/σ`, `zb = √(2m)·μ/σ`),
+//! and two branchless merge passes.
+//!
+//! PERF CONTRACT (same as every batch engine): the live profile stores
+//! **squared** z-norm distances — min is monotone under sqrt, so the old
+//! per-cell `sqrt` is deferred to ONE pass per [`Stampi::profile`]
+//! snapshot.  Snapshots still expose true distances; only the internal
+//! representation changed.
+//!
+//! One [`crate::mp::kernel::scalar_row`] evaluation per admissible pair
+//! updates both `P[j]` (old window gained a new candidate neighbor) and
+//! `P[k]` (new window scans all of history) — the profile after every
+//! append is bit-equal in structure to a batch run over the prefix (the
+//! differential property test in `rust/tests/cross_impl.rs` pins this at
+//! < 1e-6 against the brute-force oracle at every step, and the kernel
+//! property tests pin every tile width bit-identical to the retained
+//! scalar row walk).
 //!
 //! ## Bounded history
 //!
@@ -34,8 +56,19 @@
 //! positions are relative to [`Stampi::first_window`] and neighbor indices
 //! are rebased to match (an evicted neighbor reports `-1` — see
 //! [`Stampi::profile`]).
+//!
+//! On the blocked [`Stampi::extend`] path, eviction runs at *tile*
+//! granularity: every row in a tile sees the history bound as of the
+//! tile's start, so later rows in a tile may evaluate up to `rows - 1`
+//! extra just-past-the-bound candidates that per-sample appends would
+//! have evicted first.  Those are true pairwise distances against real
+//! history — the blocked profile is still exact for a valid (slightly
+//! wider) history window, still upper-bounds the unbounded profile, and
+//! lower-bounds the per-append bounded one.  With unbounded history the
+//! blocked and per-append paths are **bit-identical** (pinned below).
 
-use crate::mp::{znorm_dist, MatrixProfile, WorkStats};
+use crate::mp::kernel::{self, RowTile, BAND};
+use crate::mp::{MatrixProfile, WorkStats};
 use crate::timeseries::default_exclusion;
 use crate::timeseries::stream::RingVec;
 use crate::Real;
@@ -112,14 +145,17 @@ pub struct Stampi<T> {
     max_history: Option<usize>,
     /// Raw samples (absolute sample indexing).
     t: RingVec<T>,
-    /// Per-window statistics (absolute window indexing; the standard
-    /// deviation itself is folded into `inv = 1/(m*sigma)` — the distance
-    /// path never needs sigma alone).
-    mu: RingVec<T>,
-    inv: RingVec<T>,
+    /// Folded Eq. 1 factors, exactly the batch kernel's representation
+    /// (see [`crate::timeseries::WindowStats`]): `za = sqrt(2)/sigma`,
+    /// `zb = sqrt(2m)*mu/sigma`, both zero for constant windows (which
+    /// degenerate to d² = 2m).
+    za: RingVec<T>,
+    zb: RingVec<T>,
     /// `q[j]` = dot product of window `j` with the latest window.
     q: RingVec<T>,
-    /// The live profile (true distances, not squared) and neighbor indices.
+    /// The live profile in the kernel's **squared**-distance
+    /// representation (PERF CONTRACT — one deferred sqrt per
+    /// [`Stampi::profile`] snapshot), plus neighbor indices.
     p: RingVec<T>,
     i: RingVec<i64>,
     /// Rolling sums over the last `m` samples (f64 like the batch
@@ -157,8 +193,8 @@ impl<T: Real> Stampi<T> {
             excl: cfg.exclusion(),
             max_history: cfg.max_history,
             t: RingVec::new(),
-            mu: RingVec::new(),
-            inv: RingVec::new(),
+            za: RingVec::new(),
+            zb: RingVec::new(),
             q: RingVec::new(),
             p: RingVec::new(),
             i: RingVec::new(),
@@ -202,14 +238,19 @@ impl<T: Real> Stampi<T> {
     }
 
     /// Aggregate functional work — feeds the timing/energy models in
-    /// [`crate::sim`] exactly like the batch engines' accounting.
+    /// [`crate::sim`] exactly like the batch engines' accounting: one
+    /// seed dot + one diagonal-equivalent per row *with admissible
+    /// cells*, so full-stream totals equal a batch run over the same
+    /// series (appends that evaluate nothing charge nothing).
     pub fn work(&self) -> WorkStats {
         self.work
     }
 
-    /// Append one sample.  Returns `Some` once the sample completes a
-    /// window (i.e. from the `m`-th sample on).
-    pub fn append(&mut self, x: T) -> Option<AppendOutcome> {
+    /// Push one sample; once it completes a window, push that window's
+    /// statistics and fresh profile/q slots and return its absolute
+    /// index.  The caller still has to advance the row state
+    /// ([`Self::run_rows`]) and run [`Self::maintain`].
+    fn admit(&mut self, x: T) -> Option<usize> {
         let m = self.m;
         self.t.push(x);
         let n = self.t.next_index();
@@ -227,79 +268,66 @@ impl<T: Real> Stampi<T> {
             return None;
         }
 
-        // Window k = n - m is now complete; push its statistics.
+        // Window k = n - m is now complete; push its statistics in the
+        // kernel's folded representation.
         let k = n - m;
         let mf = m as f64;
         let mean = self.s / mf;
         let var = (self.s2 / mf - mean * mean).max(0.0);
         let sd = var.sqrt();
-        self.mu.push(T::of_f64(mean));
-        self.inv.push(if sd > 0.0 { T::of_f64(1.0 / (mf * sd)) } else { T::zero() });
+        if sd > 0.0 {
+            self.za.push(T::of_f64(std::f64::consts::SQRT_2 / sd));
+            self.zb.push(T::of_f64((2.0 * mf).sqrt() * mean / sd));
+        } else {
+            self.za.push(T::zero());
+            self.zb.push(T::zero());
+        }
         self.p.push(T::infinity());
         self.i.push(-1);
+        self.q.push(T::zero()); // slot; the row tile writes every entry
+        Some(k)
+    }
 
-        if k == 0 {
-            // First window: seed q with its self-dot (feeds the recurrence
-            // of the next append; no admissible pair yet).
-            let w = self.t.slice(0, m);
-            self.q.push(dot(w, w));
-            self.work.first_dots += 1;
-            return Some(AppendOutcome { window: 0, row_start: 0, row_cells: 0 });
-        }
+    /// Advance the streaming state by a tile of `rows` freshly-admitted
+    /// windows through the unified row kernel.  All hot-loop access goes
+    /// through contiguous slice views acquired here — one retained-range
+    /// check per ring per tile, zero per cell.  Returns the admissible
+    /// cells evaluated.
+    fn run_rows(&mut self, rows: usize) -> u64 {
+        let m = self.m;
+        let excl = self.excl;
+        let n = self.t.next_index();
+        let j0 = self.p.first_index();
+        let wend = self.p.next_index();
+        debug_assert_eq!(wend, n - m + 1);
+        debug_assert_eq!(j0, self.t.first_index());
+        let before = self.work.cells;
+        let tile = RowTile {
+            t: self.t.slice(j0, n),
+            za: self.za.slice(j0, wend),
+            zb: self.zb.slice(j0, wend),
+            q: self.q.slice_mut(j0, wend),
+            p: self.p.slice_mut(j0, wend),
+            i: self.i.slice_mut(j0, wend),
+            base: j0 as i64,
+        };
+        kernel::compute_row_n(tile, rows, m, excl, &mut self.work);
+        self.work.cells - before
+    }
 
-        // Advance q in place: entering this append, q[j] = dot(window j,
-        // window k-1) for retained j; leaving it, q[j] = dot(window j,
-        // window k).  Walking j downward keeps q[j-1] at its old value
-        // until consumed (same trick as STOMP's row walk).
-        let j0 = self.q.first_index();
-        self.q.push(T::zero()); // slot for window k
-        let tk1 = self.t.get(k - 1);
-        let tkm1 = self.t.get(k + m - 1);
-        for j in ((j0 + 1)..=k).rev() {
-            let v = self.q.get(j - 1) - self.t.get(j - 1) * tk1 + self.t.get(j + m - 1) * tkm1;
-            self.q.set(j, v);
-        }
-        let q0 = dot(self.t.slice(j0, j0 + m), self.t.slice(k, k + m));
-        self.q.set(j0, q0);
-        self.work.first_dots += 1;
-        self.work.diagonals += 1;
-
-        // Profile row: window k against every admissible retained window.
-        let mut row_cells = 0u64;
-        if k >= self.excl + j0 {
-            let hi = k - self.excl; // inclusive
-            let mu_k = self.mu.get(k);
-            let inv_k = self.inv.get(k);
-            let mut pk = self.p.get(k);
-            let mut ik = self.i.get(k);
-            for j in j0..=hi {
-                let d = znorm_dist(self.q.get(j), m, self.mu.get(j), self.inv.get(j), mu_k, inv_k);
-                if d < self.p.get(j) {
-                    self.p.set(j, d);
-                    self.i.set(j, k as i64);
-                }
-                if d < pk {
-                    pk = d;
-                    ik = j as i64;
-                }
-            }
-            self.p.set(k, pk);
-            self.i.set(k, ik);
-            row_cells = (hi + 1 - j0) as u64;
-            self.work.cells += row_cells;
-            self.work.updates += 2 * row_cells;
-        }
-
-        // Bounded history: evict samples beyond the bound and the windows
-        // no longer fully inside the retained samples.
+    /// Post-tile bookkeeping: bounded-history eviction and rolling-sum
+    /// re-anchoring, charged once per tile (`appends` samples).
+    fn maintain(&mut self, newest_window: usize, appends: u32) {
+        let n = self.t.next_index();
+        let m = self.m;
         let mut compacted = false;
         if let Some(h) = self.max_history {
             if self.t.len() > h {
                 let sample_base = n - h;
                 compacted = self.t.evict_to(sample_base);
-                let window_base = sample_base.min(k);
-                self.mu.evict_to(window_base);
-                self.inv.evict_to(window_base);
+                let window_base = sample_base.min(newest_window);
+                self.za.evict_to(window_base);
+                self.zb.evict_to(window_base);
                 self.q.evict_to(window_base);
                 self.p.evict_to(window_base);
                 self.i.evict_to(window_base);
@@ -310,7 +338,7 @@ impl<T: Real> Stampi<T> {
         // exactly over the current last-m window on every ring compaction
         // and at least every REANCHOR_EVERY appends, so slide drift can
         // never accumulate past one anchoring period.
-        self.since_anchor += 1;
+        self.since_anchor = self.since_anchor.saturating_add(appends);
         if compacted || self.since_anchor >= REANCHOR_EVERY {
             let mut s = 0.0;
             let mut s2 = 0.0;
@@ -323,13 +351,76 @@ impl<T: Real> Stampi<T> {
             self.s2 = s2;
             self.since_anchor = 0;
         }
+    }
 
+    /// Append one sample.  Returns `Some` once the sample completes a
+    /// window (i.e. from the `m`-th sample on).  The row update runs as
+    /// a width-1 tile of the unified kernel.
+    pub fn append(&mut self, x: T) -> Option<AppendOutcome> {
+        let k = self.admit(x)?;
+        let j0 = self.p.first_index();
+        let row_cells = if k == 0 {
+            // First window: seed q with its self-dot (feeds the lane-0
+            // pull of the next row tile; no admissible pair yet and no
+            // work charged — warm-up, like the zero-cell rows below).
+            let m = self.m;
+            let q0 = kernel::seed_dot(self.t.slice(0, m), 0, m);
+            self.q.set(0, q0);
+            0
+        } else {
+            self.run_rows(1)
+        };
+        self.maintain(k, 1);
         Some(AppendOutcome { window: k, row_start: j0, row_cells })
     }
 
-    /// Append a batch of samples; returns how many windows were completed.
+    /// Append a batch of samples; returns how many windows were
+    /// completed.
+    ///
+    /// This is the blocked fast path: once the stream has its first
+    /// window, buffered samples are admitted in groups of up to
+    /// `min(BAND, excl)` and advanced as ONE multi-row kernel tile, so
+    /// a batch of appends amortizes lane fill exactly like the batch
+    /// fleet's band tiles (each sample still updates the rolling
+    /// statistics individually — the profile is identical to per-sample
+    /// appends, bit-for-bit with unbounded history; see the module docs
+    /// for the tile-granular eviction semantics under a history bound).
     pub fn extend(&mut self, xs: &[T]) -> usize {
-        xs.iter().filter(|&&x| self.append(x).is_some()).count()
+        let mut completed = 0;
+        let mut pos = 0;
+        // Per-sample until the first window exists (the multi-row tile
+        // needs a previous row's q state to pull from).
+        while pos < xs.len() && self.num_windows() == 0 {
+            if self.append(xs[pos]).is_some() {
+                completed += 1;
+            }
+            pos += 1;
+        }
+        // Blocked path: every further sample completes exactly one
+        // window.  Tile width is capped at the exclusion radius so the
+        // kernel's merges stay order-free (bit-identical to per-sample
+        // appends — see `compute_row_n`).
+        let wmax = BAND.min(self.excl.max(1));
+        while pos < xs.len() {
+            // Never straddle the rolling-sum re-anchor boundary: cap the
+            // tile so it ends exactly where the per-append schedule would
+            // recompute s/s2 (`maintain` fires between tiles), otherwise
+            // windows admitted mid-tile after the 2^16th append would see
+            // drifted sums where per-sample appends see fresh ones, and
+            // the bit-identity of the two paths would break there.
+            let to_anchor = (REANCHOR_EVERY - self.since_anchor) as usize;
+            let rows = wmax.min(xs.len() - pos).min(to_anchor.max(1));
+            for &x in &xs[pos..pos + rows] {
+                let admitted = self.admit(x);
+                debug_assert!(admitted.is_some(), "post-first-window admit must complete");
+            }
+            self.run_rows(rows);
+            let newest = self.num_windows() - 1;
+            self.maintain(newest, rows as u32);
+            completed += rows;
+            pos += rows;
+        }
+        completed
     }
 
     /// Snapshot the live profile.  Position `r` of the result is window
@@ -340,6 +431,11 @@ impl<T: Real> Stampi<T> {
     /// named in-snapshot: its entry keeps the (true, historical) distance
     /// but reports index `-1`.  With unbounded history the rebasing is the
     /// identity and `-1` only ever means "no admissible pair yet".
+    ///
+    /// The internal profile is squared (kernel PERF CONTRACT); this is
+    /// the ONE place the deferred `sqrt` runs — once per snapshot, not
+    /// once per cell.  Since sqrt is monotone and correctly rounded, the
+    /// snapshot values equal what per-cell sqrt minimization produced.
     pub fn profile(&self) -> MatrixProfile<T> {
         let base = self.p.first_index() as i64;
         let i = self
@@ -348,18 +444,15 @@ impl<T: Real> Stampi<T> {
             .iter()
             .map(|&j| if j >= base { j - base } else { -1 })
             .collect();
-        MatrixProfile {
+        let mut mp = MatrixProfile {
             p: self.p.to_vec(),
             i,
             m: self.m,
             excl: self.excl,
-        }
+        };
+        mp.sqrt_in_place();
+        mp
     }
-}
-
-#[inline]
-fn dot<T: Real>(a: &[T], b: &[T]) -> T {
-    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
 }
 
 #[cfg(test)]
@@ -371,7 +464,9 @@ mod tests {
 
     fn feed(t: &[f64], cfg: StampiConfig) -> Stampi<f64> {
         let mut eng = Stampi::new(cfg).unwrap();
-        eng.extend(t);
+        for &x in t {
+            eng.append(x);
+        }
         eng
     }
 
@@ -383,6 +478,8 @@ mod tests {
         let want = stomp::matrix_profile(&t, MpConfig::new(16)).unwrap();
         let got = eng.profile();
         assert_eq!(got.len(), want.len());
+        // same kernel cell math; only the f64 statistics accumulation
+        // order differs between the rolling stream and the batch cumsum
         assert!(got.max_abs_diff(&want) < 1e-9, "{}", got.max_abs_diff(&want));
     }
 
@@ -407,8 +504,154 @@ mod tests {
         let excl = 3;
         assert_eq!(eng.work().cells, total_cells(nw, excl));
         assert_eq!(eng.work().updates, 2 * eng.work().cells);
-        // one O(m) seed dot per completed window
-        assert_eq!(eng.work().first_dots, nw as u64);
+        // one O(m) seed dot and one diagonal-equivalent per row WITH
+        // admissible cells — exactly the batch engines' closed-form
+        // totals over the same series (nw - excl diagonals)
+        assert_eq!(eng.work().first_dots, (nw - excl) as u64);
+        assert_eq!(eng.work().diagonals, (nw - excl) as u64);
+    }
+
+    #[test]
+    fn zero_cell_appends_charge_no_work() {
+        // Regression (accounting skew): appends whose row has no
+        // admissible cell (k < excl + j0) used to charge a seed dot and
+        // a diagonal anyway, inflating the sim timing/energy evidence
+        // for short or heavily-excluded streams relative to batch runs.
+        let m = 12;
+        let excl = 3;
+        let mut eng = Stampi::<f64>::new(StampiConfig::new(m)).unwrap();
+        let mut rng = Rng::new(81);
+        // window `excl` (the first with an admissible cell) completes at
+        // sample index m - 1 + excl; everything before must cost nothing
+        for (s, x) in rng.gauss_vec(m + excl - 1).into_iter().enumerate() {
+            let out = eng.append(x);
+            if let Some(o) = out {
+                assert_eq!(o.row_cells, 0, "sample {s}");
+            }
+            assert_eq!(eng.work(), WorkStats::default(), "sample {s}");
+        }
+        let out = eng.append(rng.gauss()).unwrap();
+        assert_eq!(out.window, excl);
+        assert_eq!(out.row_cells, 1);
+        let w = eng.work();
+        assert_eq!((w.cells, w.diagonals, w.first_dots, w.updates), (1, 1, 1, 2));
+        // batch accounting for the same prefix agrees
+        assert_eq!(w.cells, total_cells(excl + 1, excl));
+    }
+
+    #[test]
+    fn blocked_extend_bit_identical_to_appends_unbounded() {
+        // the tentpole pin at engine level: feeding through the blocked
+        // multi-row extend path leaves exactly the state per-sample
+        // appends leave — profile bits, neighbor indices, q chains, and
+        // work accounting — including ragged chunk boundaries
+        check("stampi-extend-bits", 6, |rng: &mut Rng| {
+            let m = rng.range(4, 40);
+            let n = rng.range(4 * m, 600);
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let mut a = Stampi::<f64>::new(StampiConfig::new(m)).unwrap();
+            for &x in &t {
+                a.append(x);
+            }
+            let mut b = Stampi::<f64>::new(StampiConfig::new(m)).unwrap();
+            let mut pos = 0;
+            while pos < n {
+                let chunk = rng.range(1, 40).min(n - pos);
+                b.extend(&t[pos..pos + chunk]);
+                pos += chunk;
+            }
+            assert_eq!(a.num_windows(), b.num_windows());
+            let bits = |e: &Stampi<f64>| -> (Vec<u64>, Vec<u64>, Vec<i64>) {
+                (
+                    e.p.to_vec().iter().map(|x| x.to_bits()).collect(),
+                    e.q.to_vec().iter().map(|x| x.to_bits()).collect(),
+                    e.i.to_vec(),
+                )
+            };
+            assert_eq!(bits(&a), bits(&b), "m={m} n={n}");
+            assert_eq!(a.work(), b.work(), "m={m} n={n}");
+        });
+    }
+
+    #[test]
+    fn blocked_extend_bit_identical_across_reanchor_boundary() {
+        // Regression: a tile straddling the REANCHOR_EVERY boundary would
+        // admit its later windows with drifted rolling sums where the
+        // per-append schedule has already recomputed them exactly —
+        // extend() must cap the tile at the boundary.  The counter is the
+        // only state the boundary depends on, so fast-forward it to a few
+        // appends short (an offset-1e6 stream guarantees the recomputed
+        // sums differ bitwise from the rolled ones).
+        let m = 16;
+        let mut rng = Rng::new(83);
+        let t: Vec<f64> = (0..400).map(|_| 1.0e6 + rng.gauss()).collect();
+        let mut a = Stampi::<f64>::new(StampiConfig::new(m)).unwrap();
+        let mut b = Stampi::<f64>::new(StampiConfig::new(m)).unwrap();
+        for &x in &t[..100] {
+            a.append(x);
+        }
+        b.extend(&t[..100]);
+        a.since_anchor = REANCHOR_EVERY - 5;
+        b.since_anchor = REANCHOR_EVERY - 5;
+        for &x in &t[100..] {
+            a.append(x);
+        }
+        let mut pos = 100;
+        while pos < t.len() {
+            let chunk = rng.range(1, 3 * kernel::BAND).min(t.len() - pos);
+            b.extend(&t[pos..pos + chunk]);
+            pos += chunk;
+        }
+        // both re-anchored exactly once, at the same append
+        assert_eq!(a.since_anchor, b.since_anchor);
+        let bits = |e: &Stampi<f64>| -> (Vec<u64>, Vec<u64>, Vec<i64>) {
+            (
+                e.p.to_vec().iter().map(|x| x.to_bits()).collect(),
+                e.q.to_vec().iter().map(|x| x.to_bits()).collect(),
+                e.i.to_vec(),
+            )
+        };
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn blocked_extend_on_bounded_history_brackets_the_append_path() {
+        // Under a history bound, extend evicts at tile granularity: a
+        // tile's later rows may see up to rows-1 extra just-evicted
+        // candidates (true distances).  The blocked profile must
+        // therefore sit between the unbounded profile and the
+        // per-append bounded one, and all bounded invariants must hold
+        // across the repeated compactions of the minimal legal bound.
+        let m = 16;
+        let excl = 4; // default m/4
+        let h = m + excl; // minimal legal bound: compacts every ~h appends
+        let mut rng = Rng::new(82);
+        let t: Vec<f64> = rng.gauss_vec(700);
+        let full = feed(&t, StampiConfig::new(m));
+        let per_append = feed(&t, StampiConfig::new(m).with_max_history(h));
+        let mut blocked = Stampi::<f64>::new(StampiConfig::new(m).with_max_history(h)).unwrap();
+        let mut pos = 0;
+        while pos < t.len() {
+            let chunk = rng.range(1, 3 * kernel::BAND).min(t.len() - pos);
+            blocked.extend(&t[pos..pos + chunk]);
+            pos += chunk;
+        }
+        assert_eq!(blocked.num_windows(), per_append.num_windows());
+        assert_eq!(blocked.first_window(), per_append.first_window());
+        assert_eq!(blocked.retained_windows(), excl + 1);
+        let fp = full.profile();
+        let ap = per_append.profile();
+        let bp = blocked.profile();
+        let base = blocked.first_window();
+        for r in 0..bp.len() {
+            let w = base + r;
+            // more candidates can only tighten, never loosen...
+            assert!(bp.p[r] <= ap.p[r] + 1e-12, "window {w} vs per-append");
+            // ...and bounded histories only ever miss pairs
+            assert!(bp.p[r] >= fp.p[w] - 1e-9, "window {w} vs unbounded");
+            // snapshot self-consistency (rebased, in-range neighbors)
+            assert!(bp.i[r] < bp.len() as i64, "window {w} neighbor range");
+        }
     }
 
     #[test]
@@ -622,32 +865,43 @@ mod tests {
             eng.append(x);
         }
         assert!(eng.first_window() >= n - h, "history bound never engaged");
-        let mut max_mu_err = 0.0f64;
         let mut max_rel_sd_err = 0.0f64;
-        for w in eng.mu.first_index()..eng.mu.next_index() {
+        let mut max_rel_zb_err = 0.0f64;
+        let sqrt2 = std::f64::consts::SQRT_2;
+        for w in eng.za.first_index()..eng.za.next_index() {
             let ws = eng.t.slice(w, w + m);
             let mu: f64 = ws.iter().sum::<f64>() / m as f64;
             let sd = (ws.iter().map(|&v| (v - mu) * (v - mu)).sum::<f64>() / m as f64)
                 .max(0.0)
                 .sqrt();
             assert!(sd > 0.0, "waveform window degenerated");
-            let inv_exact = 1.0 / (m as f64 * sd);
-            max_mu_err = max_mu_err.max((eng.mu.get(w) - mu).abs());
+            // the retained state is the folded factors: za = sqrt(2)/sd
+            // carries the same relative error as the old 1/(m·sd)
+            // premultiplier did, and zb = sqrt(2m)·mu/sd additionally
+            // pins the rolling-mean drift (mu ~ 1e6 here, so a mean
+            // error of 1e-6 absolute is ~1e-12 relative on zb)
+            let za_exact = sqrt2 / sd;
+            let zb_exact = (2.0 * m as f64).sqrt() * mu / sd;
             max_rel_sd_err =
-                max_rel_sd_err.max((eng.inv.get(w) - inv_exact).abs() / inv_exact);
+                max_rel_sd_err.max((eng.za.get(w) - za_exact).abs() / za_exact);
+            max_rel_zb_err =
+                max_rel_zb_err.max((eng.zb.get(w) - zb_exact).abs() / zb_exact.abs());
         }
         assert!(
             max_rel_sd_err < 0.05,
-            "stored 1/(m·sd) drifted {max_rel_sd_err:.3e} relative (unanchored \
+            "stored sqrt(2)/sd drifted {max_rel_sd_err:.3e} relative (unanchored \
              rolling sums reach 1.0 here)"
         );
-        assert!(max_mu_err < 1e-7, "stored mean drifted {max_mu_err:.3e}");
+        assert!(
+            max_rel_zb_err < 0.05,
+            "stored sqrt(2m)·mu/sd drifted {max_rel_zb_err:.3e} relative"
+        );
     }
 
     #[test]
     fn f32_stream_tracks_f32_batch() {
         // single-precision streaming must agree with the single-precision
-        // batch engine (both run the same Eq. 2 diagonal chains in f32;
+        // batch engine (both run the same folded kernel cell math in f32;
         // only the f64 stat accumulation order differs slightly)
         let mut rng = Rng::new(76);
         let t32: Vec<f32> = rng.gauss_vec(300).iter().map(|&x| x as f32).collect();

@@ -206,10 +206,14 @@ impl<T: Real> NatsaEngine<T> {
 /// A streaming analysis session bound to a PU fleet.
 ///
 /// Each appended sample produces one incremental row of distance-matrix
-/// cells; the session deals the row to the PUs round-robin (whole-share
-/// split plus a rotating remainder cursor), the streaming analogue of the
-/// diagonal-pair scheme: every PU's cell count stays within one cell of
-/// every other's across the whole stream.  The attribution is
+/// cells — executed through the unified row kernel
+/// ([`crate::mp::kernel::compute_row_n`]): width-1 tiles under
+/// [`Self::append`], multi-row tiles under [`Self::extend`].  The session
+/// deals the evaluated cells to the PUs round-robin (whole-share split
+/// plus a rotating remainder cursor — per row when appending, per batch
+/// when extending), the streaming analogue of the diagonal-pair scheme:
+/// every PU's cell count stays within one cell of every other's across
+/// the whole stream.  The attribution is
 /// *accounting* — rows are far too short to be worth host-thread fan-out,
 /// so execution is in-line — but it gives the timing/energy plane
 /// ([`crate::sim`]) the same per-PU [`WorkStats`] evidence the batch
@@ -234,8 +238,21 @@ impl<T: Real> StreamSession<T> {
     }
 
     /// Append a batch; returns how many windows were completed.
+    ///
+    /// Batches ride [`Stampi::extend`]'s blocked fast path: up to
+    /// `kernel::BAND` buffered samples advance as one multi-row tile of
+    /// the unified row kernel, so batched feeding (the service's
+    /// `append_stream` jobs) amortizes lane fill exactly like the batch
+    /// fleet.  The evaluated cells are dealt to the PUs once per batch —
+    /// cumulative loads still stay within one cell of each other.
     pub fn extend(&mut self, xs: &[T]) -> usize {
-        xs.iter().filter(|&&x| self.append(x).is_some()).count()
+        let before = self.core.work().cells;
+        let completed = self.core.extend(xs);
+        let cells = self.core.work().cells - before;
+        if cells > 0 {
+            self.rr = stride_deal(self.rr, cells, &mut self.pu_cells);
+        }
+        completed
     }
 
     /// Snapshot the live profile (see [`Stampi::profile`] for indexing).

@@ -8,7 +8,22 @@
 //! retained elements in O(1) amortized time.  Contiguous slices over the
 //! retained region are always available (the buffer compacts itself when
 //! the evicted prefix grows past half the allocation), which is what the
-//! O(m) dot products of the STAMPI row update need.
+//! O(m) dot products and the row-kernel tiles of the STAMPI update need.
+//!
+//! ## Assert policy (hot vs cold paths)
+//!
+//! The scalar accessors [`RingVec::get`] / [`RingVec::set`] check the
+//! retained range with a **hard assert in every build profile**: an
+//! evicted absolute index must fail deterministically, never return
+//! stale data.  That makes them *cold-path* accessors — bookkeeping,
+//! snapshots, tests.  Hot loops (the O(retained) streaming row update in
+//! [`crate::mp::kernel::compute_row_n`]) must instead acquire a view
+//! once via [`RingVec::slice`] / [`RingVec::slice_mut`] — the retained
+//! range is checked a single time at acquisition and the loop body runs
+//! on a plain `&[T]` / `&mut [T]`, where the compiler can hoist or
+//! elide the remaining slice bounds checks.  Internal buffer invariants
+//! (`head <= buf.len()`) are `debug_assert`s: they guard implementation
+//! bugs, not caller errors, and cost nothing in release builds.
 
 /// Growable, absolute-indexed vector with amortized-O(1) head eviction.
 ///
@@ -78,6 +93,8 @@ impl<T: Copy> RingVec<T> {
     }
 
     /// Contiguous retained slice covering absolute indices `[lo, hi)`.
+    /// The range is checked once here; iterate the returned slice
+    /// instead of calling [`Self::get`] per element on hot paths.
     pub fn slice(&self, lo: usize, hi: usize) -> &[T] {
         assert!(
             lo >= self.first_index() && hi <= self.next_index() && lo <= hi,
@@ -85,7 +102,27 @@ impl<T: Copy> RingVec<T> {
             self.first_index(),
             self.next_index()
         );
+        debug_assert!(self.head <= self.buf.len());
         &self.buf[lo - self.off..hi - self.off]
+    }
+
+    /// Contiguous **mutable** retained slice covering absolute indices
+    /// `[lo, hi)` — the write-side twin of [`Self::slice`], added for
+    /// the streaming row kernel: the q-advance and profile merges of
+    /// [`crate::mp::kernel::compute_row_n`] run over plain `&mut [T]`
+    /// with this one range check hoisted out of the whole tile, where
+    /// the old per-element [`Self::get`]/[`Self::set`] walk re-checked
+    /// the retained range on every cell.
+    pub fn slice_mut(&mut self, lo: usize, hi: usize) -> &mut [T] {
+        assert!(
+            lo >= self.first_index() && hi <= self.next_index() && lo <= hi,
+            "slice_mut [{lo}, {hi}) outside retained range [{}, {})",
+            self.first_index(),
+            self.next_index()
+        );
+        debug_assert!(self.head <= self.buf.len());
+        let off = self.off;
+        &mut self.buf[lo - off..hi - off]
     }
 
     /// Clone the whole retained region into a plain `Vec`.
@@ -213,6 +250,42 @@ mod tests {
         r.evict_to(5);
         r.set(7, -1);
         assert_eq!(r.to_vec(), vec![5, 6, -1, 8, 9]);
+    }
+
+    #[test]
+    fn slice_mut_writes_through_absolute_indices() {
+        let mut r = RingVec::new();
+        for v in 0..300u32 {
+            r.push(v);
+        }
+        r.evict_to(200); // compacts (off != 0): local != absolute
+        {
+            let s = r.slice_mut(250, 260);
+            assert_eq!(s.len(), 10);
+            for (k, x) in s.iter_mut().enumerate() {
+                *x = 1000 + k as u32;
+            }
+        }
+        for abs in 250..260 {
+            assert_eq!(r.get(abs), 1000 + (abs - 250) as u32);
+        }
+        assert_eq!(r.get(249), 249);
+        assert_eq!(r.get(260), 260);
+        // full retained range is a valid (and the largest) view
+        let first = r.first_index();
+        let next = r.next_index();
+        assert_eq!(r.slice_mut(first, next).len(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside retained range")]
+    fn slice_mut_below_head_panics() {
+        let mut r = RingVec::new();
+        for v in 0..10u32 {
+            r.push(v);
+        }
+        r.evict_to(5);
+        let _ = r.slice_mut(4, 8);
     }
 
     #[test]

@@ -275,6 +275,51 @@ fn prop_streaming_matches_batch_on_every_prefix() {
 }
 
 #[test]
+fn prop_blocked_extend_matches_batch_and_append_path() {
+    // The blocked-extend differential: feeding the stream in arbitrary
+    // chunks (multi-row kernel tiles inside `extend`) must leave (a) a
+    // profile within the usual differential bound of the brute oracle at
+    // every chunk boundary, and (b) the exact bit-level end state of
+    // per-sample appends (the width-1 path) — so the streaming service's
+    // batch-append jobs are conformant by construction.
+    check("stampi-extend-vs-brute", 6, |rng: &mut Rng| {
+        let n = rng.range(80, 260);
+        let m = rng.range(4, 20);
+        if n < 5 * m {
+            return;
+        }
+        let t: Vec<f64> = rng.gauss_vec(n);
+        let mut eng = Stampi::new(StampiConfig::new(m)).unwrap();
+        let mut per_append = Stampi::new(StampiConfig::new(m)).unwrap();
+        let excl = eng.exclusion();
+        let mut len = 0usize;
+        while len < n {
+            let chunk = rng.range(1, 24).min(n - len);
+            eng.extend(&t[len..len + chunk]);
+            for &x in &t[len..len + chunk] {
+                per_append.append(x);
+            }
+            len += chunk;
+            if num_windows(len, m) <= excl {
+                continue; // no admissible pair yet — batch would reject
+            }
+            let want = brute::matrix_profile(&t[..len], MpConfig::new(m)).unwrap();
+            let got = eng.profile();
+            assert_eq!(got.len(), want.len(), "prefix {len}");
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-6, "n={n} m={m} prefix {len}: diff {d}");
+        }
+        let (a, b) = (eng.profile(), per_append.profile());
+        assert_eq!(
+            a.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "blocked extend diverged from per-sample appends (n={n} m={m})"
+        );
+        assert_eq!(a.i, b.i, "n={n} m={m}");
+    });
+}
+
+#[test]
 fn streaming_matches_every_batch_engine_on_larger_series() {
     // One bigger cross-check against the production batch engines (the
     // per-prefix property above uses small n to keep the oracle cheap).
@@ -282,8 +327,10 @@ fn streaming_matches_every_batch_engine_on_larger_series() {
     let m = 48;
     let cfg = MpConfig::new(m);
     let mut eng = Stampi::new(StampiConfig::new(m)).unwrap();
-    for &x in &t {
-        eng.append(x);
+    // packet-sized extends: excl = 12 >= BAND, so this rides full-width
+    // multi-row kernel tiles, like the service's append jobs
+    for packet in t.chunks(100) {
+        eng.extend(packet);
     }
     let streamed = eng.profile();
     for (name, mp) in [
