@@ -19,6 +19,7 @@ use std::time::Instant;
 
 use natsa::benchmark::{black_box, fmt_time, isa, time_budget, Table};
 use natsa::coordinator::service::{AnalysisService, ServiceConfig};
+use natsa::coordinator::wal::WalOptions;
 use natsa::mp::kernel::{self, RowTile};
 use natsa::mp::stampi::{Stampi, StampiConfig};
 use natsa::mp::{scrimp, znorm_dist, MpConfig, WorkStats};
@@ -453,6 +454,62 @@ fn main() {
     }
     shard_table.print(&format!(
         "sharded service: {streams} concurrent streams x {packets} packets x {chunk} samples (m={m})"
+    ));
+
+    // (f) WAL overhead: the same single-stream feed with durability off,
+    // on (buffered, the default), and on with fsync per record.  Report
+    // only — disk characteristics vary wildly across machines, and the
+    // durability knob is exactly the throughput trade the numbers show.
+    let wal_packets = 64usize;
+    let wal_chunk = 256usize;
+    let feed = generate::<f64>(Pattern::RandomWalk, wal_packets * wal_chunk, 17);
+    let mut wal_table = Table::new(&["durability", "per packet", "overhead"]);
+    let mut wal_base = 0.0f64;
+    for (k, (label, wal)) in [
+        ("off", None),
+        ("wal (buffered)", Some(false)),
+        ("wal (fsync per record)", Some(true)),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let dir = std::env::temp_dir().join(format!(
+            "natsa-bench-wal-{}-{k}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = ServiceConfig::default()
+            .with_shards(1)
+            .with_workers(1)
+            .with_queue_depth(8);
+        if let Some(sync) = wal {
+            cfg = cfg
+                .with_wal(dir.clone())
+                .with_wal_options(WalOptions { sync, ..WalOptions::default() });
+        }
+        let svc =
+            AnalysisService::<f64>::start_sharded(NatsaConfig::default().with_threads(1), cfg);
+        let stream = svc.submit_stream(m, None).unwrap();
+        let t0 = Instant::now();
+        for packet in feed.chunks(wal_chunk) {
+            let id = svc.append_stream(stream, packet).unwrap();
+            svc.wait(id).unwrap().profile.unwrap();
+        }
+        let per_packet = t0.elapsed().as_secs_f64() / wal_packets as f64;
+        svc.close_stream(stream);
+        svc.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+        if wal.is_none() {
+            wal_base = per_packet;
+        }
+        wal_table.row(&[
+            label.into(),
+            fmt_time(per_packet),
+            format!("{:+.1}%", (per_packet / wal_base - 1.0) * 100.0),
+        ]);
+    }
+    wal_table.print(&format!(
+        "WAL overhead: 1 stream x {wal_packets} packets x {wal_chunk} samples (m={m}, report-only)"
     ));
 
     if json {

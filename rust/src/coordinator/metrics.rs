@@ -17,6 +17,16 @@ pub struct ServiceMetrics {
     pub jobs_completed: AtomicU64,
     pub jobs_failed: AtomicU64,
     pub jobs_rejected: AtomicU64,
+    /// Jobs whose execution panicked (a subset of `jobs_failed`): the
+    /// worker caught the panic, failed the job, and kept the shard
+    /// alive.  Nonzero means an engine bug worth a look, not a dead
+    /// shard.
+    pub jobs_panicked: AtomicU64,
+    /// WAL write failures.  The first failure on a shard disables its
+    /// WAL for the rest of the run (availability over durability), so
+    /// nonzero here means restart-recovery is stale until the next
+    /// restart.
+    pub wal_errors: AtomicU64,
     /// Sum of queue-wait nanoseconds over every *finished* job — failed
     /// ones included (divide by [`Self::finished`] for the mean).
     pub queue_wait_ns: AtomicU64,
@@ -66,9 +76,10 @@ impl ServiceMetrics {
         }
     }
 
-    /// One-line human summary.
+    /// One-line human summary.  Panic and WAL trouble only show up when
+    /// present — a healthy service keeps the line short.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "jobs: {} submitted, {} done, {} failed, {} rejected | in-flight {} | mean exec {:.3}s | p50 {:.3}s p99 {:.3}s",
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_completed.load(Ordering::Relaxed),
@@ -78,7 +89,16 @@ impl ServiceMetrics {
             self.mean_exec_seconds(),
             self.latency.quantile(0.50),
             self.latency.quantile(0.99),
-        )
+        );
+        let panicked = self.jobs_panicked.load(Ordering::Relaxed);
+        if panicked > 0 {
+            line.push_str(&format!(" | {panicked} PANICKED"));
+        }
+        let wal = self.wal_errors.load(Ordering::Relaxed);
+        if wal > 0 {
+            line.push_str(&format!(" | {wal} WAL ERRORS (durability degraded)"));
+        }
+        line
     }
 }
 

@@ -24,9 +24,17 @@
 //! / `snapshot_stream`) over the exact incremental engine in
 //! [`crate::mp::stampi`]; each stream lives on one shard, so pipelined
 //! appends can never head-of-line block the rest of the fleet.
+//!
+//! Sessions can outlive the process: [`wal`] gives every shard a
+//! segment write-ahead log (`Open`/`Append`/`Snapshot`/`Close` records,
+//! pin-based compaction), and a service started on the same directory
+//! replays each open stream back **bit-identically** — see the
+//! "Durability" section of [`service`]'s module docs for the ordering
+//! contract and failure policy.
 
 pub mod metrics;
 pub mod service;
+pub mod wal;
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};

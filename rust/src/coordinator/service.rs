@@ -59,6 +59,33 @@
 //! `shard_metrics(k)` the per-shard one, and `aggregate == Σ shards`
 //! always reconciles.
 //!
+//! ## Durability (per-shard WAL)
+//!
+//! With [`ServiceConfig::with_wal`] every stream mutation is logged to a
+//! per-shard segment WAL ([`crate::coordinator::wal`]) **before** it is
+//! applied: `Open` at [`AnalysisService::submit_stream`], one `Append`
+//! record per packet (so replay re-applies with identical tile
+//! boundaries — the restored profile is *bit-identical* to an
+//! uninterrupted run), a full [`crate::mp::stampi::SessionState`]
+//! `Snapshot` every [`crate::coordinator::wal::WalOptions::snapshot_every`]
+//! appends, and `Close` at [`AnalysisService::close_stream`].  Restart
+//! recovery ([`AnalysisService::try_start_sharded`]) replays each shard
+//! directory, rebuilds every open stream (latest snapshot + appends
+//! after it), re-checkpoints, and reclaims all pre-restart segments.
+//! Closed streams are never resurrected.  In-memory job slots (pending
+//! `wait` acks) do not survive a restart — clients re-read state via
+//! [`AnalysisService::snapshot_stream`].
+//!
+//! Failure policy: a WAL write error disables the WAL on that shard for
+//! the rest of the run (availability over durability), surfaced loudly
+//! via [`ServiceMetrics::wal_errors`] and stderr.  A panicking job is
+//! caught ([`std::panic::catch_unwind`]), failed, and counted in
+//! [`ServiceMetrics::jobs_panicked`]; shard-level mutexes recover from
+//! poisoning, so one bad job never takes the shard down.  A panic
+//! *inside a stream apply* quarantines that stream (removed, `Close`d in
+//! the WAL): its in-memory state can no longer be trusted, and replaying
+//! the same packet would just re-panic.
+//!
 //! Design notes:
 //! * `std::sync::mpsc` + worker threads (tokio is not in the offline
 //!   vendor set; the queue semantics are identical for this shape),
@@ -68,15 +95,33 @@
 //!   the service's type parameter.
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::ServiceMetrics;
+use crate::coordinator::wal::{self, StreamMeta, WalOptions, WalWriter};
+use crate::mp::stampi::{Stampi, StampiConfig};
 use crate::mp::MatrixProfile;
 use crate::natsa::{NatsaConfig, NatsaEngine, StreamSession};
 use crate::Real;
+
+/// Lock that shrugs off poisoning: a worker panic is contained by the
+/// quarantine protocol (failed job + quarantined stream), so the guarded
+/// state is still consistent — blocking every later `wait`/`poll`/
+/// `append_stream` on the shard behind a `PoisonError` would turn one
+/// bad job into a dead shard.
+fn lock_ok<'a, U>(m: &'a Mutex<U>) -> MutexGuard<'a, U> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Condvar wait with the same poison policy as [`lock_ok`].
+fn wait_ok<'a, U>(cv: &Condvar, g: MutexGuard<'a, U>) -> MutexGuard<'a, U> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
 
 /// Shard index bits folded into every job/stream id (low bits), so id →
 /// shard routing is a mask, not a table.
@@ -101,8 +146,8 @@ fn route_hash(x: u64) -> u64 {
 }
 
 /// Deployment shape of the service: how many shards, how big each one is,
-/// and how long unconsumed results may live.
-#[derive(Clone, Copy, Debug)]
+/// how long unconsumed results may live, and whether streams are durable.
+#[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// Engine shards (clamped to 1..=[`MAX_SHARDS`]).  Streams hash to a
     /// shard; batch jobs go least-loaded-first.
@@ -120,6 +165,13 @@ pub struct ServiceConfig {
     pub result_cap: usize,
     /// Optional age bound on unconsumed results.
     pub result_ttl: Option<Duration>,
+    /// Durability root: when set, shard `k` logs every stream mutation
+    /// to a segment WAL under `<dir>/shard-k/` and restart recovery
+    /// replays it (see the module-level "Durability" section).
+    pub wal_dir: Option<PathBuf>,
+    /// WAL tuning (snapshot cadence, segment size, fsync policy); only
+    /// meaningful together with [`Self::wal_dir`].
+    pub wal_opts: WalOptions,
 }
 
 impl Default for ServiceConfig {
@@ -130,6 +182,8 @@ impl Default for ServiceConfig {
             queue_depth: 16,
             result_cap: 1024,
             result_ttl: None,
+            wal_dir: None,
+            wal_opts: WalOptions::default(),
         }
     }
 }
@@ -160,6 +214,19 @@ impl ServiceConfig {
         self
     }
 
+    /// Persist streams to a per-shard WAL under `dir` and replay it on
+    /// start (crash recovery is bit-identical — see the module docs).
+    pub fn with_wal(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.wal_dir = Some(dir.into());
+        self
+    }
+
+    /// Override the WAL's snapshot cadence / segment size / sync policy.
+    pub fn with_wal_options(mut self, opts: WalOptions) -> Self {
+        self.wal_opts = opts;
+        self
+    }
+
     fn normalized(mut self) -> Self {
         self.shards = self.shards.clamp(1, MAX_SHARDS);
         self.workers_per_shard = self.workers_per_shard.max(1);
@@ -184,6 +251,11 @@ enum JobPayload<T> {
     Batch { series: Arc<Vec<T>>, m: usize },
     /// Append samples to an open stream (applied in `seq` order).
     StreamAppend { stream: u64, samples: Vec<T>, seq: u64 },
+    /// Test-only panic injection: panics in the worker — immediately
+    /// (`stream: None`), or after winning the stream's turn while
+    /// holding its state lock (`Some`), the worst-case poisoning path.
+    #[cfg(test)]
+    Panic { stream: Option<u64>, seq: u64 },
 }
 
 /// Completed job result.  For stream appends, `profile` is the snapshot
@@ -265,7 +337,7 @@ impl<T> JobSlot<T> {
 
     /// Worker-side: publish the result and wake every waiter.
     fn fill(&self, result: JobResult<T>) {
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock_ok(&self.state);
         *state = SlotState::Done(result);
         self.cv.notify_all();
     }
@@ -330,6 +402,9 @@ struct StreamState<T> {
     next_seq: u64,
     /// Set by `close_stream`: wakes and fails any waiting appends.
     closed: bool,
+    /// Appends applied since the last WAL snapshot (cadence counter;
+    /// stays 0 when the WAL is off).
+    unsnapshotted: u32,
 }
 
 struct StreamEntry<T> {
@@ -341,11 +416,41 @@ struct StreamEntry<T> {
     submit_seq: Mutex<u64>,
 }
 
-/// One engine shard: queue-fed workers, its own streams, slots, metrics.
-struct Shard<T> {
+/// One engine shard: queue-fed workers, its own streams, slots, metrics,
+/// and (when durability is on) its WAL writer.
+struct Shard<T: Real> {
     slots: Mutex<SlotStore<T>>,
     streams: Mutex<HashMap<u64, Arc<StreamEntry<T>>>>,
     metrics: ServiceMetrics,
+    /// `None` = WAL off.  The inner `Option` goes `None` after the first
+    /// write error (durability disabled for the shard, service alive).
+    wal: Option<Mutex<Option<WalWriter<T>>>>,
+}
+
+impl<T: Real> Shard<T> {
+    /// Run `f` against this shard's WAL writer; no-op when the WAL is
+    /// off or already failed.  The FIRST I/O error disables the shard's
+    /// WAL — a half-written record would read as mid-log corruption once
+    /// more records followed it, so continuing to log is worse than
+    /// stopping — and is surfaced via `wal_errors` + stderr.
+    ///
+    /// Lock order: callers may hold a stream's `state` lock; never the
+    /// reverse (a WAL holder never takes stream locks).
+    fn with_wal(
+        &self,
+        aggregate: &ServiceMetrics,
+        f: impl FnOnce(&mut WalWriter<T>) -> crate::Result<()>,
+    ) {
+        let Some(cell) = &self.wal else { return };
+        let mut guard = lock_ok(cell);
+        let Some(writer) = guard.as_mut() else { return };
+        if let Err(e) = f(writer) {
+            eprintln!("natsa wal: write failed ({e}); durability disabled on this shard until restart");
+            self.metrics.wal_errors.fetch_add(1, Ordering::Relaxed);
+            aggregate.wal_errors.fetch_add(1, Ordering::Relaxed);
+            *guard = None;
+        }
+    }
 }
 
 /// Sharded multi-worker analysis service over the functional NATSA engine.
@@ -382,27 +487,88 @@ impl<T: Real> AnalysisService<T> {
     /// Start the sharded service.  `config` describes the *whole* PU
     /// fleet; shard `k` runs `config.shard_slice(svc.shards, k)`, so the
     /// shard fleets together still sum to the configured one.
+    ///
+    /// Panics when WAL recovery fails (corrupt directory, meta
+    /// mismatch); use [`Self::try_start_sharded`] to handle that.
     pub fn start_sharded(config: NatsaConfig, svc: ServiceConfig) -> Self {
+        Self::try_start_sharded(config, svc).expect("analysis service failed to start")
+    }
+
+    /// Fallible [`Self::start_sharded`]: errors instead of panicking
+    /// when the configured WAL directory cannot be recovered (damaged
+    /// segments, or a meta mismatch — the directory was written with a
+    /// different dtype or shard count, under which the stream→shard
+    /// routing would be wrong).
+    pub fn try_start_sharded(config: NatsaConfig, svc: ServiceConfig) -> crate::Result<Self> {
         let svc = svc.normalized();
         let shard_configs: Vec<NatsaConfig> = (0..svc.shards)
             .map(|k| config.shard_slice(svc.shards, k))
             .collect();
+        if let Some(dir) = &svc.wal_dir {
+            check_wal_meta::<T>(dir, svc.shards)?;
+        }
         let aggregate = Arc::new(ServiceMetrics::default());
         let mut txs = Vec::with_capacity(svc.shards);
         let mut shards = Vec::with_capacity(svc.shards);
         let mut workers = Vec::with_capacity(svc.shards * svc.workers_per_shard);
-        for &shard_config in &shard_configs {
+        // Highest stream sequence seen in any WAL (0 = none): the id
+        // counter must restart past every replayed id, open or closed.
+        let mut max_stream_seq = 0u64;
+        for (k, &shard_config) in shard_configs.iter().enumerate() {
+            let mut streams: HashMap<u64, Arc<StreamEntry<T>>> = HashMap::new();
+            let mut wal_writer = None;
+            if let Some(dir) = &svc.wal_dir {
+                let shard_dir = dir.join(format!("shard-{k}"));
+                let replay = wal::replay::<T>(&shard_dir)?;
+                let mut writer = WalWriter::resume(&shard_dir, svc.wal_opts.clone(), &replay)?;
+                let mut checkpoints = Vec::new();
+                for rs in replay.streams {
+                    max_stream_seq = max_stream_seq.max(rs.id >> SHARD_BITS);
+                    match restore_stream(&rs, shard_config.pus.max(1)) {
+                        Ok((session, next_seq)) => {
+                            checkpoints.push((rs.id, next_seq, session.state()));
+                            streams.insert(
+                                rs.id,
+                                Arc::new(StreamEntry {
+                                    state: Mutex::new(StreamState {
+                                        session,
+                                        next_seq,
+                                        closed: false,
+                                        unsnapshotted: 0,
+                                    }),
+                                    cv: Condvar::new(),
+                                    submit_seq: Mutex::new(next_seq),
+                                }),
+                            );
+                        }
+                        Err(why) => eprintln!(
+                            "natsa wal: shard {k}: dropping unrecoverable stream {}: {why}",
+                            rs.id
+                        ),
+                    }
+                }
+                for &id in &replay.closed {
+                    max_stream_seq = max_stream_seq.max(id >> SHARD_BITS);
+                }
+                // Fresh snapshot of everything we restored, then reclaim
+                // every pre-restart segment (snapshots are synced before
+                // anything is deleted).
+                writer.checkpoint(&checkpoints)?;
+                wal_writer = Some(Mutex::new(Some(writer)));
+            }
             let (tx, rx) = sync_channel::<Job<T>>(svc.queue_depth);
             let rx = Arc::new(Mutex::new(rx));
             let shard = Arc::new(Shard {
                 slots: Mutex::new(SlotStore::new()),
-                streams: Mutex::new(HashMap::new()),
+                streams: Mutex::new(streams),
                 metrics: ServiceMetrics::default(),
+                wal: wal_writer,
             });
             for _ in 0..svc.workers_per_shard {
                 let rx = rx.clone();
                 let shard = shard.clone();
                 let aggregate = aggregate.clone();
+                let svc = svc.clone();
                 workers.push(std::thread::spawn(move || {
                     worker_loop(rx, shard, aggregate, shard_config, svc);
                 }));
@@ -410,17 +576,17 @@ impl<T: Real> AnalysisService<T> {
             txs.push(Some(tx));
             shards.push(shard);
         }
-        AnalysisService {
+        Ok(AnalysisService {
             txs,
             shards,
             aggregate,
             workers,
             next_job_seq: AtomicU64::new(1),
-            next_stream_seq: AtomicU64::new(1),
+            next_stream_seq: AtomicU64::new(max_stream_seq + 1),
             rr: AtomicU64::new(0),
             shard_configs,
             svc,
-        }
+        })
     }
 
     /// Submit a batch job to the least-loaded shard, spilling to the next
@@ -462,11 +628,31 @@ impl<T: Real> AnalysisService<T> {
             .map_err(|e| SubmitError::Invalid(e.to_string()))?;
         let id = (seq << SHARD_BITS) | shard_idx as u64;
         let entry = Arc::new(StreamEntry {
-            state: Mutex::new(StreamState { session, next_seq: 0, closed: false }),
+            state: Mutex::new(StreamState {
+                session,
+                next_seq: 0,
+                closed: false,
+                unsnapshotted: 0,
+            }),
             cv: Condvar::new(),
             submit_seq: Mutex::new(0),
         });
-        self.shards[shard_idx].streams.lock().unwrap().insert(id, entry);
+        let shard = &self.shards[shard_idx];
+        // Write-ahead: log the Open BEFORE the stream becomes visible,
+        // so no Append can ever precede its stream's Open in the log.
+        // (A crash in between leaves an empty stream in the WAL whose id
+        // no client holds — replayed as an idle session, harmless.)
+        shard.with_wal(&self.aggregate, |w| {
+            w.log_open(
+                id,
+                StreamMeta {
+                    m,
+                    excl: self.shard_configs[shard_idx].excl,
+                    max_history,
+                },
+            )
+        });
+        lock_ok(&shard.streams).insert(id, entry);
         Ok(id)
     }
 
@@ -486,16 +672,13 @@ impl<T: Real> AnalysisService<T> {
     pub fn append_stream(&self, stream: u64, samples: &[T]) -> Result<u64, SubmitError> {
         let shard_idx = shard_of(stream);
         let shard = self.shards.get(shard_idx).ok_or(SubmitError::UnknownStream)?;
-        let entry = shard
-            .streams
-            .lock()
-            .unwrap()
+        let entry = lock_ok(&shard.streams)
             .get(&stream)
             .cloned()
             .ok_or(SubmitError::UnknownStream)?;
         // Hold the stream's seq lock across (assign seq, enqueue) so
         // queue order equals sequence order — the workers rely on it.
-        let mut seq_guard = entry.submit_seq.lock().unwrap();
+        let mut seq_guard = lock_ok(&entry.submit_seq);
         let seq = *seq_guard;
         let result = self.try_enqueue(
             shard_idx,
@@ -549,6 +732,34 @@ impl<T: Real> AnalysisService<T> {
         }
     }
 
+    /// Test hook: enqueue a job whose execution panics.  Batch-shaped
+    /// (no stream) on shard 0 — exercises catch-unwind without
+    /// quarantine side effects.
+    #[cfg(test)]
+    fn submit_panic(&self) -> Result<u64, SubmitError> {
+        self.try_enqueue(0, JobPayload::Panic { stream: None, seq: 0 })
+    }
+
+    /// Test hook: enqueue a panicking job *sequenced onto a stream* like
+    /// a real append (takes a turn, panics holding the state lock) —
+    /// exercises the quarantine path.
+    #[cfg(test)]
+    fn append_stream_panic(&self, stream: u64) -> Result<u64, SubmitError> {
+        let shard_idx = shard_of(stream);
+        let shard = self.shards.get(shard_idx).ok_or(SubmitError::UnknownStream)?;
+        let entry = lock_ok(&shard.streams)
+            .get(&stream)
+            .cloned()
+            .ok_or(SubmitError::UnknownStream)?;
+        let mut seq_guard = lock_ok(&entry.submit_seq);
+        let seq = *seq_guard;
+        let result = self.try_enqueue(shard_idx, JobPayload::Panic { stream: Some(stream), seq });
+        if result.is_ok() {
+            *seq_guard += 1;
+        }
+        result
+    }
+
     /// Reserve a completion slot and enqueue onto shard `shard_idx`.
     /// `jobs_submitted` is ticked for accepted jobs (pre-send, rolled
     /// back on rejection); the *caller* accounts rejections (batch
@@ -560,7 +771,7 @@ impl<T: Real> AnalysisService<T> {
         let id = (seq << SHARD_BITS) | shard_idx as u64;
         let slot = JobSlot::new();
         {
-            let mut store = shard.slots.lock().unwrap();
+            let mut store = lock_ok(&shard.slots);
             store.map.insert(id, slot.clone());
             store.evict(self.svc.result_cap, self.svc.result_ttl);
         }
@@ -578,7 +789,7 @@ impl<T: Real> AnalysisService<T> {
             Err(e) => {
                 shard.metrics.jobs_submitted.fetch_sub(1, Ordering::Relaxed);
                 self.aggregate.jobs_submitted.fetch_sub(1, Ordering::Relaxed);
-                shard.slots.lock().unwrap().map.remove(&id);
+                lock_ok(&shard.slots).map.remove(&id);
                 match e {
                     TrySendError::Full(_) => Err(SubmitError::Backpressure),
                     TrySendError::Disconnected(_) => Err(SubmitError::Closed),
@@ -591,21 +802,35 @@ impl<T: Real> AnalysisService<T> {
     /// `None` if the stream is unknown or closed.
     pub fn snapshot_stream(&self, stream: u64) -> Option<MatrixProfile<T>> {
         let shard = self.shards.get(shard_of(stream))?;
-        let entry = shard.streams.lock().unwrap().get(&stream).cloned()?;
-        let state = entry.state.lock().unwrap();
+        let entry = lock_ok(&shard.streams).get(&stream).cloned()?;
+        let state = lock_ok(&entry.state);
         Some(state.session.profile())
     }
 
-    /// Close a stream: frees its state; queued/future appends against it
-    /// fail with an error result.  Returns whether the id was open.
+    /// Close a stream.  Semantics are **reject, not drain**: the append
+    /// currently *applying* (holding the stream's state lock) finishes
+    /// first and its record precedes the `Close` in the WAL; every
+    /// queued-but-not-yet-applied append — pipelined in-flight ones
+    /// included — fails with a "stream closed" result and is never
+    /// logged.  Callers that want drain-then-close wait their pending
+    /// acks first (the [`Self::append_stream_pipelined`] contract).
+    /// After a restart the stream stays closed: replay never resurrects
+    /// a `Close`d stream.  Returns whether the id was open.
     pub fn close_stream(&self, stream: u64) -> bool {
         let Some(shard) = self.shards.get(shard_of(stream)) else {
             return false;
         };
-        let entry = shard.streams.lock().unwrap().remove(&stream);
+        let entry = lock_ok(&shard.streams).remove(&stream);
         match entry {
             Some(e) => {
-                e.state.lock().unwrap().closed = true;
+                // Mark closed and log the Close under the state lock:
+                // an append holds that lock from turn-win through WAL
+                // log and apply, so nothing of this stream's can enter
+                // the log after its Close record.
+                let mut st = lock_ok(&e.state);
+                st.closed = true;
+                shard.with_wal(&self.aggregate, |w| w.log_close(stream));
+                drop(st);
                 e.cv.notify_all();
                 true
             }
@@ -624,21 +849,25 @@ impl<T: Real> AnalysisService<T> {
 
     /// Like [`Self::wait`], giving up with [`WaitError::Timeout`] after
     /// `timeout` (the job stays in flight and can be waited on again).
+    ///
+    /// An overflowing deadline (`Instant::now() + Duration::MAX` has no
+    /// representation) degrades to an untimed wait instead of panicking.
     pub fn wait_timeout(&self, id: u64, timeout: Duration) -> Result<JobResult<T>, WaitError> {
-        self.wait_deadline(id, Some(Instant::now() + timeout))
+        self.wait_deadline(id, Instant::now().checked_add(timeout))
     }
 
     fn wait_deadline(&self, id: u64, deadline: Option<Instant>) -> Result<JobResult<T>, WaitError> {
         let shard = self.shards.get(shard_of(id)).ok_or(WaitError::Unknown)?;
-        let slot = shard
-            .slots
-            .lock()
-            .unwrap()
+        let slot = lock_ok(&shard.slots)
             .map
             .get(&id)
             .cloned()
             .ok_or(WaitError::Unknown)?;
-        let mut state = slot.state.lock().unwrap();
+        let mut state = lock_ok(&slot.state);
+        // Spurious-wakeup-robust: every iteration re-checks the slot
+        // state first and only then recomputes the remaining budget —
+        // saturating, so a wakeup that lands *past* the deadline yields
+        // a clean Timeout instead of an `Instant` underflow panic.
         loop {
             match &*state {
                 SlotState::Done(_) => break,
@@ -647,19 +876,22 @@ impl<T: Real> AnalysisService<T> {
                 SlotState::Pending => {}
             }
             state = match deadline {
-                None => slot.cv.wait(state).unwrap(),
+                None => wait_ok(&slot.cv, state),
                 Some(dl) => {
-                    let now = Instant::now();
-                    if now >= dl {
+                    let left = dl.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
                         return Err(WaitError::Timeout);
                     }
-                    slot.cv.wait_timeout(state, dl - now).unwrap().0
+                    slot.cv
+                        .wait_timeout(state, left)
+                        .unwrap_or_else(|e| e.into_inner())
+                        .0
                 }
             };
         }
         let done = std::mem::replace(&mut *state, SlotState::Consumed);
         drop(state);
-        shard.slots.lock().unwrap().consumed(id);
+        lock_ok(&shard.slots).consumed(id);
         match done {
             SlotState::Done(result) => Ok(result),
             _ => unreachable!("checked Done above"),
@@ -671,14 +903,14 @@ impl<T: Real> AnalysisService<T> {
     /// evicted ids (use [`Self::wait`] to distinguish).
     pub fn poll(&self, id: u64) -> Option<JobResult<T>> {
         let shard = self.shards.get(shard_of(id))?;
-        let slot = shard.slots.lock().unwrap().map.get(&id).cloned()?;
-        let mut state = slot.state.lock().unwrap();
+        let slot = lock_ok(&shard.slots).map.get(&id).cloned()?;
+        let mut state = lock_ok(&slot.state);
         if !matches!(&*state, SlotState::Done(_)) {
             return None;
         }
         let done = std::mem::replace(&mut *state, SlotState::Consumed);
         drop(state);
-        shard.slots.lock().unwrap().consumed(id);
+        lock_ok(&shard.slots).consumed(id);
         match done {
             SlotState::Done(result) => Some(result),
             _ => unreachable!("checked Done above"),
@@ -707,7 +939,7 @@ impl<T: Real> AnalysisService<T> {
     pub fn retained_results(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.slots.lock().unwrap().map.len())
+            .map(|s| lock_ok(&s.slots).map.len())
             .sum()
     }
 
@@ -719,7 +951,68 @@ impl<T: Real> AnalysisService<T> {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        // Workers are gone, so the log is quiescent — one final fsync
+        // per shard makes everything acked before shutdown durable.
+        for shard in self.shards.iter() {
+            shard.with_wal(&self.aggregate, |w| w.sync());
+        }
     }
+}
+
+/// The WAL directory's identity card: replaying under a different dtype
+/// would decode garbage, and a different shard count would route every
+/// stream to the wrong shard directory — both are pinned at first use.
+fn check_wal_meta<T: Real>(dir: &Path, shards: usize) -> crate::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("wal.meta");
+    let want = format!("natsa-wal v1 dtype={} shards={shards}\n", T::DTYPE);
+    match std::fs::read_to_string(&path) {
+        Ok(got) => anyhow::ensure!(
+            got == want,
+            "wal dir {} was written as '{}' but is being opened as '{}'",
+            dir.display(),
+            got.trim(),
+            want.trim()
+        ),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => std::fs::write(&path, &want)?,
+        Err(e) => return Err(e.into()),
+    }
+    Ok(())
+}
+
+/// Rebuild one stream from its replayed WAL records: the latest snapshot
+/// (or a fresh session from the `Open` metadata), then the appends after
+/// it — re-applied packet-by-packet, so tile boundaries (and therefore
+/// every bit of the profile) match the uninterrupted run.
+///
+/// Restoration runs the same engine code as live appends, so a
+/// deterministic engine panic would re-fire here — catch it and drop the
+/// one stream instead of killing the whole service start.
+fn restore_stream<T: Real>(
+    rs: &wal::ReplayedStream<T>,
+    pus: usize,
+) -> Result<(StreamSession<T>, u64), String> {
+    catch_unwind(AssertUnwindSafe(|| -> crate::Result<(StreamSession<T>, u64)> {
+        let mut session = match &rs.snapshot {
+            Some((_, state)) => StreamSession::from_state(state.clone(), pus)?,
+            None => {
+                let mut cfg = StampiConfig::new(rs.meta.m);
+                if let Some(e) = rs.meta.excl {
+                    cfg = cfg.with_excl(e);
+                }
+                if let Some(h) = rs.meta.max_history {
+                    cfg = cfg.with_max_history(h);
+                }
+                StreamSession::from_state(Stampi::new(cfg)?.state(), pus)?
+            }
+        };
+        for (_, packet) in &rs.appends {
+            session.extend(packet);
+        }
+        Ok((session, rs.next_seq()))
+    }))
+    .map_err(|_| "replay panicked".to_string())?
+    .map_err(|e| e.to_string())
 }
 
 fn worker_loop<T: Real>(
@@ -731,24 +1024,46 @@ fn worker_loop<T: Real>(
 ) {
     let engine = NatsaEngine::<T>::new(config);
     loop {
-        let job = match rx.lock().unwrap().recv() {
+        let job = match lock_ok(&rx).recv() {
             Ok(j) => j,
             Err(_) => return, // channel closed
         };
-        let mut queue_wait = job.submitted.elapsed().as_secs_f64();
+        let Job { id, payload, submitted, slot } = job;
+        // Which stream to quarantine if execution panics below.
+        let panic_stream = match &payload {
+            JobPayload::StreamAppend { stream, .. } => Some(*stream),
+            #[cfg(test)]
+            JobPayload::Panic { stream, .. } => *stream,
+            JobPayload::Batch { .. } => None,
+        };
+        let mut queue_wait = submitted.elapsed().as_secs_f64();
         let start = Instant::now();
-        let mut turn_wait = 0.0f64;
-        let profile: Result<MatrixProfile<T>, String> = match job.payload {
-            JobPayload::Batch { series, m } => engine
-                .compute(&series, m)
-                .map(|o| o.profile)
-                .map_err(|e| e.to_string()),
+        // Panic containment: a panicking job is a FAILED job, not a dead
+        // worker — without this, the panic poisons the shard's mutexes
+        // and every later wait/poll/append on the shard panics too.
+        let outcome = catch_unwind(AssertUnwindSafe(|| match payload {
+            JobPayload::Batch { series, m } => (
+                engine
+                    .compute(&series, m)
+                    .map(|o| o.profile)
+                    .map_err(|e| e.to_string()),
+                0.0,
+            ),
             JobPayload::StreamAppend { stream, samples, seq } => {
-                let (result, waited) = run_stream_append(&shard, stream, &samples, seq);
-                // time parked waiting for this append's turn is queueing,
-                // not execution — keep the metrics split honest
-                turn_wait = waited;
-                result
+                run_stream_append(&shard, &aggregate, stream, &samples, seq, &svc)
+            }
+            #[cfg(test)]
+            JobPayload::Panic { stream, seq } => run_injected_panic(&shard, stream, seq),
+        }));
+        let (profile, turn_wait) = match outcome {
+            Ok(r) => r,
+            Err(cause) => {
+                shard.metrics.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+                aggregate.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+                if let Some(stream) = panic_stream {
+                    quarantine_stream(&shard, &aggregate, stream);
+                }
+                (Err(format!("job panicked: {}", panic_message(&*cause))), 0.0)
             }
         };
         queue_wait += turn_wait;
@@ -769,19 +1084,72 @@ fn worker_loop<T: Real>(
         // only means an unconsumed result aged out at the instant it was
         // produced (waiters already holding the slot still receive it).
         {
-            let mut store = shard.slots.lock().unwrap();
-            if store.map.contains_key(&job.id) {
-                store.done.push_back((job.id, Instant::now()));
+            let mut store = lock_ok(&shard.slots);
+            if store.map.contains_key(&id) {
+                store.done.push_back((id, Instant::now()));
                 store.retained += 1;
             }
             store.evict(svc.result_cap, svc.result_ttl);
         }
-        job.slot.fill(JobResult {
-            id: job.id,
+        slot.fill(JobResult {
+            id,
             profile,
             queue_wait_s: queue_wait,
             exec_s: exec,
         });
+    }
+}
+
+/// Best-effort panic payload rendering (the common `&str`/`String` cases).
+fn panic_message(cause: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = cause.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = cause.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// A panic unwound out of this stream's apply path: its in-memory state
+/// (mid-`extend`) and turn chain can no longer be trusted.  Remove the
+/// stream, fail its turn-waiters (who would otherwise wait for a
+/// `next_seq` bump that will never come), and `Close` it in the WAL —
+/// replaying the packet that just panicked would only panic again on
+/// recovery.
+fn quarantine_stream<T: Real>(shard: &Shard<T>, aggregate: &ServiceMetrics, stream: u64) {
+    let entry = lock_ok(&shard.streams).remove(&stream);
+    if let Some(e) = entry {
+        let mut st = lock_ok(&e.state);
+        st.closed = true;
+        shard.with_wal(aggregate, |w| w.log_close(stream));
+        drop(st);
+        e.cv.notify_all();
+    }
+}
+
+/// Test-only injected panic (see [`JobPayload::Panic`]): dies either
+/// immediately or after winning the stream's turn while holding its
+/// state lock — the worst-case poisoning path the quarantine must cover.
+#[cfg(test)]
+fn run_injected_panic<T: Real>(
+    shard: &Shard<T>,
+    stream: Option<u64>,
+    seq: u64,
+) -> (Result<MatrixProfile<T>, String>, f64) {
+    let Some(stream) = stream else {
+        panic!("injected panic (test)")
+    };
+    let entry = lock_ok(&shard.streams).get(&stream).cloned();
+    match entry {
+        Some(e) => {
+            let mut st = lock_ok(&e.state);
+            while !st.closed && st.next_seq != seq {
+                st = wait_ok(&e.cv, st);
+            }
+            panic!("injected stream panic (test)");
+        }
+        None => (Err(format!("unknown or closed stream {stream}")), 0.0),
     }
 }
 
@@ -791,30 +1159,48 @@ fn worker_loop<T: Real>(
 /// of the squared-profile representation.  Returns the result plus the
 /// seconds spent waiting for this append's turn (reported as queueing,
 /// not execution).
+///
+/// Durability ordering (all under the stream's state lock, which is
+/// taken BEFORE the shard's WAL lock, never after): log `Append` →
+/// apply → maybe log `Snapshot`.  One WAL record per packet means
+/// replay re-applies with identical tile boundaries — bit-identical
+/// profiles.
 fn run_stream_append<T: Real>(
     shard: &Shard<T>,
+    aggregate: &ServiceMetrics,
     stream: u64,
     samples: &[T],
     seq: u64,
+    svc: &ServiceConfig,
 ) -> (Result<MatrixProfile<T>, String>, f64) {
-    let entry = match shard.streams.lock().unwrap().get(&stream).cloned() {
+    let entry = match lock_ok(&shard.streams).get(&stream).cloned() {
         Some(e) => e,
         None => return (Err(format!("unknown or closed stream {stream}")), 0.0),
     };
     let wait_start = Instant::now();
-    let mut state = entry.state.lock().unwrap();
+    let mut state = lock_ok(&entry.state);
     // Appends dequeued out of order (multiple workers) wait their turn;
     // `closed` breaks the wait so close_stream never strands a worker.
     while !state.closed && state.next_seq != seq {
-        state = entry.cv.wait(state).unwrap();
+        state = wait_ok(&entry.cv, state);
     }
     let turn_wait = wait_start.elapsed().as_secs_f64();
     if state.closed {
         return (Err(format!("stream {stream} closed")), turn_wait);
     }
+    // Write-ahead: the packet is durable before it is applied — a crash
+    // in between replays the packet instead of losing it.
+    shard.with_wal(aggregate, |w| w.log_append(stream, seq, samples));
     state.session.extend(samples);
     let snapshot = state.session.profile();
     state.next_seq += 1;
+    state.unsnapshotted += 1;
+    if shard.wal.is_some() && state.unsnapshotted >= svc.wal_opts.snapshot_every.max(1) {
+        let next_seq = state.next_seq;
+        let sess_state = state.session.state();
+        shard.with_wal(aggregate, |w| w.log_snapshot(stream, next_seq, &sess_state));
+        state.unsnapshotted = 0;
+    }
     entry.cv.notify_all();
     (Ok(snapshot), turn_wait)
 }
@@ -1188,6 +1574,118 @@ mod tests {
         for stream in streams {
             s.close_stream(stream);
         }
+        s.shutdown();
+    }
+
+    #[test]
+    fn panicking_job_fails_cleanly_and_shard_survives() {
+        // regression: a worker panic used to poison the shard's slot
+        // mutex, turning every later wait/poll/submit on the shard into
+        // a cascade of panics.  Now the job fails, the panic is counted,
+        // and the shard keeps serving.
+        let s = svc();
+        let id = s.submit_panic().unwrap();
+        let r = s.wait(id).unwrap();
+        let err = r.profile.unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        assert_eq!(s.metrics().jobs_panicked.load(Ordering::Relaxed), 1);
+        assert_eq!(s.metrics().jobs_failed.load(Ordering::Relaxed), 1);
+        // the same shard still runs normal work afterwards
+        let id = s.submit(Arc::new(generate::<f64>(Pattern::PlantedMotif, 512, 4)), 16).unwrap();
+        assert!(s.wait(id).unwrap().profile.is_ok());
+        assert_eq!(s.metrics().in_flight(), 0);
+        assert_eq!(s.retained_results(), 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn stream_panic_quarantines_stream_but_not_shard() {
+        // worst-case poisoning: the injected job panics while HOLDING the
+        // stream's state lock, with another append turn-waiting behind it
+        let s = AnalysisService::<f64>::start(NatsaConfig::default().with_threads(1), 2, 16);
+        let a = s.submit_stream(16, None).unwrap();
+        let b = s.submit_stream(16, None).unwrap();
+        let id = s.append_stream(a, &generate::<f64>(Pattern::RandomWalk, 200, 1)).unwrap();
+        assert!(s.wait(id).unwrap().profile.is_ok());
+        let bad = s.append_stream_panic(a).unwrap();
+        let behind = s.append_stream(a, &[1.0, 2.0, 3.0]).unwrap();
+        let err = s.wait(bad).unwrap().profile.unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        // quarantine: the queued append fails (not strands), new appends
+        // and snapshots see the stream gone
+        assert!(s.wait(behind).unwrap().profile.is_err());
+        assert_eq!(s.append_stream(a, &[1.0]), Err(SubmitError::UnknownStream));
+        assert!(s.snapshot_stream(a).is_none());
+        assert_eq!(s.metrics().jobs_panicked.load(Ordering::Relaxed), 1);
+        // the sibling stream on the same shard is untouched
+        let id = s.append_stream(b, &generate::<f64>(Pattern::RandomWalk, 200, 2)).unwrap();
+        assert!(s.wait(id).unwrap().profile.is_ok());
+        assert!(s.close_stream(b));
+        assert_eq!(s.metrics().in_flight(), 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn wait_timeout_tiny_budgets_under_contention_never_panic() {
+        // regression: a wakeup landing PAST the deadline computed
+        // `deadline - now` and underflowed `Instant`; `Duration::MAX`
+        // overflowed `now + timeout`.  Both must degrade, not panic.
+        let s = Arc::new(AnalysisService::<f64>::start(
+            NatsaConfig::default().with_threads(1),
+            1,
+            4,
+        ));
+        let mut rng = Rng::new(21);
+        let id = s.submit(Arc::new(rng.gauss_vec(20_000)), 16).unwrap();
+        let waiters: Vec<_> = (0..4)
+            .map(|_| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    for k in 0..200u64 {
+                        match s.wait_timeout(id, Duration::from_nanos(k % 3)) {
+                            Err(WaitError::Timeout) | Err(WaitError::Unknown) => {}
+                            Ok(_) => break, // consumed it first — fine
+                        }
+                    }
+                })
+            })
+            .collect();
+        for w in waiters {
+            w.join().unwrap();
+        }
+        // overflow-proof: an effectively-infinite timeout is an untimed wait
+        match s.wait_timeout(id, Duration::MAX) {
+            Ok(r) => assert!(r.profile.is_ok()),
+            Err(WaitError::Unknown) => {} // a racing waiter consumed it
+            Err(WaitError::Timeout) => panic!("Duration::MAX timed out"),
+        }
+    }
+
+    #[test]
+    fn close_rejects_in_flight_pipelined_appends() {
+        // reject-not-drain: appends queued (pipelined) when close_stream
+        // runs must FAIL, not apply after the close
+        let s = AnalysisService::<f64>::start(NatsaConfig::default().with_threads(1), 1, 256);
+        let stream = s.submit_stream(16, None).unwrap();
+        let series = generate::<f64>(Pattern::RandomWalk, 8000, 7);
+        let mut ids = Vec::new();
+        for chunk in series.chunks(50) {
+            ids.push(s.append_stream(stream, chunk).unwrap());
+        }
+        assert!(s.close_stream(stream));
+        let (mut applied, mut rejected) = (0usize, 0usize);
+        for id in ids {
+            match s.wait(id).unwrap().profile {
+                Ok(_) => applied += 1,
+                Err(e) => {
+                    assert!(e.contains("closed"), "{e}");
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "close drained {applied} queued appends instead of rejecting");
+        assert_eq!(s.metrics().jobs_failed.load(Ordering::Relaxed), rejected as u64);
+        assert_eq!(s.metrics().in_flight(), 0);
         s.shutdown();
     }
 

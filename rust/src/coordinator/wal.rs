@@ -1,0 +1,995 @@
+//! Per-shard segment write-ahead log for STAMPI streaming sessions.
+//!
+//! NATSA's premise is analyzing time series where the data resides; this
+//! module makes the *sessions* reside somewhere too.  Every mutation of a
+//! shard's stream table is logged before it is applied, so a crash or
+//! restart replays the shard back to a state **bit-identical** to an
+//! uninterrupted run (pinned by `tests/wal_recovery.rs`).
+//!
+//! ## Format
+//!
+//! A WAL directory holds numbered segment files `seg-NNNNNNNNNNNN.wal`.
+//! Each segment starts with a 6-byte header (`b"NWG1"`, format version,
+//! dtype tag) and then a sequence of CRC-framed records:
+//!
+//! ```text
+//! [len: u32 LE] [crc32: u32 LE] [payload: len bytes]
+//! payload = [kind: u8] [lsn: u64 LE] [stream: u64 LE] [body...]
+//! ```
+//!
+//! Record kinds:
+//!
+//! * `Open` — a stream was created; body carries its configuration
+//!   (`m`, exclusion override, history bound).
+//! * `Append` — one append packet; body carries the service-level
+//!   sequence number and the raw samples (each as the bit pattern of its
+//!   `f64` widening — exact for `f32` and `f64`, same convention as
+//!   [`SessionState`]'s codec).
+//! * `Snapshot` — a full serialized [`SessionState`] plus the next
+//!   expected append sequence; **subsumes** every earlier record of that
+//!   stream.
+//! * `Close` — the stream was closed; replay never resurrects it.
+//!
+//! LSNs are contiguous and monotone across the whole directory (they
+//! survive rotation, compaction and restart); replay verifies this, and
+//! the model test (`tests/wal_model.rs`) drives random interleavings of
+//! append/snapshot/rotate/crash against a reference model to hold the
+//! invariant.
+//!
+//! ## Rotation and compaction
+//!
+//! The writer rotates to a fresh segment once the current one exceeds
+//! `segment_bytes`.  Compaction is **pin-based**: each live stream pins
+//! the segment holding its latest `Snapshot` (or its `Open`, before the
+//! first snapshot); rotation deletes every segment older than the
+//! minimum pin.  Pins only ever reference data the stream still needs,
+//! so compaction never requires touching stream locks — the service can
+//! hold a stream's state lock while logging without deadlocking against
+//! rotation.
+//!
+//! A torn record at the tail of the **newest** segment (crash mid-write)
+//! is detected by length/CRC, reported by [`replay`], and truncated away
+//! when a writer [`WalWriter::resume`]s; corruption anywhere else is an
+//! error.
+//!
+//! The state payload is deliberately the standalone
+//! [`SessionState`] codec from [`crate::mp::stampi`] so the planned
+//! hot-shard stream migration (ROADMAP) can hand the same bytes to a
+//! peer instead of a disk.
+
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read as _, Write as _};
+use std::path::{Path, PathBuf};
+
+use crate::mp::stampi::SessionState;
+use crate::Real;
+
+/// Segment header magic ("NATSA WAL geometry v1").
+const SEG_MAGIC: &[u8; 4] = b"NWG1";
+/// Format version byte.
+const SEG_VERSION: u8 = 1;
+/// Header: magic + version + dtype tag.
+const SEG_HEADER_LEN: u64 = 6;
+/// Frame prefix: len + crc.
+const FRAME_PREFIX: usize = 8;
+/// Upper bound on a single record payload — anything larger is treated
+/// as corruption rather than an allocation request.
+const MAX_RECORD: u32 = 1 << 30;
+
+const KIND_OPEN: u8 = 1;
+const KIND_APPEND: u8 = 2;
+const KIND_SNAPSHOT: u8 = 3;
+const KIND_CLOSE: u8 = 4;
+
+/// Tuning knobs for a shard WAL.
+#[derive(Clone, Debug)]
+pub struct WalOptions {
+    /// Appends between per-stream snapshots (the service's cadence;
+    /// stored here so writer and service agree in one place).
+    pub snapshot_every: u32,
+    /// Rotate to a new segment once the current one exceeds this size.
+    pub segment_bytes: u64,
+    /// `fsync` after every record (durability vs throughput).
+    pub sync: bool,
+}
+
+impl Default for WalOptions {
+    fn default() -> Self {
+        WalOptions {
+            snapshot_every: 256,
+            segment_bytes: 1 << 20,
+            sync: false,
+        }
+    }
+}
+
+/// Stream configuration as logged by an `Open` record — everything
+/// needed to rebuild a session that never reached its first snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamMeta {
+    pub m: usize,
+    pub excl: Option<usize>,
+    pub max_history: Option<usize>,
+}
+
+/// One stream reconstructed by [`replay`]: its latest snapshot (if any)
+/// plus the append packets logged after it, in order.  Closed streams
+/// are never returned.
+#[derive(Debug)]
+pub struct ReplayedStream<T> {
+    pub id: u64,
+    /// Configuration from the `Open` record; carried even when a
+    /// snapshot exists (the snapshot's own fields must agree).
+    pub meta: StreamMeta,
+    /// Latest snapshot: (next expected append seq, engine state).
+    pub snapshot: Option<(u64, SessionState<T>)>,
+    /// Append packets after the snapshot (or since `Open`): (seq, samples).
+    pub appends: Vec<(u64, Vec<T>)>,
+}
+
+impl<T> ReplayedStream<T> {
+    /// The service-level sequence number the stream expects next.
+    pub fn next_seq(&self) -> u64 {
+        if let Some(&(seq, _)) = self.appends.last() {
+            seq + 1
+        } else {
+            self.snapshot.as_ref().map_or(0, |&(ns, _)| ns)
+        }
+    }
+}
+
+/// Everything [`replay`] learned from a WAL directory.
+#[derive(Debug)]
+pub struct Replay<T> {
+    /// Open streams, ascending by id.
+    pub streams: Vec<ReplayedStream<T>>,
+    /// Stream ids that were closed (still visible in retained segments).
+    pub closed: Vec<u64>,
+    /// First LSN the writer may assign.
+    pub next_lsn: u64,
+    /// Segment id the writer should continue in / after.
+    pub next_segment: u64,
+    /// Torn tail detected in the newest segment: (segment id, byte
+    /// offset of the first bad byte).  [`WalWriter::resume`] truncates it.
+    pub torn: Option<(u64, u64)>,
+    /// Total records successfully decoded (diagnostics).
+    pub records: u64,
+}
+
+/// Append-side handle for one shard's WAL.
+pub struct WalWriter<T: Real> {
+    dir: PathBuf,
+    opts: WalOptions,
+    file: File,
+    seg_id: u64,
+    seg_len: u64,
+    next_lsn: u64,
+    /// stream id -> segment holding its latest Snapshot (or Open).
+    pins: BTreeMap<u64, u64>,
+    _t: std::marker::PhantomData<T>,
+}
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE, reflected) — table built once, no external dependency.
+// ---------------------------------------------------------------------
+
+fn crc32_table() -> &'static [u32; 256] {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut table = [0u32; 256];
+        for (n, slot) in table.iter_mut().enumerate() {
+            let mut c = n as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        table
+    })
+}
+
+/// CRC-32 (IEEE 802.3) of `buf`.
+pub fn crc32(buf: &[u8]) -> u32 {
+    let table = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in buf {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Byte helpers (same conventions as the SessionState codec).
+// ---------------------------------------------------------------------
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_opt(out: &mut Vec<u8>, v: Option<usize>) {
+    match v {
+        Some(x) => {
+            out.push(1);
+            put_u64(out, x as u64);
+        }
+        None => {
+            out.push(0);
+            put_u64(out, 0);
+        }
+    }
+}
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.at + n <= self.buf.len(),
+            "wal record truncated at byte {} (+{n} > {})",
+            self.at,
+            self.buf.len()
+        );
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> crate::Result<usize> {
+        Ok(usize::try_from(self.u64()?)?)
+    }
+
+    fn opt(&mut self) -> crate::Result<Option<usize>> {
+        let has = self.u8()? != 0;
+        let v = self.usize()?;
+        Ok(has.then_some(v))
+    }
+
+    fn done(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.at == self.buf.len(),
+            "wal record has {} trailing bytes",
+            self.buf.len() - self.at
+        );
+        Ok(())
+    }
+}
+
+fn segment_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("seg-{id:012}.wal"))
+}
+
+/// Ascending (id, path) of every segment file in `dir`.
+fn list_segments(dir: &Path) -> crate::Result<Vec<(u64, PathBuf)>> {
+    let mut segs = Vec::new();
+    if !dir.exists() {
+        return Ok(segs);
+    }
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(id) = name
+            .strip_prefix("seg-")
+            .and_then(|s| s.strip_suffix(".wal"))
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            segs.push((id, entry.path()));
+        }
+    }
+    segs.sort();
+    Ok(segs)
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+impl<T: Real> WalWriter<T> {
+    /// Open the append side of a WAL directory, continuing from what
+    /// [`replay`] saw: the next record gets LSN `replay.next_lsn`, a
+    /// fresh segment `replay.next_segment` is started, and a torn tail
+    /// (if any) is truncated away first.
+    ///
+    /// Pins for the replayed streams are re-established by the caller
+    /// logging a fresh `Snapshot` per stream into the new segment (see
+    /// [`WalWriter::checkpoint`]), after which [`WalWriter::compact`]
+    /// reclaims every pre-restart segment.
+    pub fn resume(dir: &Path, opts: WalOptions, replay: &Replay<T>) -> crate::Result<Self> {
+        fs::create_dir_all(dir)?;
+        if let Some((seg, at)) = replay.torn {
+            let path = segment_path(dir, seg);
+            if at < SEG_HEADER_LEN {
+                // The crash landed inside the segment header: nothing in
+                // the file is usable, and a 0-length stub would read as
+                // corruption once a newer segment exists.  Drop it.
+                fs::remove_file(&path)?;
+            } else {
+                let f = OpenOptions::new().write(true).open(path)?;
+                f.set_len(at)?;
+                f.sync_all()?;
+            }
+        }
+        let seg_id = replay.next_segment;
+        let file = Self::new_segment(dir, seg_id)?;
+        Ok(WalWriter {
+            dir: dir.to_path_buf(),
+            opts,
+            file,
+            seg_id,
+            seg_len: SEG_HEADER_LEN,
+            next_lsn: replay.next_lsn,
+            pins: BTreeMap::new(),
+            _t: std::marker::PhantomData,
+        })
+    }
+
+    fn new_segment(dir: &Path, id: u64) -> crate::Result<File> {
+        let mut file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(segment_path(dir, id))?;
+        let mut header = Vec::with_capacity(SEG_HEADER_LEN as usize);
+        header.extend_from_slice(SEG_MAGIC);
+        header.push(SEG_VERSION);
+        header.push(T::BYTES as u8);
+        file.write_all(&header)?;
+        Ok(file)
+    }
+
+    /// LSN the next record will get (contiguity handle for tests).
+    pub fn next_lsn(&self) -> u64 {
+        self.next_lsn
+    }
+
+    /// Segment currently being written.
+    pub fn segment(&self) -> u64 {
+        self.seg_id
+    }
+
+    fn log(&mut self, kind: u8, stream: u64, body: &[u8]) -> crate::Result<u64> {
+        let lsn = self.next_lsn;
+        let mut payload = Vec::with_capacity(17 + body.len());
+        payload.push(kind);
+        put_u64(&mut payload, lsn);
+        put_u64(&mut payload, stream);
+        payload.extend_from_slice(body);
+        let mut frame = Vec::with_capacity(FRAME_PREFIX + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file.write_all(&frame)?;
+        if self.opts.sync {
+            self.file.sync_data()?;
+        }
+        self.seg_len += frame.len() as u64;
+        self.next_lsn += 1;
+        if self.seg_len >= self.opts.segment_bytes {
+            self.rotate()?;
+        }
+        Ok(lsn)
+    }
+
+    /// A stream was created.  Must be logged **before** the stream
+    /// becomes visible to appends.
+    pub fn log_open(&mut self, stream: u64, meta: StreamMeta) -> crate::Result<()> {
+        let mut body = Vec::with_capacity(26);
+        put_u64(&mut body, meta.m as u64);
+        put_opt(&mut body, meta.excl);
+        put_opt(&mut body, meta.max_history);
+        // Pin BEFORE logging: `log` may rotate-and-compact right after
+        // writing the record, and compaction must already know this
+        // segment is needed.
+        self.pins.entry(stream).or_insert(self.seg_id);
+        self.log(KIND_OPEN, stream, &body)?;
+        Ok(())
+    }
+
+    /// One append packet.  Must be logged **before** the samples are
+    /// applied to the engine, so a crash between log and apply replays
+    /// the packet instead of losing it.
+    pub fn log_append(&mut self, stream: u64, seq: u64, packet: &[T]) -> crate::Result<()> {
+        let mut body = Vec::with_capacity(16 + 8 * packet.len());
+        put_u64(&mut body, seq);
+        put_u64(&mut body, packet.len() as u64);
+        for &x in packet {
+            put_u64(&mut body, x.to_f64s().to_bits());
+        }
+        self.log(KIND_APPEND, stream, &body)?;
+        Ok(())
+    }
+
+    /// Full engine snapshot; subsumes every earlier record of `stream`
+    /// and advances its compaction pin.
+    pub fn log_snapshot(
+        &mut self,
+        stream: u64,
+        next_seq: u64,
+        state: &SessionState<T>,
+    ) -> crate::Result<()> {
+        let mut body = Vec::new();
+        put_u64(&mut body, next_seq);
+        let mut enc = Vec::new();
+        state.encode(&mut enc);
+        put_u64(&mut body, enc.len() as u64);
+        body.extend_from_slice(&enc);
+        // Pin BEFORE logging (see `log_open`); any rotation triggered by
+        // this very record syncs it first (`rotate` -> `sync_data`), so
+        // advancing the pin early never trades a durable snapshot for an
+        // unsynced one.
+        self.pins.insert(stream, self.seg_id);
+        self.log(KIND_SNAPSHOT, stream, &body)?;
+        Ok(())
+    }
+
+    /// The stream was closed; replay will never resurrect it.
+    pub fn log_close(&mut self, stream: u64) -> crate::Result<()> {
+        self.log(KIND_CLOSE, stream, &[])?;
+        self.pins.remove(&stream);
+        Ok(())
+    }
+
+    /// Log fresh snapshots for every restored stream after a restart,
+    /// then [`Self::compact`].  This moves every pin into the current
+    /// segment so all pre-restart segments are reclaimed — recovery
+    /// leaves the directory holding exactly one snapshot per stream.
+    /// Snapshots are written (and synced) before anything is deleted, so
+    /// a crash mid-checkpoint only leaves redundant history behind.
+    pub fn checkpoint(&mut self, streams: &[(u64, u64, SessionState<T>)]) -> crate::Result<()> {
+        for (id, next_seq, state) in streams {
+            self.log_snapshot(*id, *next_seq, state)?;
+        }
+        self.file.sync_data()?;
+        self.compact()
+    }
+
+    /// Start a new segment and reclaim everything no pin references.
+    pub fn rotate(&mut self) -> crate::Result<()> {
+        self.file.sync_data()?;
+        self.seg_id += 1;
+        self.file = Self::new_segment(&self.dir, self.seg_id)?;
+        self.seg_len = SEG_HEADER_LEN;
+        self.compact()
+    }
+
+    /// Delete segments older than the minimum pin (all older segments
+    /// when no stream pins anything).
+    pub fn compact(&mut self) -> crate::Result<()> {
+        let keep_from = self.pins.values().copied().min().unwrap_or(self.seg_id);
+        for (id, path) in list_segments(&self.dir)? {
+            if id < keep_from && id < self.seg_id {
+                fs::remove_file(path)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Make everything written so far durable.
+    pub fn sync(&mut self) -> crate::Result<()> {
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Replay
+// ---------------------------------------------------------------------
+
+struct PendingStream<T> {
+    meta: Option<StreamMeta>,
+    snapshot: Option<(u64, SessionState<T>)>,
+    appends: Vec<(u64, Vec<T>)>,
+}
+
+/// Read a WAL directory back into per-stream restore instructions.
+///
+/// Tolerates (by design of pin-based compaction):
+/// * records for streams whose `Open` was compacted away — the
+///   retained `Snapshot` carries the full configuration;
+/// * a torn record at the tail of the newest segment (reported in
+///   [`Replay::torn`], truncated by [`WalWriter::resume`]).
+///
+/// Rejects: bad segment headers, dtype mismatches, CRC/length damage
+/// anywhere but the newest tail, LSN gaps or regressions, appends whose
+/// sequence numbers don't chain, and `Append`/`Snapshot` records after a
+/// stream's `Close`.
+pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
+    let segs = list_segments(dir)?;
+    let mut streams: BTreeMap<u64, PendingStream<T>> = BTreeMap::new();
+    let mut closed: Vec<u64> = Vec::new();
+    let mut next_lsn: Option<u64> = None;
+    let mut torn = None;
+    let mut records = 0u64;
+
+    for (k, (seg_id, path)) in segs.iter().enumerate() {
+        let newest = k + 1 == segs.len();
+        let mut buf = Vec::new();
+        File::open(path)?.read_to_end(&mut buf)?;
+        // Header.
+        if buf.len() < SEG_HEADER_LEN as usize {
+            anyhow::ensure!(newest, "segment {seg_id} has a truncated header mid-log");
+            torn = Some((*seg_id, 0));
+            break;
+        }
+        anyhow::ensure!(&buf[..4] == SEG_MAGIC, "segment {seg_id}: bad magic");
+        anyhow::ensure!(buf[4] == SEG_VERSION, "segment {seg_id}: unknown version {}", buf[4]);
+        anyhow::ensure!(
+            buf[5] as usize == T::BYTES,
+            "segment {seg_id}: dtype mismatch (stored {}-byte elements, expected {})",
+            buf[5],
+            T::BYTES
+        );
+
+        let mut at = SEG_HEADER_LEN as usize;
+        while at < buf.len() {
+            // Frame prefix + CRC; a short or damaged tail in the newest
+            // segment is a torn write, anywhere else it is corruption.
+            let frame_bad = |why: &str| -> crate::Result<()> {
+                anyhow::ensure!(newest, "segment {seg_id} at byte {at}: {why} mid-log");
+                Ok(())
+            };
+            if at + FRAME_PREFIX > buf.len() {
+                frame_bad("truncated frame prefix")?;
+                torn = Some((*seg_id, at as u64));
+                break;
+            }
+            let len = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+            let crc = u32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap());
+            if len > MAX_RECORD {
+                frame_bad("implausible record length")?;
+                torn = Some((*seg_id, at as u64));
+                break;
+            }
+            let start = at + FRAME_PREFIX;
+            let end = start + len as usize;
+            if end > buf.len() {
+                frame_bad("truncated record")?;
+                torn = Some((*seg_id, at as u64));
+                break;
+            }
+            let payload = &buf[start..end];
+            if crc32(payload) != crc {
+                frame_bad("CRC mismatch")?;
+                torn = Some((*seg_id, at as u64));
+                break;
+            }
+            at = end;
+            records += 1;
+
+            let mut c = Cur { buf: payload, at: 0 };
+            let kind = c.u8()?;
+            let lsn = c.u64()?;
+            let stream = c.u64()?;
+            match next_lsn {
+                None => next_lsn = Some(lsn + 1),
+                Some(expect) => {
+                    anyhow::ensure!(
+                        lsn == expect,
+                        "LSN gap: expected {expect}, found {lsn} in segment {seg_id}"
+                    );
+                    next_lsn = Some(lsn + 1);
+                }
+            }
+            anyhow::ensure!(
+                !closed.contains(&stream) || kind == KIND_CLOSE,
+                "record for stream {stream} after its Close (lsn {lsn})"
+            );
+            match kind {
+                KIND_OPEN => {
+                    let meta = StreamMeta {
+                        m: c.usize()?,
+                        excl: c.opt()?,
+                        max_history: c.opt()?,
+                    };
+                    c.done()?;
+                    anyhow::ensure!(
+                        !streams.contains_key(&stream),
+                        "duplicate Open for stream {stream} (lsn {lsn})"
+                    );
+                    streams.insert(
+                        stream,
+                        PendingStream { meta: Some(meta), snapshot: None, appends: Vec::new() },
+                    );
+                }
+                KIND_APPEND => {
+                    let seq = c.u64()?;
+                    let count = c.usize()?;
+                    anyhow::ensure!(
+                        payload.len().saturating_sub(c.at) >= 8 * count,
+                        "append packet truncated (lsn {lsn})"
+                    );
+                    let mut packet = Vec::with_capacity(count);
+                    for _ in 0..count {
+                        packet.push(T::of_f64(f64::from_bits(c.u64()?)));
+                    }
+                    c.done()?;
+                    // An append for a stream we know nothing about is a
+                    // pre-snapshot orphan left behind by compaction; the
+                    // stream's pinned snapshot (later in LSN order)
+                    // subsumes it.  Everything else must chain.
+                    if let Some(ps) = streams.get_mut(&stream) {
+                        // Compaction is segment-granular, so a stream
+                        // whose Open is retained has its FULL history
+                        // retained: sequence numbers must chain from 0
+                        // (or from the latest snapshot's next_seq).
+                        let expect = ps
+                            .appends
+                            .last()
+                            .map(|&(s, _)| s + 1)
+                            .or(ps.snapshot.as_ref().map(|&(ns, _)| ns))
+                            .unwrap_or(0);
+                        anyhow::ensure!(
+                            seq == expect,
+                            "stream {stream}: append seq {seq}, expected {expect} (lsn {lsn})"
+                        );
+                        ps.appends.push((seq, packet));
+                    }
+                }
+                KIND_SNAPSHOT => {
+                    let ns = c.u64()?;
+                    let slen = c.usize()?;
+                    let state = SessionState::<T>::decode(c.take(slen)?)?;
+                    c.done()?;
+                    let meta = StreamMeta {
+                        m: state.m,
+                        excl: Some(state.excl),
+                        max_history: state.max_history,
+                    };
+                    let ps = streams.entry(stream).or_insert(PendingStream {
+                        meta: None,
+                        snapshot: None,
+                        appends: Vec::new(),
+                    });
+                    ps.meta.get_or_insert(meta);
+                    ps.snapshot = Some((ns, state));
+                    ps.appends.clear(); // subsumed
+                }
+                KIND_CLOSE => {
+                    c.done()?;
+                    // Orphan closes (stream fully compacted away) are
+                    // no-ops; live ones drop the stream.
+                    streams.remove(&stream);
+                    if !closed.contains(&stream) {
+                        closed.push(stream);
+                    }
+                }
+                k => anyhow::bail!("unknown wal record kind {k} (lsn {lsn})"),
+            }
+        }
+        if torn.is_some() {
+            break;
+        }
+    }
+
+    let next_segment = segs.last().map_or(0, |&(id, _)| id + 1);
+    let streams = streams
+        .into_iter()
+        .map(|(id, ps)| {
+            let meta = ps
+                .meta
+                .ok_or_else(|| anyhow::anyhow!("stream {id} replayed without Open or Snapshot"))?;
+            Ok(ReplayedStream { id, meta, snapshot: ps.snapshot, appends: ps.appends })
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    Ok(Replay {
+        streams,
+        closed,
+        next_lsn: next_lsn.unwrap_or(0),
+        next_segment,
+        torn,
+        records,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mp::stampi::{Stampi, StampiConfig};
+    use crate::timeseries::generator::{generate, Pattern};
+
+    fn tempdir(tag: &str) -> PathBuf {
+        static N: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+        let k = N.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "natsa-wal-{tag}-{}-{k}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn empty_resume(dir: &Path, opts: WalOptions) -> WalWriter<f64> {
+        let rp = replay::<f64>(dir).unwrap();
+        WalWriter::resume(dir, opts, &rp).unwrap()
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 check values.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn every_record_kind_round_trips_through_replay() {
+        let dir = tempdir("kinds");
+        let meta = StreamMeta { m: 8, excl: None, max_history: Some(64) };
+        let t = generate::<f64>(Pattern::RandomWalk, 64, 3);
+        let mut engine = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+        for &x in &t {
+            engine.append(x);
+        }
+        {
+            let mut w = empty_resume(&dir, WalOptions::default());
+            w.log_open(7, meta).unwrap();
+            w.log_append(7, 0, &t[..10]).unwrap();
+            w.log_append(7, 1, &t[10..20]).unwrap();
+            w.log_snapshot(7, 2, &engine.state()).unwrap();
+            w.log_append(7, 2, &t[20..30]).unwrap();
+            w.log_open(9, StreamMeta { m: 16, excl: Some(3), max_history: None }).unwrap();
+            w.log_append(9, 0, &t[..5]).unwrap();
+            w.log_open(11, meta).unwrap();
+            w.log_close(11).unwrap();
+            w.sync().unwrap();
+        }
+        let rp = replay::<f64>(&dir).unwrap();
+        assert_eq!(rp.next_lsn, 9);
+        assert_eq!(rp.records, 9);
+        assert!(rp.torn.is_none());
+        assert_eq!(rp.closed, vec![11]);
+        assert_eq!(rp.streams.len(), 2);
+
+        let s7 = &rp.streams[0];
+        assert_eq!(s7.id, 7);
+        assert_eq!(s7.meta, meta);
+        let (ns, state) = s7.snapshot.as_ref().unwrap();
+        assert_eq!(*ns, 2);
+        assert_eq!(*state, engine.state());
+        assert_eq!(s7.appends, vec![(2, t[20..30].to_vec())]);
+        assert_eq!(s7.next_seq(), 3);
+
+        let s9 = &rp.streams[1];
+        assert_eq!(s9.meta.m, 16);
+        assert_eq!(s9.meta.excl, Some(3));
+        assert!(s9.snapshot.is_none());
+        assert_eq!(s9.appends, vec![(0, t[..5].to_vec())]);
+        assert_eq!(s9.next_seq(), 1);
+    }
+
+    #[test]
+    fn f32_packets_round_trip_bit_exactly_and_dtype_is_enforced() {
+        let dir = tempdir("dtype");
+        let t = generate::<f32>(Pattern::EcgLike, 40, 1);
+        {
+            let rp = replay::<f32>(&dir).unwrap();
+            let mut w = WalWriter::<f32>::resume(&dir, WalOptions::default(), &rp).unwrap();
+            w.log_open(1, StreamMeta { m: 4, excl: None, max_history: None }).unwrap();
+            w.log_append(1, 0, &t).unwrap();
+            w.sync().unwrap();
+        }
+        let rp = replay::<f32>(&dir).unwrap();
+        let got = &rp.streams[0].appends[0].1;
+        assert_eq!(got.len(), t.len());
+        for (a, b) in got.iter().zip(&t) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Same directory read as f64 must refuse.
+        let err = replay::<f64>(&dir).unwrap_err().to_string();
+        assert!(err.contains("dtype mismatch"), "{err}");
+    }
+
+    #[test]
+    fn rotation_pins_and_compaction_preserve_replay() {
+        let dir = tempdir("rotate");
+        let t = generate::<f64>(Pattern::SineWithAnomaly, 400, 5);
+        let opts = WalOptions { segment_bytes: 512, ..WalOptions::default() };
+        let mut engine = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+        {
+            let mut w = empty_resume(&dir, opts);
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            let mut seq = 0u64;
+            for chunk in t.chunks(16) {
+                w.log_append(1, seq, chunk).unwrap();
+                seq += 1;
+                for &x in chunk {
+                    engine.append(x);
+                }
+                if seq % 5 == 0 {
+                    w.log_snapshot(1, seq, &engine.state()).unwrap();
+                }
+            }
+            w.sync().unwrap();
+            assert!(w.segment() > 2, "segment_bytes=512 never rotated");
+        }
+        // Compaction must have deleted early segments...
+        let segs = list_segments(&dir).unwrap();
+        assert!(segs[0].0 > 0, "no segment was ever reclaimed: {segs:?}");
+        // ...while replay still reconstructs the full engine state.
+        let rp = replay::<f64>(&dir).unwrap();
+        assert!(rp.torn.is_none());
+        let s = &rp.streams[0];
+        let (_, state) = s.snapshot.as_ref().expect("snapshots were logged");
+        let mut rebuilt = Stampi::from_state(state.clone()).unwrap();
+        for (_, packet) in &s.appends {
+            rebuilt.extend(packet);
+        }
+        let (want, got) = (engine.profile(), rebuilt.profile());
+        assert_eq!(want.p.len(), got.p.len());
+        for (a, b) in want.p.iter().zip(got.p.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn torn_tail_is_reported_truncated_and_writable_again() {
+        let dir = tempdir("torn");
+        {
+            let mut w = empty_resume(&dir, WalOptions::default());
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_append(1, 0, &[1.0, 2.0, 3.0]).unwrap();
+            w.log_append(1, 1, &[4.0, 5.0]).unwrap();
+            w.sync().unwrap();
+        }
+        // Tear the last record: chop 5 bytes off the newest segment.
+        let (seg, path) = list_segments(&dir).unwrap().pop().unwrap();
+        let len = fs::metadata(&path).unwrap().len();
+        OpenOptions::new().write(true).open(&path).unwrap().set_len(len - 5).unwrap();
+
+        let rp = replay::<f64>(&dir).unwrap();
+        let (tseg, tat) = rp.torn.expect("torn tail undetected");
+        assert_eq!(tseg, seg);
+        assert_eq!(rp.streams[0].appends, vec![(0, vec![1.0, 2.0, 3.0])]);
+        assert_eq!(rp.next_lsn, 2, "torn record must not consume an LSN");
+
+        // Resume truncates the tear and the log accepts appends again.
+        {
+            let mut w = WalWriter::<f64>::resume(&dir, WalOptions::default(), &rp).unwrap();
+            assert_eq!(fs::metadata(&path).unwrap().len(), tat);
+            w.log_append(1, 1, &[6.0]).unwrap();
+            w.sync().unwrap();
+        }
+        let rp2 = replay::<f64>(&dir).unwrap();
+        assert!(rp2.torn.is_none());
+        assert_eq!(rp2.streams[0].appends, vec![(0, vec![1.0, 2.0, 3.0]), (1, vec![6.0])]);
+        assert_eq!(rp2.next_lsn, 3);
+    }
+
+    #[test]
+    fn corruption_before_the_tail_is_an_error_not_a_truncation() {
+        let dir = tempdir("corrupt");
+        {
+            let mut w = empty_resume(
+                &dir,
+                WalOptions { segment_bytes: 64, ..WalOptions::default() },
+            );
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            for s in 0..6 {
+                w.log_append(1, s, &[s as f64; 8]).unwrap();
+            }
+            w.sync().unwrap();
+        }
+        let segs = list_segments(&dir).unwrap();
+        assert!(segs.len() > 1, "need multiple segments for this test");
+        // Flip a payload byte in the FIRST (non-newest) segment.
+        let path = &segs[0].1;
+        let mut buf = fs::read(path).unwrap();
+        let at = buf.len() - 3;
+        buf[at] ^= 0xFF;
+        fs::write(path, &buf).unwrap();
+        let err = replay::<f64>(&dir).unwrap_err().to_string();
+        assert!(err.contains("mid-log"), "{err}");
+    }
+
+    #[test]
+    fn lsn_gaps_are_rejected() {
+        let dir = tempdir("lsn");
+        {
+            let mut w = empty_resume(&dir, WalOptions::default());
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_append(1, 0, &[1.0]).unwrap();
+            w.log_append(1, 1, &[2.0]).unwrap();
+            w.sync().unwrap();
+        }
+        // Excise the middle record wholesale (frame stays well-formed,
+        // LSN chain does not).
+        let (_, path) = list_segments(&dir).unwrap().pop().unwrap();
+        let buf = fs::read(&path).unwrap();
+        let mut at = SEG_HEADER_LEN as usize;
+        let mut bounds = Vec::new();
+        while at < buf.len() {
+            let len = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+            bounds.push((at, at + FRAME_PREFIX + len));
+            at += FRAME_PREFIX + len;
+        }
+        let (cut_start, cut_end) = bounds[1];
+        let mut cut = buf[..cut_start].to_vec();
+        cut.extend_from_slice(&buf[cut_end..]);
+        fs::write(&path, &cut).unwrap();
+        let err = replay::<f64>(&dir).unwrap_err().to_string();
+        assert!(err.contains("LSN gap"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_after_restart_reclaims_all_history() {
+        let dir = tempdir("checkpoint");
+        let t = generate::<f64>(Pattern::RandomWalk, 300, 9);
+        let opts = WalOptions { segment_bytes: 400, ..WalOptions::default() };
+        {
+            let mut w = empty_resume(&dir, opts.clone());
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            let mut engine = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+            for (s, chunk) in t.chunks(25).enumerate() {
+                w.log_append(1, s as u64, chunk).unwrap();
+                for &x in chunk {
+                    engine.append(x);
+                }
+                w.log_snapshot(1, s as u64 + 1, &engine.state()).unwrap();
+            }
+            w.sync().unwrap();
+        }
+        // "Restart": replay, rebuild, checkpoint, verify one snapshot
+        // left and replay equivalence.
+        let rp = replay::<f64>(&dir).unwrap();
+        let s = &rp.streams[0];
+        let mut rebuilt = Stampi::from_state(s.snapshot.as_ref().unwrap().1.clone()).unwrap();
+        for (_, packet) in &s.appends {
+            rebuilt.extend(packet);
+        }
+        let next_seq = s.next_seq();
+        let lsn_before = rp.next_lsn;
+        let resume_seg = rp.next_segment;
+        let mut w = WalWriter::<f64>::resume(&dir, opts, &rp).unwrap();
+        w.checkpoint(&[(1, next_seq, rebuilt.state())]).unwrap();
+        let segs = list_segments(&dir).unwrap();
+        assert!(
+            segs.iter().all(|&(id, _)| id >= resume_seg),
+            "pre-restart segments survived the checkpoint: {segs:?}"
+        );
+        let rp2 = replay::<f64>(&dir).unwrap();
+        assert_eq!(rp2.next_lsn, lsn_before + 1, "LSNs must keep chaining across restart");
+        let s2 = &rp2.streams[0];
+        assert!(s2.appends.is_empty());
+        assert_eq!(s2.snapshot.as_ref().unwrap().1, rebuilt.state());
+        assert_eq!(s2.next_seq(), next_seq);
+    }
+
+    #[test]
+    fn replay_never_resurrects_a_closed_stream_even_across_checkpoints() {
+        let dir = tempdir("closed");
+        {
+            let mut w = empty_resume(&dir, WalOptions::default());
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_append(1, 0, &[1.0, 2.0]).unwrap();
+            let mut e = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+            e.extend(&[1.0, 2.0]);
+            w.log_snapshot(1, 1, &e.state()).unwrap();
+            w.log_close(1).unwrap();
+            w.sync().unwrap();
+        }
+        let rp = replay::<f64>(&dir).unwrap();
+        assert!(rp.streams.is_empty());
+        assert_eq!(rp.closed, vec![1]);
+        // And a record landing after Close is corruption, not data.
+        {
+            let mut w = WalWriter::<f64>::resume(&dir, WalOptions::default(), &rp).unwrap();
+            w.log_append(1, 1, &[3.0]).unwrap();
+            w.sync().unwrap();
+        }
+        let err = replay::<f64>(&dir).unwrap_err().to_string();
+        assert!(err.contains("after its Close"), "{err}");
+    }
+}

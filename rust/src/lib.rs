@@ -72,8 +72,11 @@
 //! ([`coordinator::service::AnalysisService::submit_stream`] /
 //! `append_stream` / `snapshot_stream` — each stream pinned to one
 //! engine shard so pipelined appends never head-of-line block the
-//! fleet), and `benches/streaming.rs` measures the
-//! incremental-vs-recompute gap plus shard scaling.
+//! fleet), optionally with a per-shard write-ahead log
+//! ([`coordinator::wal`], enabled by
+//! `ServiceConfig::with_wal(dir)`) that replays every open session
+//! bit-identically after a crash or restart.  `benches/streaming.rs`
+//! measures the incremental-vs-recompute gap plus shard scaling.
 //!
 //! ## Planes
 //!

@@ -120,6 +120,7 @@ fn print_usage() {
          \x20 anytime   --fraction F --m M [--pattern P --n N]\n\
          \x20 serve     [--shards 4] [--workers 2] [--depth 16] [--pus 48] [--m 64]\n\
          \x20           [--streams 6] [--packets 24] [--chunk 512] [--jobs 12]\n\
+         \x20           [--wal-dir DIR]  (durable per-shard WAL; recovers open streams on restart)\n\
          \x20 simulate  --platform <ddr4-ooo|ddr4-inorder|hbm-ooo|hbm-inorder|natsa|natsa-ddr4>\n\
          \x20           --n N --m M [--precision dp|sp]\n\
          \x20 repro     --id <fig1|fig3|fig4|fig7|table2|fig8|fig9|fig10|table3|fig11|fig12|sens-m|all>\n\
@@ -282,18 +283,26 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
     let packets = opts.usize("packets", 24)?;
     let chunk = opts.usize("chunk", 512)?;
     let jobs = opts.usize("jobs", 12)?;
+    let wal_dir = opts.get("wal-dir").map(PathBuf::from);
 
     println!(
         "serve: {shards} shards x {workers} workers (depth {depth}), {pus} PUs total; \
          {streams} streams x {packets} packets x {chunk} samples + {jobs} batch jobs"
     );
-    let service: Arc<AnalysisService<f64>> = Arc::new(AnalysisService::start_sharded(
+    let mut svc_config = ServiceConfig::default()
+        .with_shards(shards)
+        .with_workers(workers)
+        .with_queue_depth(depth);
+    if let Some(dir) = wal_dir {
+        println!("wal: per-shard durable log under {}", dir.display());
+        svc_config = svc_config.with_wal(dir);
+    }
+    // try_start_sharded, not start_sharded: a damaged WAL directory
+    // should surface as a CLI error, not a panic.
+    let service: Arc<AnalysisService<f64>> = Arc::new(AnalysisService::try_start_sharded(
         NatsaConfig::default().with_pus(pus),
-        ServiceConfig::default()
-            .with_shards(shards)
-            .with_workers(workers)
-            .with_queue_depth(depth),
-    ));
+        svc_config,
+    )?);
 
     let mut clients = Vec::new();
     for c in 0..streams {

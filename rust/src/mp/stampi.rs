@@ -125,6 +125,228 @@ impl StampiConfig {
     }
 }
 
+/// The canonical serializable state of a streaming session — everything
+/// [`Stampi`] is, as plain data.
+///
+/// Yeh's streaming formulation makes this tiny relative to the stream:
+/// the retained ring window, the folded Eq. 1 factors, the last row's
+/// dot products, the squared-distance profile, and the rolling-sum
+/// anchors.  Restoring via [`Stampi::from_state`] is **bit-identical**:
+/// a restored session appends exactly the bits an uninterrupted one
+/// would (pinned by the state round-trip test below and the service's
+/// kill/restart differential).
+///
+/// This struct is deliberately the *shared* compact-state currency: the
+/// per-shard WAL ([`crate::coordinator::wal`]) snapshots it, and the
+/// planned hot-shard stream migration hands it off — one codec, two
+/// consumers (ROADMAP).
+///
+/// [`Self::encode`]/[`Self::decode`] are the standalone binary codec:
+/// every element is stored as the bit pattern of its `f64` widening
+/// (exact for both `f32` and `f64`), so round-trips preserve bits for
+/// either precision; a dtype tag prevents cross-precision decodes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionState<T> {
+    /// Window length `m`.
+    pub m: usize,
+    /// Exclusion-zone radius in effect.
+    pub excl: usize,
+    /// Retained-history bound (`None` = unbounded).
+    pub max_history: Option<usize>,
+    /// Absolute stream index of the oldest retained sample.
+    pub first_sample: usize,
+    /// Retained raw samples (ring window).
+    pub t: Vec<T>,
+    /// Absolute index of the oldest retained window.
+    pub first_window: usize,
+    /// Folded Eq. 1 factors of the retained windows.
+    pub za: Vec<T>,
+    pub zb: Vec<T>,
+    /// Last row's dot products (`q[j]` = window j · latest window).
+    pub q: Vec<T>,
+    /// Live profile in the kernel's squared-distance representation.
+    pub p: Vec<T>,
+    /// Neighbor indices (absolute; `-1` = none/evicted).
+    pub i: Vec<i64>,
+    /// Rolling sums over the last `m` samples (f64 anchors).
+    pub s: f64,
+    pub s2: f64,
+    /// Appends since the rolling sums were last recomputed exactly.
+    pub since_anchor: u32,
+    /// Aggregate functional work so far.
+    pub work: WorkStats,
+}
+
+/// Codec magic + version ("NATSA session state v1").
+const STATE_MAGIC: &[u8; 4] = b"NSS1";
+
+/// Byte cursor for [`SessionState::decode`].
+struct Cur<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.at + n <= self.buf.len(),
+            "session state truncated at byte {} (+{n} > {})",
+            self.at,
+            self.buf.len()
+        );
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> crate::Result<usize> {
+        Ok(usize::try_from(self.u64()?)?)
+    }
+
+    fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+impl<T: Real> SessionState<T> {
+    /// Serialize to bytes (appends to `out`; framing/CRC is the WAL
+    /// layer's job).  Bit-exact round-trip with [`Self::decode`].
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(STATE_MAGIC);
+        out.push(T::BYTES as u8); // dtype tag
+        put_u64(out, self.m as u64);
+        put_u64(out, self.excl as u64);
+        match self.max_history {
+            Some(h) => {
+                out.push(1);
+                put_u64(out, h as u64);
+            }
+            None => {
+                out.push(0);
+                put_u64(out, 0);
+            }
+        }
+        put_u64(out, self.first_sample as u64);
+        put_u64(out, self.t.len() as u64);
+        for &x in &self.t {
+            put_u64(out, x.to_f64s().to_bits());
+        }
+        put_u64(out, self.first_window as u64);
+        put_u64(out, self.p.len() as u64);
+        for arr in [&self.za, &self.zb, &self.q, &self.p] {
+            debug_assert_eq!(arr.len(), self.p.len());
+            for &x in arr.iter() {
+                put_u64(out, x.to_f64s().to_bits());
+            }
+        }
+        for &j in &self.i {
+            put_u64(out, j as u64);
+        }
+        put_u64(out, self.s.to_bits());
+        put_u64(out, self.s2.to_bits());
+        out.extend_from_slice(&self.since_anchor.to_le_bytes());
+        put_u64(out, self.work.cells);
+        put_u64(out, self.work.diagonals);
+        put_u64(out, self.work.first_dots);
+        put_u64(out, self.work.updates);
+    }
+
+    /// Deserialize from bytes; the whole buffer must be consumed.
+    /// Structural integrity (magic, dtype, lengths) is verified here;
+    /// semantic invariants are verified by [`Stampi::from_state`].
+    pub fn decode(buf: &[u8]) -> crate::Result<Self> {
+        let mut c = Cur { buf, at: 0 };
+        anyhow::ensure!(c.take(4)? == STATE_MAGIC, "bad session state magic");
+        let dtype = c.u8()?;
+        anyhow::ensure!(
+            dtype as usize == T::BYTES,
+            "session state dtype mismatch: stored {dtype}-byte elements, expected {} ({})",
+            T::BYTES,
+            T::DTYPE
+        );
+        let m = c.usize()?;
+        let excl = c.usize()?;
+        let has_hist = c.u8()? != 0;
+        let hist = c.usize()?;
+        let max_history = has_hist.then_some(hist);
+        let first_sample = c.usize()?;
+        let tlen = c.usize()?;
+        anyhow::ensure!(
+            buf.len().saturating_sub(c.at) >= 8 * tlen,
+            "session state sample array truncated"
+        );
+        let mut t = Vec::with_capacity(tlen);
+        for _ in 0..tlen {
+            t.push(T::of_f64(c.f64()?));
+        }
+        let first_window = c.usize()?;
+        let wlen = c.usize()?;
+        anyhow::ensure!(
+            buf.len().saturating_sub(c.at) >= 8 * wlen * 5,
+            "session state window arrays truncated"
+        );
+        let mut arrs: [Vec<T>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+        for arr in arrs.iter_mut() {
+            arr.reserve(wlen);
+            for _ in 0..wlen {
+                arr.push(T::of_f64(c.f64()?));
+            }
+        }
+        let [za, zb, q, p] = arrs;
+        let mut i = Vec::with_capacity(wlen);
+        for _ in 0..wlen {
+            i.push(c.u64()? as i64);
+        }
+        let s = c.f64()?;
+        let s2 = c.f64()?;
+        let since_anchor = c.u32()?;
+        let work = WorkStats {
+            cells: c.u64()?,
+            diagonals: c.u64()?,
+            first_dots: c.u64()?,
+            updates: c.u64()?,
+        };
+        anyhow::ensure!(
+            c.at == buf.len(),
+            "session state has {} trailing bytes",
+            buf.len() - c.at
+        );
+        Ok(SessionState {
+            m,
+            excl,
+            max_history,
+            first_sample,
+            t,
+            first_window,
+            za,
+            zb,
+            q,
+            p,
+            i,
+            s,
+            s2,
+            since_anchor,
+            work,
+        })
+    }
+}
+
 /// What one [`Stampi::append`] did, when it completed a window.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AppendOutcome {
@@ -244,6 +466,88 @@ impl<T: Real> Stampi<T> {
     /// series (appends that evaluate nothing charge nothing).
     pub fn work(&self) -> WorkStats {
         self.work
+    }
+
+    /// Extract the canonical serializable state (see [`SessionState`]).
+    /// `from_state(state())` is the identity on every observable —
+    /// profile bits, q chains, rolling sums, work accounting — so a
+    /// restored session continues the stream bit-identically.
+    pub fn state(&self) -> SessionState<T> {
+        SessionState {
+            m: self.m,
+            excl: self.excl,
+            max_history: self.max_history,
+            first_sample: self.t.first_index(),
+            t: self.t.retained().to_vec(),
+            first_window: self.p.first_index(),
+            za: self.za.retained().to_vec(),
+            zb: self.zb.retained().to_vec(),
+            q: self.q.retained().to_vec(),
+            p: self.p.retained().to_vec(),
+            i: self.i.retained().to_vec(),
+            s: self.s,
+            s2: self.s2,
+            since_anchor: self.since_anchor,
+            work: self.work,
+        }
+    }
+
+    /// Rebuild a session from its canonical state, verifying the
+    /// semantic invariants a live session maintains (window/sample
+    /// alignment, array lengths, config bounds) — corrupt or
+    /// inconsistent state is an error, never a silently-wrong engine.
+    pub fn from_state(st: SessionState<T>) -> crate::Result<Self> {
+        let cfg = StampiConfig {
+            m: st.m,
+            excl: Some(st.excl),
+            max_history: st.max_history,
+        };
+        cfg.validate()?;
+        let wlen = st.p.len();
+        anyhow::ensure!(
+            st.za.len() == wlen && st.zb.len() == wlen && st.q.len() == wlen && st.i.len() == wlen,
+            "session state window arrays disagree: za {} zb {} q {} p {} i {}",
+            st.za.len(),
+            st.zb.len(),
+            st.q.len(),
+            wlen,
+            st.i.len()
+        );
+        let n = st.first_sample + st.t.len();
+        let num_windows = if n >= st.m { n - st.m + 1 } else { 0 };
+        anyhow::ensure!(
+            st.first_window + wlen == num_windows,
+            "session state window range [{}, {}) inconsistent with {} samples (m={})",
+            st.first_window,
+            st.first_window + wlen,
+            n,
+            st.m
+        );
+        anyhow::ensure!(
+            wlen == 0 || st.first_window == st.first_sample,
+            "session state misaligned: first_window {} != first_sample {}",
+            st.first_window,
+            st.first_sample
+        );
+        anyhow::ensure!(
+            st.s.is_finite() && st.s2.is_finite(),
+            "session state rolling sums are not finite"
+        );
+        Ok(Stampi {
+            m: st.m,
+            excl: st.excl,
+            max_history: st.max_history,
+            t: RingVec::from_parts(st.first_sample, st.t),
+            za: RingVec::from_parts(st.first_window, st.za),
+            zb: RingVec::from_parts(st.first_window, st.zb),
+            q: RingVec::from_parts(st.first_window, st.q),
+            p: RingVec::from_parts(st.first_window, st.p),
+            i: RingVec::from_parts(st.first_window, st.i),
+            s: st.s,
+            s2: st.s2,
+            since_anchor: st.since_anchor,
+            work: st.work,
+        })
     }
 
     /// Push one sample; once it completes a window, push that window's
@@ -652,6 +956,102 @@ mod tests {
             // snapshot self-consistency (rebased, in-range neighbors)
             assert!(bp.i[r] < bp.len() as i64, "window {w} neighbor range");
         }
+    }
+
+    #[test]
+    fn state_roundtrip_continues_bit_identically() {
+        // THE durability pin at engine level: snapshot mid-stream, rebuild
+        // from the (encoded) state, continue appending on both sessions —
+        // every observable must stay bit-equal to the uninterrupted run,
+        // across precisions, history bounds, and chunked extends.
+        check("stampi-state-bits", 6, |rng: &mut Rng| {
+            let m = rng.range(4, 32);
+            let n = rng.range(6 * m, 700);
+            let cut = rng.range(2 * m, n - m);
+            let bounded = rng.range(0, 2) == 1;
+            let mut cfg = StampiConfig::new(m);
+            if bounded {
+                cfg = cfg.with_max_history(rng.range(m + m / 4 + 1, 4 * m));
+            }
+            let t: Vec<f64> = rng.gauss_vec(n);
+            let mut live = Stampi::<f64>::new(cfg).unwrap();
+            live.extend(&t[..cut]);
+
+            let mut bytes = Vec::new();
+            live.state().encode(&mut bytes);
+            let mut restored =
+                Stampi::<f64>::from_state(SessionState::decode(&bytes).unwrap()).unwrap();
+
+            let mut pos = cut;
+            while pos < n {
+                let chunk = rng.range(1, 50).min(n - pos);
+                live.extend(&t[pos..pos + chunk]);
+                restored.extend(&t[pos..pos + chunk]);
+                pos += chunk;
+            }
+            let bits = |e: &Stampi<f64>| -> (Vec<u64>, Vec<u64>, Vec<i64>, u64, u64, u32) {
+                (
+                    e.p.to_vec().iter().map(|x| x.to_bits()).collect(),
+                    e.q.to_vec().iter().map(|x| x.to_bits()).collect(),
+                    e.i.to_vec(),
+                    e.s.to_bits(),
+                    e.s2.to_bits(),
+                    e.since_anchor,
+                )
+            };
+            assert_eq!(bits(&live), bits(&restored), "m={m} n={n} cut={cut}");
+            assert_eq!(live.work(), restored.work());
+            assert_eq!(live.first_window(), restored.first_window());
+        });
+    }
+
+    #[test]
+    fn f32_state_roundtrip_is_bit_exact() {
+        // elements travel as f64 bit patterns; f32 -> f64 -> f32 is exact
+        let mut rng = Rng::new(91);
+        let t32: Vec<f32> = rng.gauss_vec(400).iter().map(|&x| x as f32).collect();
+        let mut live = Stampi::<f32>::new(StampiConfig::new(16)).unwrap();
+        live.extend(&t32[..250]);
+        let mut bytes = Vec::new();
+        live.state().encode(&mut bytes);
+        let mut restored =
+            Stampi::<f32>::from_state(SessionState::<f32>::decode(&bytes).unwrap()).unwrap();
+        live.extend(&t32[250..]);
+        restored.extend(&t32[250..]);
+        let bits = |e: &Stampi<f32>| -> Vec<u32> {
+            e.p.to_vec().iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&live), bits(&restored));
+        assert_eq!(live.s.to_bits(), restored.s.to_bits());
+    }
+
+    #[test]
+    fn state_codec_rejects_corruption() {
+        let mut rng = Rng::new(92);
+        let mut eng = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+        eng.extend(&rng.gauss_vec(100));
+        let mut bytes = Vec::new();
+        eng.state().encode(&mut bytes);
+        // wrong precision: the dtype tag must refuse a cross decode
+        assert!(SessionState::<f32>::decode(&bytes).is_err());
+        // truncation and trailing garbage are structural errors
+        assert!(SessionState::<f64>::decode(&bytes[..bytes.len() - 1]).is_err());
+        assert!(SessionState::<f64>::decode(&bytes[..20]).is_err());
+        let mut longer = bytes.clone();
+        longer.push(0);
+        assert!(SessionState::<f64>::decode(&longer).is_err());
+        // semantic corruption: from_state refuses misaligned windows
+        let mut st = eng.state();
+        st.first_window += 1;
+        assert!(Stampi::from_state(st).is_err());
+        let mut st = eng.state();
+        st.q.pop();
+        assert!(Stampi::from_state(st).is_err());
+        let mut st = eng.state();
+        st.s = f64::NAN;
+        assert!(Stampi::from_state(st).is_err());
+        // the untouched state still restores
+        assert!(Stampi::from_state(eng.state()).is_ok());
     }
 
     #[test]

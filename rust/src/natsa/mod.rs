@@ -310,6 +310,36 @@ impl<T: Real> StreamSession<T> {
     pub fn idle_pus(&self) -> usize {
         self.pu_cells.iter().filter(|&&c| c == 0).count()
     }
+
+    /// Extract the session's canonical serializable state (see
+    /// [`crate::mp::stampi::SessionState`]) — the compact currency the
+    /// per-shard WAL snapshots and a future shard migration hands off.
+    pub fn state(&self) -> crate::mp::stampi::SessionState<T> {
+        self.core.state()
+    }
+
+    /// Rebuild a session from its canonical state on a `pus`-wide fleet.
+    ///
+    /// The engine core (profile, q chains, rolling sums, work totals) is
+    /// restored **bit-identically**; the per-PU cell *attribution* is
+    /// re-dealt from the restored cumulative total in one pass, which
+    /// lands every PU within one cell of the incremental dealing — the
+    /// same balance bound the live path guarantees, so the timing/energy
+    /// evidence stays valid across a restore.
+    pub fn from_state(
+        state: crate::mp::stampi::SessionState<T>,
+        pus: usize,
+    ) -> crate::Result<Self> {
+        let core = Stampi::from_state(state)?;
+        let mut pu_cells = vec![0; pus.max(1)];
+        let cells = core.work().cells;
+        let rr = if cells > 0 {
+            stride_deal(0, cells, &mut pu_cells)
+        } else {
+            0
+        };
+        Ok(StreamSession { core, pu_cells, rr })
+    }
 }
 
 /// Deal `cells` to the PUs: the whole share to everyone, the remainder to

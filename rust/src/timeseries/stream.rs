@@ -41,6 +41,25 @@ impl<T: Copy> RingVec<T> {
         RingVec { buf: Vec::new(), off: 0, head: 0 }
     }
 
+    /// Rebuild a ring from its serialized view: `items` are the retained
+    /// elements, the first of which has absolute index `first_index`.
+    /// Together with [`Self::retained`] + [`Self::first_index`] this is
+    /// the round-trip the durability codec ([`crate::mp::stampi`]'s
+    /// `SessionState`) uses: the reconstructed ring is observationally
+    /// identical to the original — same absolute indices, same retained
+    /// contents — even though the evicted prefix (already unreachable)
+    /// is not resurrected.
+    pub fn from_parts(first_index: usize, items: Vec<T>) -> Self {
+        RingVec { buf: items, off: first_index, head: 0 }
+    }
+
+    /// Borrow the whole retained region (absolute indices
+    /// `[first_index, next_index)`) without cloning — the read side of
+    /// the serialization view (see [`Self::from_parts`]).
+    pub fn retained(&self) -> &[T] {
+        &self.buf[self.head..]
+    }
+
     /// Append one element; it receives absolute index [`Self::next_index`].
     pub fn push(&mut self, x: T) {
         self.buf.push(x);
@@ -297,6 +316,31 @@ mod tests {
         }
         r.evict_to(5);
         let _ = r.slice(3, 6);
+    }
+
+    #[test]
+    fn from_parts_round_trips_the_retained_view() {
+        let mut r = RingVec::new();
+        for v in 0..300u32 {
+            r.push(v);
+        }
+        r.evict_to(180); // compacts: off != 0
+        let rebuilt = RingVec::from_parts(r.first_index(), r.retained().to_vec());
+        assert_eq!(rebuilt.first_index(), r.first_index());
+        assert_eq!(rebuilt.next_index(), r.next_index());
+        assert_eq!(rebuilt.retained(), r.retained());
+        // the rebuilt ring keeps behaving like the original
+        let mut rebuilt = rebuilt;
+        rebuilt.push(300);
+        assert_eq!(rebuilt.get(300), 300);
+        assert_eq!(rebuilt.get(180), 180);
+        rebuilt.evict_to(290);
+        assert_eq!(rebuilt.first_index(), 290);
+        // empty view round-trips too (a stream evicted to the tip)
+        let empty = RingVec::<u32>::from_parts(42, Vec::new());
+        assert!(empty.is_empty());
+        assert_eq!(empty.first_index(), 42);
+        assert_eq!(empty.next_index(), 42);
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Kill/restart differential for the per-shard WAL.
+//!
+//! The durability contract: a service restarted from its WAL directory
+//! rebuilds every open session **bit-identically** — feeding half a
+//! stream, restarting, and feeding the rest (same packet boundaries)
+//! must produce exactly the profile of an uninterrupted run, for f32
+//! and f64 alike.  Closed streams must stay closed across restarts, and
+//! the directory's identity (dtype, shard count) is pinned at first use.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use natsa::coordinator::service::{AnalysisService, ServiceConfig, SubmitError};
+use natsa::coordinator::wal::WalOptions;
+use natsa::mp::MatrixProfile;
+use natsa::natsa::NatsaConfig;
+use natsa::timeseries::generator::{generate, Pattern};
+use natsa::Real;
+
+fn tempdir(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "natsa-wal-recovery-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Bit-level equality — `max_abs_diff` tolerances would hide exactly the
+/// class of bug (reordered float ops on replay) this test exists to catch.
+fn assert_bit_identical<T: Real>(got: &MatrixProfile<T>, want: &MatrixProfile<T>) {
+    assert_eq!(got.p.len(), want.p.len(), "profile length");
+    for (k, (a, b)) in got.p.iter().zip(&want.p).enumerate() {
+        assert_eq!(
+            a.to_f64s().to_bits(),
+            b.to_f64s().to_bits(),
+            "profile bit mismatch at {k}: {a} vs {b}"
+        );
+    }
+    assert_eq!(got.i, want.i, "index vector mismatch");
+}
+
+/// Deliberately uneven packet boundaries: replay re-applies packet by
+/// packet, so boundary-dependent tile blocking is part of the contract.
+fn packets<T: Real>(n: usize, seed: u64) -> Vec<Vec<T>> {
+    let series = generate::<T>(Pattern::EcgLike, n, seed);
+    let sizes = [97usize, 53, 128, 31];
+    let mut out = Vec::new();
+    let (mut at, mut k) = (0, 0);
+    while at < n {
+        let len = sizes[k % sizes.len()].min(n - at);
+        out.push(series[at..at + len].to_vec());
+        at += len;
+        k += 1;
+    }
+    out
+}
+
+fn wal_config(dir: &Path) -> ServiceConfig {
+    ServiceConfig::default()
+        .with_shards(2)
+        .with_workers(1)
+        .with_queue_depth(32)
+        .with_wal(dir)
+        // tight knobs so one run crosses several snapshots, rotations
+        // and compactions — not just the happy single-segment path
+        .with_wal_options(WalOptions {
+            snapshot_every: 3,
+            segment_bytes: 2048,
+            sync: false,
+        })
+}
+
+fn feed<T: Real>(s: &AnalysisService<T>, stream: u64, packets: &[Vec<T>]) {
+    for p in packets {
+        let id = s.append_stream(stream, p).unwrap();
+        s.wait(id).unwrap().profile.unwrap();
+    }
+}
+
+fn kill_restart_differential<T: Real>() {
+    let m = 32;
+    let pk = packets::<T>(2400, 11);
+    let half = pk.len() / 2;
+
+    // uninterrupted reference: identical service code path, no WAL
+    let reference = {
+        let s = AnalysisService::<T>::start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default()
+                .with_shards(2)
+                .with_workers(1)
+                .with_queue_depth(32),
+        );
+        let stream = s.submit_stream(m, None).unwrap();
+        feed(&s, stream, &pk);
+        let snap = s.snapshot_stream(stream).unwrap();
+        s.close_stream(stream);
+        s.shutdown();
+        snap
+    };
+
+    let dir = tempdir(T::DTYPE);
+
+    // run 1: feed the first half, then stop WITHOUT closing the stream
+    let stream = {
+        let s = AnalysisService::<T>::try_start_sharded(
+            NatsaConfig::default().with_threads(1),
+            wal_config(&dir),
+        )
+        .unwrap();
+        let stream = s.submit_stream(m, None).unwrap();
+        feed(&s, stream, &pk[..half]);
+        assert_eq!(s.metrics().wal_errors.load(Ordering::Relaxed), 0);
+        s.shutdown(); // session survives only through the WAL now
+        stream
+    };
+
+    // run 2: recover from the WAL, feed the remaining packets
+    let got = {
+        let s = AnalysisService::<T>::try_start_sharded(
+            NatsaConfig::default().with_threads(1),
+            wal_config(&dir),
+        )
+        .unwrap();
+        // the session is back under its old id, resumed mid-stream
+        let fed: usize = pk[..half].iter().map(Vec::len).sum();
+        let snap = s.snapshot_stream(stream).expect("stream not recovered");
+        assert_eq!(snap.len(), fed - m + 1, "recovered at the wrong length");
+        feed(&s, stream, &pk[half..]);
+        // fresh ids must not collide with recovered ones
+        let fresh = s.submit_stream(m, None).unwrap();
+        assert_ne!(fresh, stream, "stream id reused after restart");
+        s.close_stream(fresh);
+        let got = s.snapshot_stream(stream).unwrap();
+        assert_eq!(s.metrics().wal_errors.load(Ordering::Relaxed), 0);
+        s.close_stream(stream);
+        s.shutdown();
+        got
+    };
+
+    assert_bit_identical(&got, &reference);
+
+    // run 3: the Close was logged — replay must not resurrect the stream
+    let s = AnalysisService::<T>::try_start_sharded(
+        NatsaConfig::default().with_threads(1),
+        wal_config(&dir),
+    )
+    .unwrap();
+    assert!(
+        s.snapshot_stream(stream).is_none(),
+        "closed stream resurrected by replay"
+    );
+    assert_eq!(
+        s.append_stream(stream, &[T::of_f64(1.0)]),
+        Err(SubmitError::UnknownStream)
+    );
+    s.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_restart_differential_f64() {
+    kill_restart_differential::<f64>();
+}
+
+#[test]
+fn kill_restart_differential_f32() {
+    kill_restart_differential::<f32>();
+}
+
+#[test]
+fn wal_dir_pins_dtype_and_shard_count() {
+    let dir = tempdir("meta");
+    let s = AnalysisService::<f64>::try_start_sharded(
+        NatsaConfig::default().with_threads(1),
+        wal_config(&dir),
+    )
+    .unwrap();
+    let stream = s.submit_stream(16, None).unwrap();
+    feed(&s, stream, &packets::<f64>(200, 3));
+    s.shutdown();
+
+    // same directory opened under another dtype: refused, not garbage
+    assert!(
+        AnalysisService::<f32>::try_start_sharded(
+            NatsaConfig::default().with_threads(1),
+            wal_config(&dir),
+        )
+        .is_err(),
+        "f32 service accepted an f64 WAL directory"
+    );
+    // another shard count would misroute every stream directory: refused
+    assert!(
+        AnalysisService::<f64>::try_start_sharded(
+            NatsaConfig::default().with_threads(1),
+            wal_config(&dir).with_shards(4),
+        )
+        .is_err(),
+        "shard-count mismatch accepted"
+    );
+    // the matching shape still recovers
+    let s = AnalysisService::<f64>::try_start_sharded(
+        NatsaConfig::default().with_threads(1),
+        wal_config(&dir),
+    )
+    .unwrap();
+    assert!(s.snapshot_stream(stream).is_some());
+    s.close_stream(stream);
+    s.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
