@@ -403,7 +403,7 @@ struct StreamState<T> {
     /// Set by `close_stream`: wakes and fails any waiting appends.
     closed: bool,
     /// Appends applied since the last WAL snapshot (cadence counter;
-    /// stays 0 when the WAL is off).
+    /// stays 0 while the shard's WAL is off or error-disabled).
     unsnapshotted: u32,
 }
 
@@ -450,6 +450,15 @@ impl<T: Real> Shard<T> {
             aggregate.wal_errors.fetch_add(1, Ordering::Relaxed);
             *guard = None;
         }
+    }
+
+    /// Whether this shard is still actually logging — false when the
+    /// WAL was never configured *and* after an I/O error disabled it.
+    /// Snapshot cadence checks this so a dead writer doesn't keep
+    /// ticking the counter (or worse, keep paying for deep state
+    /// copies that `with_wal` would just discard).
+    fn wal_live(&self) -> bool {
+        self.wal.as_ref().is_some_and(|cell| lock_ok(cell).is_some())
     }
 }
 
@@ -511,8 +520,11 @@ impl<T: Real> AnalysisService<T> {
         let mut txs = Vec::with_capacity(svc.shards);
         let mut shards = Vec::with_capacity(svc.shards);
         let mut workers = Vec::with_capacity(svc.shards * svc.workers_per_shard);
-        // Highest stream sequence seen in any WAL (0 = none): the id
-        // counter must restart past every replayed id, open or closed.
+        // Highest stream sequence ever issued against any WAL (0 =
+        // none): the id counter must restart strictly past every id the
+        // directory has ever seen — `Replay::max_stream` is fed by the
+        // segment headers' high-water field, so even ids whose records
+        // (including the `Close`) were compacted away stay retired.
         let mut max_stream_seq = 0u64;
         for (k, &shard_config) in shard_configs.iter().enumerate() {
             let mut streams: HashMap<u64, Arc<StreamEntry<T>>> = HashMap::new();
@@ -520,10 +532,11 @@ impl<T: Real> AnalysisService<T> {
             if let Some(dir) = &svc.wal_dir {
                 let shard_dir = dir.join(format!("shard-{k}"));
                 let replay = wal::replay::<T>(&shard_dir)?;
+                max_stream_seq = max_stream_seq.max(replay.max_stream >> SHARD_BITS);
                 let mut writer = WalWriter::resume(&shard_dir, svc.wal_opts.clone(), &replay)?;
                 let mut checkpoints = Vec::new();
+                let mut dropped = Vec::new();
                 for rs in replay.streams {
-                    max_stream_seq = max_stream_seq.max(rs.id >> SHARD_BITS);
                     match restore_stream(&rs, shard_config.pus.max(1)) {
                         Ok((session, next_seq)) => {
                             checkpoints.push((rs.id, next_seq, session.state()));
@@ -541,18 +554,26 @@ impl<T: Real> AnalysisService<T> {
                                 }),
                             );
                         }
-                        Err(why) => eprintln!(
-                            "natsa wal: shard {k}: dropping unrecoverable stream {}: {why}",
-                            rs.id
-                        ),
+                        Err(why) => {
+                            eprintln!(
+                                "natsa wal: shard {k}: dropping unrecoverable stream {}: {why}",
+                                rs.id
+                            );
+                            dropped.push(rs.id);
+                        }
                     }
                 }
-                for &id in &replay.closed {
-                    max_stream_seq = max_stream_seq.max(id >> SHARD_BITS);
+                // A dropped stream is a closed stream: logging the Close
+                // releases its (resume-seeded) pin so it cannot stall
+                // compaction forever, and keeps later replays from
+                // resurrecting a session we already failed to restore.
+                for id in dropped {
+                    writer.log_close(id)?;
                 }
                 // Fresh snapshot of everything we restored, then reclaim
                 // every pre-restart segment (snapshots are synced before
-                // anything is deleted).
+                // anything is deleted; the seeded pins keep mid-checkpoint
+                // rotations from reclaiming early).
                 writer.checkpoint(&checkpoints)?;
                 wal_writer = Some(Mutex::new(Some(writer)));
             }
@@ -974,7 +995,17 @@ fn check_wal_meta<T: Real>(dir: &Path, shards: usize) -> crate::Result<()> {
             got.trim(),
             want.trim()
         ),
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => std::fs::write(&path, &want)?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            // The identity card must actually survive a crash: sync the
+            // file contents AND its directory entry, or a restart could
+            // find synced segments guarded by no meta at all.
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&path)?;
+            f.write_all(want.as_bytes())?;
+            f.sync_all()?;
+            #[cfg(unix)]
+            std::fs::File::open(dir)?.sync_all()?;
+        }
         Err(e) => return Err(e.into()),
     }
     Ok(())
@@ -1194,11 +1225,20 @@ fn run_stream_append<T: Real>(
     state.session.extend(samples);
     let snapshot = state.session.profile();
     state.next_seq += 1;
-    state.unsnapshotted += 1;
-    if shard.wal.is_some() && state.unsnapshotted >= svc.wal_opts.snapshot_every.max(1) {
-        let next_seq = state.next_seq;
-        let sess_state = state.session.state();
-        shard.with_wal(aggregate, |w| w.log_snapshot(stream, next_seq, &sess_state));
+    // Snapshot cadence only ticks while the WAL is live — with it off
+    // (or disabled by an earlier write error) the counter stays 0, as
+    // its doc promises, instead of counting toward u32 overflow and
+    // periodically paying for a deep `session.state()` copy that
+    // `with_wal` would silently discard.
+    if shard.wal_live() {
+        state.unsnapshotted += 1;
+        if state.unsnapshotted >= svc.wal_opts.snapshot_every.max(1) {
+            let next_seq = state.next_seq;
+            let sess_state = state.session.state();
+            shard.with_wal(aggregate, |w| w.log_snapshot(stream, next_seq, &sess_state));
+            state.unsnapshotted = 0;
+        }
+    } else {
         state.unsnapshotted = 0;
     }
     entry.cv.notify_all();

@@ -9,8 +9,11 @@
 //! ## Format
 //!
 //! A WAL directory holds numbered segment files `seg-NNNNNNNNNNNN.wal`.
-//! Each segment starts with a 6-byte header (`b"NWG1"`, format version,
-//! dtype tag) and then a sequence of CRC-framed records:
+//! Each segment starts with a 14-byte header (`b"NWG1"`, format
+//! version, dtype tag, and the highest stream id the writer had seen
+//! when the segment was created — so the id high-water survives even
+//! after every record mentioning a closed stream is compacted away)
+//! and then a sequence of CRC-framed records:
 //!
 //! ```text
 //! [len: u32 LE] [crc32: u32 LE] [payload: len bytes]
@@ -45,7 +48,15 @@
 //! minimum pin.  Pins only ever reference data the stream still needs,
 //! so compaction never requires touching stream locks — the service can
 //! hold a stream's state lock while logging without deadlocking against
-//! rotation.
+//! rotation.  Across a restart the pin table is rebuilt by [`replay`]
+//! and seeded into [`WalWriter::resume`], so the writer is
+//! compaction-safe immediately — in particular a rotation fired in the
+//! middle of the recovery [`WalWriter::checkpoint`] cannot reclaim
+//! pre-restart segments that later-checkpointed streams still need.
+//!
+//! Segment files and `wal.meta` entries are made durable with a
+//! directory fsync after every create/remove, so a synced record can
+//! never be lost to a forgotten directory entry.
 //!
 //! A torn record at the tail of the **newest** segment (crash mid-write)
 //! is detected by length/CRC, reported by [`replay`], and truncated away
@@ -69,8 +80,8 @@ use crate::Real;
 const SEG_MAGIC: &[u8; 4] = b"NWG1";
 /// Format version byte.
 const SEG_VERSION: u8 = 1;
-/// Header: magic + version + dtype tag.
-const SEG_HEADER_LEN: u64 = 6;
+/// Header: magic + version + dtype tag + max stream id (u64 LE).
+const SEG_HEADER_LEN: u64 = 14;
 /// Frame prefix: len + crc.
 const FRAME_PREFIX: usize = 8;
 /// Upper bound on a single record payload — anything larger is treated
@@ -150,6 +161,18 @@ pub struct Replay<T> {
     pub next_lsn: u64,
     /// Segment id the writer should continue in / after.
     pub next_segment: u64,
+    /// Per-stream compaction pins: stream id → segment holding its
+    /// latest `Snapshot` (or `Open`).  [`WalWriter::resume`] seeds its
+    /// pin table from this, so logging after a restart — including a
+    /// stream-at-a-time [`WalWriter::checkpoint`] — can never trigger a
+    /// compaction that reclaims segments a not-yet-resnapshotted stream
+    /// still needs.
+    pub pins: BTreeMap<u64, u64>,
+    /// Highest stream id ever seen in this directory (0 when none):
+    /// max over retained record stream ids *and* every segment header's
+    /// high-water field, so it survives compaction of Close records.
+    /// Id allocators must restart strictly above it.
+    pub max_stream: u64,
     /// Torn tail detected in the newest segment: (segment id, byte
     /// offset of the first bad byte).  [`WalWriter::resume`] truncates it.
     pub torn: Option<(u64, u64)>,
@@ -167,6 +190,9 @@ pub struct WalWriter<T: Real> {
     next_lsn: u64,
     /// stream id -> segment holding its latest Snapshot (or Open).
     pins: BTreeMap<u64, u64>,
+    /// Highest stream id ever logged here (carried into every new
+    /// segment's header so it outlives compaction).
+    max_stream: u64,
     _t: std::marker::PhantomData<T>,
 }
 
@@ -270,6 +296,19 @@ fn segment_path(dir: &Path, id: u64) -> PathBuf {
     dir.join(format!("seg-{id:012}.wal"))
 }
 
+/// Make directory-entry changes (segment create/remove) durable.  A
+/// file's own fsync does not persist its directory entry; without this,
+/// a crash could forget a just-created segment whose records were
+/// already synced and acked.  No-op on platforms where directories
+/// cannot be opened for syncing.
+fn fsync_dir(dir: &Path) -> crate::Result<()> {
+    #[cfg(unix)]
+    File::open(dir)?.sync_all()?;
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
 /// Ascending (id, path) of every segment file in `dir`.
 fn list_segments(dir: &Path) -> crate::Result<Vec<(u64, PathBuf)>> {
     let mut segs = Vec::new();
@@ -302,10 +341,12 @@ impl<T: Real> WalWriter<T> {
     /// fresh segment `replay.next_segment` is started, and a torn tail
     /// (if any) is truncated away first.
     ///
-    /// Pins for the replayed streams are re-established by the caller
-    /// logging a fresh `Snapshot` per stream into the new segment (see
-    /// [`WalWriter::checkpoint`]), after which [`WalWriter::compact`]
-    /// reclaims every pre-restart segment.
+    /// The pin table is seeded from [`Replay::pins`], so every replayed
+    /// stream keeps protecting its pre-restart segments until the
+    /// caller logs a fresh `Snapshot` for it (see
+    /// [`WalWriter::checkpoint`]) — logging (and any rotation it
+    /// triggers) is compaction-safe from the first record, not only
+    /// after a full checkpoint.
     pub fn resume(dir: &Path, opts: WalOptions, replay: &Replay<T>) -> crate::Result<Self> {
         fs::create_dir_all(dir)?;
         if let Some((seg, at)) = replay.torn {
@@ -315,6 +356,7 @@ impl<T: Real> WalWriter<T> {
                 // the file is usable, and a 0-length stub would read as
                 // corruption once a newer segment exists.  Drop it.
                 fs::remove_file(&path)?;
+                fsync_dir(dir)?;
             } else {
                 let f = OpenOptions::new().write(true).open(path)?;
                 f.set_len(at)?;
@@ -322,7 +364,7 @@ impl<T: Real> WalWriter<T> {
             }
         }
         let seg_id = replay.next_segment;
-        let file = Self::new_segment(dir, seg_id)?;
+        let file = Self::new_segment(dir, seg_id, replay.max_stream)?;
         Ok(WalWriter {
             dir: dir.to_path_buf(),
             opts,
@@ -330,12 +372,13 @@ impl<T: Real> WalWriter<T> {
             seg_id,
             seg_len: SEG_HEADER_LEN,
             next_lsn: replay.next_lsn,
-            pins: BTreeMap::new(),
+            pins: replay.pins.clone(),
+            max_stream: replay.max_stream,
             _t: std::marker::PhantomData,
         })
     }
 
-    fn new_segment(dir: &Path, id: u64) -> crate::Result<File> {
+    fn new_segment(dir: &Path, id: u64, max_stream: u64) -> crate::Result<File> {
         let mut file = OpenOptions::new()
             .create(true)
             .write(true)
@@ -345,7 +388,11 @@ impl<T: Real> WalWriter<T> {
         header.extend_from_slice(SEG_MAGIC);
         header.push(SEG_VERSION);
         header.push(T::BYTES as u8);
+        header.extend_from_slice(&max_stream.to_le_bytes());
         file.write_all(&header)?;
+        // The entry must be durable too: records synced into this file
+        // are only recoverable if the file itself survives the crash.
+        fsync_dir(dir)?;
         Ok(file)
     }
 
@@ -360,6 +407,7 @@ impl<T: Real> WalWriter<T> {
     }
 
     fn log(&mut self, kind: u8, stream: u64, body: &[u8]) -> crate::Result<u64> {
+        self.max_stream = self.max_stream.max(stream);
         let lsn = self.next_lsn;
         let mut payload = Vec::with_capacity(17 + body.len());
         payload.push(kind);
@@ -446,7 +494,11 @@ impl<T: Real> WalWriter<T> {
     /// segment so all pre-restart segments are reclaimed — recovery
     /// leaves the directory holding exactly one snapshot per stream.
     /// Snapshots are written (and synced) before anything is deleted, so
-    /// a crash mid-checkpoint only leaves redundant history behind.
+    /// a crash mid-checkpoint only leaves redundant history behind; the
+    /// pins seeded by [`Self::resume`] guarantee that even a rotation
+    /// fired *between* these snapshots (oversized per-stream states,
+    /// tiny `segment_bytes`) cannot reclaim a not-yet-resnapshotted
+    /// stream's pre-restart history.
     pub fn checkpoint(&mut self, streams: &[(u64, u64, SessionState<T>)]) -> crate::Result<()> {
         for (id, next_seq, state) in streams {
             self.log_snapshot(*id, *next_seq, state)?;
@@ -459,7 +511,7 @@ impl<T: Real> WalWriter<T> {
     pub fn rotate(&mut self) -> crate::Result<()> {
         self.file.sync_data()?;
         self.seg_id += 1;
-        self.file = Self::new_segment(&self.dir, self.seg_id)?;
+        self.file = Self::new_segment(&self.dir, self.seg_id, self.max_stream)?;
         self.seg_len = SEG_HEADER_LEN;
         self.compact()
     }
@@ -468,10 +520,15 @@ impl<T: Real> WalWriter<T> {
     /// when no stream pins anything).
     pub fn compact(&mut self) -> crate::Result<()> {
         let keep_from = self.pins.values().copied().min().unwrap_or(self.seg_id);
+        let mut removed = false;
         for (id, path) in list_segments(&self.dir)? {
             if id < keep_from && id < self.seg_id {
                 fs::remove_file(path)?;
+                removed = true;
             }
+        }
+        if removed {
+            fsync_dir(&self.dir)?;
         }
         Ok(())
     }
@@ -509,6 +566,8 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
     let segs = list_segments(dir)?;
     let mut streams: BTreeMap<u64, PendingStream<T>> = BTreeMap::new();
     let mut closed: Vec<u64> = Vec::new();
+    let mut pins: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut max_stream = 0u64;
     let mut next_lsn: Option<u64> = None;
     let mut torn = None;
     let mut records = 0u64;
@@ -531,6 +590,7 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
             buf[5],
             T::BYTES
         );
+        max_stream = max_stream.max(u64::from_le_bytes(buf[6..14].try_into().unwrap()));
 
         let mut at = SEG_HEADER_LEN as usize;
         while at < buf.len() {
@@ -572,6 +632,7 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
             let kind = c.u8()?;
             let lsn = c.u64()?;
             let stream = c.u64()?;
+            max_stream = max_stream.max(stream);
             match next_lsn {
                 None => next_lsn = Some(lsn + 1),
                 Some(expect) => {
@@ -602,6 +663,7 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
                         stream,
                         PendingStream { meta: Some(meta), snapshot: None, appends: Vec::new() },
                     );
+                    pins.insert(stream, *seg_id);
                 }
                 KIND_APPEND => {
                     let seq = c.u64()?;
@@ -655,12 +717,14 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
                     ps.meta.get_or_insert(meta);
                     ps.snapshot = Some((ns, state));
                     ps.appends.clear(); // subsumed
+                    pins.insert(stream, *seg_id);
                 }
                 KIND_CLOSE => {
                     c.done()?;
                     // Orphan closes (stream fully compacted away) are
                     // no-ops; live ones drop the stream.
                     streams.remove(&stream);
+                    pins.remove(&stream);
                     if !closed.contains(&stream) {
                         closed.push(stream);
                     }
@@ -688,6 +752,8 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
         closed,
         next_lsn: next_lsn.unwrap_or(0),
         next_segment,
+        pins,
+        max_stream,
         torn,
         records,
     })
@@ -768,6 +834,11 @@ mod tests {
         assert!(s9.snapshot.is_none());
         assert_eq!(s9.appends, vec![(0, t[..5].to_vec())]);
         assert_eq!(s9.next_seq(), 1);
+
+        // Live streams pin segment 0 (everything fit in one segment);
+        // the closed stream pins nothing; the id high-water sees all.
+        assert_eq!(rp.pins, BTreeMap::from([(7, 0), (9, 0)]));
+        assert_eq!(rp.max_stream, 11);
     }
 
     #[test]
@@ -965,6 +1036,90 @@ mod tests {
         assert!(s2.appends.is_empty());
         assert_eq!(s2.snapshot.as_ref().unwrap().1, rebuilt.state());
         assert_eq!(s2.next_seq(), next_seq);
+    }
+
+    /// The REVIEW.md high-severity crash window: `resume` used to start
+    /// with an empty pin table, so the first `log_snapshot` of a
+    /// stream-at-a-time checkpoint could rotate-and-compact away the
+    /// pre-restart segments of every stream not yet re-snapshotted.  A
+    /// crash in that window lost their acked data for good.  Pins are
+    /// now seeded from the replay, so the mid-checkpoint state stays
+    /// fully recoverable.
+    #[test]
+    fn seeded_pins_keep_mid_checkpoint_rotation_from_losing_streams() {
+        let dir = tempdir("seedpins");
+        {
+            let mut w = empty_resume(&dir, WalOptions::default());
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_append(1, 0, &[1.0; 16]).unwrap();
+            w.log_open(2, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_append(2, 0, &[2.0; 16]).unwrap();
+            w.sync().unwrap();
+        }
+        let rp = replay::<f64>(&dir).unwrap();
+        assert_eq!(rp.streams.len(), 2);
+        assert_eq!(rp.pins.len(), 2);
+        // Restart with segments so small that the very first checkpoint
+        // snapshot rotates (and therefore compacts) before stream 2's
+        // snapshot exists anywhere.
+        let resume_seg = rp.next_segment;
+        let opts = WalOptions { segment_bytes: 64, ..WalOptions::default() };
+        let mut w = WalWriter::<f64>::resume(&dir, opts, &rp).unwrap();
+        let mut e1 = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+        e1.extend(&[1.0; 16]);
+        w.log_snapshot(1, 1, &e1.state()).unwrap();
+        assert!(w.segment() > resume_seg, "snapshot was meant to force a rotation");
+        // "Crash" here: stream 2 must still replay in full from its
+        // pre-restart segments.
+        let mid = replay::<f64>(&dir).unwrap();
+        assert_eq!(
+            mid.streams.iter().map(|s| s.id).collect::<Vec<_>>(),
+            vec![1, 2],
+            "mid-checkpoint rotation reclaimed a not-yet-snapshotted stream"
+        );
+        assert_eq!(mid.streams[1].appends, vec![(0, vec![2.0; 16])]);
+        // Finishing the checkpoint reclaims the pre-restart history.
+        let mut e2 = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+        e2.extend(&[2.0; 16]);
+        w.checkpoint(&[(2, 1, e2.state())]).unwrap();
+        let segs = list_segments(&dir).unwrap();
+        assert!(
+            segs.iter().all(|&(id, _)| id >= resume_seg),
+            "checkpoint completion failed to reclaim pre-restart segments: {segs:?}"
+        );
+        let fin = replay::<f64>(&dir).unwrap();
+        assert_eq!(fin.streams.len(), 2);
+        assert_eq!(fin.streams[0].snapshot.as_ref().unwrap().1, e1.state());
+        assert_eq!(fin.streams[1].snapshot.as_ref().unwrap().1, e2.state());
+    }
+
+    /// REVIEW.md: closed stream ids used to be forgotten once their
+    /// `Close` records were compacted away, letting a later restart
+    /// re-issue them.  Segment headers now carry the id high-water.
+    #[test]
+    fn closed_ids_survive_compaction_in_segment_headers() {
+        let dir = tempdir("highwater");
+        let meta = StreamMeta { m: 8, excl: None, max_history: None };
+        let mut e = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+        e.extend(&[1.0; 16]);
+        {
+            let mut w = empty_resume(&dir, WalOptions::default());
+            w.log_open(1, meta).unwrap();
+            w.log_open(9, meta).unwrap();
+            w.log_close(9).unwrap();
+            w.log_snapshot(1, 0, &e.state()).unwrap();
+            w.sync().unwrap();
+        }
+        let rp = replay::<f64>(&dir).unwrap();
+        assert_eq!(rp.max_stream, 9);
+        // The restart checkpoint compacts stream 9's Close away...
+        let mut w = WalWriter::<f64>::resume(&dir, WalOptions::default(), &rp).unwrap();
+        w.checkpoint(&[(1, 0, e.state())]).unwrap();
+        drop(w);
+        let rp2 = replay::<f64>(&dir).unwrap();
+        assert!(rp2.closed.is_empty(), "Close record was supposed to be compacted");
+        // ...but the high-water survives in the new segment's header.
+        assert_eq!(rp2.max_stream, 9, "closed id forgotten — ids could be reused");
     }
 
     #[test]

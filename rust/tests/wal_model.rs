@@ -57,6 +57,8 @@ struct Model {
     streams: BTreeMap<u64, ModelStream>,
     closed: BTreeSet<u64>,
     next_lsn: u64,
+    /// Highest stream id ever opened (the id allocator's floor).
+    max_id: u64,
 }
 
 fn encoded(state: &SessionState<f64>) -> Vec<u8> {
@@ -121,6 +123,10 @@ fn check_replay(rp: &Replay<f64>, model: &Model, ctx: &str) {
             assert_eq!(gb, wb, "{ctx}: stream {} append bits", rs.id);
         }
     }
+    // the id high-water must survive compaction exactly (segment
+    // headers carry it even after every record of a closed stream is
+    // reclaimed) — otherwise a restarted allocator could reuse ids
+    assert_eq!(rp.max_stream, model.max_id, "{ctx}: stream id high-water");
     // closed ids in retained segments are a subset of what the model
     // closed (compaction may have dropped older Close records)...
     for id in &rp.closed {
@@ -192,6 +198,7 @@ fn random_interleavings_agree_with_reference_model() {
                     };
                     w.log_open(id, meta).unwrap();
                     model.next_lsn += 1;
+                    model.max_id = model.max_id.max(id);
                     model.streams.insert(
                         id,
                         ModelStream { meta, snapshot: None, appends: Vec::new(), next_seq: 0 },

@@ -171,6 +171,50 @@ fn kill_restart_differential_f32() {
     kill_restart_differential::<f32>();
 }
 
+/// REVIEW.md: a closed stream's `Close` record is compacted away by the
+/// very next startup checkpoint, so a second restart used to derive its
+/// id floor only from the surviving streams — and could re-issue the
+/// closed stream's id.  The segment-header high-water keeps retired ids
+/// retired across any number of restart/compaction cycles.
+#[test]
+fn closed_stream_ids_stay_retired_across_restarts() {
+    let dir = tempdir("retire");
+    let cfg = || NatsaConfig::default().with_threads(1);
+
+    // run 1: a long-lived stream plus a stream that gets closed
+    let (keeper, retired) = {
+        let s = AnalysisService::<f64>::try_start_sharded(cfg(), wal_config(&dir)).unwrap();
+        let keeper = s.submit_stream(16, None).unwrap();
+        let retired = s.submit_stream(16, None).unwrap();
+        feed(&s, keeper, &packets::<f64>(200, 3));
+        s.close_stream(retired);
+        s.shutdown();
+        (keeper, retired)
+    };
+
+    // run 2: the startup checkpoint compacts the Close record away
+    {
+        let s = AnalysisService::<f64>::try_start_sharded(cfg(), wal_config(&dir)).unwrap();
+        assert!(s.snapshot_stream(keeper).is_some(), "keeper lost across restart");
+        assert!(s.snapshot_stream(retired).is_none(), "closed stream resurrected");
+        s.shutdown();
+    }
+
+    // run 3: no retained record mentions the retired id any more — only
+    // the segment headers' high-water does.  Fresh ids must still not
+    // collide with it (or with anything else ever issued).
+    {
+        let s = AnalysisService::<f64>::try_start_sharded(cfg(), wal_config(&dir)).unwrap();
+        let fresh = s.submit_stream(16, None).unwrap();
+        assert_ne!(fresh, retired, "retired stream id re-issued after compaction");
+        assert_ne!(fresh, keeper, "live stream id re-issued");
+        s.close_stream(fresh);
+        s.close_stream(keeper);
+        s.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn wal_dir_pins_dtype_and_shard_count() {
     let dir = tempdir("meta");
