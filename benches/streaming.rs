@@ -8,7 +8,9 @@
 //! width-1 kernel path (`Stampi::append`), and the blocked multi-row
 //! tile path (`Stampi::extend`, up to BAND rows per tile).  Acceptance
 //! bar for this PR: blocked extend >= 1.5x over the old per-append
-//! scalar row at the bench shape.
+//! scalar row at the bench shape.  Section (g) measures the service's
+//! cross-stream coalescing: a storm of single-sample appends from many
+//! streams, serial worker vs the drain-and-group worker (report-only).
 //!
 //! Pass `--json` to (re)write `BENCH_streaming.json` with the measured
 //! rows so future PRs have a trajectory to compare against.
@@ -18,7 +20,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use natsa::benchmark::{black_box, fmt_time, isa, time_budget, Table};
-use natsa::coordinator::service::{AnalysisService, ServiceConfig};
+use natsa::coordinator::service::{AnalysisService, ServiceConfig, SubmitError};
 use natsa::coordinator::wal::WalOptions;
 use natsa::mp::kernel::{self, RowTile};
 use natsa::mp::stampi::{Stampi, StampiConfig};
@@ -512,6 +514,94 @@ fn main() {
         "WAL overhead: 1 stream x {wal_packets} packets x {wal_chunk} samples (m={m}, report-only)"
     ));
 
+    // (g) cross-stream coalescing: S streams each appending ONE sample
+    // at a time — the worst case for the blocked path, since no client
+    // ever hands the service a packet.  With the drain-and-group worker
+    // the shard fuses concurrent singles into shared row tiles, so the
+    // steady state rides the multi-lane kernel anyway.  Serial
+    // (`with_coalesce(1)`) vs default drain, same feed, one shard, one
+    // worker (report-only: the ratio tracks kernel-row vs blocked above,
+    // minus queue bookkeeping).
+    let storm_streams = 8usize;
+    let storm_warm = 2048usize;
+    let storm_rounds = 512usize;
+    let storm = |coalesce: usize| -> (f64, f64) {
+        let svc = AnalysisService::<f64>::start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default()
+                .with_shards(1)
+                .with_workers(1)
+                .with_queue_depth(256)
+                .with_coalesce(coalesce),
+        );
+        let tapes: Vec<Vec<f64>> = (0..storm_streams)
+            .map(|c| {
+                generate::<f64>(Pattern::RandomWalk, storm_warm + storm_rounds, 40 + c as u64)
+            })
+            .collect();
+        let ids: Vec<u64> = (0..storm_streams)
+            .map(|_| svc.submit_stream(m, None).unwrap())
+            .collect();
+        for (w, &id) in ids.iter().enumerate() {
+            let job = svc.append_stream(id, &tapes[w][..storm_warm]).unwrap();
+            svc.wait(job).unwrap().profile.unwrap();
+        }
+        let mut pending = VecDeque::new();
+        let t0 = Instant::now();
+        for r in 0..storm_rounds {
+            for (w, &id) in ids.iter().enumerate() {
+                loop {
+                    match svc.append_stream(id, &[tapes[w][storm_warm + r]]) {
+                        Ok(j) => {
+                            pending.push_back(j);
+                            break;
+                        }
+                        Err(SubmitError::Backpressure) => {
+                            let j = pending.pop_front().unwrap();
+                            svc.wait(j).unwrap().profile.unwrap();
+                        }
+                        Err(e) => panic!("storm append: {e}"),
+                    }
+                }
+            }
+        }
+        for j in pending {
+            svc.wait(j).unwrap().profile.unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let mean_width = svc.metrics().coalesce_width.mean();
+        for id in ids {
+            svc.close_stream(id);
+        }
+        svc.shutdown();
+        (wall, mean_width)
+    };
+    let (serial_wall, _) = storm(1);
+    let (group_wall, mean_width) = storm(kernel::BAND);
+    let storm_appends = (storm_streams * storm_rounds) as f64;
+    let coalesce_speedup = serial_wall / group_wall;
+    let mut storm_table = Table::new(&["worker path", "per append", "samples/s", "mean width"]);
+    storm_table.row(&[
+        "serial (coalesce=1)".into(),
+        fmt_time(serial_wall / storm_appends),
+        format!("{:.0}", storm_appends / serial_wall),
+        "1.0".into(),
+    ]);
+    storm_table.row(&[
+        "drain-and-group".into(),
+        fmt_time(group_wall / storm_appends),
+        format!("{:.0}", storm_appends / group_wall),
+        format!("{mean_width:.1}"),
+    ]);
+    storm_table.print(&format!(
+        "cross-stream coalescing: {storm_streams} streams x {storm_rounds} single appends \
+         (m={m}, 1 shard, 1 worker)"
+    ));
+    println!(
+        "coalesced single-append storm speedup over serial worker: {coalesce_speedup:.2}x \
+         (report-only)"
+    );
+
     if json {
         let mut out = String::from(
             "{\n  \"bench\": \"streaming\",\n  \
@@ -519,6 +609,13 @@ fn main() {
         );
         out.push_str(&format!(
             "  \"append_vs_recompute_speedup\": {recompute_speedup:.0},\n"
+        ));
+        out.push_str(&format!(
+            "  \"coalesce_storm\": {{\"streams\": {storm_streams}, \"rounds\": {storm_rounds}, \
+             \"serial_ns_per_append\": {:.0}, \"coalesced_ns_per_append\": {:.0}, \
+             \"speedup\": {coalesce_speedup:.2}, \"mean_width\": {mean_width:.1}}},\n",
+            serial_wall / storm_appends * 1e9,
+            group_wall / storm_appends * 1e9,
         ));
         out.push_str("  \"entries\": [\n");
         for (k, r) in rows.iter().enumerate() {

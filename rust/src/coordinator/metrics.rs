@@ -38,6 +38,21 @@ pub struct ServiceMetrics {
     /// (failed jobs used to skip the histogram entirely, skewing tail
     /// latency optimistic exactly when the service was unhealthy).
     pub latency: LatencyHistogram,
+    /// Single-sample appends that rode a **shared** cross-stream row
+    /// tile (lane width ≥ 2) instead of a width-1 tile of their own —
+    /// the worker drain-and-coalesce fast path.  A subset of the
+    /// appends counted in [`Self::coalesce_width`].
+    pub appends_coalesced: AtomicU64,
+    /// Lane-width distribution of executed appends: every coalescible
+    /// append records the width of the tile it rode (serial appends —
+    /// multi-sample packets, lone jobs, not-ready group members — record
+    /// width 1), so `coalesce_width.count()` is the total append count
+    /// and the histogram shape answers "is the steady state riding wide
+    /// tiles?" directly.
+    pub coalesce_width: WidthHistogram,
+    /// Subscriber snapshot deliveries performed by fanout appends (one
+    /// append computed once, delivered N times — this counts the N's).
+    pub fanout_delivered: AtomicU64,
 }
 
 impl ServiceMetrics {
@@ -98,7 +113,92 @@ impl ServiceMetrics {
         if wal > 0 {
             line.push_str(&format!(" | {wal} WAL ERRORS (durability degraded)"));
         }
+        let coalesced = self.appends_coalesced.load(Ordering::Relaxed);
+        if coalesced > 0 {
+            line.push_str(&format!(
+                " | {coalesced} coalesced (mean width {:.1})",
+                self.coalesce_width.mean()
+            ));
+        }
+        let fanned = self.fanout_delivered.load(Ordering::Relaxed);
+        if fanned > 0 {
+            line.push_str(&format!(" | {fanned} fanout deliveries"));
+        }
         line
+    }
+
+    /// Record one executed append's tile lane width (1 = serial path).
+    /// Ticks [`Self::coalesce_width`], and [`Self::appends_coalesced`]
+    /// when the append actually shared its tile.
+    pub fn record_append_width(&self, width: usize) {
+        self.coalesce_width.record(width);
+        if width >= 2 {
+            self.appends_coalesced.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Tile lane-width histogram: one bucket per possible width `1 ..=
+/// BAND` (the kernel never runs wider sub-tiles; see
+/// [`crate::mp::kernel::BAND`]).  Lock-free like [`LatencyHistogram`],
+/// and exact — per-bucket counts are exposed so the aggregate == Σ
+/// shards invariant can be reconciled bucket by bucket.
+#[derive(Debug)]
+pub struct WidthHistogram {
+    buckets: [AtomicU64; crate::mp::kernel::BAND],
+}
+
+impl Default for WidthHistogram {
+    fn default() -> Self {
+        WidthHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl WidthHistogram {
+    /// Record one append executed on a `width`-lane tile (clamped to
+    /// the top bucket; width 0 is a caller bug, counted as 1).
+    pub fn record(&self, width: usize) {
+        let i = width.clamp(1, self.buckets.len()) - 1;
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Appends recorded at exactly `width` lanes (0 when out of range).
+    pub fn at(&self, width: usize) -> u64 {
+        if width == 0 || width > self.buckets.len() {
+            return 0;
+        }
+        self.buckets[width - 1].load(Ordering::Relaxed)
+    }
+
+    /// Total appends recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Appends that rode a shared tile (width ≥ 2).
+    pub fn coalesced(&self) -> u64 {
+        self.buckets[1..]
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Mean lane width over recorded appends (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let mut n = 0u64;
+        let mut sum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            n += c;
+            sum += c * (i as u64 + 1);
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
     }
 }
 
@@ -219,5 +319,41 @@ mod tests {
         h.record(0.0);
         h.record(1e9);
         assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn width_histogram_is_exact_and_clamped() {
+        let h = WidthHistogram::default();
+        let band = crate::mp::kernel::BAND;
+        h.record(1);
+        h.record(1);
+        h.record(3);
+        h.record(band);
+        h.record(band + 5); // clamped into the top bucket
+        h.record(0); // caller bug, counted as width 1
+        assert_eq!(h.at(1), 3);
+        assert_eq!(h.at(3), 1);
+        assert_eq!(h.at(band), 2);
+        assert_eq!(h.at(0), 0);
+        assert_eq!(h.at(band + 1), 0);
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.coalesced(), 3);
+        let want = (3 + 3 + 2 * band) as f64 / 6.0;
+        assert!((h.mean() - want).abs() < 1e-12, "{}", h.mean());
+    }
+
+    #[test]
+    fn append_width_hook_ticks_coalesced_only_when_shared() {
+        let m = ServiceMetrics::default();
+        m.record_append_width(1);
+        m.record_append_width(1);
+        m.record_append_width(4);
+        m.record_append_width(4);
+        m.record_append_width(4);
+        assert_eq!(m.coalesce_width.count(), 5);
+        assert_eq!(m.appends_coalesced.load(Ordering::Relaxed), 3);
+        assert!(m.summary().contains("3 coalesced"));
+        m.fanout_delivered.fetch_add(7, Ordering::Relaxed);
+        assert!(m.summary().contains("7 fanout deliveries"));
     }
 }

@@ -43,6 +43,44 @@
 //!   representation and each snapshot (the append result's profile,
 //!   `snapshot_stream`) finalizes it with one deferred sqrt pass.
 //!
+//! ## Cross-stream coalescing & snapshot fanout
+//!
+//! A fleet of concurrent *single-append* streams used to execute one
+//! width-1 row tile per append — forfeiting exactly the multi-lane fill
+//! the engine's blocked path wins (`BENCH_streaming.json`).  Each worker
+//! therefore **drains its shard queue opportunistically**: after the
+//! blocking receive it `try_recv`s up to [`ServiceConfig::coalesce`]
+//! more queued jobs, picks out the single-sample appends whose streams
+//! agree on `(m, excl)` and whose turn has come (checked with
+//! `try_lock` only — a worker never blocks while holding another
+//! stream's lock), and applies them as **one shared multi-lane row
+//! tile** ([`crate::natsa::append_group`] →
+//! `mp::kernel::compute_row_group`).  Every member's slot is then
+//! completed individually, per-stream ordering is preserved (a member
+//! is only grouped when it *is* the stream's next turn; everything
+//! else — multi-sample packets, not-ready or key-mismatched appends,
+//! batch jobs — runs on the unchanged serial path afterwards, in drain
+//! order), and each member's resulting state is **bit-identical** to
+//! the isolated append path.  The WAL shape is unchanged (one `Append`
+//! record per member, logged before the tile), so crash recovery
+//! replays to the same bits.  [`ServiceMetrics::coalesce_width`] /
+//! [`ServiceMetrics::appends_coalesced`] report how wide the steady
+//! state actually rides.
+//!
+//! **Snapshot fanout** serves the popular-stream shape (one producer,
+//! N watchers) without multiplying kernel work by N:
+//! [`AnalysisService::subscribe_stream`] registers a bounded
+//! subscriber mailbox; an append submitted via
+//! [`AnalysisService::append_stream_fanout`] computes the post-append
+//! snapshot **once** and delivers it to every live subscriber as a
+//! shared [`Arc`] ([`ServiceMetrics::fanout_delivered`] counts the
+//! deliveries).  Mailboxes are bounded by [`ServiceConfig::result_cap`]
+//! with evict-oldest semantics — a slow subscriber loses old snapshots
+//! (visible via [`AnalysisService::subscription_lag`]) but never stalls
+//! the producing stream.  Closing or quarantining a stream closes its
+//! subscriptions ([`AnalysisService::poll_subscription`] then reports
+//! [`SubRecv::Closed`] once drained).
+//!
 //! Results are delivered through **per-job completion slots**: a slot is
 //! reserved at submit, filled by the worker, and consumed (freed) by
 //! [`AnalysisService::wait`] / [`AnalysisService::poll`].  Unconsumed
@@ -172,6 +210,14 @@ pub struct ServiceConfig {
     /// WAL tuning (snapshot cadence, segment size, fsync policy); only
     /// meaningful together with [`Self::wal_dir`].
     pub wal_opts: WalOptions,
+    /// Most jobs a worker drains from its shard queue per pass for
+    /// cross-stream append coalescing (see the module-level
+    /// "Cross-stream coalescing" section).  Default
+    /// [`crate::mp::kernel::BAND`] — one full lane fill; values beyond
+    /// it still group (the kernel chunks into `BAND`-wide sub-tiles).
+    /// `<= 1` disables the drain pass entirely (every job runs the
+    /// serial path).
+    pub coalesce: usize,
 }
 
 impl Default for ServiceConfig {
@@ -184,6 +230,7 @@ impl Default for ServiceConfig {
             result_ttl: None,
             wal_dir: None,
             wal_opts: WalOptions::default(),
+            coalesce: crate::mp::kernel::BAND,
         }
     }
 }
@@ -227,11 +274,19 @@ impl ServiceConfig {
         self
     }
 
+    /// Cap the per-pass drain width of cross-stream append coalescing
+    /// (`<= 1` disables it).
+    pub fn with_coalesce(mut self, coalesce: usize) -> Self {
+        self.coalesce = coalesce;
+        self
+    }
+
     fn normalized(mut self) -> Self {
         self.shards = self.shards.clamp(1, MAX_SHARDS);
         self.workers_per_shard = self.workers_per_shard.max(1);
         self.queue_depth = self.queue_depth.max(1);
         self.result_cap = self.result_cap.max(1);
+        self.coalesce = self.coalesce.max(1);
         self
     }
 }
@@ -250,7 +305,9 @@ enum JobPayload<T> {
     /// One-shot batch profile.
     Batch { series: Arc<Vec<T>>, m: usize },
     /// Append samples to an open stream (applied in `seq` order).
-    StreamAppend { stream: u64, samples: Vec<T>, seq: u64 },
+    /// `fanout` additionally delivers the post-append snapshot to every
+    /// subscriber of the stream (computed once, delivered N times).
+    StreamAppend { stream: u64, samples: Vec<T>, seq: u64, fanout: bool },
     /// Test-only panic injection: panics in the worker — immediately
     /// (`stream: None`), or after winning the stream's turn while
     /// holding its state lock (`Some`), the worst-case poisoning path.
@@ -395,6 +452,37 @@ impl<T> SlotStore<T> {
     }
 }
 
+/// One subscriber's bounded snapshot mailbox (see the module-level
+/// "snapshot fanout" section): fanout appends push shared `Arc`
+/// snapshots, [`AnalysisService::poll_subscription`] pops them.
+struct SubBox<T> {
+    state: Mutex<SubBoxState<T>>,
+}
+
+struct SubBoxState<T> {
+    queue: VecDeque<Arc<MatrixProfile<T>>>,
+    /// Snapshots evicted because the subscriber fell `result_cap`
+    /// behind (the non-stalling backpressure: oldest dropped first).
+    dropped: u64,
+    /// Unsubscribed, or the stream was closed/quarantined: delivery
+    /// skips the box and poll reports `Closed` once the queue drains.
+    closed: bool,
+}
+
+/// What [`AnalysisService::poll_subscription`] found in the mailbox.
+#[derive(Clone, Debug)]
+pub enum SubRecv<T> {
+    /// The oldest undelivered post-append snapshot (shared, not cloned
+    /// per subscriber).
+    Snapshot(Arc<MatrixProfile<T>>),
+    /// Nothing queued right now; the subscription is live.
+    Empty,
+    /// The subscription is gone — unsubscribed, its stream closed or
+    /// quarantined, or the id was never issued — and the mailbox is
+    /// drained.
+    Closed,
+}
+
 /// One open stream: the session plus the apply-order bookkeeping.
 struct StreamState<T> {
     session: StreamSession<T>,
@@ -405,6 +493,10 @@ struct StreamState<T> {
     /// Appends applied since the last WAL snapshot (cadence counter;
     /// stays 0 while the shard's WAL is off or error-disabled).
     unsnapshotted: u32,
+    /// Live subscriber mailboxes, delivered to under this state lock so
+    /// per-subscriber snapshot order == apply order.  Closed boxes are
+    /// dropped lazily at the next fanout delivery.
+    subs: Vec<(u64, Arc<SubBox<T>>)>,
 }
 
 struct StreamEntry<T> {
@@ -421,6 +513,11 @@ struct StreamEntry<T> {
 struct Shard<T: Real> {
     slots: Mutex<SlotStore<T>>,
     streams: Mutex<HashMap<u64, Arc<StreamEntry<T>>>>,
+    /// Subscription id → mailbox (the poll/unsubscribe index; the
+    /// delivery index lives in each stream's `StreamState::subs`).
+    /// Lock order: a stream's `state` lock may be held when taking
+    /// this lock (subscribe does), never the reverse.
+    subs: Mutex<HashMap<u64, Arc<SubBox<T>>>>,
     metrics: ServiceMetrics,
     /// `None` = WAL off.  The inner `Option` goes `None` after the first
     /// write error (durability disabled for the shard, service alive).
@@ -471,6 +568,7 @@ pub struct AnalysisService<T: Real> {
     workers: Vec<std::thread::JoinHandle<()>>,
     next_job_seq: AtomicU64,
     next_stream_seq: AtomicU64,
+    next_sub_seq: AtomicU64,
     /// Rotating tie-breaker for least-loaded batch routing.
     rr: AtomicU64,
     /// Shard k's slice of the engine configuration (remainder PUs are
@@ -548,6 +646,7 @@ impl<T: Real> AnalysisService<T> {
                                         next_seq,
                                         closed: false,
                                         unsnapshotted: 0,
+                                        subs: Vec::new(),
                                     }),
                                     cv: Condvar::new(),
                                     submit_seq: Mutex::new(next_seq),
@@ -582,6 +681,7 @@ impl<T: Real> AnalysisService<T> {
             let shard = Arc::new(Shard {
                 slots: Mutex::new(SlotStore::new()),
                 streams: Mutex::new(streams),
+                subs: Mutex::new(HashMap::new()),
                 metrics: ServiceMetrics::default(),
                 wal: wal_writer,
             });
@@ -604,6 +704,7 @@ impl<T: Real> AnalysisService<T> {
             workers,
             next_job_seq: AtomicU64::new(1),
             next_stream_seq: AtomicU64::new(max_stream_seq + 1),
+            next_sub_seq: AtomicU64::new(1),
             rr: AtomicU64::new(0),
             shard_configs,
             svc,
@@ -654,6 +755,7 @@ impl<T: Real> AnalysisService<T> {
                 next_seq: 0,
                 closed: false,
                 unsnapshotted: 0,
+                subs: Vec::new(),
             }),
             cv: Condvar::new(),
             submit_seq: Mutex::new(0),
@@ -691,6 +793,25 @@ impl<T: Real> AnalysisService<T> {
     /// fire-and-forget feeding plus [`Self::snapshot_stream`] reads no
     /// longer leak.
     pub fn append_stream(&self, stream: u64, samples: &[T]) -> Result<u64, SubmitError> {
+        self.append_stream_inner(stream, samples, false)
+    }
+
+    /// Like [`Self::append_stream`], additionally delivering the
+    /// post-append snapshot to every live subscriber of the stream
+    /// (registered via [`Self::subscribe_stream`]): the append — and
+    /// its snapshot — is computed **once**, then handed to N mailboxes
+    /// as a shared `Arc`.  Single-sample fanout appends coalesce onto
+    /// shared row tiles like plain appends.
+    pub fn append_stream_fanout(&self, stream: u64, samples: &[T]) -> Result<u64, SubmitError> {
+        self.append_stream_inner(stream, samples, true)
+    }
+
+    fn append_stream_inner(
+        &self,
+        stream: u64,
+        samples: &[T],
+        fanout: bool,
+    ) -> Result<u64, SubmitError> {
         let shard_idx = shard_of(stream);
         let shard = self.shards.get(shard_idx).ok_or(SubmitError::UnknownStream)?;
         let entry = lock_ok(&shard.streams)
@@ -703,7 +824,7 @@ impl<T: Real> AnalysisService<T> {
         let seq = *seq_guard;
         let result = self.try_enqueue(
             shard_idx,
-            JobPayload::StreamAppend { stream, samples: samples.to_vec(), seq },
+            JobPayload::StreamAppend { stream, samples: samples.to_vec(), seq, fanout },
         );
         match result {
             Ok(_) => *seq_guard += 1,
@@ -714,6 +835,82 @@ impl<T: Real> AnalysisService<T> {
             Err(_) => {}
         }
         result
+    }
+
+    /// Register a snapshot subscriber on `stream`; returns the
+    /// subscription id for [`Self::poll_subscription`] /
+    /// [`Self::unsubscribe`].  Every subsequent
+    /// [`Self::append_stream_fanout`] on the stream delivers its
+    /// post-append snapshot into this subscription's bounded mailbox
+    /// (at most [`ServiceConfig::result_cap`] retained; oldest evicted
+    /// first — see [`Self::subscription_lag`]).
+    pub fn subscribe_stream(&self, stream: u64) -> Result<u64, SubmitError> {
+        let shard_idx = shard_of(stream);
+        let shard = self.shards.get(shard_idx).ok_or(SubmitError::UnknownStream)?;
+        let entry = lock_ok(&shard.streams)
+            .get(&stream)
+            .cloned()
+            .ok_or(SubmitError::UnknownStream)?;
+        let seq = self.next_sub_seq.fetch_add(1, Ordering::Relaxed);
+        let id = (seq << SHARD_BITS) | shard_idx as u64;
+        let sb = Arc::new(SubBox {
+            state: Mutex::new(SubBoxState { queue: VecDeque::new(), dropped: 0, closed: false }),
+        });
+        // Registration is atomic under the stream's state lock (the
+        // documented state → subs-map order): a close racing in behind
+        // us finds the box in `subs` and closes it properly.
+        let mut st = lock_ok(&entry.state);
+        if st.closed {
+            return Err(SubmitError::UnknownStream);
+        }
+        st.subs.push((id, sb.clone()));
+        lock_ok(&shard.subs).insert(id, sb);
+        Ok(id)
+    }
+
+    /// Tear down a subscription.  Fanout deliveries skip it from now on
+    /// (and drop it from the stream's delivery list at the next fanout);
+    /// queued-but-unpolled snapshots are discarded.  Returns whether the
+    /// id was live.
+    pub fn unsubscribe(&self, sub: u64) -> bool {
+        let Some(shard) = self.shards.get(shard_of(sub)) else {
+            return false;
+        };
+        match lock_ok(&shard.subs).remove(&sub) {
+            Some(sb) => {
+                lock_ok(&sb.state).closed = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Take the oldest undelivered snapshot from a subscription's
+    /// mailbox (never blocks — see [`SubRecv`]).  After the stream is
+    /// closed or quarantined, queued snapshots remain pollable until
+    /// drained, then [`SubRecv::Closed`].
+    pub fn poll_subscription(&self, sub: u64) -> SubRecv<T> {
+        let Some(shard) = self.shards.get(shard_of(sub)) else {
+            return SubRecv::Closed;
+        };
+        let Some(sb) = lock_ok(&shard.subs).get(&sub).cloned() else {
+            return SubRecv::Closed;
+        };
+        let mut b = lock_ok(&sb.state);
+        match b.queue.pop_front() {
+            Some(p) => SubRecv::Snapshot(p),
+            None if b.closed => SubRecv::Closed,
+            None => SubRecv::Empty,
+        }
+    }
+
+    /// Snapshots this subscription has lost to the bounded mailbox
+    /// (evict-oldest backpressure).  `None` for unknown/torn-down ids.
+    pub fn subscription_lag(&self, sub: u64) -> Option<u64> {
+        let shard = self.shards.get(shard_of(sub))?;
+        let sb = lock_ok(&shard.subs).get(&sub).cloned()?;
+        let b = lock_ok(&sb.state);
+        Some(b.dropped)
     }
 
     /// The standard pipelined feeding loop over [`Self::append_stream`]:
@@ -851,6 +1048,7 @@ impl<T: Real> AnalysisService<T> {
                 let mut st = lock_ok(&e.state);
                 st.closed = true;
                 shard.with_wal(&self.aggregate, |w| w.log_close(stream));
+                close_subscriptions(&mut st);
                 drop(st);
                 e.cv.notify_all();
                 true
@@ -1055,79 +1253,382 @@ fn worker_loop<T: Real>(
 ) {
     let engine = NatsaEngine::<T>::new(config);
     loop {
-        let job = match lock_ok(&rx).recv() {
-            Ok(j) => j,
-            Err(_) => return, // channel closed
-        };
-        let Job { id, payload, submitted, slot } = job;
-        // Which stream to quarantine if execution panics below.
-        let panic_stream = match &payload {
-            JobPayload::StreamAppend { stream, .. } => Some(*stream),
-            #[cfg(test)]
-            JobPayload::Panic { stream, .. } => *stream,
-            JobPayload::Batch { .. } => None,
-        };
-        let mut queue_wait = submitted.elapsed().as_secs_f64();
-        let start = Instant::now();
-        // Panic containment: a panicking job is a FAILED job, not a dead
-        // worker — without this, the panic poisons the shard's mutexes
-        // and every later wait/poll/append on the shard panics too.
-        let outcome = catch_unwind(AssertUnwindSafe(|| match payload {
-            JobPayload::Batch { series, m } => (
-                engine
-                    .compute(&series, m)
-                    .map(|o| o.profile)
-                    .map_err(|e| e.to_string()),
-                0.0,
-            ),
-            JobPayload::StreamAppend { stream, samples, seq } => {
-                run_stream_append(&shard, &aggregate, stream, &samples, seq, &svc)
+        // Drain pass: block for one job, then opportunistically take up
+        // to `coalesce - 1` more already-queued jobs in the same grab
+        // (never waiting), so a storm of small appends arrives at the
+        // group-forming step together.
+        let batch = {
+            let rx = lock_ok(&rx);
+            let first = match rx.recv() {
+                Ok(j) => j,
+                Err(_) => return, // channel closed
+            };
+            let mut batch = vec![first];
+            while batch.len() < svc.coalesce {
+                match rx.try_recv() {
+                    Ok(j) => batch.push(j),
+                    Err(_) => break,
+                }
             }
-            #[cfg(test)]
-            JobPayload::Panic { stream, seq } => run_injected_panic(&shard, stream, seq),
-        }));
-        let (profile, turn_wait) = match outcome {
-            Ok(r) => r,
-            Err(cause) => {
+            batch
+        };
+        let rest = if batch.len() >= 2 {
+            run_group_pass(&shard, &aggregate, batch, &svc)
+        } else {
+            batch
+        };
+        // Whatever did not make the group — multi-sample packets, batch
+        // jobs, not-ready or key-mismatched appends — runs the serial
+        // path in drain order (group members' sequence numbers were
+        // already advanced above, so a leftover append behind a grouped
+        // one finds its turn ready).
+        for job in rest {
+            execute_one(job, &shard, &aggregate, &engine, &svc);
+        }
+    }
+}
+
+/// Run one job through the serial path: panic containment, quarantine,
+/// metrics, bounded retention, slot fill (the pre-coalescing worker
+/// body, one job at a time).
+fn execute_one<T: Real>(
+    job: Job<T>,
+    shard: &Arc<Shard<T>>,
+    aggregate: &ServiceMetrics,
+    engine: &NatsaEngine<T>,
+    svc: &ServiceConfig,
+) {
+    let Job { id, payload, submitted, slot } = job;
+    // Which stream to quarantine if execution panics below.
+    let panic_stream = match &payload {
+        JobPayload::StreamAppend { stream, .. } => Some(*stream),
+        #[cfg(test)]
+        JobPayload::Panic { stream, .. } => *stream,
+        JobPayload::Batch { .. } => None,
+    };
+    let mut queue_wait = submitted.elapsed().as_secs_f64();
+    let start = Instant::now();
+    // Panic containment: a panicking job is a FAILED job, not a dead
+    // worker — without this, the panic poisons the shard's mutexes
+    // and every later wait/poll/append on the shard panics too.
+    let outcome = catch_unwind(AssertUnwindSafe(|| match payload {
+        JobPayload::Batch { series, m } => (
+            engine
+                .compute(&series, m)
+                .map(|o| o.profile)
+                .map_err(|e| e.to_string()),
+            0.0,
+        ),
+        JobPayload::StreamAppend { stream, samples, seq, fanout } => {
+            run_stream_append(shard, aggregate, stream, &samples, seq, fanout, svc)
+        }
+        #[cfg(test)]
+        JobPayload::Panic { stream, seq } => run_injected_panic(shard, stream, seq),
+    }));
+    let (profile, turn_wait) = match outcome {
+        Ok(r) => r,
+        Err(cause) => {
+            shard.metrics.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+            aggregate.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+            if let Some(stream) = panic_stream {
+                quarantine_stream(shard, aggregate, stream);
+            }
+            (Err(format!("job panicked: {}", panic_message(&*cause))), 0.0)
+        }
+    };
+    queue_wait += turn_wait;
+    let exec = (start.elapsed().as_secs_f64() - turn_wait).max(0.0);
+    finish_job(shard, aggregate, svc, id, &slot, profile, queue_wait, exec);
+}
+
+/// Account one finished job and publish its result: outcome metrics
+/// (shard + aggregate), bounded retention bookkeeping, slot fill.
+#[allow(clippy::too_many_arguments)]
+fn finish_job<T: Real>(
+    shard: &Shard<T>,
+    aggregate: &ServiceMetrics,
+    svc: &ServiceConfig,
+    id: u64,
+    slot: &JobSlot<T>,
+    profile: Result<MatrixProfile<T>, String>,
+    queue_wait: f64,
+    exec: f64,
+) {
+    // Failed jobs are finished jobs: they count toward latency and
+    // the wait/exec sums too (see ServiceMetrics), on both the shard
+    // and the aggregate view.
+    let failed = profile.is_err();
+    shard.metrics.record_outcome(failed, queue_wait, exec);
+    aggregate.record_outcome(failed, queue_wait, exec);
+
+    // Bounded retention: count the finished result BEFORE publishing
+    // it, so a fast waiter can never consume (and decrement) a result
+    // that was not yet counted — `consumed()`'s decrement must always
+    // pair with this increment.  Until `fill` below, nothing can
+    // consume the slot; eviction may race ahead of the fill, which
+    // only means an unconsumed result aged out at the instant it was
+    // produced (waiters already holding the slot still receive it).
+    {
+        let mut store = lock_ok(&shard.slots);
+        if store.map.contains_key(&id) {
+            store.done.push_back((id, Instant::now()));
+            store.retained += 1;
+        }
+        store.evict(svc.result_cap, svc.result_ttl);
+    }
+    slot.fill(JobResult {
+        id,
+        profile,
+        queue_wait_s: queue_wait,
+        exec_s: exec,
+    });
+}
+
+/// `try_lock` with [`lock_ok`]'s poison policy; `None` only when the
+/// lock is actually held elsewhere.
+fn try_lock_ok<U>(m: &Mutex<U>) -> Option<MutexGuard<'_, U>> {
+    match m.try_lock() {
+        Ok(g) => Some(g),
+        Err(std::sync::TryLockError::Poisoned(e)) => Some(e.into_inner()),
+        Err(std::sync::TryLockError::WouldBlock) => None,
+    }
+}
+
+/// The cross-stream coalescing pass (see the module docs): pick out of
+/// `batch` the single-sample appends that are ready **right now** —
+/// their stream exists, it is their turn (`seq == next_seq`), the
+/// state lock is free (`try_lock` only: a worker must never block on a
+/// turn while holding other streams' locks), and the stream agrees
+/// with the group's `(m, excl)` key — and apply them as one shared
+/// multi-lane row tile, completing each member's slot individually.
+/// Everything else is returned, in drain order, for the serial path.
+///
+/// Backpressure semantics of a partial group: nothing waits for a
+/// fuller group — whatever is ready rides together *now*, the rest
+/// runs serially right after.  Coalescing changes batching, never
+/// admission (queue bounds and [`SubmitError::Backpressure`] behave
+/// exactly as before).
+fn run_group_pass<T: Real>(
+    shard: &Arc<Shard<T>>,
+    aggregate: &ServiceMetrics,
+    batch: Vec<Job<T>>,
+    svc: &ServiceConfig,
+) -> Vec<Job<T>> {
+    // Resolve candidate streams under one streams-map lock (no state
+    // locks yet).
+    let entries: Vec<Option<Arc<StreamEntry<T>>>> = {
+        let streams = lock_ok(&shard.streams);
+        batch
+            .iter()
+            .map(|j| match &j.payload {
+                JobPayload::StreamAppend { stream, samples, .. } if samples.len() == 1 => {
+                    streams.get(stream).cloned()
+                }
+                _ => None,
+            })
+            .collect()
+    };
+    // Readiness + key filter.  A second append to an already-locked
+    // stream fails its try_lock and falls to the serial path, which
+    // runs after the group — order preserved.
+    let mut guards: Vec<MutexGuard<'_, StreamState<T>>> = Vec::new();
+    let mut member_idx: Vec<usize> = Vec::new();
+    let mut key: Option<(usize, usize)> = None;
+    for (i, entry) in entries.iter().enumerate() {
+        let Some(e) = entry else { continue };
+        let JobPayload::StreamAppend { seq, .. } = &batch[i].payload else {
+            continue;
+        };
+        let Some(st) = try_lock_ok(&e.state) else { continue };
+        if st.closed || st.next_seq != *seq {
+            continue;
+        }
+        let k = (st.session.m(), st.session.exclusion());
+        match key {
+            None => key = Some(k),
+            Some(kk) if kk == k => {}
+            Some(_) => continue,
+        }
+        guards.push(st);
+        member_idx.push(i);
+    }
+    if member_idx.len() < 2 {
+        drop(guards);
+        return batch;
+    }
+    let mut by_idx: Vec<Option<Job<T>>> = batch.into_iter().map(Some).collect();
+    let members: Vec<Job<T>> = member_idx
+        .iter()
+        .map(|&i| by_idx[i].take().expect("member indices are distinct"))
+        .collect();
+    let n = members.len();
+    let queue_waits: Vec<f64> = members
+        .iter()
+        .map(|j| j.submitted.elapsed().as_secs_f64())
+        .collect();
+    let start = Instant::now();
+    // The group apply, panic-contained.  The locks were taken OUTSIDE
+    // the closure, so an unwind cannot poison them; on panic every
+    // member's state is mid-tile and untrustworthy — quarantine them
+    // all (`closed` is set before the locks drop, so no turn-winner
+    // can touch the damaged state in between).
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        // Write-ahead, one record per member — the same WAL shape as
+        // isolated appends, so replay re-applies identically (state →
+        // WAL lock order, as everywhere).
+        for j in &members {
+            let JobPayload::StreamAppend { stream, samples, seq, .. } = &j.payload else {
+                unreachable!("group members are stream appends");
+            };
+            shard.with_wal(aggregate, |w| w.log_append(*stream, *seq, samples));
+        }
+        // One shared tile across every member's lane.
+        let mut sess: Vec<(&mut StreamSession<T>, T)> = guards
+            .iter_mut()
+            .zip(&members)
+            .map(|(g, j)| {
+                let JobPayload::StreamAppend { samples, .. } = &j.payload else {
+                    unreachable!("group members are stream appends");
+                };
+                (&mut g.session, samples[0])
+            })
+            .collect();
+        let report = crate::natsa::append_group(&mut sess);
+        drop(sess);
+        let widths = member_widths(&report);
+        // Per-member completion under the still-held locks: snapshot,
+        // seq bump, WAL snapshot cadence, fanout delivery.
+        let mut done: Vec<(MatrixProfile<T>, usize)> = Vec::with_capacity(n);
+        for ((g, j), &width) in guards.iter_mut().zip(&members).zip(&widths) {
+            let JobPayload::StreamAppend { stream, fanout, .. } = &j.payload else {
+                unreachable!("group members are stream appends");
+            };
+            let snapshot = g.session.profile();
+            g.next_seq += 1;
+            if shard.wal_live() {
+                g.unsnapshotted += 1;
+                if g.unsnapshotted >= svc.wal_opts.snapshot_every.max(1) {
+                    let next_seq = g.next_seq;
+                    let sess_state = g.session.state();
+                    shard.with_wal(aggregate, |w| w.log_snapshot(*stream, next_seq, &sess_state));
+                    g.unsnapshotted = 0;
+                }
+            } else {
+                g.unsnapshotted = 0;
+            }
+            if *fanout {
+                let shared = Arc::new(snapshot.clone());
+                let delivered = deliver_fanout(&mut g.subs, &shared, svc.result_cap);
+                if delivered > 0 {
+                    shard.metrics.fanout_delivered.fetch_add(delivered, Ordering::Relaxed);
+                    aggregate.fanout_delivered.fetch_add(delivered, Ordering::Relaxed);
+                }
+            }
+            done.push((snapshot, width));
+        }
+        done
+    }));
+    match outcome {
+        Ok(done) => {
+            drop(guards);
+            // Wake turn-waiters only after the locks are released.
+            for &i in &member_idx {
+                entries[i].as_ref().expect("member had an entry").cv.notify_all();
+            }
+            let exec_share = start.elapsed().as_secs_f64() / n as f64;
+            for ((job, (snapshot, width)), qw) in members.into_iter().zip(done).zip(queue_waits) {
+                shard.metrics.record_append_width(width);
+                aggregate.record_append_width(width);
+                finish_job(shard, aggregate, svc, job.id, &job.slot, Ok(snapshot), qw, exec_share);
+            }
+        }
+        Err(cause) => {
+            for g in guards.iter_mut() {
+                g.closed = true;
+            }
+            drop(guards);
+            let msg = format!("job panicked: {}", panic_message(&*cause));
+            let exec_share = start.elapsed().as_secs_f64() / n as f64;
+            for (job, qw) in members.into_iter().zip(queue_waits) {
+                let JobPayload::StreamAppend { stream, .. } = &job.payload else {
+                    unreachable!("group members are stream appends");
+                };
                 shard.metrics.jobs_panicked.fetch_add(1, Ordering::Relaxed);
                 aggregate.jobs_panicked.fetch_add(1, Ordering::Relaxed);
-                if let Some(stream) = panic_stream {
-                    quarantine_stream(&shard, &aggregate, stream);
-                }
-                (Err(format!("job panicked: {}", panic_message(&*cause))), 0.0)
+                quarantine_stream(shard, aggregate, *stream);
+                finish_job(
+                    shard,
+                    aggregate,
+                    svc,
+                    job.id,
+                    &job.slot,
+                    Err(msg.clone()),
+                    qw,
+                    exec_share,
+                );
             }
-        };
-        queue_wait += turn_wait;
-        let exec = (start.elapsed().as_secs_f64() - turn_wait).max(0.0);
-
-        // Failed jobs are finished jobs: they count toward latency and
-        // the wait/exec sums too (see ServiceMetrics), on both the shard
-        // and the aggregate view.
-        let failed = profile.is_err();
-        shard.metrics.record_outcome(failed, queue_wait, exec);
-        aggregate.record_outcome(failed, queue_wait, exec);
-
-        // Bounded retention: count the finished result BEFORE publishing
-        // it, so a fast waiter can never consume (and decrement) a result
-        // that was not yet counted — `consumed()`'s decrement must always
-        // pair with this increment.  Until `fill` below, nothing can
-        // consume the slot; eviction may race ahead of the fill, which
-        // only means an unconsumed result aged out at the instant it was
-        // produced (waiters already holding the slot still receive it).
-        {
-            let mut store = lock_ok(&shard.slots);
-            if store.map.contains_key(&id) {
-                store.done.push_back((id, Instant::now()));
-                store.retained += 1;
-            }
-            store.evict(svc.result_cap, svc.result_ttl);
         }
-        slot.fill(JobResult {
-            id,
-            profile,
-            queue_wait_s: queue_wait,
-            exec_s: exec,
-        });
+    }
+    by_idx.into_iter().flatten().collect()
+}
+
+/// Map a group report's lane-chunk widths back to per-member widths:
+/// admitted non-first-window members occupy the kernel lanes in member
+/// order (chunked `<= BAND` wide); warm-up and first-window members
+/// never entered a shared tile and count as width 1.
+fn member_widths(report: &crate::mp::stampi::GroupAppendReport) -> Vec<usize> {
+    let mut per_lane: Vec<usize> = Vec::new();
+    for &w in &report.widths {
+        for _ in 0..w {
+            per_lane.push(w);
+        }
+    }
+    let mut lanes = per_lane.into_iter();
+    report
+        .windows
+        .iter()
+        .map(|k| match k {
+            Some(k) if *k > 0 => lanes.next().unwrap_or(1),
+            _ => 1,
+        })
+        .collect()
+}
+
+/// Deliver one shared snapshot to every live subscriber mailbox of a
+/// stream (caller holds the stream's state lock).  Closed boxes are
+/// dropped from the delivery list; full boxes evict their oldest
+/// snapshot (counted in `dropped`) instead of stalling the producer.
+/// Returns the number of deliveries performed.
+fn deliver_fanout<T>(
+    subs: &mut Vec<(u64, Arc<SubBox<T>>)>,
+    snapshot: &Arc<MatrixProfile<T>>,
+    cap: usize,
+) -> u64 {
+    let mut delivered = 0u64;
+    subs.retain(|(_, sb)| {
+        let mut b = lock_ok(&sb.state);
+        if b.closed {
+            return false;
+        }
+        if b.queue.len() >= cap.max(1) {
+            b.queue.pop_front();
+            b.dropped += 1;
+        }
+        b.queue.push_back(snapshot.clone());
+        delivered += 1;
+        true
+    });
+    delivered
+}
+
+/// Close every subscription of a stream (caller holds its state lock):
+/// drop them from the delivery list and mark the boxes closed.  Already
+/// -queued snapshots stay pollable (the boxes stay in the shard's poll
+/// index until the client `unsubscribe`s); new deliveries stop
+/// immediately.
+fn close_subscriptions<T>(st: &mut StreamState<T>) {
+    for (_, sb) in st.subs.drain(..) {
+        lock_ok(&sb.state).closed = true;
     }
 }
 
@@ -1154,6 +1655,10 @@ fn quarantine_stream<T: Real>(shard: &Shard<T>, aggregate: &ServiceMetrics, stre
         let mut st = lock_ok(&e.state);
         st.closed = true;
         shard.with_wal(aggregate, |w| w.log_close(stream));
+        // A quarantined stream drops its subscriptions: its snapshots
+        // can no longer be produced, so subscribers see `Closed` (after
+        // draining what was already delivered).
+        close_subscriptions(&mut st);
         drop(st);
         e.cv.notify_all();
     }
@@ -1202,6 +1707,7 @@ fn run_stream_append<T: Real>(
     stream: u64,
     samples: &[T],
     seq: u64,
+    fanout: bool,
     svc: &ServiceConfig,
 ) -> (Result<MatrixProfile<T>, String>, f64) {
     let entry = match lock_ok(&shard.streams).get(&stream).cloned() {
@@ -1225,6 +1731,18 @@ fn run_stream_append<T: Real>(
     state.session.extend(samples);
     let snapshot = state.session.profile();
     state.next_seq += 1;
+    // This append ran the serial path: width 1 in the coalescing story
+    // (the group pass records the lane width its members actually rode).
+    shard.metrics.record_append_width(1);
+    aggregate.record_append_width(1);
+    if fanout {
+        let shared = Arc::new(snapshot.clone());
+        let delivered = deliver_fanout(&mut state.subs, &shared, svc.result_cap);
+        if delivered > 0 {
+            shard.metrics.fanout_delivered.fetch_add(delivered, Ordering::Relaxed);
+            aggregate.fanout_delivered.fetch_add(delivered, Ordering::Relaxed);
+        }
+    }
     // Snapshot cadence only ticks while the WAL is live — with it off
     // (or disabled by an earlier write error) the counter stays 0, as
     // its doc promises, instead of counting toward u32 overflow and
@@ -1662,6 +2180,31 @@ mod tests {
         assert!(s.wait(id).unwrap().profile.is_ok());
         assert!(s.close_stream(b));
         assert_eq!(s.metrics().in_flight(), 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn quarantined_stream_drops_its_subscriptions() {
+        // a panic-quarantined stream can never produce snapshots again:
+        // its subscribers must drain what was delivered, then see Closed
+        let s = AnalysisService::<f64>::start(NatsaConfig::default().with_threads(1), 1, 16);
+        let a = s.submit_stream(16, None).unwrap();
+        let id = s.append_stream(a, &generate::<f64>(Pattern::RandomWalk, 64, 5)).unwrap();
+        assert!(s.wait(id).unwrap().profile.is_ok());
+        let sub = s.subscribe_stream(a).unwrap();
+        let id = s.append_stream_fanout(a, &[0.25]).unwrap();
+        assert!(s.wait(id).unwrap().profile.is_ok());
+        assert_eq!(s.metrics().fanout_delivered.load(Ordering::Relaxed), 1);
+        let bad = s.append_stream_panic(a).unwrap();
+        assert!(s.wait(bad).unwrap().profile.is_err());
+        // the pre-quarantine delivery drains, then the box reports Closed
+        assert!(matches!(s.poll_subscription(sub), SubRecv::Snapshot(_)));
+        assert!(matches!(s.poll_subscription(sub), SubRecv::Closed));
+        // and a fresh fanout append can no longer deliver anywhere
+        assert_eq!(s.append_stream_fanout(a, &[1.0]), Err(SubmitError::UnknownStream));
+        assert_eq!(s.metrics().fanout_delivered.load(Ordering::Relaxed), 1);
+        assert!(s.unsubscribe(sub), "box stays registered until unsubscribed");
+        assert!(matches!(s.poll_subscription(sub), SubRecv::Closed));
         s.shutdown();
     }
 

@@ -75,8 +75,18 @@
 //! fleet), optionally with a per-shard write-ahead log
 //! ([`coordinator::wal`], enabled by
 //! `ServiceConfig::with_wal(dir)`) that replays every open session
-//! bit-identically after a crash or restart.  `benches/streaming.rs`
-//! measures the incremental-vs-recompute gap plus shard scaling.
+//! bit-identically after a crash or restart.  Shard workers **coalesce
+//! across streams**: concurrent single-sample appends with compatible
+//! configuration are drained from the queue together and fused into one
+//! shared multi-lane row tile ([`mp::kernel::compute_row_group`];
+//! per-stream order and bit-identity preserved, widths observable in
+//! the `coalesce_width` metric), so the no-batching steady state still
+//! rides the blocked path.  A popular stream fans out: subscribers
+//! registered with `subscribe_stream` receive each
+//! `append_stream_fanout` snapshot computed once and delivered N ways
+//! through bounded mailboxes (`poll_subscription`).
+//! `benches/streaming.rs` measures the incremental-vs-recompute gap,
+//! shard scaling, and the coalescing storm.
 //!
 //! ## Planes
 //!

@@ -662,6 +662,181 @@ pub fn scalar_row<T: Real>(tile: RowTile<'_, T>, m: usize, excl: usize, work: &m
     work.first_dots += 1;
 }
 
+/// One stream's lane of a cross-stream group tile (see
+/// [`compute_row_group`]): the stream's single freshly-admitted row as a
+/// [`RowTile`], plus that stream's own [`WorkStats`] accumulator — lanes
+/// belong to *different* sessions, so work cannot be pooled the way
+/// [`compute_row_n`]'s single accumulator pools rows of one stream.
+pub struct GroupLane<'a, T> {
+    pub tile: RowTile<'a, T>,
+    pub work: &'a mut WorkStats,
+}
+
+/// Advance several **independent streams** by one freshly-admitted row
+/// each, as shared multi-lane tiles — the cross-stream member of the
+/// kernel family (the service's append-coalescing hot path).
+///
+/// [`compute_row_n`] widens a tile with *consecutive rows of one
+/// stream*: lane `w` pulls its Eq. 2 chain from lane `w-1`, which is
+/// what forces `rows <= excl` for order-free merges.  Here every lane is
+/// a *different* stream's newest row over that stream's own retained
+/// history, so the lanes share no state at all: each lane replicates
+/// [`scalar_row`]'s exact operation order (the in-place descending q
+/// advance, the seed dot at column 0, the ascending evaluate-and-merge
+/// walk with strict-`<` ties), merely interleaved column-lockstep across
+/// lanes so `W` independent delta chains and running-minimum chains
+/// amortize each other's FP latency — the same lane-fill economics as
+/// the batch band tiles, with **no** width constraint from `excl` and no
+/// dtype/m/excl mixing (the caller groups compatible streams; `m` and
+/// `excl` here are the group's shared values).
+///
+/// Per lane, the result (profile bits, neighbor indices, q chain,
+/// [`WorkStats`]) is **bit-identical** to a [`scalar_row`] call on that
+/// lane alone, by construction — pinned for every group width by the
+/// property test below.  Lanes wider than [`BAND`] are chunked into
+/// `<= BAND` sub-tiles (monomorphized like every other entry point);
+/// warm-up lanes (`k < excl`, including a stream's very first window)
+/// are legal and charge nothing, exactly like the scalar walk.
+pub fn compute_row_group<T: Real>(lanes: &mut [GroupLane<'_, T>], m: usize, excl: usize) {
+    let mut rest = lanes;
+    while !rest.is_empty() {
+        let w = rest.len().min(BAND);
+        let (chunk, tail) = rest.split_at_mut(w);
+        match w {
+            1 => group_w::<T, 1>(chunk, m, excl),
+            2 => group_w::<T, 2>(chunk, m, excl),
+            3 => group_w::<T, 3>(chunk, m, excl),
+            4 => group_w::<T, 4>(chunk, m, excl),
+            5 => group_w::<T, 5>(chunk, m, excl),
+            6 => group_w::<T, 6>(chunk, m, excl),
+            7 => group_w::<T, 7>(chunk, m, excl),
+            8 => group_w::<T, 8>(chunk, m, excl),
+            _ => unreachable!("chunk width {w} out of 1..={BAND}"),
+        }
+        rest = tail;
+    }
+}
+
+/// The width-generic pipeline behind [`compute_row_group`]: `W`
+/// independent [`scalar_row`] walks interleaved column-lockstep.  The
+/// per-lane hoisted constants (`hi_k`, `lo_k`, folded Eq. 1 stats,
+/// running row minima) live in fixed-size arrays so they stay
+/// register-resident like [`row_w`]'s lane state.
+fn group_w<T: Real, const W: usize>(lanes: &mut [GroupLane<'_, T>], m: usize, excl: usize) {
+    debug_assert_eq!(lanes.len(), W);
+    let zero = T::zero();
+    let two_m = T::of_f64(2.0 * m as f64);
+    let mut k_l = [0usize; W];
+    let mut hi_k = [zero; W];
+    let mut lo_k = [zero; W];
+    let mut za_k = [zero; W];
+    let mut zb_k = [zero; W];
+    for (w, lane) in lanes.iter().enumerate() {
+        let tile = &lane.tile;
+        let nw = tile.za.len();
+        assert!(
+            nw >= 1
+                && tile.zb.len() == nw
+                && tile.q.len() == nw
+                && tile.p.len() == nw
+                && tile.i.len() == nw,
+            "group lane {w}: window arrays disagree"
+        );
+        assert!(
+            tile.t.len() >= nw + m - 1,
+            "group lane {w}: t too short: {} < {}",
+            tile.t.len(),
+            nw + m - 1
+        );
+        let k = nw - 1;
+        k_l[w] = k;
+        hi_k[w] = tile.t[k + m - 1];
+        lo_k[w] = if k > 0 { tile.t[k - 1] } else { zero };
+        za_k[w] = tile.za[k];
+        zb_k[w] = tile.zb[k];
+    }
+    let k_max = k_l.iter().copied().max().unwrap_or(0);
+
+    // Phase A — every lane's in-place q advance, lockstep by
+    // distance-from-top so each lane still walks ITS columns descending
+    // (reading the old q[j-1] before any write lands on it — exactly
+    // scalar_row's STOMP row trick, delta association included).
+    for s in 0..k_max {
+        for (w, lane) in lanes.iter_mut().enumerate() {
+            let k = k_l[w];
+            if s < k {
+                let j = k - s;
+                let t = lane.tile.t;
+                lane.tile.q[j] =
+                    lane.tile.q[j - 1] + (t[j + m - 1] * hi_k[w] - t[j - 1] * lo_k[w]);
+            }
+        }
+    }
+    for (w, lane) in lanes.iter_mut().enumerate() {
+        lane.tile.q[0] = seed_dot(lane.tile.t, k_l[w], m);
+    }
+
+    // Closed-form accounting per lane — scalar_row's charges, into each
+    // stream's own accumulator; warm-up lanes (k < excl) cost nothing.
+    for (w, lane) in lanes.iter_mut().enumerate() {
+        let k = k_l[w];
+        if k >= excl {
+            let c = (k - excl + 1) as u64;
+            lane.work.cells += c;
+            lane.work.updates += 2 * c;
+            lane.work.diagonals += 1;
+            lane.work.first_dots += 1;
+        }
+    }
+
+    // Phase B — evaluate + merge, lockstep ascending j: W independent
+    // running-minimum chains interleave where a single lane's chain
+    // would serialize on its own compare latency.  Strict-`<` on both
+    // sides keeps scalar_row's tie order per lane.
+    let mut pk = [zero; W];
+    let mut ik = [0i64; W];
+    let mut hi_j = [0usize; W];
+    let mut live = [false; W];
+    let mut j_max = 0usize;
+    let mut any = false;
+    for (w, lane) in lanes.iter().enumerate() {
+        if k_l[w] >= excl {
+            live[w] = true;
+            hi_j[w] = k_l[w] - excl;
+            j_max = j_max.max(hi_j[w]);
+            pk[w] = lane.tile.p[k_l[w]];
+            ik[w] = lane.tile.i[k_l[w]];
+            any = true;
+        }
+    }
+    if !any {
+        return;
+    }
+    for j in 0..=j_max {
+        for (w, lane) in lanes.iter_mut().enumerate() {
+            if live[w] && j <= hi_j[w] {
+                let tile = &mut lane.tile;
+                let d = (two_m - tile.q[j] * tile.za[j] * za_k[w] + tile.zb[j] * zb_k[w])
+                    .max(zero);
+                if d < tile.p[j] {
+                    tile.p[j] = d;
+                    tile.i[j] = tile.base + k_l[w] as i64;
+                }
+                if d < pk[w] {
+                    pk[w] = d;
+                    ik[w] = tile.base + j as i64;
+                }
+            }
+        }
+    }
+    for (w, lane) in lanes.iter_mut().enumerate() {
+        if live[w] {
+            lane.tile.p[k_l[w]] = pk[w];
+            lane.tile.i[k_l[w]] = ik[w];
+        }
+    }
+}
+
 /// The pre-kernel per-cell hot loop, retained as the differential oracle
 /// and the perf baseline: one `znorm_sqdist` + branchy two-sided
 /// [`MatrixProfile::update`] + per-cell [`WorkStats`] charges, with the
@@ -1256,5 +1431,137 @@ mod tests {
         rev.sqrt_in_place();
         assert!(fwd.max_abs_diff(&rev) == 0.0);
         assert_eq!(fwd.i, rev.i);
+    }
+
+    /// Grow every still-short lane by one window and run ONE group tile
+    /// over the active lanes (the cross-stream driver the service's
+    /// coalescing loop mirrors).  Returns how many lanes participated.
+    fn group_step<T: Real>(
+        series: &[Vec<T>],
+        sts: &[WindowStats<T>],
+        states: &mut [RowState<T>],
+        m: usize,
+        excl: usize,
+    ) -> usize {
+        let grew: Vec<bool> = states
+            .iter_mut()
+            .zip(sts)
+            .map(|(s, st)| {
+                if s.p.len() < st.len() {
+                    s.q.push(T::zero());
+                    s.p.push(T::infinity());
+                    s.i.push(-1);
+                    true
+                } else {
+                    false
+                }
+            })
+            .collect();
+        let mut lanes: Vec<GroupLane<'_, T>> = states
+            .iter_mut()
+            .enumerate()
+            .filter(|(w, _)| grew[*w])
+            .map(|(w, s)| {
+                let nw = s.p.len();
+                let RowState { q, p, i, work } = s;
+                GroupLane {
+                    tile: RowTile {
+                        t: &series[w][..nw + m - 1],
+                        za: &sts[w].za[..nw],
+                        zb: &sts[w].zb[..nw],
+                        q,
+                        p,
+                        i,
+                        base: 0,
+                    },
+                    work,
+                }
+            })
+            .collect();
+        let n = lanes.len();
+        compute_row_group(&mut lanes, m, excl);
+        n
+    }
+
+    #[test]
+    fn prop_group_tile_bit_identical_to_per_stream_scalar_rows() {
+        // The cross-stream tentpole invariant: a group tile over N
+        // INDEPENDENT streams leaves each stream exactly the state its
+        // own scalar row walk leaves — profile bits, neighbor indices,
+        // q chains, and per-stream WorkStats — across group widths both
+        // below and above BAND (exercising the chunked dispatch),
+        // heterogeneous stream lengths (lanes drop out at different
+        // steps), and warm-up lanes with zero admissible cells.
+        check("group-tile-bits", 6, |rng: &mut Rng| {
+            let m = rng.range(4, 24);
+            let excl = rng.range(1, BAND + 3).min(m);
+            let lanes = rng.range(2, 2 * BAND + 3); // spans > BAND
+            let series: Vec<Vec<f64>> = (0..lanes)
+                .map(|_| {
+                    let n = rng.range(m + 1, 160);
+                    rng.gauss_vec(n)
+                })
+                .collect();
+            let sts: Vec<WindowStats<f64>> =
+                series.iter().map(|t| sliding_stats(t, m)).collect();
+            let mut grp: Vec<RowState<f64>> = (0..lanes).map(|_| RowState::new()).collect();
+            let mut orc: Vec<RowState<f64>> = (0..lanes).map(|_| RowState::new()).collect();
+            while group_step(&series, &sts, &mut grp, m, excl) > 0 {}
+            for (w, st) in sts.iter().enumerate() {
+                for _ in 0..st.len() {
+                    orc[w].oracle_row(&series[w], st, excl);
+                }
+            }
+            for w in 0..lanes {
+                assert_eq!(grp[w].bits(), orc[w].bits(), "lane {w} of {lanes}, m={m} excl={excl}");
+                assert_eq!(grp[w].work, orc[w].work, "lane {w} accounting");
+            }
+        });
+    }
+
+    #[test]
+    fn group_tile_on_constant_plateau_keeps_scalar_tie_order() {
+        // all-constant streams make every admissible cell an exact tie
+        // (d² = 2m degeneracy); each lane's argmin choices must still
+        // match its own scalar walk bit-for-bit
+        let m = 8;
+        let excl = 3;
+        let series: Vec<Vec<f64>> = (0..5).map(|w| vec![w as f64 + 1.0; 60]).collect();
+        let sts: Vec<WindowStats<f64>> = series.iter().map(|t| sliding_stats(t, m)).collect();
+        let mut grp: Vec<RowState<f64>> = (0..5).map(|_| RowState::new()).collect();
+        let mut orc: Vec<RowState<f64>> = (0..5).map(|_| RowState::new()).collect();
+        while group_step(&series, &sts, &mut grp, m, excl) > 0 {}
+        for (w, st) in sts.iter().enumerate() {
+            for _ in 0..st.len() {
+                orc[w].oracle_row(&series[w], st, excl);
+            }
+        }
+        for w in 0..5 {
+            assert_eq!(grp[w].bits(), orc[w].bits(), "lane {w}");
+        }
+    }
+
+    #[test]
+    fn group_tile_bit_identical_f32() {
+        // single-precision spot check of the cross-stream invariant
+        let mut rng = Rng::new(59);
+        let m = 12;
+        let excl = 3;
+        let series: Vec<Vec<f32>> = (0..9)
+            .map(|_| rng.gauss_vec(140).iter().map(|&x| x as f32).collect())
+            .collect();
+        let sts: Vec<WindowStats<f32>> = series.iter().map(|t| sliding_stats(t, m)).collect();
+        let mut grp: Vec<RowState<f32>> = (0..9).map(|_| RowState::new()).collect();
+        let mut orc: Vec<RowState<f32>> = (0..9).map(|_| RowState::new()).collect();
+        while group_step(&series, &sts, &mut grp, m, excl) > 0 {}
+        for (w, st) in sts.iter().enumerate() {
+            for _ in 0..st.len() {
+                orc[w].oracle_row(&series[w], st, excl);
+            }
+        }
+        for w in 0..9 {
+            assert_eq!(grp[w].bits(), orc[w].bits(), "lane {w}");
+            assert_eq!(grp[w].work, orc[w].work, "lane {w}");
+        }
     }
 }

@@ -727,6 +727,32 @@ impl<T: Real> Stampi<T> {
         completed
     }
 
+    /// Borrow this session's state as one lane of a cross-stream group
+    /// tile (see [`kernel::compute_row_group`] and [`append_group`]):
+    /// the same one-range-check-per-ring slice views [`Self::run_rows`]
+    /// builds, bundled with this session's own work accumulator.  Only
+    /// valid right after [`Self::admit`] returned `Some` (the newest
+    /// window's slots exist, its row has not run yet).
+    fn lane(&mut self) -> kernel::GroupLane<'_, T> {
+        let n = self.t.next_index();
+        let j0 = self.p.first_index();
+        let wend = self.p.next_index();
+        debug_assert_eq!(wend, n - self.m + 1);
+        debug_assert_eq!(j0, self.t.first_index());
+        kernel::GroupLane {
+            tile: RowTile {
+                t: self.t.slice(j0, n),
+                za: self.za.slice(j0, wend),
+                zb: self.zb.slice(j0, wend),
+                q: self.q.slice_mut(j0, wend),
+                p: self.p.slice_mut(j0, wend),
+                i: self.i.slice_mut(j0, wend),
+                base: j0 as i64,
+            },
+            work: &mut self.work,
+        }
+    }
+
     /// Snapshot the live profile.  Position `r` of the result is window
     /// `first_window() + r`, and neighbor indices are rebased to the same
     /// positions, so the snapshot is a self-consistent [`MatrixProfile`]
@@ -757,6 +783,97 @@ impl<T: Real> Stampi<T> {
         mp.sqrt_in_place();
         mp
     }
+}
+
+/// What one [`append_group`] pass did — the coalescing evidence the
+/// service's metrics consume.  All three vectors are per-call; `windows`
+/// and `cells` are indexed like the `members` slice.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GroupAppendReport {
+    /// Per member: `Some(window)` when its sample completed a window —
+    /// the same contract as [`Stampi::append`]'s return.
+    pub windows: Vec<Option<usize>>,
+    /// Per member: admissible cells its row evaluated (0 for warm-up).
+    pub cells: Vec<u64>,
+    /// Kernel lane width of each sub-tile the group rode (chunks of up
+    /// to [`BAND`] lanes; only rows past their stream's first window
+    /// join a tile) — feeds the service's coalesce-width histogram.
+    pub widths: Vec<usize>,
+}
+
+/// Advance several **independent** sessions by one sample each on shared
+/// multi-lane kernel tiles ([`kernel::compute_row_group`]) — the
+/// cross-stream analogue of [`Stampi::extend`]'s within-stream blocking,
+/// and the engine half of the service's append-coalescing drain loop.
+///
+/// Every member must share the group key (`m`, `excl`); histories,
+/// history bounds, and stream ages are free to differ per member.  Each
+/// member's step is exactly [`Stampi::append`]'s: admit (rolling stats +
+/// fresh slots — `None` pre-warm-up skips everything, a first window
+/// seeds its q slot without a tile), one row through the kernel, then
+/// [`Stampi::maintain`] at per-append granularity — so eviction
+/// boundaries and rolling-sum re-anchoring land exactly where the
+/// isolated path lands them.  Only the row itself is shared: admitted
+/// rows of all members execute as one [`kernel::compute_row_group`]
+/// call, whose lanes are bit-identical to per-lane scalar walks by
+/// construction.
+///
+/// Net effect, pinned by the property test below and
+/// `rust/tests/coalesce.rs`: every member ends **bit-identical** —
+/// profile bits, neighbor indices, q chains, rolling sums, and work
+/// accounting — to `member.append(x)` applied on its own.
+pub fn append_group<T: Real>(members: &mut [(&mut Stampi<T>, T)]) -> GroupAppendReport {
+    let mut report = GroupAppendReport::default();
+    if members.is_empty() {
+        return report;
+    }
+    let m = members[0].0.m;
+    let excl = members[0].0.excl;
+    for (s, _) in members.iter() {
+        assert!(
+            s.m == m && s.excl == excl,
+            "append_group key mismatch: expected (m={m}, excl={excl}), got (m={}, excl={})",
+            s.m,
+            s.excl
+        );
+    }
+    // Phase 1 — admit every sample.  A member's very first window takes
+    // `append`'s seed-only path (q[0] = self dot, no tile, no work).
+    let admitted: Vec<Option<usize>> = members.iter_mut().map(|(s, x)| s.admit(*x)).collect();
+    for ((s, _), k) in members.iter_mut().zip(&admitted) {
+        if *k == Some(0) {
+            let q0 = kernel::seed_dot(s.t.slice(0, m), 0, m);
+            s.q.set(0, q0);
+        }
+    }
+    let before: Vec<u64> = members.iter().map(|(s, _)| s.work.cells).collect();
+    // Phase 2 — every admitted non-first row joins ONE shared group
+    // tile (chunked into <= BAND-lane sub-tiles by the kernel).
+    {
+        let mut lanes: Vec<kernel::GroupLane<'_, T>> = members
+            .iter_mut()
+            .zip(&admitted)
+            .filter(|(_, k)| k.is_some_and(|k| k > 0))
+            .map(|((s, _), _)| s.lane())
+            .collect();
+        let mut left = lanes.len();
+        while left > 0 {
+            let w = left.min(BAND);
+            report.widths.push(w);
+            left -= w;
+        }
+        kernel::compute_row_group(&mut lanes, m, excl);
+    }
+    // Phase 3 — per-member post-row bookkeeping, exactly `append`'s
+    // maintain(k, 1) (bounded-history eviction + re-anchor cadence).
+    for (w, (s, _)) in members.iter_mut().enumerate() {
+        report.cells.push(s.work.cells - before[w]);
+        if let Some(k) = admitted[w] {
+            s.maintain(k, 1);
+        }
+    }
+    report.windows = admitted;
+    report
 }
 
 #[cfg(test)]
@@ -875,6 +992,106 @@ mod tests {
             assert_eq!(bits(&a), bits(&b), "m={m} n={n}");
             assert_eq!(a.work(), b.work(), "m={m} n={n}");
         });
+    }
+
+    #[test]
+    fn prop_append_group_bit_identical_to_isolated_appends() {
+        // The cross-stream tentpole pin at engine level: feeding N
+        // independent sessions through shared group tiles — with members
+        // joining mid-stream, bounded histories compacting at different
+        // times, and warm-up members in the mix — leaves every session
+        // exactly the state its own per-sample appends leave: profile
+        // bits, neighbor indices, q chains, rolling sums, and work.
+        check("stampi-group-bits", 6, |rng: &mut Rng| {
+            let m = rng.range(4, 24);
+            let n_streams = rng.range(2, 12);
+            let steps = rng.range(3 * m, 300);
+            let series: Vec<Vec<f64>> = (0..n_streams).map(|_| rng.gauss_vec(steps)).collect();
+            let cfg = |rng: &mut Rng| {
+                let mut c = StampiConfig::new(m);
+                if rng.range(0, 2) == 1 {
+                    c = c.with_max_history(rng.range(m + m / 4 + 1, 4 * m));
+                }
+                c
+            };
+            let cfgs: Vec<StampiConfig> = (0..n_streams).map(|_| cfg(rng)).collect();
+            let mut grouped: Vec<Stampi<f64>> =
+                cfgs.iter().map(|&c| Stampi::new(c).unwrap()).collect();
+            let mut isolated: Vec<Stampi<f64>> =
+                cfgs.iter().map(|&c| Stampi::new(c).unwrap()).collect();
+            // members join the group at random offsets, so group widths
+            // vary step to step and lanes sit at different stream ages
+            let starts: Vec<usize> = (0..n_streams).map(|_| rng.range(0, 2 * m)).collect();
+            for step in 0..steps {
+                let mut members: Vec<(&mut Stampi<f64>, f64)> = grouped
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(w, _)| starts[*w] <= step)
+                    .map(|(w, s)| (s, series[w][step]))
+                    .collect();
+                append_group(&mut members);
+                drop(members);
+                for (w, s) in isolated.iter_mut().enumerate() {
+                    if starts[w] <= step {
+                        s.append(series[w][step]);
+                    }
+                }
+            }
+            let bits = |e: &Stampi<f64>| -> (Vec<u64>, Vec<u64>, Vec<i64>, u64, u64) {
+                (
+                    e.p.to_vec().iter().map(|x| x.to_bits()).collect(),
+                    e.q.to_vec().iter().map(|x| x.to_bits()).collect(),
+                    e.i.to_vec(),
+                    e.s.to_bits(),
+                    e.s2.to_bits(),
+                )
+            };
+            for w in 0..n_streams {
+                assert_eq!(bits(&grouped[w]), bits(&isolated[w]), "stream {w}, m={m}");
+                assert_eq!(grouped[w].work(), isolated[w].work(), "stream {w} accounting");
+                assert_eq!(grouped[w].first_window(), isolated[w].first_window());
+            }
+        });
+    }
+
+    #[test]
+    fn append_group_rejects_mixed_keys_and_handles_empty() {
+        let mut a = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+        let mut b = Stampi::<f64>::new(StampiConfig::new(8).with_excl(5)).unwrap();
+        let r = append_group::<f64>(&mut []);
+        assert!(r.windows.is_empty() && r.widths.is_empty());
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut members = vec![(&mut a, 1.0), (&mut b, 2.0)];
+            append_group(&mut members);
+        }));
+        assert!(caught.is_err(), "mixed (m, excl) group must be rejected");
+    }
+
+    #[test]
+    fn append_group_reports_sub_band_and_chunked_widths() {
+        // 20 mature streams: one pass must ride 8+8+4 lane sub-tiles;
+        // warm-up members must not occupy lanes
+        let m = 8;
+        let mut streams: Vec<Stampi<f64>> = (0..20)
+            .map(|_| Stampi::new(StampiConfig::new(m)).unwrap())
+            .collect();
+        let mut rng = Rng::new(94);
+        for s in streams.iter_mut().take(18) {
+            s.extend(&rng.gauss_vec(4 * m)); // mature: every append completes a window
+        }
+        // streams 18, 19 stay empty (warm-up: admit returns None)
+        let xs: Vec<f64> = (0..20).map(|_| rng.gauss()).collect();
+        let mut members: Vec<(&mut Stampi<f64>, f64)> = streams
+            .iter_mut()
+            .zip(xs.iter().copied())
+            .map(|(s, x)| (s, x))
+            .collect();
+        let report = append_group(&mut members);
+        assert_eq!(report.widths, vec![8, 8, 2]);
+        assert_eq!(report.windows.iter().filter(|w| w.is_some()).count(), 18);
+        assert_eq!(report.windows[18], None);
+        assert!(report.cells[18] == 0 && report.cells[19] == 0);
+        assert!(report.cells[..18].iter().all(|&c| c > 0));
     }
 
     #[test]

@@ -274,6 +274,17 @@ impl<T: Real> StreamSession<T> {
         self.core.first_window()
     }
 
+    /// Window length `m` (the cross-stream coalescing group key, with
+    /// [`Self::exclusion`] and the dtype).
+    pub fn m(&self) -> usize {
+        self.core.m()
+    }
+
+    /// Exclusion-zone half-width.
+    pub fn exclusion(&self) -> usize {
+        self.core.exclusion()
+    }
+
     /// Aggregate functional work so far (drives the timing models).
     pub fn work(&self) -> WorkStats {
         self.core.work()
@@ -340,6 +351,35 @@ impl<T: Real> StreamSession<T> {
         };
         Ok(StreamSession { core, pu_cells, rr })
     }
+}
+
+/// Append one sample to each of N sessions through **shared** row tiles
+/// (the cross-stream analogue of [`StreamSession::extend`]'s blocked
+/// path): all members must agree on `(m, excl)`, and each member's
+/// resulting state is bit-identical to an isolated
+/// [`StreamSession::append`] of the same sample — see
+/// [`crate::mp::stampi::append_group`] for the engine-level contract.
+/// Per-PU cell attribution stays per-member (each member deals its own
+/// row's cells to its own fleet view), so the load-balance evidence is
+/// unchanged by coalescing.
+///
+/// Returns the engine report: per-member completed windows, per-member
+/// evaluated cells, and the lane widths of the shared sub-tiles.
+pub fn append_group<T: Real>(
+    members: &mut [(&mut StreamSession<T>, T)],
+) -> crate::mp::stampi::GroupAppendReport {
+    let mut cores: Vec<(&mut Stampi<T>, T)> = members
+        .iter_mut()
+        .map(|(s, x)| (&mut s.core, *x))
+        .collect();
+    let report = crate::mp::stampi::append_group(&mut cores);
+    drop(cores);
+    for ((s, _), &cells) in members.iter_mut().zip(&report.cells) {
+        if cells > 0 {
+            s.rr = stride_deal(s.rr, cells, &mut s.pu_cells);
+        }
+    }
+    report
 }
 
 /// Deal `cells` to the PUs: the whole share to everyone, the remainder to
@@ -598,6 +638,45 @@ mod tests {
         assert_eq!(tiny.threads, Some(1));
         // shards = 0 is treated as 1 (no division)
         assert_eq!(base.shard_slice(0, 0).pus, 48);
+    }
+
+    #[test]
+    fn session_group_append_matches_isolated_and_keeps_attribution() {
+        // The service-facing wrapper: shared tiles leave every member's
+        // profile AND per-PU attribution exactly as isolated appends do
+        // (each member deals its own row's cells to its own fleet view).
+        let mut rng = Rng::new(58);
+        let engine = NatsaEngine::<f64>::new(NatsaConfig::default().with_pus(4));
+        let n = 6usize;
+        let steps = 80usize;
+        let m = 12usize;
+        let series: Vec<Vec<f64>> = (0..n).map(|_| rng.gauss_vec(steps)).collect();
+        let mut grouped: Vec<StreamSession<f64>> =
+            (0..n).map(|_| engine.open_stream(m).unwrap()).collect();
+        let mut isolated: Vec<StreamSession<f64>> =
+            (0..n).map(|_| engine.open_stream(m).unwrap()).collect();
+        for step in 0..steps {
+            let mut members: Vec<(&mut StreamSession<f64>, f64)> = grouped
+                .iter_mut()
+                .zip(&series)
+                .map(|(s, t)| (s, t[step]))
+                .collect();
+            let report = append_group(&mut members);
+            drop(members);
+            assert!(report.widths.iter().all(|&w| w <= crate::mp::kernel::BAND));
+            for (w, s) in isolated.iter_mut().enumerate() {
+                s.append(series[w][step]);
+            }
+        }
+        for (g, i) in grouped.iter().zip(&isolated) {
+            let (pg, pi) = (g.profile(), i.profile());
+            let bits = |p: &[f64]| p.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+            assert_eq!(bits(&pg.p), bits(&pi.p));
+            assert_eq!(pg.i, pi.i);
+            assert_eq!(g.work(), i.work());
+            assert_eq!(g.pu_cells(), i.pu_cells());
+            assert_eq!(g.pu_cells().iter().sum::<u64>(), g.work().cells);
+        }
     }
 
     #[test]

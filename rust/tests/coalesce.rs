@@ -1,0 +1,294 @@
+//! Cross-stream append coalescing: a storm of concurrent single-sample
+//! appends must ride shared multi-lane row tiles (the drain-and-group
+//! worker path) while every stream's final profile stays bit-identical
+//! to its isolated sequential run.
+
+use std::sync::atomic::Ordering;
+
+use natsa::coordinator::service::{AnalysisService, ServiceConfig};
+use natsa::mp::MatrixProfile;
+use natsa::natsa::{NatsaConfig, NatsaEngine};
+use natsa::prop::Rng;
+use natsa::Real;
+
+/// Exact (bit-level) fingerprint of a profile: values and neighbors.
+/// `f32 -> f64` widening is exact, so comparing the widened bits is the
+/// same as comparing the native ones for either dtype.
+fn bits<T: Real>(p: &MatrixProfile<T>) -> (Vec<u64>, Vec<i64>) {
+    (
+        p.p.iter().map(|&x| x.to_f64s().to_bits()).collect(),
+        p.i.clone(),
+    )
+}
+
+/// The ISSUE acceptance storm: N >= 8 streams on ONE shard, each
+/// appending one sample at a time, submitted back to back so the single
+/// worker's drain pass groups them into multi-lane tiles. The width
+/// histogram must show a width > 1 majority and every stream must end
+/// bit-identical to an isolated engine twin fed the same samples.
+#[test]
+fn single_append_storm_rides_multi_lane_tiles_bit_identically() {
+    let n_streams = 8usize;
+    let m = 16usize;
+    let rounds = 16usize;
+    let svc = AnalysisService::<f64>::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default()
+            .with_shards(1)
+            .with_workers(1)
+            .with_queue_depth(256),
+    );
+    let engine = NatsaEngine::<f64>::new(NatsaConfig::default().with_threads(1));
+
+    let mut rng = Rng::new(7);
+    let warm: Vec<Vec<f64>> = (0..n_streams).map(|_| rng.gauss_vec(3 * m)).collect();
+    let singles: Vec<Vec<f64>> = (0..n_streams).map(|_| rng.gauss_vec(rounds)).collect();
+
+    let ids: Vec<u64> = (0..n_streams)
+        .map(|_| svc.submit_stream(m, None).unwrap())
+        .collect();
+    for (w, &id) in ids.iter().enumerate() {
+        let job = svc.append_stream(id, &warm[w]).unwrap();
+        svc.wait(job).unwrap().profile.unwrap();
+    }
+
+    // round-major submission: any window of <= n_streams consecutive
+    // queue entries covers distinct streams, each at its oldest pending
+    // seq, so full drain passes form full-width groups
+    let mut pending = Vec::with_capacity(n_streams * rounds);
+    for r in 0..rounds {
+        for (w, &id) in ids.iter().enumerate() {
+            pending.push(svc.append_stream(id, &[singles[w][r]]).unwrap());
+        }
+    }
+    for id in pending {
+        svc.wait(id).unwrap().profile.unwrap();
+    }
+
+    // the storm rode shared tiles: width > 1 appends outnumber the
+    // serial stragglers (submission races the first drain pass, so a few
+    // width-1 executions at the front are expected)
+    let h = &svc.shard_metrics(0).coalesce_width;
+    assert!(
+        h.coalesced() > h.at(1),
+        "storm stayed serial: {} coalesced vs {} width-1 (of {})",
+        h.coalesced(),
+        h.at(1),
+        h.count()
+    );
+    assert_eq!(
+        svc.metrics().appends_coalesced.load(Ordering::Relaxed),
+        h.coalesced(),
+        "aggregate counter skewed from the single shard's histogram"
+    );
+
+    // bit-identity against isolated sequential twins
+    for (w, &id) in ids.iter().enumerate() {
+        let mut twin = engine.open_stream(m).unwrap();
+        twin.extend(&warm[w]);
+        for r in 0..rounds {
+            twin.append(singles[w][r]);
+        }
+        let got = svc.snapshot_stream(id).unwrap();
+        assert_eq!(bits(&got), bits(&twin.profile()), "stream {w} diverged");
+        assert!(svc.close_stream(id));
+    }
+    svc.shutdown();
+}
+
+/// Randomized interleavings over streams with MIXED group keys (three
+/// window lengths) plus constant plateau-tie streams and occasional
+/// multi-sample packets. Group formation must filter by key, preserve
+/// per-stream order, and stay bit-identical to sequential twins under
+/// every interleaving — for both dtypes.
+fn interleaved_case<T: Real>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let svc = AnalysisService::<T>::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default()
+            .with_shards(1)
+            .with_workers(2)
+            .with_queue_depth(64),
+    );
+    let engine = NatsaEngine::<T>::new(NatsaConfig::default().with_threads(1));
+
+    // (m, constant-series?) — constants drive plateau ties through the
+    // strict-< merge, where any ordering drift would show up first
+    let specs: [(usize, bool); 9] = [
+        (8, false),
+        (8, true),
+        (8, false),
+        (12, false),
+        (12, true),
+        (12, false),
+        (21, false),
+        (8, false),
+        (12, false),
+    ];
+    let mut streams: Vec<(u64, natsa::natsa::StreamSession<T>, usize, bool)> = specs
+        .iter()
+        .map(|&(m, constant)| {
+            let id = svc.submit_stream(m, None).unwrap();
+            (id, engine.open_stream(m).unwrap(), m, constant)
+        })
+        .collect();
+
+    let steps = 120usize;
+    let mut pending: Vec<u64> = Vec::new();
+    for _ in 0..steps {
+        let mut order: Vec<usize> = (0..streams.len()).collect();
+        rng.shuffle(&mut order);
+        for &w in &order {
+            if rng.range(0, 4) == 0 {
+                continue; // this stream sits the step out
+            }
+            let (id, twin, _m, constant) = &mut streams[w];
+            if rng.range(0, 16) == 0 {
+                // occasional multi-sample packet: must stay on the
+                // serial within-stream path, ordered among the singles
+                let packet: Vec<T> = (0..rng.range(2, 5))
+                    .map(|_| T::of_f64(if *constant { 1.5 } else { rng.gauss() }))
+                    .collect();
+                pending.push(svc.append_stream(*id, &packet).unwrap());
+                twin.extend(&packet);
+            } else {
+                let x = T::of_f64(if *constant { 1.5 } else { rng.gauss() });
+                pending.push(svc.append_stream(*id, &[x]).unwrap());
+                twin.append(x);
+            }
+            if pending.len() >= 48 {
+                for id in pending.drain(..) {
+                    svc.wait(id).unwrap().profile.unwrap();
+                }
+            }
+        }
+    }
+    for id in pending.drain(..) {
+        svc.wait(id).unwrap().profile.unwrap();
+    }
+
+    for (id, twin, m, constant) in &streams {
+        let got = svc.snapshot_stream(*id).unwrap();
+        assert_eq!(
+            bits(&got),
+            bits(&twin.profile()),
+            "m={m} constant={constant} diverged under interleaving"
+        );
+    }
+    assert_eq!(svc.metrics().jobs_failed.load(Ordering::Relaxed), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn randomized_interleavings_bit_identical_f64() {
+    interleaved_case::<f64>(31);
+    interleaved_case::<f64>(32);
+}
+
+#[test]
+fn randomized_interleavings_bit_identical_f32() {
+    interleaved_case::<f32>(41);
+}
+
+/// Back-to-back appends to the SAME stream landing in one drain batch:
+/// only the stream's oldest pending append may join a group; the rest
+/// fall back to the serial path after it, in drain order.
+#[test]
+fn back_to_back_appends_to_one_stream_survive_the_drain_pass() {
+    let m = 8usize;
+    let svc = AnalysisService::<f64>::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default()
+            .with_shards(1)
+            .with_workers(1)
+            .with_queue_depth(32),
+    );
+    let engine = NatsaEngine::<f64>::new(NatsaConfig::default().with_threads(1));
+    let mut rng = Rng::new(13);
+    let warm = rng.gauss_vec(3 * m);
+
+    let a = svc.submit_stream(m, None).unwrap();
+    let b = svc.submit_stream(m, None).unwrap();
+    for &id in &[a, b] {
+        let job = svc.append_stream(id, &warm).unwrap();
+        svc.wait(job).unwrap().profile.unwrap();
+    }
+
+    // stream-major submission: a drain batch holds duplicates of `a`
+    // before it ever sees `b`
+    let tape: Vec<f64> = rng.gauss_vec(4);
+    let mut pending = Vec::new();
+    for &id in &[a, b] {
+        for &x in &tape {
+            pending.push(svc.append_stream(id, &[x]).unwrap());
+        }
+    }
+    for id in pending {
+        svc.wait(id).unwrap().profile.unwrap();
+    }
+
+    for &id in &[a, b] {
+        let mut twin = engine.open_stream(m).unwrap();
+        twin.extend(&warm);
+        for &x in &tape {
+            twin.append(x);
+        }
+        let got = svc.snapshot_stream(id).unwrap();
+        assert_eq!(bits(&got), bits(&twin.profile()), "duplicate-heavy drain reordered a stream");
+    }
+    svc.shutdown();
+}
+
+/// `with_coalesce(1)` turns the drain off: every append executes on the
+/// serial path (width histogram records only width 1) and results are
+/// unchanged.
+#[test]
+fn coalesce_disabled_runs_every_append_serially() {
+    let m = 8usize;
+    let svc = AnalysisService::<f64>::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default()
+            .with_shards(1)
+            .with_workers(1)
+            .with_queue_depth(64)
+            .with_coalesce(1),
+    );
+    let engine = NatsaEngine::<f64>::new(NatsaConfig::default().with_threads(1));
+    let mut rng = Rng::new(29);
+    let warm = rng.gauss_vec(3 * m);
+    let singles = rng.gauss_vec(10);
+
+    let ids: Vec<u64> = (0..4).map(|_| svc.submit_stream(m, None).unwrap()).collect();
+    for &id in &ids {
+        let job = svc.append_stream(id, &warm).unwrap();
+        svc.wait(job).unwrap().profile.unwrap();
+    }
+    let mut pending = Vec::new();
+    for &x in &singles {
+        for &id in &ids {
+            pending.push(svc.append_stream(id, &[x]).unwrap());
+        }
+    }
+    for id in pending {
+        svc.wait(id).unwrap().profile.unwrap();
+    }
+
+    let h = &svc.metrics().coalesce_width;
+    assert_eq!(h.coalesced(), 0, "coalesce=1 still formed a group");
+    assert_eq!(
+        svc.metrics().appends_coalesced.load(Ordering::Relaxed),
+        0
+    );
+    assert_eq!(h.at(1), h.count());
+
+    for &id in &ids {
+        let mut twin = engine.open_stream(m).unwrap();
+        twin.extend(&warm);
+        for &x in &singles {
+            twin.append(x);
+        }
+        let got = svc.snapshot_stream(id).unwrap();
+        assert_eq!(bits(&got), bits(&twin.profile()));
+    }
+    svc.shutdown();
+}

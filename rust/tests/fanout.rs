@@ -1,0 +1,164 @@
+//! Snapshot fanout: one append, N registered subscribers — the profile
+//! is computed once and delivered N times through bounded mailboxes.
+//! Pins the edge cases: unsubscribe mid-stream, slow-subscriber
+//! backpressure that never stalls the producer, and close/quarantine
+//! teardown semantics (drain the queue, then `Closed`).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use natsa::coordinator::service::{AnalysisService, ServiceConfig, SubRecv, SubmitError};
+use natsa::natsa::NatsaConfig;
+use natsa::prop::Rng;
+
+fn service(result_cap: usize) -> AnalysisService<f64> {
+    AnalysisService::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default()
+            .with_shards(1)
+            .with_workers(2)
+            .with_queue_depth(32)
+            .with_result_cap(result_cap),
+    )
+}
+
+/// Open a stream and mature it past warm-up so every later single
+/// append grows the profile by exactly one window.
+fn warm_stream(svc: &AnalysisService<f64>, m: usize) -> u64 {
+    let stream = svc.submit_stream(m, None).unwrap();
+    let warm = Rng::new(stream ^ 0xfa11).gauss_vec(4 * m);
+    let job = svc.append_stream(stream, &warm).unwrap();
+    svc.wait(job).unwrap().profile.unwrap();
+    stream
+}
+
+fn take_snapshot(
+    svc: &AnalysisService<f64>,
+    sub: u64,
+) -> Arc<natsa::mp::MatrixProfile<f64>> {
+    match svc.poll_subscription(sub) {
+        SubRecv::Snapshot(p) => p,
+        other => panic!("expected a snapshot, got {other:?}"),
+    }
+}
+
+#[test]
+fn fanout_computes_once_and_delivers_to_every_subscriber() {
+    let svc = service(1024);
+    let stream = warm_stream(&svc, 16);
+    let subs: Vec<u64> = (0..5).map(|_| svc.subscribe_stream(stream).unwrap()).collect();
+
+    let job = svc.append_stream_fanout(stream, &[0.7]).unwrap();
+    let applied = svc.wait(job).unwrap().profile.unwrap();
+
+    // one append job produced five deliveries — warm + fanout are the
+    // only two jobs this service ever ran
+    assert_eq!(svc.metrics().fanout_delivered.load(Ordering::Relaxed), 5);
+    assert_eq!(svc.metrics().jobs_completed.load(Ordering::Relaxed), 2);
+
+    // every subscriber polls the SAME allocation: computed once,
+    // Arc-shared N ways, never recloned per subscriber
+    let got: Vec<_> = subs.iter().map(|&s| take_snapshot(&svc, s)).collect();
+    for p in &got[1..] {
+        assert!(Arc::ptr_eq(&got[0], p), "snapshot was recomputed per subscriber");
+    }
+    assert_eq!(got[0].p, applied.p);
+    assert_eq!(got[0].i, applied.i);
+    for &s in &subs {
+        assert!(matches!(svc.poll_subscription(s), SubRecv::Empty));
+        assert_eq!(svc.subscription_lag(s), Some(0));
+        assert!(svc.unsubscribe(s));
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn unsubscribe_mid_stream_skips_delivery_without_leaking() {
+    let svc = service(1024);
+    let stream = warm_stream(&svc, 16);
+    let keep = svc.subscribe_stream(stream).unwrap();
+    let gone = svc.subscribe_stream(stream).unwrap();
+
+    let job = svc.append_stream_fanout(stream, &[0.1]).unwrap();
+    svc.wait(job).unwrap().profile.unwrap();
+    assert_eq!(svc.metrics().fanout_delivered.load(Ordering::Relaxed), 2);
+
+    // the subscriber walks away between two appends
+    assert!(svc.unsubscribe(gone));
+    let job = svc.append_stream_fanout(stream, &[0.2]).unwrap();
+    svc.wait(job).unwrap().profile.unwrap();
+    assert_eq!(
+        svc.metrics().fanout_delivered.load(Ordering::Relaxed),
+        3,
+        "delivery was not skipped for the unsubscribed mailbox"
+    );
+
+    // the departed mailbox is gone for good: no queue, no lag, and a
+    // second unsubscribe finds nothing to free
+    assert!(matches!(svc.poll_subscription(gone), SubRecv::Closed));
+    assert_eq!(svc.subscription_lag(gone), None);
+    assert!(!svc.unsubscribe(gone));
+
+    // the remaining subscriber drains both snapshots, in append order
+    let first = take_snapshot(&svc, keep);
+    let second = take_snapshot(&svc, keep);
+    assert_eq!(first.p.len() + 1, second.p.len());
+    assert!(matches!(svc.poll_subscription(keep), SubRecv::Empty));
+    assert!(svc.unsubscribe(keep));
+    svc.shutdown();
+}
+
+#[test]
+fn slow_subscriber_hits_bounded_mailbox_without_stalling_the_producer() {
+    // result_cap doubles as the mailbox bound: a subscriber that never
+    // polls loses the OLDEST snapshots while the producer keeps going
+    let cap = 2usize;
+    let svc = service(cap);
+    let stream = warm_stream(&svc, 16);
+    let lazy = svc.subscribe_stream(stream).unwrap();
+
+    for k in 0..5 {
+        let job = svc.append_stream_fanout(stream, &[k as f64 * 0.3]).unwrap();
+        svc.wait(job).unwrap().profile.unwrap(); // producer never blocks
+    }
+    assert_eq!(svc.metrics().fanout_delivered.load(Ordering::Relaxed), 5);
+    assert_eq!(svc.subscription_lag(lazy), Some(3), "evictions not accounted");
+
+    // the two NEWEST survive; the last one is the live profile
+    let older = take_snapshot(&svc, lazy);
+    let newest = take_snapshot(&svc, lazy);
+    assert!(matches!(svc.poll_subscription(lazy), SubRecv::Empty));
+    assert_eq!(older.p.len() + 1, newest.p.len());
+    let live = svc.snapshot_stream(stream).unwrap();
+    assert_eq!(newest.p, live.p);
+    assert_eq!(newest.i, live.i);
+    assert!(svc.unsubscribe(lazy));
+    svc.shutdown();
+}
+
+#[test]
+fn closing_a_stream_closes_subscriptions_after_drain() {
+    let svc = service(1024);
+    let stream = warm_stream(&svc, 16);
+    let sub = svc.subscribe_stream(stream).unwrap();
+
+    let job = svc.append_stream_fanout(stream, &[1.0]).unwrap();
+    svc.wait(job).unwrap().profile.unwrap();
+    assert!(svc.close_stream(stream));
+
+    // the stream is gone for producers and new subscribers...
+    assert!(matches!(
+        svc.append_stream_fanout(stream, &[2.0]),
+        Err(SubmitError::UnknownStream)
+    ));
+    assert!(matches!(
+        svc.subscribe_stream(stream),
+        Err(SubmitError::UnknownStream)
+    ));
+
+    // ...but queued snapshots stay pollable: drain, then Closed
+    let _last = take_snapshot(&svc, sub);
+    assert!(matches!(svc.poll_subscription(sub), SubRecv::Closed));
+    assert!(svc.unsubscribe(sub), "mailbox must stay claimable after close");
+    svc.shutdown();
+}

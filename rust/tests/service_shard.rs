@@ -42,6 +42,30 @@ fn assert_reconciled(svc: &AnalysisService<f64>) {
         sum(&|k| svc.shard_metrics(k).latency.count()),
         "latency histogram skewed"
     );
+    assert_eq!(
+        agg.appends_coalesced.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).appends_coalesced.load(Ordering::Relaxed)),
+        "appends_coalesced skewed"
+    );
+    assert_eq!(
+        agg.fanout_delivered.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).fanout_delivered.load(Ordering::Relaxed)),
+        "fanout_delivered skewed"
+    );
+    // the width histogram reconciles bucket by bucket, not just in total
+    for w in 1..=natsa::mp::kernel::BAND {
+        assert_eq!(
+            agg.coalesce_width.at(w),
+            sum(&|k| svc.shard_metrics(k).coalesce_width.at(w)),
+            "coalesce_width bucket {w} skewed"
+        );
+    }
+    // coalesced appends are exactly the width >= 2 population
+    assert_eq!(
+        agg.appends_coalesced.load(Ordering::Relaxed),
+        agg.coalesce_width.coalesced(),
+        "appends_coalesced != width>=2 histogram mass"
+    );
 }
 
 /// Pipeline every chunk of `t` into `stream` through the service's
@@ -113,6 +137,31 @@ fn concurrent_streams_across_shards_match_batch_bit_for_bit_in_structure() {
         shards_used.len() >= 2,
         "6 streams landed on one shard: routing is not spreading"
     );
+
+    // exercise the coalescing + fanout counters before reconciling: a
+    // burst of single-sample appends (the coalescible population) and a
+    // subscribed fanout append
+    let stream = svc.submit_stream(m, None).unwrap();
+    let sub = svc.subscribe_stream(stream).unwrap();
+    let warm = generate::<f64>(Pattern::RandomWalk, 64, 123);
+    svc.wait(svc.append_stream(stream, &warm).unwrap()).unwrap().profile.unwrap();
+    let burst: Vec<u64> = (0..24)
+        .map(|k| svc.append_stream(stream, &[k as f64 * 0.1]).unwrap())
+        .collect();
+    for id in burst {
+        svc.wait(id).unwrap().profile.unwrap();
+    }
+    svc.wait(svc.append_stream_fanout(stream, &[0.5]).unwrap())
+        .unwrap()
+        .profile
+        .unwrap();
+    assert_eq!(svc.metrics().fanout_delivered.load(Ordering::Relaxed), 1);
+    assert!(
+        svc.metrics().coalesce_width.count() > 0,
+        "no append recorded a tile width"
+    );
+    assert!(svc.unsubscribe(sub));
+    assert!(svc.close_stream(stream));
 
     assert_eq!(svc.metrics().in_flight(), 0, "jobs unaccounted after drain");
     assert_eq!(svc.metrics().jobs_failed.load(Ordering::Relaxed), 0);
