@@ -1,0 +1,225 @@
+//! Bounded snapshot-fanout mailboxes (one producer, N subscribers).
+//!
+//! Extracted from the service so the delivery protocol is a small,
+//! generic, directly-testable unit: `rust/tests/loom_service.rs`
+//! model-checks producer-vs-poll-vs-unsubscribe interleavings of
+//! exactly these types, and the service instantiates them with
+//! `P = MatrixProfile<T>`.
+//!
+//! Semantics (the module-level "snapshot fanout" section of
+//! [`crate::coordinator::service`] is the user-facing contract):
+//!
+//! * a payload is computed **once** and delivered to every live
+//!   subscriber as a shared `Arc` — [`deliver`] clones the `Arc`, not
+//!   the payload;
+//! * mailboxes are bounded with **evict-oldest** backpressure: a slow
+//!   subscriber loses old snapshots (counted in its saturating lag
+//!   counter, never stalls the producer);
+//! * closing is **drain-then-closed**: already-queued payloads stay
+//!   pollable after `close`, then [`SubRecv::Closed`] forever.
+//!
+//! Lock note: each mailbox has exactly one internal lock and never
+//! takes another lock while holding it — it is a leaf of the
+//! coordinator's lock hierarchy (see `docs/CONCURRENCY.md`).
+
+use std::collections::VecDeque;
+
+use crate::sync::{lock_ok, Arc, Mutex};
+
+/// One subscriber's bounded snapshot mailbox.
+pub struct SubBox<P> {
+    state: Mutex<SubBoxState<P>>,
+}
+
+struct SubBoxState<P> {
+    queue: VecDeque<Arc<P>>,
+    /// Payloads evicted because the subscriber fell `cap` behind (the
+    /// non-stalling backpressure: oldest dropped first).  Saturating —
+    /// a subscriber abandoned for eons reports `u64::MAX`, not zero.
+    dropped: u64,
+    /// Unsubscribed, or the producing stream was closed/quarantined:
+    /// delivery skips the box and poll reports `Closed` once drained.
+    closed: bool,
+}
+
+/// What polling a mailbox found.
+#[derive(Clone, Debug)]
+pub enum SubRecv<P> {
+    /// The oldest undelivered payload (shared, not cloned per
+    /// subscriber).
+    Snapshot(Arc<P>),
+    /// Nothing queued right now; the subscription is live.
+    Empty,
+    /// The subscription is gone — unsubscribed, its stream closed or
+    /// quarantined, or the id was never issued — and the mailbox is
+    /// drained.
+    Closed,
+}
+
+impl<P> SubBox<P> {
+    pub fn new() -> Arc<Self> {
+        Arc::new(SubBox {
+            state: Mutex::new(SubBoxState { queue: VecDeque::new(), dropped: 0, closed: false }),
+        })
+    }
+
+    /// Producer-side: enqueue a shared payload, evicting the oldest
+    /// entry when the box already holds `cap`.  Returns `false` (and
+    /// delivers nothing) when the box is closed — the caller drops it
+    /// from its delivery list.
+    pub fn push(&self, payload: &Arc<P>, cap: usize) -> bool {
+        let mut b = lock_ok(&self.state);
+        if b.closed {
+            return false;
+        }
+        if b.queue.len() >= cap.max(1) {
+            b.queue.pop_front();
+            b.dropped = b.dropped.saturating_add(1);
+        }
+        b.queue.push_back(payload.clone());
+        true
+    }
+
+    /// Subscriber-side: take the oldest undelivered payload (never
+    /// blocks).  After `close`, queued payloads remain pollable until
+    /// drained, then [`SubRecv::Closed`].
+    pub fn poll(&self) -> SubRecv<P> {
+        let mut b = lock_ok(&self.state);
+        match b.queue.pop_front() {
+            Some(p) => SubRecv::Snapshot(p),
+            None if b.closed => SubRecv::Closed,
+            None => SubRecv::Empty,
+        }
+    }
+
+    /// Stop deliveries (unsubscribe / stream close / quarantine).
+    /// Idempotent; queued payloads stay pollable.
+    pub fn close(&self) {
+        lock_ok(&self.state).closed = true;
+    }
+
+    /// Payloads this subscriber has lost to the bounded mailbox.
+    pub fn dropped(&self) -> u64 {
+        lock_ok(&self.state).dropped
+    }
+
+    /// Test/model hook: seed the lag counter (e.g. to its saturation
+    /// boundary) without performing `u64::MAX` deliveries.
+    pub fn set_dropped(&self, dropped: u64) {
+        lock_ok(&self.state).dropped = dropped;
+    }
+}
+
+/// Deliver one shared payload to every live mailbox of a stream (caller
+/// holds the producing stream's state lock, so per-subscriber order ==
+/// apply order).  Closed boxes are dropped from the delivery list; full
+/// boxes evict their oldest payload instead of stalling the producer.
+/// Returns the number of deliveries performed.
+pub fn deliver<P>(subs: &mut Vec<(u64, Arc<SubBox<P>>)>, payload: &Arc<P>, cap: usize) -> u64 {
+    let mut delivered = 0u64;
+    subs.retain(|(_, sb)| {
+        let live = sb.push(payload, cap);
+        if live {
+            delivered += 1;
+        }
+        live
+    });
+    delivered
+}
+
+/// Close every mailbox in a stream's delivery list and empty the list
+/// (stream close / quarantine).  Already-queued payloads stay pollable
+/// — the boxes stay in the shard's poll index until the client
+/// unsubscribes; new deliveries stop immediately.
+pub fn close_all<P>(subs: &mut Vec<(u64, Arc<SubBox<P>>)>) {
+    for (_, sb) in subs.drain(..) {
+        sb.close();
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_poll_fifo_shares_payload() {
+        let sb: Arc<SubBox<u32>> = SubBox::new();
+        let p1 = Arc::new(1u32);
+        let p2 = Arc::new(2u32);
+        assert!(sb.push(&p1, 8));
+        assert!(sb.push(&p2, 8));
+        match sb.poll() {
+            SubRecv::Snapshot(got) => assert!(Arc::ptr_eq(&got, &p1), "shared, in order"),
+            other => panic!("expected snapshot, got {other:?}"),
+        }
+        match sb.poll() {
+            SubRecv::Snapshot(got) => assert!(Arc::ptr_eq(&got, &p2)),
+            other => panic!("expected snapshot, got {other:?}"),
+        }
+        assert!(matches!(sb.poll(), SubRecv::Empty));
+    }
+
+    #[test]
+    fn evict_oldest_counts_lag() {
+        let sb: Arc<SubBox<u32>> = SubBox::new();
+        for i in 0..5u32 {
+            sb.push(&Arc::new(i), 2);
+        }
+        assert_eq!(sb.dropped(), 3);
+        match sb.poll() {
+            SubRecv::Snapshot(got) => assert_eq!(*got, 3, "oldest survivors first"),
+            other => panic!("expected snapshot, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lag_saturates_at_u64_max() {
+        // The boundary the loom modeling pass surfaced: a wrap to 0
+        // would read as "caught up" exactly when the subscriber is
+        // infinitely behind.
+        let sb: Arc<SubBox<u32>> = SubBox::new();
+        sb.set_dropped(u64::MAX - 1);
+        sb.push(&Arc::new(0), 1);
+        sb.push(&Arc::new(1), 1);
+        assert_eq!(sb.dropped(), u64::MAX);
+        sb.push(&Arc::new(2), 1);
+        assert_eq!(sb.dropped(), u64::MAX, "saturate, never wrap");
+    }
+
+    #[test]
+    fn poll_after_close_drains_then_closed() {
+        let sb: Arc<SubBox<u32>> = SubBox::new();
+        sb.push(&Arc::new(7), 4);
+        sb.push(&Arc::new(8), 4);
+        sb.close();
+        assert!(matches!(sb.poll(), SubRecv::Snapshot(_)));
+        assert!(matches!(sb.poll(), SubRecv::Snapshot(_)));
+        assert!(matches!(sb.poll(), SubRecv::Closed));
+        assert!(matches!(sb.poll(), SubRecv::Closed), "closed is terminal");
+        assert!(!sb.push(&Arc::new(9), 4), "no deliveries after close");
+    }
+
+    #[test]
+    fn deliver_skips_and_prunes_closed_boxes() {
+        let a: Arc<SubBox<u32>> = SubBox::new();
+        let b: Arc<SubBox<u32>> = SubBox::new();
+        let mut subs = vec![(1u64, a.clone()), (2u64, b.clone())];
+        b.close();
+        let delivered = deliver(&mut subs, &Arc::new(5), 4);
+        assert_eq!(delivered, 1);
+        assert_eq!(subs.len(), 1, "closed box pruned from delivery list");
+        assert!(matches!(a.poll(), SubRecv::Snapshot(_)));
+        assert!(matches!(b.poll(), SubRecv::Closed));
+    }
+
+    #[test]
+    fn close_all_empties_list_keeps_queues_pollable() {
+        let a: Arc<SubBox<u32>> = SubBox::new();
+        let mut subs = vec![(1u64, a.clone())];
+        a.push(&Arc::new(3), 4);
+        close_all(&mut subs);
+        assert!(subs.is_empty());
+        assert!(matches!(a.poll(), SubRecv::Snapshot(_)));
+        assert!(matches!(a.poll(), SubRecv::Closed));
+    }
+}

@@ -8,7 +8,7 @@
 //! aggregate view needs no cross-shard reads); the invariant `aggregate
 //! counter == Σ shard counters` is pinned by the cross-shard stress test.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::atomic::{AtomicU64, Ordering};
 
 /// Service-level counters (one instance per shard + one aggregate).
 #[derive(Debug, Default)]
@@ -339,6 +339,23 @@ mod tests {
         assert_eq!(h.count(), 6);
         assert_eq!(h.coalesced(), 3);
         let want = (3 + 3 + 2 * band) as f64 / 6.0;
+        assert!((h.mean() - want).abs() < 1e-12, "{}", h.mean());
+    }
+
+    #[test]
+    fn width_histogram_band_edge_buckets_stay_distinct() {
+        // The top bucket is exactly BAND (the full-width tile): it must
+        // not swallow the band-1 near-miss next to it, or the coalescing
+        // acceptance bar ("majority of appends ride full tiles") would
+        // pass on tiles that never actually filled.
+        let h = WidthHistogram::default();
+        let band = crate::mp::kernel::BAND;
+        h.record(band - 1);
+        h.record(band);
+        assert_eq!(h.at(band - 1), 1);
+        assert_eq!(h.at(band), 1);
+        assert_eq!(h.coalesced(), 2);
+        let want = (2 * band - 1) as f64 / 2.0;
         assert!((h.mean() - want).abs() < 1e-12, "{}", h.mean());
     }
 

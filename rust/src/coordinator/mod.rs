@@ -32,13 +32,16 @@
 //! "Durability" section of [`service`]'s module docs for the ordering
 //! contract and failure policy.
 
+pub mod fanout;
 pub mod metrics;
 pub mod service;
+pub mod slots;
 pub mod wal;
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::{lock_ok, thread, Arc, Mutex, OnceLock};
 
 use anyhow::Context;
 
@@ -100,7 +103,7 @@ pub struct PjrtEngine<T: XlaReal> {
 
 struct Pool<T> {
     tx: Option<Sender<PuJob<T>>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<thread::JoinHandle<()>>,
 }
 
 impl<T: XlaReal> Drop for PjrtEngine<T> {
@@ -139,7 +142,7 @@ impl<T: XlaReal> PjrtEngine<T> {
             for _ in 0..self.workers {
                 let rx = rx.clone();
                 let dir = self.artifact_dir.clone();
-                handles.push(std::thread::spawn(move || worker_loop::<T>(rx, dir)));
+                handles.push(thread::spawn(move || worker_loop::<T>(rx, dir)));
             }
             Pool { tx: Some(tx), handles }
         })
@@ -244,7 +247,7 @@ impl<T: XlaReal> PjrtEngine<T> {
 fn worker_loop<T: XlaReal>(rx: Arc<Mutex<Receiver<PuJob<T>>>>, dir: PathBuf) {
     let mut runtime: Option<Runtime> = None;
     loop {
-        let job = match rx.lock().unwrap().recv() {
+        let job = match lock_ok(&rx).recv() {
             Ok(j) => j,
             Err(_) => return, // engine dropped
         };

@@ -125,41 +125,38 @@
 //! the same packet would just re-panic.
 //!
 //! Design notes:
-//! * `std::sync::mpsc` + worker threads (tokio is not in the offline
-//!   vendor set; the queue semantics are identical for this shape),
+//! * channels + worker threads via the [`crate::sync`] facade (tokio is
+//!   not in the offline vendor set; the queue semantics are identical
+//!   for this shape) — which also means the whole protocol layer
+//!   compiles against loom's model checker (`--cfg loom`,
+//!   `rust/tests/loom_service.rs`),
 //! * bounded queues => `submit` fails fast with
 //!   [`SubmitError::Backpressure`] instead of buffering unboundedly,
 //! * each job may carry its own window length and precision is fixed by
 //!   the service's type parameter.
+//!
+//! Concurrency contract — lock hierarchy (`streams` map →
+//! `entry.submit_seq` → `entry.state` → subscriber boxes; `try_lock`
+//! exempt), slot lifecycle, poison policy — is documented in
+//! `docs/CONCURRENCY.md` and enforced by the `tools/lint` scanner plus
+//! the loom models.
 
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
+use crate::coordinator::fanout::{self, SubBox};
 use crate::coordinator::metrics::ServiceMetrics;
+use crate::coordinator::slots::{JobSlot, SlotStore, TakeError};
 use crate::coordinator::wal::{self, StreamMeta, WalOptions, WalWriter};
 use crate::mp::stampi::{Stampi, StampiConfig};
 use crate::mp::MatrixProfile;
 use crate::natsa::{NatsaConfig, NatsaEngine, StreamSession};
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use crate::sync::{lock_ok, thread, try_lock_ok, wait_ok, Arc, Condvar, Mutex, MutexGuard};
 use crate::Real;
-
-/// Lock that shrugs off poisoning: a worker panic is contained by the
-/// quarantine protocol (failed job + quarantined stream), so the guarded
-/// state is still consistent — blocking every later `wait`/`poll`/
-/// `append_stream` on the shard behind a `PoisonError` would turn one
-/// bad job into a dead shard.
-fn lock_ok<'a, U>(m: &'a Mutex<U>) -> MutexGuard<'a, U> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
-
-/// Condvar wait with the same poison policy as [`lock_ok`].
-fn wait_ok<'a, U>(cv: &Condvar, g: MutexGuard<'a, U>) -> MutexGuard<'a, U> {
-    cv.wait(g).unwrap_or_else(|e| e.into_inner())
-}
 
 /// Shard index bits folded into every job/stream id (low bits), so id →
 /// shard routing is a mask, not a table.
@@ -297,7 +294,7 @@ struct Job<T> {
     payload: JobPayload<T>,
     submitted: Instant,
     /// The completion slot reserved at submit time; the worker fills it.
-    slot: Arc<JobSlot<T>>,
+    slot: Arc<JobSlot<JobResult<T>>>,
 }
 
 /// What a job asks for.
@@ -374,114 +371,10 @@ impl std::fmt::Display for WaitError {
     }
 }
 
-/// Per-job completion slot: reserved at submit, filled once by a worker,
-/// consumed exactly once by `wait`/`poll`.
-struct JobSlot<T> {
-    state: Mutex<SlotState<T>>,
-    cv: Condvar,
-}
-
-enum SlotState<T> {
-    Pending,
-    Done(JobResult<T>),
-    Consumed,
-}
-
-impl<T> JobSlot<T> {
-    fn new() -> Arc<Self> {
-        Arc::new(JobSlot { state: Mutex::new(SlotState::Pending), cv: Condvar::new() })
-    }
-
-    /// Worker-side: publish the result and wake every waiter.
-    fn fill(&self, result: JobResult<T>) {
-        let mut state = lock_ok(&self.state);
-        *state = SlotState::Done(result);
-        self.cv.notify_all();
-    }
-}
-
-/// One shard's slot registry: every live slot (pending + finished) plus
-/// the finished-but-unconsumed ids in completion order, so retention can
-/// be bounded by count and by age.
-struct SlotStore<T> {
-    map: HashMap<u64, Arc<JobSlot<T>>>,
-    /// Finished ids in completion order (may contain ids since consumed;
-    /// those are skipped during eviction).
-    done: VecDeque<(u64, Instant)>,
-    /// Finished-and-still-retained results (the number the cap bounds).
-    retained: usize,
-}
-
-impl<T> SlotStore<T> {
-    fn new() -> Self {
-        SlotStore { map: HashMap::new(), done: VecDeque::new(), retained: 0 }
-    }
-
-    /// Drop finished results beyond `cap` (oldest first) or older than
-    /// `ttl`.  Pending jobs are never evicted.
-    fn evict(&mut self, cap: usize, ttl: Option<Duration>) {
-        while let Some(&(id, at)) = self.done.front() {
-            if !self.map.contains_key(&id) {
-                // consumed by wait/poll already: stale bookkeeping
-                self.done.pop_front();
-                continue;
-            }
-            let over_cap = self.retained > cap;
-            let expired = ttl.is_some_and(|limit| at.elapsed() >= limit);
-            if over_cap || expired {
-                self.done.pop_front();
-                self.map.remove(&id);
-                self.retained = self.retained.saturating_sub(1);
-            } else {
-                break;
-            }
-        }
-        // An old-but-unevictable result at the front would otherwise
-        // shield every stale (consumed) entry behind it forever; compact
-        // so the bookkeeping stays O(retained), amortized O(1) per job.
-        if self.done.len() > 2 * self.retained + 16 {
-            self.done.retain(|&(id, _)| self.map.contains_key(&id));
-        }
-    }
-
-    /// Consume (remove) `id`'s slot after its result was taken.
-    fn consumed(&mut self, id: u64) {
-        if self.map.remove(&id).is_some() {
-            self.retained = self.retained.saturating_sub(1);
-        }
-    }
-}
-
-/// One subscriber's bounded snapshot mailbox (see the module-level
-/// "snapshot fanout" section): fanout appends push shared `Arc`
-/// snapshots, [`AnalysisService::poll_subscription`] pops them.
-struct SubBox<T> {
-    state: Mutex<SubBoxState<T>>,
-}
-
-struct SubBoxState<T> {
-    queue: VecDeque<Arc<MatrixProfile<T>>>,
-    /// Snapshots evicted because the subscriber fell `result_cap`
-    /// behind (the non-stalling backpressure: oldest dropped first).
-    dropped: u64,
-    /// Unsubscribed, or the stream was closed/quarantined: delivery
-    /// skips the box and poll reports `Closed` once the queue drains.
-    closed: bool,
-}
-
-/// What [`AnalysisService::poll_subscription`] found in the mailbox.
-#[derive(Clone, Debug)]
-pub enum SubRecv<T> {
-    /// The oldest undelivered post-append snapshot (shared, not cloned
-    /// per subscriber).
-    Snapshot(Arc<MatrixProfile<T>>),
-    /// Nothing queued right now; the subscription is live.
-    Empty,
-    /// The subscription is gone — unsubscribed, its stream closed or
-    /// quarantined, or the id was never issued — and the mailbox is
-    /// drained.
-    Closed,
-}
+/// What [`AnalysisService::poll_subscription`] found in the mailbox
+/// (the generic protocol lives in [`crate::coordinator::fanout`]; the
+/// service instantiates it with the post-append profile snapshot).
+pub type SubRecv<T> = fanout::SubRecv<MatrixProfile<T>>;
 
 /// One open stream: the session plus the apply-order bookkeeping.
 struct StreamState<T> {
@@ -496,7 +389,7 @@ struct StreamState<T> {
     /// Live subscriber mailboxes, delivered to under this state lock so
     /// per-subscriber snapshot order == apply order.  Closed boxes are
     /// dropped lazily at the next fanout delivery.
-    subs: Vec<(u64, Arc<SubBox<T>>)>,
+    subs: Vec<(u64, Arc<SubBox<MatrixProfile<T>>>)>,
 }
 
 struct StreamEntry<T> {
@@ -511,13 +404,13 @@ struct StreamEntry<T> {
 /// One engine shard: queue-fed workers, its own streams, slots, metrics,
 /// and (when durability is on) its WAL writer.
 struct Shard<T: Real> {
-    slots: Mutex<SlotStore<T>>,
+    slots: Mutex<SlotStore<JobResult<T>>>,
     streams: Mutex<HashMap<u64, Arc<StreamEntry<T>>>>,
     /// Subscription id → mailbox (the poll/unsubscribe index; the
     /// delivery index lives in each stream's `StreamState::subs`).
     /// Lock order: a stream's `state` lock may be held when taking
     /// this lock (subscribe does), never the reverse.
-    subs: Mutex<HashMap<u64, Arc<SubBox<T>>>>,
+    subs: Mutex<HashMap<u64, Arc<SubBox<MatrixProfile<T>>>>>,
     metrics: ServiceMetrics,
     /// `None` = WAL off.  The inner `Option` goes `None` after the first
     /// write error (durability disabled for the shard, service alive).
@@ -565,7 +458,7 @@ pub struct AnalysisService<T: Real> {
     txs: Vec<Option<SyncSender<Job<T>>>>,
     shards: Vec<Arc<Shard<T>>>,
     aggregate: Arc<ServiceMetrics>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
     next_job_seq: AtomicU64,
     next_stream_seq: AtomicU64,
     next_sub_seq: AtomicU64,
@@ -690,7 +583,7 @@ impl<T: Real> AnalysisService<T> {
                 let shard = shard.clone();
                 let aggregate = aggregate.clone();
                 let svc = svc.clone();
-                workers.push(std::thread::spawn(move || {
+                workers.push(thread::spawn(move || {
                     worker_loop(rx, shard, aggregate, shard_config, svc);
                 }));
             }
@@ -853,9 +746,7 @@ impl<T: Real> AnalysisService<T> {
             .ok_or(SubmitError::UnknownStream)?;
         let seq = self.next_sub_seq.fetch_add(1, Ordering::Relaxed);
         let id = (seq << SHARD_BITS) | shard_idx as u64;
-        let sb = Arc::new(SubBox {
-            state: Mutex::new(SubBoxState { queue: VecDeque::new(), dropped: 0, closed: false }),
-        });
+        let sb = SubBox::new();
         // Registration is atomic under the stream's state lock (the
         // documented state → subs-map order): a close racing in behind
         // us finds the box in `subs` and closes it properly.
@@ -878,7 +769,7 @@ impl<T: Real> AnalysisService<T> {
         };
         match lock_ok(&shard.subs).remove(&sub) {
             Some(sb) => {
-                lock_ok(&sb.state).closed = true;
+                sb.close();
                 true
             }
             None => false,
@@ -896,12 +787,7 @@ impl<T: Real> AnalysisService<T> {
         let Some(sb) = lock_ok(&shard.subs).get(&sub).cloned() else {
             return SubRecv::Closed;
         };
-        let mut b = lock_ok(&sb.state);
-        match b.queue.pop_front() {
-            Some(p) => SubRecv::Snapshot(p),
-            None if b.closed => SubRecv::Closed,
-            None => SubRecv::Empty,
-        }
+        sb.poll()
     }
 
     /// Snapshots this subscription has lost to the bounded mailbox
@@ -909,8 +795,7 @@ impl<T: Real> AnalysisService<T> {
     pub fn subscription_lag(&self, sub: u64) -> Option<u64> {
         let shard = self.shards.get(shard_of(sub))?;
         let sb = lock_ok(&shard.subs).get(&sub).cloned()?;
-        let b = lock_ok(&sb.state);
-        Some(b.dropped)
+        Some(sb.dropped())
     }
 
     /// The standard pipelined feeding loop over [`Self::append_stream`]:
@@ -987,12 +872,12 @@ impl<T: Real> AnalysisService<T> {
         let tx = self.txs[shard_idx].as_ref().ok_or(SubmitError::Closed)?;
         let seq = self.next_job_seq.fetch_add(1, Ordering::Relaxed);
         let id = (seq << SHARD_BITS) | shard_idx as u64;
-        let slot = JobSlot::new();
-        {
+        let slot = {
             let mut store = lock_ok(&shard.slots);
-            store.map.insert(id, slot.clone());
+            let slot = store.reserve(id);
             store.evict(self.svc.result_cap, self.svc.result_ttl);
-        }
+            slot
+        };
         let job = Job { id, payload, submitted: Instant::now(), slot };
         // Tick submitted BEFORE the send (rolled back on rejection): a
         // worker that finishes the job microseconds after try_send must
@@ -1007,7 +892,7 @@ impl<T: Real> AnalysisService<T> {
             Err(e) => {
                 shard.metrics.jobs_submitted.fetch_sub(1, Ordering::Relaxed);
                 self.aggregate.jobs_submitted.fetch_sub(1, Ordering::Relaxed);
-                lock_ok(&shard.slots).map.remove(&id);
+                lock_ok(&shard.slots).forget(id);
                 match e {
                     TrySendError::Full(_) => Err(SubmitError::Backpressure),
                     TrySendError::Disconnected(_) => Err(SubmitError::Closed),
@@ -1048,7 +933,7 @@ impl<T: Real> AnalysisService<T> {
                 let mut st = lock_ok(&e.state);
                 st.closed = true;
                 shard.with_wal(&self.aggregate, |w| w.log_close(stream));
-                close_subscriptions(&mut st);
+                fanout::close_all(&mut st.subs);
                 drop(st);
                 e.cv.notify_all();
                 true
@@ -1077,43 +962,19 @@ impl<T: Real> AnalysisService<T> {
 
     fn wait_deadline(&self, id: u64, deadline: Option<Instant>) -> Result<JobResult<T>, WaitError> {
         let shard = self.shards.get(shard_of(id)).ok_or(WaitError::Unknown)?;
-        let slot = lock_ok(&shard.slots)
-            .map
-            .get(&id)
-            .cloned()
-            .ok_or(WaitError::Unknown)?;
-        let mut state = lock_ok(&slot.state);
-        // Spurious-wakeup-robust: every iteration re-checks the slot
-        // state first and only then recomputes the remaining budget —
-        // saturating, so a wakeup that lands *past* the deadline yields
-        // a clean Timeout instead of an `Instant` underflow panic.
-        loop {
-            match &*state {
-                SlotState::Done(_) => break,
-                // a racing wait on the same id consumed it first
-                SlotState::Consumed => return Err(WaitError::Unknown),
-                SlotState::Pending => {}
+        // The store lock is dropped before blocking on the slot (the
+        // store and a slot's own lock are never held together — see
+        // [`crate::coordinator::slots`] for the wait loop and its
+        // timeout/consume-exactly-once semantics).
+        let slot = lock_ok(&shard.slots).get(id).ok_or(WaitError::Unknown)?;
+        match slot.take(deadline) {
+            Ok(result) => {
+                lock_ok(&shard.slots).consumed(id);
+                Ok(result)
             }
-            state = match deadline {
-                None => wait_ok(&slot.cv, state),
-                Some(dl) => {
-                    let left = dl.saturating_duration_since(Instant::now());
-                    if left.is_zero() {
-                        return Err(WaitError::Timeout);
-                    }
-                    slot.cv
-                        .wait_timeout(state, left)
-                        .unwrap_or_else(|e| e.into_inner())
-                        .0
-                }
-            };
-        }
-        let done = std::mem::replace(&mut *state, SlotState::Consumed);
-        drop(state);
-        lock_ok(&shard.slots).consumed(id);
-        match done {
-            SlotState::Done(result) => Ok(result),
-            _ => unreachable!("checked Done above"),
+            // a racing wait on the same id consumed it first
+            Err(TakeError::Consumed) => Err(WaitError::Unknown),
+            Err(TakeError::Timeout) => Err(WaitError::Timeout),
         }
     }
 
@@ -1122,18 +983,10 @@ impl<T: Real> AnalysisService<T> {
     /// evicted ids (use [`Self::wait`] to distinguish).
     pub fn poll(&self, id: u64) -> Option<JobResult<T>> {
         let shard = self.shards.get(shard_of(id))?;
-        let slot = lock_ok(&shard.slots).map.get(&id).cloned()?;
-        let mut state = lock_ok(&slot.state);
-        if !matches!(&*state, SlotState::Done(_)) {
-            return None;
-        }
-        let done = std::mem::replace(&mut *state, SlotState::Consumed);
-        drop(state);
+        let slot = lock_ok(&shard.slots).get(id)?;
+        let result = slot.try_take()?;
         lock_ok(&shard.slots).consumed(id);
-        match done {
-            SlotState::Done(result) => Some(result),
-            _ => unreachable!("checked Done above"),
-        }
+        Some(result)
     }
 
     /// Fleet-wide (aggregate) metrics — always `Σ` of the per-shard ones.
@@ -1158,7 +1011,7 @@ impl<T: Real> AnalysisService<T> {
     pub fn retained_results(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| lock_ok(&s.slots).map.len())
+            .map(|s| lock_ok(&s.slots).len())
             .sum()
     }
 
@@ -1349,7 +1202,7 @@ fn finish_job<T: Real>(
     aggregate: &ServiceMetrics,
     svc: &ServiceConfig,
     id: u64,
-    slot: &JobSlot<T>,
+    slot: &JobSlot<JobResult<T>>,
     profile: Result<MatrixProfile<T>, String>,
     queue_wait: f64,
     exec: f64,
@@ -1364,16 +1217,13 @@ fn finish_job<T: Real>(
     // Bounded retention: count the finished result BEFORE publishing
     // it, so a fast waiter can never consume (and decrement) a result
     // that was not yet counted — `consumed()`'s decrement must always
-    // pair with this increment.  Until `fill` below, nothing can
-    // consume the slot; eviction may race ahead of the fill, which
+    // pair with `mark_done`'s increment.  Until `fill` below, nothing
+    // can consume the slot; eviction may race ahead of the fill, which
     // only means an unconsumed result aged out at the instant it was
     // produced (waiters already holding the slot still receive it).
     {
         let mut store = lock_ok(&shard.slots);
-        if store.map.contains_key(&id) {
-            store.done.push_back((id, Instant::now()));
-            store.retained += 1;
-        }
+        store.mark_done(id);
         store.evict(svc.result_cap, svc.result_ttl);
     }
     slot.fill(JobResult {
@@ -1382,16 +1232,6 @@ fn finish_job<T: Real>(
         queue_wait_s: queue_wait,
         exec_s: exec,
     });
-}
-
-/// `try_lock` with [`lock_ok`]'s poison policy; `None` only when the
-/// lock is actually held elsewhere.
-fn try_lock_ok<U>(m: &Mutex<U>) -> Option<MutexGuard<'_, U>> {
-    match m.try_lock() {
-        Ok(g) => Some(g),
-        Err(std::sync::TryLockError::Poisoned(e)) => Some(e.into_inner()),
-        Err(std::sync::TryLockError::WouldBlock) => None,
-    }
 }
 
 /// The cross-stream coalescing pass (see the module docs): pick out of
@@ -1518,7 +1358,7 @@ fn run_group_pass<T: Real>(
             }
             if *fanout {
                 let shared = Arc::new(snapshot.clone());
-                let delivered = deliver_fanout(&mut g.subs, &shared, svc.result_cap);
+                let delivered = fanout::deliver(&mut g.subs, &shared, svc.result_cap);
                 if delivered > 0 {
                     shard.metrics.fanout_delivered.fetch_add(delivered, Ordering::Relaxed);
                     aggregate.fanout_delivered.fetch_add(delivered, Ordering::Relaxed);
@@ -1594,44 +1434,6 @@ fn member_widths(report: &crate::mp::stampi::GroupAppendReport) -> Vec<usize> {
         .collect()
 }
 
-/// Deliver one shared snapshot to every live subscriber mailbox of a
-/// stream (caller holds the stream's state lock).  Closed boxes are
-/// dropped from the delivery list; full boxes evict their oldest
-/// snapshot (counted in `dropped`) instead of stalling the producer.
-/// Returns the number of deliveries performed.
-fn deliver_fanout<T>(
-    subs: &mut Vec<(u64, Arc<SubBox<T>>)>,
-    snapshot: &Arc<MatrixProfile<T>>,
-    cap: usize,
-) -> u64 {
-    let mut delivered = 0u64;
-    subs.retain(|(_, sb)| {
-        let mut b = lock_ok(&sb.state);
-        if b.closed {
-            return false;
-        }
-        if b.queue.len() >= cap.max(1) {
-            b.queue.pop_front();
-            b.dropped += 1;
-        }
-        b.queue.push_back(snapshot.clone());
-        delivered += 1;
-        true
-    });
-    delivered
-}
-
-/// Close every subscription of a stream (caller holds its state lock):
-/// drop them from the delivery list and mark the boxes closed.  Already
-/// -queued snapshots stay pollable (the boxes stay in the shard's poll
-/// index until the client `unsubscribe`s); new deliveries stop
-/// immediately.
-fn close_subscriptions<T>(st: &mut StreamState<T>) {
-    for (_, sb) in st.subs.drain(..) {
-        lock_ok(&sb.state).closed = true;
-    }
-}
-
 /// Best-effort panic payload rendering (the common `&str`/`String` cases).
 fn panic_message(cause: &(dyn std::any::Any + Send)) -> &str {
     if let Some(s) = cause.downcast_ref::<&str>() {
@@ -1658,7 +1460,7 @@ fn quarantine_stream<T: Real>(shard: &Shard<T>, aggregate: &ServiceMetrics, stre
         // A quarantined stream drops its subscriptions: its snapshots
         // can no longer be produced, so subscribers see `Closed` (after
         // draining what was already delivered).
-        close_subscriptions(&mut st);
+        fanout::close_all(&mut st.subs);
         drop(st);
         e.cv.notify_all();
     }
@@ -1737,7 +1539,7 @@ fn run_stream_append<T: Real>(
     aggregate.record_append_width(1);
     if fanout {
         let shared = Arc::new(snapshot.clone());
-        let delivered = deliver_fanout(&mut state.subs, &shared, svc.result_cap);
+        let delivered = fanout::deliver(&mut state.subs, &shared, svc.result_cap);
         if delivered > 0 {
             shard.metrics.fanout_delivered.fetch_add(delivered, Ordering::Relaxed);
             aggregate.fanout_delivered.fetch_add(delivered, Ordering::Relaxed);
@@ -1776,7 +1578,9 @@ mod tests {
 
     /// Spin until the aggregate view shows nothing in flight.
     fn drain(s: &AnalysisService<f64>) {
-        let deadline = Instant::now() + Duration::from_secs(30);
+        let deadline = Instant::now()
+            .checked_add(Duration::from_secs(30))
+            .expect("deadline representable");
         while s.metrics().in_flight() > 0 {
             assert!(Instant::now() < deadline, "service never drained");
             std::thread::sleep(Duration::from_millis(1));

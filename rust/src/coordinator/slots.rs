@@ -1,0 +1,290 @@
+//! Per-job completion slots and their bounded retention store.
+//!
+//! Extracted from the service so the protocol is a small, generic,
+//! directly-testable unit: `rust/tests/loom_service.rs` model-checks
+//! exactly these types (reserve → fill → take vs. eviction vs.
+//! timeout) under loom, and the service instantiates them with
+//! `R = JobResult<T>`.
+//!
+//! ## Slot lifecycle
+//!
+//! ```text
+//!          reserve            fill                take / try_take
+//! (absent) ───────► Pending ───────► Done(result) ───────────────► Consumed
+//!     ▲                                   │
+//!     └─────────── evict (cap/ttl) ◄──────┘        (map entry removed)
+//! ```
+//!
+//! * `fill` happens exactly once (worker side) and wakes every waiter;
+//! * `take` consumes exactly once — a second taker finds `Consumed`
+//!   and reports [`TakeError::Consumed`] instead of blocking;
+//! * eviction only ever removes **finished** results (`Pending` slots
+//!   are never evicted), so a waiter can always distinguish "still in
+//!   flight" from "gone";
+//! * a waiter already holding the slot `Arc` when eviction strikes
+//!   still receives the result — eviction drops the store's reference,
+//!   not the slot.
+//!
+//! Lock order: the store lock (`Mutex<SlotStore>`) and a slot's own
+//! state lock are never held together by this module — callers take
+//! the store lock to look a slot up, drop it, then wait on the slot.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use crate::sync::{lock_ok, wait_ok, wait_timeout_ok, Arc, Condvar, Mutex};
+
+/// Why [`JobSlot::take`] returned no result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TakeError {
+    /// A racing take consumed the result first (or it was already
+    /// consumed earlier) — the slot will never hold a result again.
+    Consumed,
+    /// The deadline passed while the slot was still `Pending`; the
+    /// result is still coming and can be waited on again.
+    Timeout,
+}
+
+/// Per-job completion slot: reserved at submit, filled once by a
+/// worker, consumed exactly once by `wait`/`poll`.
+pub struct JobSlot<R> {
+    state: Mutex<SlotState<R>>,
+    cv: Condvar,
+}
+
+enum SlotState<R> {
+    Pending,
+    Done(R),
+    Consumed,
+}
+
+impl<R> JobSlot<R> {
+    pub fn new() -> Arc<Self> {
+        Arc::new(JobSlot { state: Mutex::new(SlotState::Pending), cv: Condvar::new() })
+    }
+
+    /// Worker-side: publish the result and wake every waiter.
+    pub fn fill(&self, result: R) {
+        let mut state = lock_ok(&self.state);
+        *state = SlotState::Done(result);
+        drop(state);
+        self.cv.notify_all();
+    }
+
+    /// Block until the slot is filled and consume the result; with a
+    /// deadline, give up with [`TakeError::Timeout`] once it passes.
+    ///
+    /// Spurious-wakeup-robust: every iteration re-checks the slot state
+    /// first and only then recomputes the remaining budget —
+    /// saturating, so a wakeup that lands *past* the deadline yields a
+    /// clean timeout instead of an `Instant` underflow panic.
+    pub fn take(&self, deadline: Option<Instant>) -> Result<R, TakeError> {
+        let mut state = lock_ok(&self.state);
+        loop {
+            match &*state {
+                SlotState::Done(_) => break,
+                SlotState::Consumed => return Err(TakeError::Consumed),
+                SlotState::Pending => {}
+            }
+            state = match deadline {
+                None => wait_ok(&self.cv, state),
+                Some(dl) => {
+                    let left = dl.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Err(TakeError::Timeout);
+                    }
+                    wait_timeout_ok(&self.cv, state, left).0
+                }
+            };
+        }
+        match std::mem::replace(&mut *state, SlotState::Consumed) {
+            SlotState::Done(result) => Ok(result),
+            _ => unreachable!("checked Done above"),
+        }
+    }
+
+    /// Non-blocking take: `Some` exactly once, when the slot is `Done`.
+    pub fn try_take(&self) -> Option<R> {
+        let mut state = lock_ok(&self.state);
+        if !matches!(&*state, SlotState::Done(_)) {
+            return None;
+        }
+        match std::mem::replace(&mut *state, SlotState::Consumed) {
+            SlotState::Done(result) => Some(result),
+            _ => unreachable!("checked Done above"),
+        }
+    }
+}
+
+/// One shard's slot registry: every live slot (pending + finished) plus
+/// the finished-but-unconsumed ids in completion order, so retention
+/// can be bounded by count and by age.
+pub struct SlotStore<R> {
+    map: HashMap<u64, Arc<JobSlot<R>>>,
+    /// Finished ids in completion order (may contain ids since
+    /// consumed; those are skipped during eviction).
+    done: VecDeque<(u64, Instant)>,
+    /// Finished-and-still-retained results (the number the cap bounds).
+    retained: usize,
+}
+
+impl<R> Default for SlotStore<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<R> SlotStore<R> {
+    pub fn new() -> Self {
+        SlotStore { map: HashMap::new(), done: VecDeque::new(), retained: 0 }
+    }
+
+    /// Reserve a fresh `Pending` slot for `id` and return it.
+    pub fn reserve(&mut self, id: u64) -> Arc<JobSlot<R>> {
+        let slot = JobSlot::new();
+        self.map.insert(id, slot.clone());
+        slot
+    }
+
+    /// Roll back a reservation whose enqueue was rejected.
+    pub fn forget(&mut self, id: u64) {
+        self.map.remove(&id);
+    }
+
+    /// Look up a live slot (pending or finished-unconsumed).
+    pub fn get(&self, id: u64) -> Option<Arc<JobSlot<R>>> {
+        self.map.get(&id).cloned()
+    }
+
+    /// Record that `id`'s slot was (or is about to be) filled, entering
+    /// it into the bounded retention bookkeeping.  Must be called
+    /// BEFORE the matching [`JobSlot::fill`], so a fast waiter can
+    /// never consume (and decrement) a result that was not yet counted
+    /// — [`Self::consumed`]'s decrement must always pair with this
+    /// increment.
+    pub fn mark_done(&mut self, id: u64) {
+        if self.map.contains_key(&id) {
+            self.done.push_back((id, Instant::now()));
+            self.retained += 1;
+        }
+    }
+
+    /// Drop finished results beyond `cap` (oldest first) or older than
+    /// `ttl`.  Pending jobs are never evicted.
+    pub fn evict(&mut self, cap: usize, ttl: Option<Duration>) {
+        while let Some(&(id, at)) = self.done.front() {
+            if !self.map.contains_key(&id) {
+                // consumed by wait/poll already: stale bookkeeping
+                self.done.pop_front();
+                continue;
+            }
+            let over_cap = self.retained > cap;
+            let expired = ttl.is_some_and(|limit| at.elapsed() >= limit);
+            if over_cap || expired {
+                self.done.pop_front();
+                self.map.remove(&id);
+                self.retained = self.retained.saturating_sub(1);
+            } else {
+                break;
+            }
+        }
+        // An old-but-unevictable result at the front would otherwise
+        // shield every stale (consumed) entry behind it forever; compact
+        // so the bookkeeping stays O(retained), amortized O(1) per job.
+        if self.done.len() > 2 * self.retained + 16 {
+            self.done.retain(|&(id, _)| self.map.contains_key(&id));
+        }
+    }
+
+    /// Consume (remove) `id`'s slot after its result was taken.
+    pub fn consumed(&mut self, id: u64) {
+        if self.map.remove(&id).is_some() {
+            self.retained = self.retained.saturating_sub(1);
+        }
+    }
+
+    /// Live slots (in-flight jobs plus finished-but-unconsumed results).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_then_take_roundtrip() {
+        let mut store: SlotStore<u32> = SlotStore::new();
+        let slot = store.reserve(7);
+        assert_eq!(store.len(), 1);
+        assert!(slot.try_take().is_none(), "pending slot yields nothing");
+        store.mark_done(7);
+        slot.fill(42);
+        assert_eq!(slot.take(None), Ok(42));
+        assert_eq!(slot.take(None), Err(TakeError::Consumed));
+        store.consumed(7);
+        assert_eq!(store.len(), 0);
+    }
+
+    #[test]
+    fn take_deadline_in_past_times_out() {
+        let slot: Arc<JobSlot<u32>> = JobSlot::new();
+        let deadline = Instant::now().checked_add(Duration::ZERO);
+        assert_eq!(slot.take(deadline), Err(TakeError::Timeout));
+    }
+
+    #[test]
+    fn cap_eviction_is_oldest_first_and_skips_pending() {
+        let mut store: SlotStore<u32> = SlotStore::new();
+        let _pending = store.reserve(1);
+        for id in 2..=4u64 {
+            let s = store.reserve(id);
+            store.mark_done(id);
+            s.fill(id as u32);
+        }
+        store.evict(2, None);
+        assert!(store.get(1).is_some(), "pending slot must survive eviction");
+        assert!(store.get(2).is_none(), "oldest finished result evicted");
+        assert!(store.get(3).is_some());
+        assert!(store.get(4).is_some());
+    }
+
+    #[test]
+    fn waiter_holding_slot_survives_eviction() {
+        let mut store: SlotStore<u32> = SlotStore::new();
+        let slot = store.reserve(1);
+        store.mark_done(1);
+        slot.fill(9);
+        store.evict(0, None);
+        assert!(store.get(1).is_none(), "store reference dropped");
+        assert_eq!(slot.take(None), Ok(9), "held Arc still delivers");
+    }
+
+    #[test]
+    fn forget_rolls_back_reservation() {
+        let mut store: SlotStore<u32> = SlotStore::new();
+        store.reserve(5);
+        store.forget(5);
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn done_deque_compacts_consumed_entries() {
+        let mut store: SlotStore<u32> = SlotStore::new();
+        for id in 0..100u64 {
+            let s = store.reserve(id);
+            store.mark_done(id);
+            s.fill(0);
+            s.try_take();
+            store.consumed(id);
+            store.evict(1024, None);
+        }
+        assert_eq!(store.len(), 0);
+        assert!(store.done.len() <= 16, "stale bookkeeping kept: {}", store.done.len());
+    }
+}

@@ -98,6 +98,12 @@
 //!   energy and area models to regenerate the paper's tables and figures
 //!   ([`report`]).
 
+// Policy: the crate is pure safe Rust (zero `unsafe` today) and stays
+// that way — exact FP reproduction plus lock-heavy coordination is
+// exactly where a stray `unsafe` would be hardest to audit.  See
+// README ("Safety & concurrency checking") and docs/CONCURRENCY.md.
+#![forbid(unsafe_code)]
+
 pub mod benchmark;
 pub mod coordinator;
 pub mod mp;
@@ -106,6 +112,7 @@ pub mod prop;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod sync;
 pub mod timeseries;
 
 /// Crate-wide result type (thin wrapper over [`anyhow`]).

@@ -12,10 +12,13 @@
 //! Argument parsing is hand-rolled (`--key value` pairs): the offline
 //! vendor set has no clap.
 
+// Same zero-`unsafe` policy as the library crate (rust/src/lib.rs).
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use std::sync::Arc;
+use natsa::sync::Arc;
 
 use natsa::coordinator::service::{AnalysisService, ServiceConfig, SubmitError};
 use natsa::coordinator::PjrtEngine;

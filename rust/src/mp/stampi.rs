@@ -578,9 +578,13 @@ impl<T: Real> Stampi<T> {
         let mf = m as f64;
         let mean = self.s / mf;
         let var = (self.s2 / mf - mean * mean).max(0.0);
-        let sd = var.sqrt();
+        // One sqrt pair per *completed window* (statistics seeding), not
+        // per profile cell — the deferred-sqrt contract bans sqrt on the
+        // O(n)-per-append distance path, which stays squared.
+        let sd = var.sqrt(); // natsa-lint: allow(hot_sqrt)
         if sd > 0.0 {
             self.za.push(T::of_f64(std::f64::consts::SQRT_2 / sd));
+            // natsa-lint: allow(hot_sqrt)
             self.zb.push(T::of_f64((2.0 * mf).sqrt() * mean / sd));
         } else {
             self.za.push(T::zero());

@@ -18,7 +18,7 @@
 //! stopping — on a 48-PU fleet, ~48x the promised interruption latency.
 //! Now an interruption costs at most one in-flight tile.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::atomic::{AtomicBool, Ordering};
 
 use crate::mp::kernel::compute_band_n;
 use crate::mp::{total_cells, MatrixProfile, MpConfig, WorkStats};

@@ -1,0 +1,329 @@
+//! Synchronization facade: every concurrent module imports its
+//! primitives from here instead of `std::sync`, so the whole crate can
+//! be compiled against [loom](https://docs.rs/loom)'s model-checked
+//! replacements with `RUSTFLAGS="--cfg loom"` (see
+//! `docs/CONCURRENCY.md` and `rust/tests/loom_service.rs`) while normal
+//! builds keep the zero-cost `std` types.
+//!
+//! Two things live here besides the re-exports:
+//!
+//! * the crate's **poison policy** ([`lock_ok`] / [`wait_ok`] /
+//!   [`try_lock_ok`] / [`wait_timeout_ok`]): a worker panic is contained
+//!   by the quarantine protocol (failed job + quarantined stream), so
+//!   guarded state is still consistent — blocking every later
+//!   `wait`/`poll`/`append_stream` behind a `PoisonError` would turn one
+//!   bad job into a dead shard.  The repo lint (`tools/lint`) rejects
+//!   naked `.lock().unwrap()` / Condvar-wait unwraps outside this
+//!   module, so the policy cannot silently regress;
+//! * a `cfg(loom)` [`mpsc`] shim: loom has no channel types, so under
+//!   the model checker the std channel API is emulated on loom's own
+//!   `Mutex`/`Condvar` (same blocking semantics, fully modeled).
+//!
+//! ## Lock hierarchy
+//!
+//! The coordinator's documented lock order (enforced by `tools/lint`,
+//! modeled by the loom tests, prose in `docs/CONCURRENCY.md`):
+//!
+//! ```text
+//! shard.streams (map)  →  entry.submit_seq  →  entry.state  →  sub-box state
+//! ```
+//!
+//! plus two leaf locks that never take others while held: the WAL
+//! writer cell (taken under `entry.state`) and the slot store / slot
+//! state pair (`shard.slots` → `slot.state`, disjoint from the stream
+//! chain).  `try_lock` acquisitions (the coalescing group pass) are
+//! exempt: they cannot deadlock by definition and bail out instead of
+//! blocking.
+
+#[cfg(not(loom))]
+pub use std::sync::{atomic, mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
+#[cfg(not(loom))]
+pub use std::thread;
+
+#[cfg(loom)]
+pub use loom::sync::{atomic, Arc, Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+pub use loom::thread;
+// loom has no OnceLock replacement; the std one stays in loom builds.
+// Its only consumer is the PJRT engine's lazy worker pool, which no
+// loom model constructs — pool init is engine-internal, not part of
+// the coordinator protocols under test.
+#[cfg(loom)]
+pub use std::sync::OnceLock;
+
+use std::time::Duration;
+
+/// Lock that shrugs off poisoning (see the module docs for why the
+/// coordinator treats a poisoned mutex as recoverable).
+#[cfg(not(loom))]
+pub fn lock_ok<'a, U>(m: &'a Mutex<U>) -> MutexGuard<'a, U> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Loom build: loom mutexes mirror the std API but never poison.
+#[cfg(loom)]
+pub fn lock_ok<'a, U>(m: &'a Mutex<U>) -> MutexGuard<'a, U> {
+    m.lock().expect("loom mutexes do not poison")
+}
+
+/// Condvar wait with the same poison policy as [`lock_ok`].
+#[cfg(not(loom))]
+pub fn wait_ok<'a, U>(cv: &Condvar, g: MutexGuard<'a, U>) -> MutexGuard<'a, U> {
+    cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(loom)]
+pub fn wait_ok<'a, U>(cv: &Condvar, g: MutexGuard<'a, U>) -> MutexGuard<'a, U> {
+    cv.wait(g).expect("loom mutexes do not poison")
+}
+
+/// Condvar wait with a timeout and [`lock_ok`]'s poison policy; the
+/// bool is `true` when the wait timed out (the caller re-checks its
+/// predicate either way — timeouts and wakeups race by nature).
+#[cfg(not(loom))]
+pub fn wait_timeout_ok<'a, U>(
+    cv: &Condvar,
+    g: MutexGuard<'a, U>,
+    dur: Duration,
+) -> (MutexGuard<'a, U>, bool) {
+    let (g, res) = cv
+        .wait_timeout(g, dur)
+        .unwrap_or_else(std::sync::PoisonError::into_inner);
+    (g, res.timed_out())
+}
+
+#[cfg(loom)]
+pub fn wait_timeout_ok<'a, U>(
+    cv: &Condvar,
+    g: MutexGuard<'a, U>,
+    dur: Duration,
+) -> (MutexGuard<'a, U>, bool) {
+    let (g, res) = cv
+        .wait_timeout(g, dur)
+        .expect("loom mutexes do not poison");
+    (g, res.timed_out())
+}
+
+/// `try_lock` with [`lock_ok`]'s poison policy; `None` only when the
+/// lock is actually held elsewhere.
+#[cfg(not(loom))]
+pub fn try_lock_ok<U>(m: &Mutex<U>) -> Option<MutexGuard<'_, U>> {
+    match m.try_lock() {
+        Ok(g) => Some(g),
+        Err(std::sync::TryLockError::Poisoned(e)) => Some(e.into_inner()),
+        Err(std::sync::TryLockError::WouldBlock) => None,
+    }
+}
+
+#[cfg(loom)]
+pub fn try_lock_ok<U>(m: &Mutex<U>) -> Option<MutexGuard<'_, U>> {
+    m.try_lock().ok()
+}
+
+/// Minimal `std::sync::mpsc` stand-in for loom builds, implemented on
+/// loom's own `Mutex`/`Condvar` so channel waits are part of the
+/// explored interleavings.  Only the surface this crate uses:
+/// `channel`/`sync_channel`, blocking `recv`, `try_recv`, `send`,
+/// `try_send`, sender cloning, and disconnect-on-drop semantics.
+#[cfg(loom)]
+pub mod mpsc {
+    use super::{lock_ok, wait_ok, Arc, Condvar, Mutex};
+    use std::collections::VecDeque;
+
+    /// Identical shape to `std::sync::mpsc::TrySendError`.
+    #[derive(Debug)]
+    pub enum TrySendError<T> {
+        Full(T),
+        Disconnected(T),
+    }
+
+    /// Identical shape to `std::sync::mpsc::SendError`.
+    #[derive(Debug)]
+    pub struct SendError<T>(pub T);
+
+    /// Identical shape to `std::sync::mpsc::RecvError`.
+    #[derive(Debug)]
+    pub struct RecvError;
+
+    /// Identical shape to `std::sync::mpsc::TryRecvError`.
+    #[derive(Debug)]
+    pub enum TryRecvError {
+        Empty,
+        Disconnected,
+    }
+
+    struct Inner<T> {
+        queue: VecDeque<T>,
+        senders: usize,
+        receiver_alive: bool,
+    }
+
+    struct Chan<T> {
+        inner: Mutex<Inner<T>>,
+        cv: Condvar,
+        cap: Option<usize>,
+    }
+
+    pub struct Sender<T>(Arc<Chan<T>>);
+    pub struct SyncSender<T>(Arc<Chan<T>>);
+    pub struct Receiver<T>(Arc<Chan<T>>);
+
+    fn new_chan<T>(cap: Option<usize>) -> Arc<Chan<T>> {
+        Arc::new(Chan {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                senders: 1,
+                receiver_alive: true,
+            }),
+            cv: Condvar::new(),
+            cap,
+        })
+    }
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let ch = new_chan(None);
+        (Sender(ch.clone()), Receiver(ch))
+    }
+
+    pub fn sync_channel<T>(cap: usize) -> (SyncSender<T>, Receiver<T>) {
+        let ch = new_chan(Some(cap));
+        (SyncSender(ch.clone()), Receiver(ch))
+    }
+
+    fn clone_half<T>(ch: &Arc<Chan<T>>) -> Arc<Chan<T>> {
+        lock_ok(&ch.inner).senders += 1;
+        ch.clone()
+    }
+
+    fn drop_sender<T>(ch: &Chan<T>) {
+        let mut g = lock_ok(&ch.inner);
+        g.senders -= 1;
+        if g.senders == 0 {
+            ch.cv.notify_all();
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            Sender(clone_half(&self.0))
+        }
+    }
+
+    impl<T> Clone for SyncSender<T> {
+        fn clone(&self) -> Self {
+            SyncSender(clone_half(&self.0))
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            drop_sender(&self.0);
+        }
+    }
+
+    impl<T> Drop for SyncSender<T> {
+        fn drop(&mut self) {
+            drop_sender(&self.0);
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            let mut g = lock_ok(&self.0.inner);
+            g.receiver_alive = false;
+            drop(g);
+            self.0.cv.notify_all();
+        }
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            let mut g = lock_ok(&self.0.inner);
+            if !g.receiver_alive {
+                return Err(SendError(t));
+            }
+            g.queue.push_back(t);
+            drop(g);
+            self.0.cv.notify_all();
+            Ok(())
+        }
+    }
+
+    impl<T> SyncSender<T> {
+        pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+            let cap = self.0.cap.unwrap_or(usize::MAX).max(1);
+            let mut g = lock_ok(&self.0.inner);
+            if !g.receiver_alive {
+                return Err(TrySendError::Disconnected(t));
+            }
+            if g.queue.len() >= cap {
+                return Err(TrySendError::Full(t));
+            }
+            g.queue.push_back(t);
+            drop(g);
+            self.0.cv.notify_all();
+            Ok(())
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut g = lock_ok(&self.0.inner);
+            loop {
+                if let Some(t) = g.queue.pop_front() {
+                    return Ok(t);
+                }
+                if g.senders == 0 {
+                    return Err(RecvError);
+                }
+                g = wait_ok(&self.0.cv, g);
+            }
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            let mut g = lock_ok(&self.0.inner);
+            match g.queue.pop_front() {
+                Some(t) => Ok(t),
+                None if g.senders == 0 => Err(TryRecvError::Disconnected),
+                None => Err(TryRecvError::Empty),
+            }
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_ok_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_ok(&m), 7);
+        assert_eq!(*try_lock_ok(&m).expect("free lock"), 7);
+    }
+
+    #[test]
+    fn try_lock_ok_is_none_only_when_held() {
+        let m = Mutex::new(1u32);
+        let g = lock_ok(&m);
+        assert!(try_lock_ok(&m).is_none());
+        drop(g);
+        assert!(try_lock_ok(&m).is_some());
+    }
+
+    #[test]
+    fn wait_timeout_ok_reports_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_ok(&m);
+        let (_g, timed_out) = wait_timeout_ok(&cv, g, Duration::from_millis(1));
+        assert!(timed_out);
+    }
+}

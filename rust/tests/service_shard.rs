@@ -204,7 +204,9 @@ fn batch_jobs_are_not_head_of_line_blocked_by_a_stream_storm() {
 
     // wait until the stream owns its whole shard: >= queue-depth appends
     // in flight there
-    let deadline = Instant::now() + Duration::from_secs(30);
+    let deadline = Instant::now()
+        .checked_add(Duration::from_secs(30))
+        .expect("deadline representable");
     while svc.shard_metrics(busy).in_flight() < depth as u64 {
         assert!(
             Instant::now() < deadline,

@@ -1,0 +1,581 @@
+//! `natsa-lint` — the repo's custom concurrency-invariant scanner.
+//!
+//! CI runs it over the tree (`cargo run --manifest-path
+//! tools/lint/Cargo.toml -- .` from the repo root) and fails the build
+//! on any finding.  Five rule classes, each guarding an invariant the
+//! loom models and `docs/CONCURRENCY.md` rely on:
+//!
+//! * **naked_lock** — no `.lock().unwrap()` / `.lock().expect(` /
+//!   RwLock unwraps in `rust/src` outside `rust/src/sync.rs`: every
+//!   acquisition goes through `crate::sync::lock_ok` so the poison
+//!   policy (and the loom swap) lives in exactly one place.
+//! * **naked_wait** — same for Condvar waits: `wait_ok` /
+//!   `wait_timeout_ok` only.
+//! * **lock_order** — in `coordinator/service.rs`, classified locks
+//!   must be acquired in strictly ascending hierarchy order
+//!   (`streams` map → `entry.submit_seq` → `entry.state` → shard
+//!   `subs` index; `slots` and the WAL cell are leaves).  `try_lock_ok`
+//!   is exempt — it cannot deadlock, which is exactly why the group
+//!   pass uses it.
+//! * **instant_arith** — no raw `Instant` arithmetic (`+`/`-`,
+//!   `.duration_since(`): only `checked_add` /
+//!   `saturating_duration_since`, so a stale deadline times out instead
+//!   of panicking on underflow.
+//! * **hot_sqrt** — no `.sqrt()` in the non-test code of
+//!   `mp/kernel.rs` / `mp/stampi.rs`: the deferred-sqrt contract keeps
+//!   hot-path distances squared (one sqrt per *snapshot*, never per
+//!   cell).
+//!
+//! Suppression: a `natsa-lint: allow(rule_name)` comment on the
+//! finding's line or the line above skips it (use sparingly, with a
+//! why-comment — `mp/stampi.rs` stats seeding is the precedent).
+//! `#[cfg(test)]` / `#[cfg(all(test, ...))]` module bodies are exempt
+//! from every rule except `instant_arith`.
+//!
+//! Design note: this is a line-level scanner over comment-stripped,
+//! string-blanked source, not a `syn` AST pass — the build container
+//! has no network, so the tool must compile from std alone.  The
+//! patterns are chosen so that false positives are impossible on the
+//! current tree (see the `whole_tree_is_clean` self-test) and false
+//! negatives require actively obfuscated code, which review catches.
+//! Known limits: string literals spanning lines, and a guard bound and
+//! scope-closed on one line, are not modeled.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Directories scanned, relative to the repo root.
+const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "benches", "examples", "tools/lint/src"];
+
+/// The service lock hierarchy: acquisition order must be strictly
+/// ascending in class.  Field names are how acquisitions are
+/// classified (`lock_ok(&shard.streams)` → `streams`); unlisted names
+/// (`cell`, `rx`, ...) are unclassified and ignored.
+const LOCK_CLASSES: &[(&str, u8)] = &[
+    ("streams", 10),
+    ("submit_seq", 20),
+    ("state", 30),
+    ("subs", 40),
+    ("slots", 50), // leaf: never held across another classified acquire
+];
+
+#[derive(Debug)]
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn main() {
+    let root = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| PathBuf::from("."));
+    match scan_tree(&root) {
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            if findings.is_empty() {
+                println!("natsa-lint: tree clean");
+            } else {
+                eprintln!("natsa-lint: {} violation(s)", findings.len());
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("natsa-lint: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn scan_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for dir in SCAN_DIRS {
+        collect_rs(&root.join(dir), &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let content = fs::read_to_string(&path)?;
+        let rel = path.strip_prefix(root).unwrap_or(&path).to_string_lossy().replace('\\', "/");
+        findings.extend(scan_source(&rel, &content));
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if !dir.exists() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Sanitization: comments out, string/char contents blanked, allow
+// markers extracted.
+// ---------------------------------------------------------------------
+
+struct Line {
+    /// Source with comments removed and literal contents blanked — all
+    /// pattern matching runs on this.
+    code: String,
+    /// Rules allowed on (this line or the next): `natsa-lint: allow(x)`.
+    allows: Vec<String>,
+}
+
+fn sanitize(content: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut in_block_comment = false;
+    for raw in content.lines() {
+        let mut allows = Vec::new();
+        extract_allows(raw, &mut allows);
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(raw.len());
+        let mut i = 0;
+        while i < chars.len() {
+            if in_block_comment {
+                if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    in_block_comment = false;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            match chars[i] {
+                '/' if chars.get(i + 1) == Some(&'/') => break,
+                '/' if chars.get(i + 1) == Some(&'*') => {
+                    in_block_comment = true;
+                    i += 2;
+                }
+                '"' => {
+                    // blank the contents, keep the quotes
+                    code.push('"');
+                    i += 1;
+                    while i < chars.len() {
+                        match chars[i] {
+                            '\\' => i += 2,
+                            '"' => break,
+                            _ => i += 1,
+                        }
+                    }
+                    code.push('"');
+                    i += 1;
+                }
+                '\'' => {
+                    // char literal ('x' / '\n') vs lifetime ('a): only
+                    // the literal closes within a few chars
+                    if chars.get(i + 1) == Some(&'\\') {
+                        code.push_str("' '");
+                        i += 4;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        code.push_str("' '");
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                }
+                c => {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        out.push(Line { code, allows });
+    }
+    out
+}
+
+fn extract_allows(raw: &str, out: &mut Vec<String>) {
+    const MARKER: &str = "natsa-lint: allow(";
+    let mut rest = raw;
+    while let Some(pos) = rest.find(MARKER) {
+        let after = &rest[pos + MARKER.len()..];
+        match after.find(')') {
+            Some(end) => {
+                out.push(after[..end].trim().to_string());
+                rest = &after[end..];
+            }
+            None => break,
+        }
+    }
+}
+
+/// Lines inside `#[cfg(test)]` / `#[cfg(all(test, ...))]` items.
+fn test_region_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        let code = &lines[i].code;
+        if code.contains("#[cfg(test)]") || code.contains("#[cfg(all(test") {
+            let mut depth = 0i32;
+            let mut opened = false;
+            let mut j = i;
+            while j < lines.len() {
+                mask[j] = true;
+                for c in lines[j].code.chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+fn allowed(lines: &[Line], i: usize, rule: &str) -> bool {
+    lines[i].allows.iter().any(|a| a == rule)
+        || (i > 0 && lines[i - 1].allows.iter().any(|a| a == rule))
+}
+
+fn squash(s: &str) -> String {
+    s.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+fn find_all(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(p) = hay.get(start..).and_then(|h| h.find(needle)) {
+        out.push(start + p);
+        start += p + 1;
+    }
+    out
+}
+
+/// True when `pat` occurs starting within line `i` (rustfmt may split a
+/// method chain, so the window extends into line `i + 1`).
+fn matches_window(lines: &[Line], i: usize, pat: &str) -> bool {
+    let cur = squash(&lines[i].code);
+    let next = lines.get(i + 1).map(|l| squash(&l.code)).unwrap_or_default();
+    let win = format!("{cur}{next}");
+    find_all(&win, pat).iter().any(|&p| p < cur.len())
+}
+
+// ---------------------------------------------------------------------
+// The rules.
+// ---------------------------------------------------------------------
+
+fn scan_source(rel: &str, content: &str) -> Vec<Finding> {
+    let lines = sanitize(content);
+    let mask = test_region_mask(&lines);
+    let mut findings = Vec::new();
+
+    let in_src = rel.starts_with("rust/src/");
+    let naked_scope = in_src && rel != "rust/src/sync.rs";
+    let hot_scope = rel == "rust/src/mp/kernel.rs" || rel == "rust/src/mp/stampi.rs";
+
+    for (i, line) in lines.iter().enumerate() {
+        if naked_scope && !mask[i] && !allowed(&lines, i, "naked_lock") {
+            for pat in [".lock().unwrap()", ".lock().expect(", ".read().unwrap()", ".write().unwrap()"]
+            {
+                if matches_window(&lines, i, pat) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "naked_lock",
+                        msg: format!(
+                            "`{pat}` — acquire through crate::sync::lock_ok so the poison \
+                             policy (and the loom swap) lives in one place"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+        if naked_scope && !mask[i] && !allowed(&lines, i, "naked_wait") {
+            let cur = squash(&line.code);
+            let next = lines.get(i + 1).map(|l| squash(&l.code)).unwrap_or_default();
+            let win = format!("{cur}{next}");
+            let hit = [".wait(", ".wait_timeout("].iter().any(|pat| {
+                find_all(&win, pat).iter().any(|&p| {
+                    p < cur.len() && win.get(p..).is_some_and(|t| t.contains(".unwrap()"))
+                })
+            });
+            if hit {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "naked_wait",
+                    msg: "Condvar wait unwrap — use crate::sync::wait_ok / wait_timeout_ok"
+                        .to_string(),
+                });
+            }
+        }
+        if !allowed(&lines, i, "instant_arith") {
+            let cur = squash(&line.code);
+            for pat in
+                [".duration_since(", "Instant::now()+", "Instant::now()-", "+Instant::now()", "-Instant::now()"]
+            {
+                if cur.contains(pat) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "instant_arith",
+                        msg: format!(
+                            "`{pat}` — raw Instant arithmetic panics on underflow/overflow; \
+                             use checked_add / saturating_duration_since"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+        if hot_scope
+            && !mask[i]
+            && !allowed(&lines, i, "hot_sqrt")
+            && matches_window(&lines, i, ".sqrt()")
+        {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "hot_sqrt",
+                msg: "sqrt on a kernel hot path — the deferred-sqrt contract keeps distances \
+                      squared (one sqrt per snapshot via sqrt_in_place)"
+                    .to_string(),
+            });
+        }
+    }
+
+    if rel == "rust/src/coordinator/service.rs" {
+        scan_lock_order(rel, &lines, &mask, &mut findings);
+    }
+
+    findings.sort_by_key(|f| f.line);
+    findings
+}
+
+struct Guard {
+    name: String,
+    class: u8,
+    depth: i32,
+}
+
+/// Linear scan of the service for hierarchy-descending acquisitions.
+///
+/// A *guard binding* is a line of the exact shape
+/// `let [mut] name = lock_ok(&path);` — the guard is considered held
+/// until `drop(name)` or the end of its brace scope.  Chained
+/// temporaries (`lock_ok(&x).get(..)`) acquire and release within the
+/// statement: they are order-checked but never held.  `try_lock_ok` is
+/// exempt by construction (the pattern requires a word boundary).
+fn scan_lock_order(rel: &str, lines: &[Line], mask: &[bool], findings: &mut Vec<Finding>) {
+    let mut depth = 0i32;
+    let mut held: Vec<Guard> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let code = squash(&line.code);
+        for p in find_all(&code, "drop(") {
+            if p > 0 {
+                let prev = code.as_bytes()[p - 1];
+                if prev.is_ascii_alphanumeric() || prev == b'_' {
+                    continue;
+                }
+            }
+            if let Some(end) = code[p + 5..].find(')') {
+                let name = &code[p + 5..p + 5 + end];
+                held.retain(|g| g.name != name);
+            }
+        }
+        for p in find_all(&code, "lock_ok(") {
+            if p > 0 {
+                let prev = code.as_bytes()[p - 1];
+                if prev.is_ascii_alphanumeric() || prev == b'_' {
+                    continue; // try_lock_ok(...) or another identifier
+                }
+            }
+            let arg_start = p + "lock_ok(".len();
+            let Some(rel_end) = code[arg_start..].find(')') else { continue };
+            let arg_end = arg_start + rel_end;
+            let field = code[arg_start..arg_end]
+                .trim_start_matches('&')
+                .rsplit(['.', ':'])
+                .next()
+                .unwrap_or("")
+                .to_string();
+            let Some(&(cname, class)) = LOCK_CLASSES.iter().find(|&&(n, _)| n == field) else {
+                continue;
+            };
+            if !mask[i] && !allowed(lines, i, "lock_order") {
+                if let Some(worst) = held.iter().filter(|g| g.class >= class).max_by_key(|g| g.class)
+                {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "lock_order",
+                        msg: format!(
+                            "acquires `{cname}` (class {class}) while `{}` (class {}) is held — \
+                             hierarchy is streams < submit_seq < state < subs, slots leaf \
+                             (docs/CONCURRENCY.md)",
+                            worst.name, worst.class
+                        ),
+                    });
+                }
+            }
+            // held only when the lock_ok call is the entire rhs of a let
+            if code.get(arg_end..) == Some(");") {
+                if let Some(name) = binding_name(&code[..p]) {
+                    held.push(Guard { name, class, depth });
+                }
+            }
+        }
+        for c in code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        held.retain(|g| g.depth <= depth);
+    }
+}
+
+/// `let[mut]NAME=` (squashed) → `NAME`.
+fn binding_name(before: &str) -> Option<String> {
+    let rest = before.strip_prefix("let")?;
+    let rest = rest.strip_prefix("mut").unwrap_or(rest);
+    let name = rest.strip_suffix('=')?;
+    if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+// ---------------------------------------------------------------------
+// Self-tests: one deliberate violation per rule class must be caught,
+// exemptions must hold, and the repo tree must scan clean.
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, src: &str) -> Vec<&'static str> {
+        scan_source(rel, src).iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn naked_lock_caught_outside_sync_facade() {
+        let src = "fn f() {\n    let _ = m.lock().unwrap();\n}";
+        assert_eq!(rules("rust/src/coordinator/metrics.rs", src), vec!["naked_lock"]);
+        assert!(rules("rust/src/sync.rs", src).is_empty(), "sync.rs owns the poison policy");
+        assert!(rules("rust/tests/x.rs", src).is_empty(), "scope is rust/src only");
+        let split = "fn f() {\n    let _ = m.lock()\n        .unwrap();\n}";
+        assert_eq!(rules("rust/src/a.rs", split), vec!["naked_lock"], "rustfmt-split chain");
+        let rw = "fn f() {\n    let _ = m.read().unwrap();\n}";
+        assert_eq!(rules("rust/src/a.rs", rw), vec!["naked_lock"]);
+    }
+
+    #[test]
+    fn naked_lock_marker_and_test_mod_exempt() {
+        let marked = "fn f() {\n    // natsa-lint: allow(naked_lock)\n    let _ = m.lock().unwrap();\n}";
+        assert!(rules("rust/src/a.rs", marked).is_empty());
+        let tested = "#[cfg(test)]\nmod tests {\n    fn f() { let _ = m.lock().unwrap(); }\n}";
+        assert!(rules("rust/src/a.rs", tested).is_empty());
+        let tested2 =
+            "#[cfg(all(test, not(loom)))]\nmod tests {\n    fn f() { let _ = m.lock().unwrap(); }\n}";
+        assert!(rules("rust/src/a.rs", tested2).is_empty());
+    }
+
+    #[test]
+    fn naked_wait_caught() {
+        let src = "fn f() {\n    let g = cv.wait(g).unwrap();\n}";
+        assert_eq!(rules("rust/src/a.rs", src), vec!["naked_wait"]);
+        let to = "fn f() {\n    let (g, _) = cv.wait_timeout(g, d).unwrap();\n}";
+        assert_eq!(rules("rust/src/a.rs", to), vec!["naked_wait"]);
+        let ok = "fn f() {\n    let g = wait_ok(&cv, g);\n}";
+        assert!(rules("rust/src/a.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn lock_order_descent_caught_ascent_clean() {
+        let descent = "fn f() {\n    let st = lock_ok(&e.state);\n    let g = lock_ok(&e.submit_seq);\n}";
+        assert_eq!(rules("rust/src/coordinator/service.rs", descent), vec!["lock_order"]);
+        let ascent = "fn f() {\n    let g = lock_ok(&e.submit_seq);\n    let st = lock_ok(&e.state);\n}";
+        assert!(rules("rust/src/coordinator/service.rs", ascent).is_empty());
+        // the same text is not the service's protocol elsewhere
+        assert!(rules("rust/src/coordinator/mod.rs", descent).is_empty());
+    }
+
+    #[test]
+    fn lock_order_release_paths_clean() {
+        let dropped = "fn f() {\n    let st = lock_ok(&e.state);\n    drop(st);\n    let g = lock_ok(&e.submit_seq);\n}";
+        assert!(rules("rust/src/coordinator/service.rs", dropped).is_empty());
+        let scoped = "fn f() {\n    {\n        let st = lock_ok(&e.state);\n    }\n    let g = lock_ok(&e.submit_seq);\n}";
+        assert!(rules("rust/src/coordinator/service.rs", scoped).is_empty());
+        let try_exempt = "fn f() {\n    let st = lock_ok(&e.state);\n    let g = try_lock_ok(&e.submit_seq);\n}";
+        assert!(rules("rust/src/coordinator/service.rs", try_exempt).is_empty());
+        // chained temporaries are order-checked but not held
+        let temp = "fn f() {\n    lock_ok(&shard.streams).insert(id, entry);\n    let st = lock_ok(&e.state);\n    let _n = lock_ok(&shard.subs).len();\n}";
+        assert!(rules("rust/src/coordinator/service.rs", temp).is_empty());
+        let temp_descent = "fn f() {\n    let st = lock_ok(&e.state);\n    lock_ok(&shard.streams).remove(&id);\n}";
+        assert_eq!(rules("rust/src/coordinator/service.rs", temp_descent), vec!["lock_order"]);
+    }
+
+    #[test]
+    fn instant_arith_caught_everywhere() {
+        let add = "fn f() {\n    let d = Instant::now() + Duration::from_secs(30);\n}";
+        assert_eq!(rules("rust/tests/x.rs", add), vec!["instant_arith"]);
+        assert_eq!(rules("benches/y.rs", add), vec!["instant_arith"]);
+        let since = "fn f() {\n    let d = a.duration_since(b);\n}";
+        assert_eq!(rules("rust/src/a.rs", since), vec!["instant_arith"]);
+        let sat = "fn f() {\n    let d = a.saturating_duration_since(b);\n}";
+        assert!(rules("rust/src/a.rs", sat).is_empty());
+        let checked = "fn f() {\n    let d = Instant::now().checked_add(t).expect(\"x\");\n}";
+        assert!(rules("rust/src/a.rs", checked).is_empty());
+    }
+
+    #[test]
+    fn hot_sqrt_caught_in_kernels_only() {
+        let src = "fn f(x: f64) -> f64 {\n    x.sqrt()\n}";
+        assert_eq!(rules("rust/src/mp/kernel.rs", src), vec!["hot_sqrt"]);
+        assert_eq!(rules("rust/src/mp/stampi.rs", src), vec!["hot_sqrt"]);
+        assert!(rules("rust/src/mp/mod.rs", src).is_empty(), "sqrt_in_place lives here");
+        let marked = "fn f(x: f64) -> f64 {\n    x.sqrt() // natsa-lint: allow(hot_sqrt)\n}";
+        assert!(rules("rust/src/mp/kernel.rs", marked).is_empty());
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_trip_rules() {
+        let src = "//! docs say never write .lock().unwrap() by hand\nfn f() {\n    let s = \".sqrt() and .lock().unwrap() and Instant::now() + d\";\n    /* .wait(g).unwrap() */\n}";
+        assert!(rules("rust/src/mp/kernel.rs", src).is_empty());
+    }
+
+    #[test]
+    fn whole_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let findings = scan_tree(&root).expect("repo tree readable");
+        assert!(
+            findings.is_empty(),
+            "repo must be natsa-lint clean:\n{}",
+            findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+        );
+    }
+}
