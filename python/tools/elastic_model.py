@@ -1,0 +1,446 @@
+#!/usr/bin/env python3
+"""Executable models of the elastic-sharding state machines.
+
+Dependency-free mirrors of the three deterministic cores behind
+``rust/src/coordinator/{migrate,admission}.rs``, checked exhaustively
+where the Rust unit tests can only spot-check:
+
+1. **Migration × durability crash windows** — the hand-off protocol is
+   replayed as a sequence of durable WAL events; a crash is injected
+   after *every* prefix (and inside the unsynced buffer tail), recovery
+   is run per the epoch-dedupe rule in ``service.rs``, and the model
+   asserts the stream recovers **exactly once**, on the correct side of
+   the commit point, with recovery idempotent (a second restart agrees).
+   The racing-close branch is enumerated too.
+
+2. **AIMD admission** — an integer-exact mirror of ``AimdController``
+   (milli-job fixed point, additive increase, cooldown-absorbed
+   multiplicative decrease), replaying the Rust unit-test vectors and
+   then sweeping thousands of random outcome sequences for the global
+   invariants (window bounds, monotone growth under health, floor under
+   collapse).
+
+3. **The elastic controller policy** — mirrors of ``scale_decision``
+   and ``sustained_imbalance`` checked for hysteresis (no action
+   without N consecutive signals), bound-respect, and trigger algebra.
+
+CI runs this file (see ``.github/workflows/ci.yml``); it is also the
+container-side validation stand-in when no Rust toolchain is present.
+"""
+
+from __future__ import annotations
+
+import itertools
+import random
+import sys
+from dataclasses import dataclass, field
+
+FAILURES: list[str] = []
+
+
+def check(cond: bool, msg: str) -> None:
+    if not cond:
+        FAILURES.append(msg)
+        print(f"FAIL: {msg}")
+
+
+# ---------------------------------------------------------------------
+# 1. Migration × durability: crash-window enumeration
+# ---------------------------------------------------------------------
+#
+# Durable-event alphabet (what can be on disk, per shard directory):
+#   ("open", shard, epoch)      stream Open record
+#   ("close", shard)            stream Close record
+# The protocol appends records to an in-memory buffer per shard and
+# syncs explicitly — exactly like WalOptions{sync:false} plus the
+# migration's one fsync.  A crash keeps only synced bytes, plus any
+# prefix of the unsynced tail (the OS may have flushed part of it).
+
+
+@dataclass
+class ShardDir:
+    synced: list = field(default_factory=list)
+    tail: list = field(default_factory=list)
+
+    def log(self, ev) -> None:
+        self.tail.append(ev)
+
+    def sync(self) -> None:
+        self.synced.extend(self.tail)
+        self.tail.clear()
+
+    def crash_images(self):
+        """Every on-disk state a crash at this instant can leave."""
+        for keep in range(len(self.tail) + 1):
+            yield list(self.synced) + self.tail[:keep]
+
+
+def recover(images: list[list]) -> dict:
+    """The epoch-dedupe recovery of ``service.rs`` phases 2–3.
+
+    Per shard: the stream is live iff an Open is not followed by a
+    Close; its epoch is the latest Open's.  Across shards: the highest
+    epoch wins; losers get a durable Close appended (finishing the
+    migration's intent).  Returns {"homes": {shard}, "epoch": e} for
+    the single stream being modeled, mutating ``images`` the way the
+    real recovery mutates the directories.
+    """
+    live: dict[int, int] = {}
+    for k, img in enumerate(images):
+        alive, epoch = False, None
+        for ev in img:
+            if ev[0] == "open":
+                alive, epoch = True, ev[2]
+            elif ev[0] == "close":
+                alive = False
+        if alive:
+            live[k] = epoch
+    if not live:
+        return {"homes": set(), "epoch": None}
+    winner = max(live, key=lambda k: live[k])
+    for k in live:
+        if k != winner:
+            images[k].append(("close", k))  # durable loser close
+    return {"homes": {winner}, "epoch": live[winner]}
+
+
+def migration_events(race_close: bool):
+    """The migration hand-off as (action, commit_point_reached) steps.
+
+    Mirrors ``run_migration``: target Open+Snapshot synced FIRST, then
+    the routing flip (the in-memory commit point), then the source
+    Close (written, NOT synced — WalOptions{sync:false}).  With
+    ``race_close`` the stream is closed by a client in the fsync gap,
+    so the migration undoes its target pre-log and the CLOSE wins.
+    """
+    SRC, TGT = 0, 1
+    steps = []  # (fn(dirs), committed_to_target: bool)
+    steps.append((lambda d: d[TGT].log(("open", TGT, 2)), False))
+    # the Snapshot record rides in the same synced batch as the Open —
+    # its payload does not change liveness, so the Open stands in for it
+    steps.append((lambda d: d[TGT].sync(), False))
+    if race_close:
+        # close_stream won the fsync gap: Close on the source (its own
+        # WAL), then the migration's undo Close on the target
+        steps.append((lambda d: d[SRC].log(("close", SRC)), False))
+        steps.append((lambda d: d[TGT].log(("close", TGT)), False))
+        steps.append((lambda d: d[SRC].sync(), False))
+        steps.append((lambda d: d[TGT].sync(), False))
+    else:
+        # routing flip = the commit point, then the source Close
+        steps.append((lambda d: None, True))
+        steps.append((lambda d: d[SRC].log(("close", SRC)), True))
+    return steps
+
+
+def model_crash_windows() -> None:
+    for race_close in (False, True):
+        steps = migration_events(race_close)
+        for crash_after in range(len(steps) + 1):
+            dirs = [ShardDir(), ShardDir()]
+            dirs[0].log(("open", 0, 1))
+            dirs[0].sync()  # the stream existed durably before the hop
+            committed = False
+            for fn, commit in steps[:crash_after]:
+                fn(dirs)
+                committed = commit or committed
+            # enumerate every partial-tail image combination
+            for img0, img1 in itertools.product(
+                dirs[0].crash_images(), dirs[1].crash_images()
+            ):
+                images = [list(img0), list(img1)]
+                got = recover(images)
+                tag = f"race_close={race_close} crash_after={crash_after}"
+                if race_close and crash_after >= 3:
+                    # the client's Close records exist (durably or in a
+                    # partially-flushed tail): liveness depends on which
+                    # survived the crash, but never TWO live copies
+                    check(len(got["homes"]) <= 1, f"{tag}: duplicated after close")
+                else:
+                    check(
+                        len(got["homes"]) == 1,
+                        f"{tag}: stream recovered {len(got['homes'])} times",
+                    )
+                if got["homes"] == {1}:
+                    # target can only win once its records are durable
+                    check(
+                        crash_after >= 2 or len(img1) > 0,
+                        f"{tag}: target won without durable records",
+                    )
+                    check(got["epoch"] == 2, f"{tag}: target won with stale epoch")
+                if committed and crash_after >= len(steps) and not race_close:
+                    # clean completion: the target must be the home even
+                    # though the source Close may not have hit the disk
+                    check(
+                        got["homes"] == {1},
+                        f"{tag}: completed migration recovered on the source",
+                    )
+                # recovery is idempotent: a second restart on the
+                # directories recovery just repaired agrees exactly
+                again = recover([list(i) for i in images])
+                check(
+                    again["homes"] == got["homes"] and again["epoch"] == got["epoch"],
+                    f"{tag}: second restart disagreed "
+                    f"({again['homes']} vs {got['homes']})",
+                )
+    print("migration crash-window model: every crash point exactly-once, idempotent")
+
+
+# ---------------------------------------------------------------------
+# 2. AIMD admission: integer-exact mirror of AimdController
+# ---------------------------------------------------------------------
+
+MILLI = 1000
+
+
+@dataclass
+class Aimd:
+    initial_cwnd: int = 8
+    min_cwnd: int = 1
+    max_cwnd: int = 64
+    latency_target: float = 0.100
+    decrease_pct: int = 50
+    cooldown_acks: int = 4
+
+    def __post_init__(self):
+        # AdmissionConfig::normalized
+        self.min_cwnd = max(self.min_cwnd, 1)
+        self.max_cwnd = max(self.max_cwnd, self.min_cwnd)
+        self.initial_cwnd = min(max(self.initial_cwnd, self.min_cwnd), self.max_cwnd)
+        self.decrease_pct = min(max(self.decrease_pct, 1), 99)
+        self.cwnd_milli = self.initial_cwnd * MILLI
+        self.cooldown = 0
+
+    def try_acquire(self, in_flight: int) -> bool:
+        return in_flight * MILLI < self.cwnd_milli
+
+    def on_outcome(self, latency: float) -> None:
+        if latency <= self.latency_target:
+            if self.cooldown > 0:
+                self.cooldown -= 1
+            grown = self.cwnd_milli + max(MILLI * MILLI // max(self.cwnd_milli, 1), 1)
+            self.cwnd_milli = min(grown, self.max_cwnd * MILLI)
+        else:
+            self._decrease()
+
+    def on_congestion(self) -> None:
+        self._decrease()
+
+    def _decrease(self) -> None:
+        if self.cooldown > 0:  # absorbed: same congestion event
+            self.cooldown -= 1
+            return
+        self.cwnd_milli = max(
+            self.cwnd_milli * self.decrease_pct // 100, self.min_cwnd * MILLI
+        )
+        self.cooldown = self.cooldown_acks
+
+
+OK, SLOW = 0.010, 0.500
+
+
+def model_aimd() -> None:
+    # --- the Rust unit-test vectors, value for value ---
+    a = Aimd()
+    check(a.try_acquire(0) and a.try_acquire(7), "initial window admits under 8")
+    check(not a.try_acquire(8), "initial window rejects at 8")
+    a = Aimd()
+    for _ in range(8):
+        a.on_outcome(OK)
+    check(8900 <= a.cwnd_milli <= 9100, f"full window of acks ≈ +1 job: {a.cwnd_milli}")
+    check(a.try_acquire(8), "grown window admits one more")
+    a = Aimd()
+    a.on_outcome(SLOW)
+    check(a.cwnd_milli == 4000, f"first breach halves 8→4: {a.cwnd_milli}")
+    for _ in range(4):
+        a.on_outcome(SLOW)
+    check(a.cwnd_milli == 4000, "cooldown absorbs the breach burst")
+    a.on_outcome(SLOW)
+    check(a.cwnd_milli == 2000, "post-cooldown breach bites again")
+    a = Aimd()
+    for _ in range(100):
+        for _ in range(5):
+            a.on_congestion()
+    check(a.cwnd_milli == 1000, f"floor holds at min_cwnd: {a.cwnd_milli}")
+    check(a.try_acquire(0) and not a.try_acquire(1), "min window admits exactly one")
+    a = Aimd()
+    for _ in range(40):
+        a.on_outcome(SLOW)
+    collapsed = a.cwnd_milli
+    check(collapsed < 8000, "overload shrinks the window")
+    for _ in range(2000):
+        a.on_outcome(OK)
+    check(a.cwnd_milli >= 8000, "window reopens on healthy traffic")
+    a = Aimd(max_cwnd=9)
+    for _ in range(10_000):
+        a.on_outcome(OK)
+    check(a.cwnd_milli == 9000, f"growth caps at max_cwnd: {a.cwnd_milli}")
+    a = Aimd()
+    a.on_outcome(SLOW)
+    for _ in range(4):
+        a.on_outcome(OK)
+    before = a.cwnd_milli
+    a.on_outcome(SLOW)
+    check(a.cwnd_milli < before, "successes burn cooldown too")
+
+    # --- randomized sweep for the global invariants ---
+    rng = random.Random(0x9A75A)
+    for trial in range(2000):
+        cfg = dict(
+            initial_cwnd=rng.randint(1, 64),
+            min_cwnd=rng.randint(0, 8),
+            max_cwnd=rng.randint(0, 128),
+            decrease_pct=rng.randint(0, 120),
+            cooldown_acks=rng.randint(0, 8),
+        )
+        a = Aimd(**cfg)
+        lo, hi = a.min_cwnd * MILLI, a.max_cwnd * MILLI
+        for step in range(200):
+            r = rng.random()
+            if r < 0.4:
+                a.on_outcome(OK)
+            elif r < 0.8:
+                a.on_outcome(SLOW)
+            else:
+                a.on_congestion()
+            if not lo <= a.cwnd_milli <= hi:
+                check(False, f"trial {trial} step {step}: window {a.cwnd_milli} escaped [{lo},{hi}]")
+                break
+        # whatever happened, sustained health must re-open the window
+        for _ in range(a.max_cwnd * a.max_cwnd + a.cooldown_acks + 1):
+            a.on_outcome(OK)
+        check(a.cwnd_milli == hi, f"trial {trial}: window did not fully reopen")
+    print("AIMD model: Rust vectors match, 2000 random traces hold the invariants")
+
+
+# ---------------------------------------------------------------------
+# 3. Controller policy: scale_decision + sustained_imbalance mirrors
+# ---------------------------------------------------------------------
+
+
+@dataclass
+class ElasticCfg:
+    min_workers: int = 1
+    max_workers: int = 4
+    grow_backlog: int = 4
+    shrink_backlog: int = 1
+    hysteresis_ticks: int = 3
+    migrate_ratio: int = 4
+    migrate_slack: int = 8
+    migrate_ticks: int = 3
+
+
+def scale_decision(backlog, size, target, cfg, streaks):
+    per_worker = backlog // max(size, 1)
+    if per_worker >= cfg.grow_backlog:
+        streaks[0] += 1
+        streaks[1] = 0
+    elif per_worker <= cfg.shrink_backlog:
+        streaks[1] += 1
+        streaks[0] = 0
+    else:
+        streaks[0] = streaks[1] = 0
+    if streaks[0] >= cfg.hysteresis_ticks and target < cfg.max_workers:
+        streaks[0] = 0
+        return "grow"
+    if streaks[1] >= cfg.hysteresis_ticks and target > cfg.min_workers:
+        streaks[1] = 0
+        return "shrink"
+    return "hold"
+
+
+def sustained_imbalance(loads, cfg, streak):
+    hot = max(range(len(loads)), key=lambda k: loads[k])
+    cold = min(range(len(loads)), key=lambda k: loads[k])
+    armed = hot != cold and loads[hot] > loads[cold] * cfg.migrate_ratio + cfg.migrate_slack
+    if not armed:
+        streak[0] = 0
+        return None
+    streak[0] += 1
+    if streak[0] < cfg.migrate_ticks:
+        return None
+    streak[0] = 0
+    return (hot, cold)
+
+
+def model_controller_policy() -> None:
+    cfg = ElasticCfg()
+    # hysteresis: N-1 hot ticks then one calm tick never act
+    streaks = [0, 0]
+    for _ in range(cfg.hysteresis_ticks - 1):
+        check(scale_decision(100, 1, 1, cfg, streaks) == "hold", "acted early")
+    check(scale_decision(2, 1, 1, cfg, streaks) == "hold", "calm tick resets")
+    for _ in range(cfg.hysteresis_ticks - 1):
+        check(scale_decision(100, 1, 1, cfg, streaks) == "hold", "streak restarted")
+    check(scale_decision(100, 1, 1, cfg, streaks) == "grow", "sustained signal grows")
+
+    # random walk: target always within bounds, actions need streaks
+    rng = random.Random(7)
+    for trial in range(500):
+        streaks = [0, 0]
+        target = size = rng.randint(cfg.min_workers, cfg.max_workers)
+        consec = 0
+        for _ in range(300):
+            backlog = rng.choice([0, 0, 1, 2, 5, 8, 50])
+            act = scale_decision(backlog, size, target, cfg, streaks)
+            per = backlog // max(size, 1)
+            if per >= cfg.grow_backlog or per <= cfg.shrink_backlog:
+                consec += 1
+            else:
+                consec = 0
+            if act == "grow":
+                check(consec >= cfg.hysteresis_ticks, f"trial {trial}: grew without streak")
+                target += 1
+                size += 1
+                consec = 0
+            elif act == "shrink":
+                check(consec >= cfg.hysteresis_ticks, f"trial {trial}: shrank without streak")
+                target -= 1
+                size -= 1  # model the worker exiting at its job boundary
+                consec = 0
+            if not cfg.min_workers <= target <= cfg.max_workers:
+                check(False, f"trial {trial}: target {target} escaped bounds")
+                break
+
+    # migration trigger algebra: ratio+slack, persistence, reset
+    streak = [0]
+    check(sustained_imbalance([8, 8], cfg, streak) is None, "balanced never arms")
+    check(sustained_imbalance([40, 8], cfg, streak) is None, "at the boundary never arms")
+    streak = [0]
+    for _ in range(cfg.migrate_ticks - 1):
+        check(sustained_imbalance([41, 8], cfg, streak) is None, "fires early")
+    check(sustained_imbalance([41, 8], cfg, streak) == (0, 1), "sustained imbalance fires")
+    check(streak[0] == 0, "firing resets the streak")
+    streak = [0]
+    sustained_imbalance([41, 8], cfg, streak)
+    check(sustained_imbalance([9, 8], cfg, streak) is None, "calm tick resets the streak")
+    check(streak[0] == 0, "reset observed")
+    # the pair is always (argmax, argmin) and they differ when armed
+    rng = random.Random(21)
+    streak = [0]
+    for _ in range(2000):
+        loads = [rng.randint(0, 60) for _ in range(4)]
+        got = sustained_imbalance(loads, cfg, streak)
+        if got is not None:
+            hot, cold = got
+            check(loads[hot] == max(loads) and loads[cold] == min(loads), "wrong pair")
+            check(
+                loads[hot] > loads[cold] * cfg.migrate_ratio + cfg.migrate_slack,
+                "fired unarmed",
+            )
+    print("controller policy model: hysteresis, bounds, and trigger algebra hold")
+
+
+def main() -> int:
+    model_crash_windows()
+    model_aimd()
+    model_controller_policy()
+    if FAILURES:
+        print(f"\nelastic_model: {len(FAILURES)} failure(s)")
+        return 1
+    print("\nelastic_model: all models hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,267 @@
+//! AIMD admission control: a per-shard congestion window over
+//! in-flight work.
+//!
+//! Borrowed from TCP congestion control by way of vector's
+//! adaptive-concurrency idea (see ROADMAP): each shard carries a
+//! **congestion window** `cwnd` — the number of jobs it is willing to
+//! have in flight.  Every finished job under the latency target grows
+//! the window additively (`+1/cwnd` per ack, so one full window of
+//! acks adds one job); a latency breach or a queue-full shrinks it
+//! multiplicatively (`cwnd *= decrease_pct/100`), with a cooldown so a
+//! burst of breaches from the *same* congested window counts once.
+//! Overload therefore degrades to fast-fail at submit time (callers
+//! see `Backpressure`) with bounded queueing behind the window, rather
+//! than unbounded latency pile-up; when the overload clears, additive
+//! growth re-opens the window.
+//!
+//! The controller is **lock-free** (two atomics, CAS transitions) and
+//! deterministic given a sequence of outcomes — pinned by the unit
+//! tests below and the service-level test in `tests/elastic.rs`.
+//! Windows are tracked in milli-jobs so additive increase needs no
+//! floating point in the hot path.
+
+use std::time::Duration;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+
+/// One job, in the fixed-point milli-job unit of the window.
+const MILLI: u64 = 1000;
+
+/// Tuning for the per-shard [`AimdController`].
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Window at startup, in jobs.
+    pub initial_cwnd: u64,
+    /// The window never shrinks below this (keeps the shard live).
+    pub min_cwnd: u64,
+    /// The window never grows above this.
+    pub max_cwnd: u64,
+    /// A job whose queue-wait + execution stays at or under this is a
+    /// success (additive increase); beyond it is a breach
+    /// (multiplicative decrease).
+    pub latency_target: Duration,
+    /// Multiplicative decrease factor in percent (50 halves the
+    /// window, TCP-style).
+    pub decrease_pct: u64,
+    /// After a decrease, this many further outcomes are absorbed
+    /// without another decrease — breaches observed by jobs that were
+    /// already in flight when the window shrank carry no new signal.
+    pub cooldown_acks: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            initial_cwnd: 32,
+            min_cwnd: 1,
+            max_cwnd: 4096,
+            latency_target: Duration::from_millis(250),
+            decrease_pct: 50,
+            cooldown_acks: 16,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    fn normalized(mut self) -> Self {
+        self.min_cwnd = self.min_cwnd.max(1);
+        self.max_cwnd = self.max_cwnd.max(self.min_cwnd);
+        self.initial_cwnd = self.initial_cwnd.clamp(self.min_cwnd, self.max_cwnd);
+        self.decrease_pct = self.decrease_pct.clamp(1, 99);
+        self
+    }
+}
+
+/// Per-shard additive-increase / multiplicative-decrease congestion
+/// window.  All state is atomic; see the module docs.
+#[derive(Debug)]
+pub struct AimdController {
+    cfg: AdmissionConfig,
+    /// Congestion window in milli-jobs.
+    cwnd_milli: AtomicU64,
+    /// Outcomes left to absorb before the next decrease may fire.
+    cooldown: AtomicU64,
+}
+
+impl AimdController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        let cfg = cfg.normalized();
+        AimdController {
+            cwnd_milli: AtomicU64::new(cfg.initial_cwnd * MILLI),
+            cooldown: AtomicU64::new(0),
+            cfg,
+        }
+    }
+
+    /// Current window in milli-jobs (gauge value).
+    pub fn cwnd_milli(&self) -> u64 {
+        self.cwnd_milli.load(Ordering::Relaxed)
+    }
+
+    /// May a new job enter, given the shard's current in-flight count?
+    /// Pure read — the caller ticks `admission_rejected` on `false`.
+    pub fn try_acquire(&self, in_flight: u64) -> bool {
+        in_flight.saturating_mul(MILLI) < self.cwnd_milli.load(Ordering::Relaxed)
+    }
+
+    /// Feed one finished job's total latency (queue wait + execution).
+    pub fn on_outcome(&self, latency: Duration) {
+        if latency <= self.cfg.latency_target {
+            self.tick_cooldown();
+            self.additive_increase();
+        } else {
+            self.multiplicative_decrease();
+        }
+    }
+
+    /// The shard queue refused a job outright — hard congestion.
+    pub fn on_congestion(&self) {
+        self.multiplicative_decrease();
+    }
+
+    fn additive_increase(&self) {
+        let max = self.cfg.max_cwnd * MILLI;
+        let _ = self.cwnd_milli.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            // +1/cwnd jobs per ack: a full window of acks grows the
+            // window by one job, independent of its size.
+            let grown = cur + (MILLI * MILLI / cur.max(1)).max(1);
+            Some(grown.min(max))
+        });
+    }
+
+    fn multiplicative_decrease(&self) {
+        // Absorb breaches during cooldown: jobs already in flight when
+        // the window last shrank all report the same congestion event.
+        let absorbed = self
+            .cooldown
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| c.checked_sub(1))
+            .is_ok();
+        if absorbed {
+            return;
+        }
+        let min = self.cfg.min_cwnd * MILLI;
+        let _ = self.cwnd_milli.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            Some((cur * self.cfg.decrease_pct / 100).max(min))
+        });
+        self.cooldown.store(self.cfg.cooldown_acks, Ordering::Relaxed);
+    }
+
+    fn tick_cooldown(&self) {
+        let _ = self
+            .cooldown
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| c.checked_sub(1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AdmissionConfig {
+        AdmissionConfig {
+            initial_cwnd: 8,
+            min_cwnd: 1,
+            max_cwnd: 64,
+            latency_target: Duration::from_millis(100),
+            decrease_pct: 50,
+            cooldown_acks: 4,
+        }
+    }
+
+    const OK: Duration = Duration::from_millis(10);
+    const SLOW: Duration = Duration::from_millis(500);
+
+    #[test]
+    fn admits_strictly_under_the_window() {
+        let a = AimdController::new(cfg());
+        assert!(a.try_acquire(0));
+        assert!(a.try_acquire(7));
+        assert!(!a.try_acquire(8));
+        assert!(!a.try_acquire(u64::MAX)); // saturating, no overflow
+    }
+
+    #[test]
+    fn one_window_of_acks_grows_the_window_by_one_job() {
+        let a = AimdController::new(cfg());
+        // 8 acks at cwnd≈8: each adds 1000*1000/cwnd_milli ≈ 125 milli.
+        for _ in 0..8 {
+            a.on_outcome(OK);
+        }
+        let got = a.cwnd_milli();
+        assert!(
+            (8900..=9100).contains(&got),
+            "expected ≈9000 milli after a full window of acks, got {got}"
+        );
+        assert!(a.try_acquire(8), "grown window admits one more");
+    }
+
+    #[test]
+    fn a_breach_halves_the_window_once_per_cooldown() {
+        let a = AimdController::new(cfg());
+        a.on_outcome(SLOW);
+        assert_eq!(a.cwnd_milli(), 4000, "8 → 4 on first breach");
+        // The next `cooldown_acks` breaches are the same congestion
+        // event: absorbed, window unchanged.
+        for _ in 0..4 {
+            a.on_outcome(SLOW);
+        }
+        assert_eq!(a.cwnd_milli(), 4000);
+        // Past the cooldown a fresh breach bites again.
+        a.on_outcome(SLOW);
+        assert_eq!(a.cwnd_milli(), 2000);
+    }
+
+    #[test]
+    fn queue_full_is_a_decrease_and_floor_holds() {
+        let a = AimdController::new(cfg());
+        for _ in 0..100 {
+            a.on_congestion();
+            // burn the cooldown deterministically
+            for _ in 0..4 {
+                a.on_congestion();
+            }
+        }
+        assert_eq!(a.cwnd_milli(), 1000, "window never shrinks below min_cwnd");
+        assert!(a.try_acquire(0), "min window still admits work");
+        assert!(!a.try_acquire(1));
+    }
+
+    #[test]
+    fn window_reopens_after_load_drops() {
+        let a = AimdController::new(cfg());
+        // Sustained overload collapses the window…
+        for _ in 0..40 {
+            a.on_outcome(SLOW);
+        }
+        let collapsed = a.cwnd_milli();
+        assert!(collapsed < 8000, "overload must shrink the window, got {collapsed}");
+        // …then healthy traffic grows it back (additive, so it takes a
+        // while — that is the point).
+        for _ in 0..2000 {
+            a.on_outcome(OK);
+        }
+        assert!(a.cwnd_milli() > collapsed);
+        assert!(a.cwnd_milli() >= 8000, "window recovered to its initial size");
+    }
+
+    #[test]
+    fn growth_caps_at_max_cwnd() {
+        let a = AimdController::new(AdmissionConfig { max_cwnd: 9, ..cfg() });
+        for _ in 0..10_000 {
+            a.on_outcome(OK);
+        }
+        assert_eq!(a.cwnd_milli(), 9000);
+    }
+
+    #[test]
+    fn successes_burn_cooldown_too() {
+        let a = AimdController::new(cfg());
+        a.on_outcome(SLOW); // 8 → 4, cooldown = 4
+        for _ in 0..4 {
+            a.on_outcome(OK); // burns cooldown while growing
+        }
+        let before = a.cwnd_milli();
+        a.on_outcome(SLOW); // cooldown spent: decrease fires
+        assert!(a.cwnd_milli() < before);
+    }
+}

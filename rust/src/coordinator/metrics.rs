@@ -53,6 +53,23 @@ pub struct ServiceMetrics {
     /// Subscriber snapshot deliveries performed by fanout appends (one
     /// append computed once, delivered N times — this counts the N's).
     pub fanout_delivered: AtomicU64,
+    /// Streams migrated **off** this shard by the elastic controller or
+    /// `migrate_stream` (ticked on the source shard + the aggregate).
+    pub streams_migrated: AtomicU64,
+    /// Migrations that resolved a source but did not commit (stream
+    /// closed mid-quiesce, placement raced, restore error).
+    pub migration_failed: AtomicU64,
+    /// Submissions refused by the AIMD admission window (a subset of
+    /// the `Backpressure` errors callers observe; `jobs_rejected` also
+    /// counts queue-full refusals).
+    pub admission_rejected: AtomicU64,
+    /// **Gauge** (not a counter): current AIMD congestion window in
+    /// milli-jobs.  Published with [`Self::publish_gauge`] so the
+    /// aggregate tracks Σ shard windows.
+    pub cwnd_milli: AtomicU64,
+    /// **Gauge**: current worker-pool size.  Published with
+    /// [`Self::publish_gauge`]; the aggregate is the fleet-wide total.
+    pub pool_workers: AtomicU64,
 }
 
 impl ServiceMetrics {
@@ -124,6 +141,18 @@ impl ServiceMetrics {
         if fanned > 0 {
             line.push_str(&format!(" | {fanned} fanout deliveries"));
         }
+        let migrated = self.streams_migrated.load(Ordering::Relaxed);
+        let mig_failed = self.migration_failed.load(Ordering::Relaxed);
+        if migrated > 0 || mig_failed > 0 {
+            line.push_str(&format!(" | {migrated} migrated ({mig_failed} failed)"));
+        }
+        let throttled = self.admission_rejected.load(Ordering::Relaxed);
+        if throttled > 0 {
+            line.push_str(&format!(
+                " | {throttled} admission-rejected (cwnd {:.1})",
+                self.cwnd_milli.load(Ordering::Relaxed) as f64 / 1000.0
+            ));
+        }
         line
     }
 
@@ -135,6 +164,19 @@ impl ServiceMetrics {
         if width >= 2 {
             self.appends_coalesced.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Publish a **gauge** to a shard cell and its aggregate in one
+    /// step: swap the shard's old value out and apply the wrapping
+    /// delta to the aggregate.  The swap serializes concurrent
+    /// publishers on the shard cell, so the deltas telescope exactly —
+    /// under ANY interleaving (across shards *and* across writers to
+    /// the same shard) the invariant `aggregate == Σ shard gauges`
+    /// holds once every in-flight publish has landed: the same
+    /// Σ-reconciliation contract the counters have.
+    pub fn publish_gauge(shard: &AtomicU64, aggregate: &AtomicU64, value: u64) {
+        let old = shard.swap(value, Ordering::Relaxed);
+        aggregate.fetch_add(value.wrapping_sub(old), Ordering::Relaxed);
     }
 }
 
@@ -372,5 +414,79 @@ mod tests {
         assert!(m.summary().contains("3 coalesced"));
         m.fanout_delivered.fetch_add(7, Ordering::Relaxed);
         assert!(m.summary().contains("7 fanout deliveries"));
+    }
+
+    #[test]
+    fn publish_gauge_tracks_latest_value_and_aggregate_delta() {
+        let shard = AtomicU64::new(0);
+        let agg = AtomicU64::new(0);
+        ServiceMetrics::publish_gauge(&shard, &agg, 5);
+        assert_eq!(shard.load(Ordering::Relaxed), 5);
+        assert_eq!(agg.load(Ordering::Relaxed), 5);
+        // A gauge goes DOWN: the aggregate must follow (wrapping delta).
+        ServiceMetrics::publish_gauge(&shard, &agg, 2);
+        assert_eq!(shard.load(Ordering::Relaxed), 2);
+        assert_eq!(agg.load(Ordering::Relaxed), 2);
+        ServiceMetrics::publish_gauge(&shard, &agg, 2);
+        assert_eq!(agg.load(Ordering::Relaxed), 2, "idempotent republish");
+    }
+
+    #[test]
+    fn publish_gauge_deltas_telescope_across_shards() {
+        // Two shards publishing independently into one aggregate: after
+        // any sequence, aggregate == Σ latest shard values.
+        let (a, b) = (AtomicU64::new(0), AtomicU64::new(0));
+        let agg = AtomicU64::new(0);
+        let seq_a = [3u64, 7, 1, 1, 9];
+        let seq_b = [10u64, 2, 2, 8, 4];
+        for i in 0..seq_a.len() {
+            ServiceMetrics::publish_gauge(&a, &agg, seq_a[i]);
+            ServiceMetrics::publish_gauge(&b, &agg, seq_b[i]);
+            assert_eq!(
+                agg.load(Ordering::Relaxed),
+                a.load(Ordering::Relaxed) + b.load(Ordering::Relaxed),
+                "aggregate gauge must reconcile at step {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn publish_gauge_is_multi_writer_safe() {
+        // cwnd gauges are published from submitters AND workers: after
+        // all concurrent publishes land, aggregate == shard's final
+        // value (deltas telescope through the serializing swap).
+        let shard = std::sync::Arc::new(AtomicU64::new(0));
+        let agg = std::sync::Arc::new(AtomicU64::new(0));
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let (shard, agg) = (shard.clone(), agg.clone());
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        ServiceMetrics::publish_gauge(&shard, &agg, t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(
+            agg.load(Ordering::Relaxed),
+            shard.load(Ordering::Relaxed),
+            "aggregate desynced from the one shard gauge"
+        );
+    }
+
+    #[test]
+    fn elastic_counters_surface_in_the_summary() {
+        let m = ServiceMetrics::default();
+        assert!(!m.summary().contains("migrated"), "healthy line stays short");
+        assert!(!m.summary().contains("admission"));
+        m.streams_migrated.fetch_add(2, Ordering::Relaxed);
+        m.migration_failed.fetch_add(1, Ordering::Relaxed);
+        assert!(m.summary().contains("2 migrated (1 failed)"));
+        m.admission_rejected.fetch_add(4, Ordering::Relaxed);
+        m.cwnd_milli.store(1500, Ordering::Relaxed);
+        assert!(m.summary().contains("4 admission-rejected (cwnd 1.5)"));
     }
 }

@@ -1,0 +1,647 @@
+//! Hot-shard stream migration and the elastic controller.
+//!
+//! The NATSA paper's premise is placing compute next to the data it
+//! scans; the software analogue in this service is making sure no one
+//! shard becomes the memory channel everyone queues behind.  This
+//! module supplies the two mechanisms and the policy loop:
+//!
+//! * [`run_migration`] — move one stream to another shard with **exact**
+//!   state fidelity (profiles are bit-identical across the hop) and a
+//!   crash-safe durability hand-off;
+//! * [`controller_loop`] — the background policy thread: autoscaling
+//!   worker pools per shard (queue-backlog signal, hysteresis) and
+//!   hot→cold stream migration (sustained imbalance signal, cooldown),
+//!   both configured by [`ElasticConfig`].
+//!
+//! # The migration protocol
+//!
+//! ```text
+//!   source shard                                   target shard
+//!   ------------                                   ------------
+//!   lock submit_seq (no new appends admitted)
+//!   lock state; wait next_seq == submit_seq    ← quiesce: every admitted
+//!                                                append has applied
+//!   capture session.state()  — the same bytes a WAL snapshot carries
+//!   issue new placement epoch
+//!   unlock state (submit_seq stays held)
+//!                                                log Open(epoch')
+//!                                                log Snapshot(epoch')
+//!                                                fsync
+//!   re-lock state; re-check not closed
+//!   insert target entry into target streams map
+//!   router.flip(placement → {target, epoch'})  ← the commit point
+//!   mark source entry moved + gone
+//!   log Close on source WAL
+//!   unlock state, unlock submit_seq
+//!   remove source map entry; wake waiters
+//! ```
+//!
+//! Durability composes across a crash at ANY point: the target's
+//! `Open`+`Snapshot` are synced **before** the source's `Close` is
+//! written, so the worst case (crash in between) leaves the stream open
+//! in *two* shard directories — and recovery keeps the incarnation with
+//! the higher placement epoch and closes the other (see
+//! `AnalysisService::try_start_sharded` and `wal_recovery.rs`).  A crash
+//! before the target sync recovers the stream on the source, exactly as
+//! if the migration never started.
+//!
+//! Bit-identity holds because the hand-off reuses the recovery path:
+//! the captured [`SessionState`] is round-tripped through the WAL codec
+//! (`encode` → `decode`) and rebuilt with [`StreamSession::from_state`]
+//! — the same bytes, the same rebuild, as a crash restart.  The
+//! quiesce barrier guarantees no append is in flight, so no tile
+//! boundary shifts.
+//!
+//! # Locking
+//!
+//! The migration holds `entry.submit_seq` (class 20) then `entry.state`
+//! (class 30), per the documented hierarchy; the router's `route_table`
+//! is a leaf above all classes and is taken under `state` at the commit
+//! point.  The one deliberate exception: the **target** shard's
+//! `streams` map (class 10) is inserted into while the **source**
+//! stream's `state` lock is held — annotated `natsa-lint:
+//! allow(lock_order)` at the site; safe because no code path anywhere
+//! acquires a `state` lock while holding a `streams`-map lock (the maps
+//! are leaves in practice; the documented chain is only ever entered
+//! map-first on a *single* shard), so no cycle can form.
+
+use std::time::Duration;
+
+use crate::coordinator::metrics::ServiceMetrics;
+use crate::coordinator::router::{Placement, Router};
+use crate::coordinator::service::{
+    spawn_worker, Job, ServiceConfig, Shard, StreamEntry, StreamState,
+};
+use crate::coordinator::wal::StreamMeta;
+use crate::mp::stampi::SessionState;
+use crate::natsa::{NatsaConfig, StreamSession};
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::mpsc::Receiver;
+use crate::sync::{lock_ok, thread, try_lock_ok, wait_ok, Arc, Condvar, Mutex};
+use crate::Real;
+
+/// Why a migration did not happen.  None of these leave any state
+/// changed except [`MigrateError::Closed`] raced after the target
+/// pre-logged (which is undone with a target-side `Close`).
+#[derive(Debug, PartialEq, Eq)]
+pub enum MigrateError {
+    /// The stream id is unknown or already closed.
+    UnknownStream,
+    /// Source and destination are the same shard — nothing to do.
+    SameShard,
+    /// The destination shard index is out of range.
+    InvalidShard(usize),
+    /// The stream was closed while the migration was quiescing it.
+    Closed,
+    /// A concurrent close/quarantine/migration won the placement race.
+    Raced,
+    /// The captured state failed to round-trip onto the target engine.
+    Restore(String),
+}
+
+impl std::fmt::Display for MigrateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MigrateError::UnknownStream => write!(f, "unknown or closed stream"),
+            MigrateError::SameShard => write!(f, "stream already lives on that shard"),
+            MigrateError::InvalidShard(k) => write!(f, "shard {k} out of range"),
+            MigrateError::Closed => write!(f, "stream closed during migration"),
+            MigrateError::Raced => write!(f, "placement changed during migration"),
+            MigrateError::Restore(why) => write!(f, "state hand-off failed: {why}"),
+        }
+    }
+}
+
+/// Borrowed view of the service internals a migration needs (the
+/// public entry point is
+/// [`AnalysisService::migrate_stream`](crate::coordinator::service::AnalysisService::migrate_stream)).
+pub(crate) struct MigrateCtx<'a, T: Real> {
+    pub(crate) shards: &'a [Arc<Shard<T>>],
+    pub(crate) router: &'a Router,
+    pub(crate) aggregate: &'a ServiceMetrics,
+    pub(crate) shard_configs: &'a [NatsaConfig],
+}
+
+/// Move `stream` to shard `to`.  See the module docs for the protocol;
+/// on success ticks `streams_migrated` (source shard + aggregate), on a
+/// failure after the source was resolved ticks `migration_failed`.
+pub(crate) fn run_migration<T: Real>(
+    cx: &MigrateCtx<'_, T>,
+    stream: u64,
+    to: usize,
+) -> Result<(), MigrateError> {
+    if to >= cx.shards.len() {
+        return Err(MigrateError::InvalidShard(to));
+    }
+    // Resolve placement + live entry (same retry contract as the
+    // service's resolve path).
+    let (p, entry) = loop {
+        let Some(p) = cx.router.lookup(stream) else {
+            return Err(MigrateError::UnknownStream);
+        };
+        if let Some(e) = lock_ok(&cx.shards[p.shard].streams).get(&stream).cloned() {
+            break (p, e);
+        }
+        match cx.router.lookup(stream) {
+            None => return Err(MigrateError::UnknownStream),
+            Some(p2) if p2 != p => continue,
+            Some(_) => thread::yield_now(),
+        }
+    };
+    if p.shard == to {
+        return Err(MigrateError::SameShard);
+    }
+    let source = &cx.shards[p.shard];
+    let target = &cx.shards[to];
+    let fail = |e: MigrateError| {
+        source.metrics.migration_failed.fetch_add(1, Ordering::Relaxed);
+        cx.aggregate.migration_failed.fetch_add(1, Ordering::Relaxed);
+        Err(e)
+    };
+    // Quiesce.  Holding `submit_seq` stops new appends from being
+    // admitted against this entry; the condvar wait drains the ones
+    // already admitted (each apply bumps `next_seq` and notifies).
+    // Jobs of other streams keep flowing around us the whole time.
+    let seq_guard = lock_ok(&entry.submit_seq);
+    let assigned = *seq_guard;
+    let mut st = lock_ok(&entry.state);
+    while !st.closed && st.next_seq < assigned {
+        st = wait_ok(&entry.cv, st);
+    }
+    if st.closed {
+        return fail(MigrateError::Closed);
+    }
+    if st.moved || st.epoch != p.epoch {
+        // Another migration committed this entry away between our
+        // resolve and the locks.
+        return fail(MigrateError::Raced);
+    }
+    // Capture the exact bytes a WAL snapshot would carry and round-trip
+    // them through the codec onto the target's PU slice — the identical
+    // rebuild a crash restart performs, so the profile is bit-identical
+    // by construction.
+    let sess_state = st.session.state();
+    let mut bytes = Vec::new();
+    sess_state.encode(&mut bytes);
+    let decoded = match SessionState::<T>::decode(&bytes) {
+        Ok(d) => d,
+        Err(e) => return fail(MigrateError::Restore(e.to_string())),
+    };
+    let target_pus = cx.shard_configs[to].pus.max(1);
+    let session = match StreamSession::from_state(decoded, target_pus) {
+        Ok(s) => s,
+        Err(e) => return fail(MigrateError::Restore(e.to_string())),
+    };
+    let epoch = cx.router.next_epoch();
+    let meta = StreamMeta {
+        m: sess_state.m,
+        excl: Some(sess_state.excl),
+        max_history: sess_state.max_history,
+        epoch,
+    };
+    // Target-first durability: the new incarnation must be on disk
+    // before the old one's Close is written, so a crash anywhere in
+    // between recovers the stream at least once — and the epoch dedupe
+    // at recovery makes it exactly once.  The state lock is released
+    // across the fsync (submit_seq stays held, so the quiesce holds);
+    // only reads and a racing close can touch the entry in the gap.
+    drop(st);
+    target.with_wal(cx.aggregate, |w| {
+        w.log_open(stream, meta)?;
+        w.log_snapshot(stream, epoch, assigned, &sess_state)?;
+        w.sync()
+    });
+    let mut st = lock_ok(&entry.state);
+    if st.closed {
+        // close_stream won the gap.  Undo the target pre-log so replay
+        // never resurrects the stream there.
+        target.with_wal(cx.aggregate, |w| w.log_close(stream));
+        return fail(MigrateError::Closed);
+    }
+    debug_assert!(!st.moved && st.next_seq == assigned, "quiesce barrier broken");
+    // Commit.  Subscribers ride along: the mailboxes move into the
+    // target entry in its constructor — never by locking two `state`
+    // mutexes at once.
+    let subs = std::mem::take(&mut st.subs);
+    let target_entry = Arc::new(StreamEntry {
+        state: Mutex::new(StreamState {
+            session,
+            next_seq: assigned,
+            closed: false,
+            moved: false,
+            epoch,
+            unsnapshotted: 0,
+            subs,
+        }),
+        cv: Condvar::new(),
+        submit_seq: Mutex::new(assigned),
+        gone: AtomicBool::new(false),
+    });
+    // Cross-shard: the TARGET's streams map is taken while the SOURCE
+    // stream's `state` lock is held.  Safe: no code path acquires a
+    // `state` lock while holding any `streams`-map lock, so the
+    // inverted pair cannot form a cycle.
+    // natsa-lint: allow(lock_order)
+    lock_ok(&target.streams).insert(stream, target_entry);
+    let flipped = cx.router.flip(stream, p, Placement { shard: to, epoch });
+    // Every flip-breaker (close, quarantine, another migration) needs
+    // the state lock we hold, so the CAS cannot lose; if it ever did,
+    // forcing the committed placement keeps the router consistent with
+    // the target entry + WAL records that already exist.
+    debug_assert!(flipped, "placement changed under the state lock");
+    if !flipped {
+        cx.router.install(stream, Placement { shard: to, epoch });
+    }
+    st.moved = true;
+    entry.gone.store(true, Ordering::Release);
+    source.with_wal(cx.aggregate, |w| w.log_close(stream));
+    // Lock order: release `state` AND `submit_seq` before touching the
+    // source streams map (class below both).
+    drop(st);
+    drop(seq_guard);
+    lock_ok(&source.streams).remove(&stream);
+    entry.cv.notify_all();
+    source.metrics.streams_migrated.fetch_add(1, Ordering::Relaxed);
+    cx.aggregate.streams_migrated.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Tuning for the elastic controller (enable with
+/// [`ServiceConfig::with_elastic`]).  All signals are evaluated once
+/// per `tick`; both actuators carry hysteresis so transient blips do
+/// not thrash pools or bounce streams.
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    /// Worker-pool floor per shard (workers never shrink below this).
+    pub min_workers: usize,
+    /// Worker-pool ceiling per shard.
+    pub max_workers: usize,
+    /// Controller evaluation period.
+    pub tick: Duration,
+    /// Grow a pool when its queued-plus-running backlog per worker
+    /// stays at or above this for `hysteresis_ticks` ticks.
+    pub grow_backlog: u64,
+    /// Shrink when backlog per worker stays at or below this.
+    pub shrink_backlog: u64,
+    /// Consecutive ticks a grow/shrink signal must persist.
+    pub hysteresis_ticks: u32,
+    /// Migration arms when `hottest > coldest * migrate_ratio +
+    /// migrate_slack` (in in-flight jobs)…
+    pub migrate_ratio: u64,
+    /// …with an absolute slack so near-idle noise never triggers it.
+    pub migrate_slack: u64,
+    /// Consecutive ticks the imbalance must persist before migrating.
+    pub migrate_ticks: u32,
+    /// Ticks to sit out after a migration (let the signal re-form).
+    pub cooldown_ticks: u32,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            min_workers: 1,
+            max_workers: 8,
+            tick: Duration::from_millis(10),
+            grow_backlog: 4,
+            shrink_backlog: 1,
+            hysteresis_ticks: 3,
+            migrate_ratio: 4,
+            migrate_slack: 8,
+            migrate_ticks: 3,
+            cooldown_ticks: 10,
+        }
+    }
+}
+
+impl ElasticConfig {
+    pub(crate) fn normalized(mut self, workers_per_shard: usize) -> Self {
+        self.min_workers = self.min_workers.max(1);
+        self.max_workers = self.max_workers.max(self.min_workers).max(workers_per_shard);
+        self.hysteresis_ticks = self.hysteresis_ticks.max(1);
+        self.migrate_ticks = self.migrate_ticks.max(1);
+        self.migrate_ratio = self.migrate_ratio.max(1);
+        self
+    }
+}
+
+/// Owned handles the controller thread needs (clones of the service's
+/// own Arcs; the service keeps the originals).
+pub(crate) struct ControllerCtx<T: Real> {
+    pub(crate) shards: Vec<Arc<Shard<T>>>,
+    pub(crate) rxs: Vec<Arc<Mutex<Receiver<Job<T>>>>>,
+    pub(crate) router: Arc<Router>,
+    pub(crate) aggregate: Arc<ServiceMetrics>,
+    pub(crate) shard_configs: Vec<NatsaConfig>,
+    pub(crate) svc: ServiceConfig,
+    pub(crate) workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    pub(crate) stop: Arc<AtomicBool>,
+}
+
+/// The background policy loop: pool scaling + hot-shard migration.
+/// Exits when the service's shutdown raises the stop flag.
+pub(crate) fn controller_loop<T: Real>(cx: ControllerCtx<T>, cfg: ElasticConfig) {
+    let n = cx.shards.len();
+    let mut grow_streak = vec![0u32; n];
+    let mut shrink_streak = vec![0u32; n];
+    let mut hot_streak = 0u32;
+    let mut cooldown = 0u32;
+    while !cx.stop.load(Ordering::Acquire) {
+        sleep_interruptibly(cfg.tick, &cx.stop);
+        if cx.stop.load(Ordering::Acquire) {
+            return;
+        }
+        scale_pools(&cx, &cfg, &mut grow_streak, &mut shrink_streak);
+        if cooldown > 0 {
+            cooldown -= 1;
+            hot_streak = 0;
+            continue;
+        }
+        let loads: Vec<u64> = cx.shards.iter().map(|s| s.metrics.in_flight()).collect();
+        if let Some((hot, cold)) = sustained_imbalance(&loads, &cfg, &mut hot_streak) {
+            if let Some(stream) = pick_busiest_stream(&cx.shards[hot]) {
+                let mcx = MigrateCtx {
+                    shards: &cx.shards,
+                    router: &cx.router,
+                    aggregate: &cx.aggregate,
+                    shard_configs: &cx.shard_configs,
+                };
+                // Failures (stream closed mid-flight, races) are
+                // normal under churn — counted in `migration_failed`,
+                // retried naturally at the next armed tick.
+                let _ = run_migration(&mcx, stream, cold);
+                cooldown = cfg.cooldown_ticks;
+            }
+        }
+    }
+}
+
+/// Sleep up to `d`, waking early when `stop` is raised (keeps shutdown
+/// latency bounded by ~10 ms regardless of the configured tick).
+fn sleep_interruptibly(d: Duration, stop: &AtomicBool) {
+    let slice = Duration::from_millis(10);
+    let mut left = d;
+    while !left.is_zero() && !stop.load(Ordering::Acquire) {
+        let s = left.min(slice);
+        std::thread::sleep(s);
+        left = left.saturating_sub(s);
+    }
+}
+
+/// One pool-scaling pass: grow/shrink each shard's worker pool on a
+/// sustained backlog-per-worker signal.  The controller is the single
+/// writer of `pool.target`; workers only ever CAS `pool.size` down
+/// when exiting (the gauge publish itself is multi-writer safe, see
+/// [`ServiceMetrics::publish_gauge`]).
+fn scale_pools<T: Real>(
+    cx: &ControllerCtx<T>,
+    cfg: &ElasticConfig,
+    grow_streak: &mut [u32],
+    shrink_streak: &mut [u32],
+) {
+    for (k, shard) in cx.shards.iter().enumerate() {
+        let size = shard.pool.size.load(Ordering::Relaxed);
+        let backlog = shard.metrics.in_flight();
+        let target = shard.pool.target.load(Ordering::Relaxed) as usize;
+        match scale_decision(
+            backlog,
+            size,
+            target,
+            cfg,
+            &mut grow_streak[k],
+            &mut shrink_streak[k],
+        ) {
+            ScaleAction::Grow => {
+                shard.pool.target.store(target as u64 + 1, Ordering::Relaxed);
+                shard.pool.size.fetch_add(1, Ordering::Relaxed);
+                let h = spawn_worker(
+                    cx.rxs[k].clone(),
+                    shard.clone(),
+                    cx.aggregate.clone(),
+                    cx.router.clone(),
+                    cx.shard_configs[k],
+                    cx.svc.clone(),
+                );
+                lock_ok(&cx.workers).push(h);
+            }
+            ScaleAction::Shrink => {
+                // Workers observe the lowered target and exit at their
+                // next job boundary — never mid-job.
+                shard.pool.target.store(target as u64 - 1, Ordering::Relaxed);
+            }
+            ScaleAction::Hold => {}
+        }
+        ServiceMetrics::publish_gauge(
+            &shard.metrics.pool_workers,
+            &cx.aggregate.pool_workers,
+            shard.pool.size.load(Ordering::Relaxed),
+        );
+    }
+}
+
+/// What one scaling tick decided for one shard's pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ScaleAction {
+    Grow,
+    Shrink,
+    Hold,
+}
+
+/// Pure grow/shrink/hold decision for one shard (the policy half of
+/// [`scale_pools`], separated so it is deterministic under unit test):
+/// backlog-per-worker crossing the grow/shrink thresholds for
+/// `hysteresis_ticks` consecutive ticks moves `target` one step,
+/// clamped to `min_workers..=max_workers`.
+fn scale_decision(
+    backlog: u64,
+    size: u64,
+    target: usize,
+    cfg: &ElasticConfig,
+    grow_streak: &mut u32,
+    shrink_streak: &mut u32,
+) -> ScaleAction {
+    let per_worker = backlog / size.max(1);
+    if per_worker >= cfg.grow_backlog {
+        *grow_streak += 1;
+        *shrink_streak = 0;
+    } else if per_worker <= cfg.shrink_backlog {
+        *shrink_streak += 1;
+        *grow_streak = 0;
+    } else {
+        *grow_streak = 0;
+        *shrink_streak = 0;
+    }
+    if *grow_streak >= cfg.hysteresis_ticks && target < cfg.max_workers {
+        *grow_streak = 0;
+        ScaleAction::Grow
+    } else if *shrink_streak >= cfg.hysteresis_ticks && target > cfg.min_workers {
+        *shrink_streak = 0;
+        ScaleAction::Shrink
+    } else {
+        ScaleAction::Hold
+    }
+}
+
+/// Detect a sustained hot/cold imbalance; returns `(hottest, coldest)`
+/// once the signal has held for `migrate_ticks` consecutive ticks.
+/// Pure over the load vector, so the trigger policy is unit-testable.
+fn sustained_imbalance(
+    loads: &[u64],
+    cfg: &ElasticConfig,
+    hot_streak: &mut u32,
+) -> Option<(usize, usize)> {
+    let hot = (0..loads.len()).max_by_key(|&k| loads[k])?;
+    let cold = (0..loads.len()).min_by_key(|&k| loads[k])?;
+    let armed = hot != cold
+        && loads[hot]
+            > loads[cold]
+                .saturating_mul(cfg.migrate_ratio)
+                .saturating_add(cfg.migrate_slack);
+    if !armed {
+        *hot_streak = 0;
+        return None;
+    }
+    *hot_streak += 1;
+    if *hot_streak < cfg.migrate_ticks {
+        return None;
+    }
+    *hot_streak = 0;
+    Some((hot, cold))
+}
+
+/// Pick the hot shard's busiest stream: most appends admitted but not
+/// yet applied (`submit_seq - next_seq`), sampled with try-locks so the
+/// controller never blocks behind the very backlog it is measuring.
+/// Falls back to any stream when every lock is contended.
+fn pick_busiest_stream<T: Real>(shard: &Shard<T>) -> Option<u64> {
+    let entries: Vec<(u64, Arc<StreamEntry<T>>)> = lock_ok(&shard.streams)
+        .iter()
+        .map(|(&id, e)| (id, e.clone()))
+        .collect();
+    let mut best: Option<(u64, u64)> = None; // (pending, id)
+    for (id, e) in &entries {
+        let Some(seq) = try_lock_ok(&e.submit_seq) else { continue };
+        let Some(st) = try_lock_ok(&e.state) else { continue };
+        if st.closed || st.moved {
+            continue;
+        }
+        let pending = seq.saturating_sub(st.next_seq);
+        if best.map_or(true, |(p, _)| pending > p) {
+            best = Some((pending, *id));
+        }
+    }
+    best.map(|(_, id)| id).or_else(|| entries.first().map(|(id, _)| *id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ElasticConfig {
+        ElasticConfig {
+            min_workers: 1,
+            max_workers: 4,
+            hysteresis_ticks: 3,
+            grow_backlog: 4,
+            shrink_backlog: 1,
+            migrate_ratio: 4,
+            migrate_slack: 8,
+            migrate_ticks: 3,
+            ..ElasticConfig::default()
+        }
+    }
+
+    #[test]
+    fn normalized_clamps_bounds() {
+        let e = ElasticConfig {
+            min_workers: 0,
+            max_workers: 0,
+            hysteresis_ticks: 0,
+            migrate_ticks: 0,
+            migrate_ratio: 0,
+            ..ElasticConfig::default()
+        }
+        .normalized(3);
+        assert_eq!(e.min_workers, 1);
+        assert_eq!(e.max_workers, 3, "ceiling covers the startup pool");
+        assert_eq!(e.hysteresis_ticks, 1);
+        assert_eq!(e.migrate_ticks, 1);
+        assert_eq!(e.migrate_ratio, 1);
+    }
+
+    #[test]
+    fn grow_needs_a_sustained_signal() {
+        let c = cfg();
+        let (mut g, mut s) = (0u32, 0u32);
+        // backlog 8 over 2 workers = 4/worker: at the grow threshold.
+        assert_eq!(scale_decision(8, 2, 2, &c, &mut g, &mut s), ScaleAction::Hold);
+        assert_eq!(scale_decision(8, 2, 2, &c, &mut g, &mut s), ScaleAction::Hold);
+        assert_eq!(scale_decision(8, 2, 2, &c, &mut g, &mut s), ScaleAction::Grow);
+        assert_eq!(g, 0, "streak resets after firing");
+        // A single quiet tick in the middle resets the streak.
+        assert_eq!(scale_decision(8, 2, 2, &c, &mut g, &mut s), ScaleAction::Hold);
+        assert_eq!(scale_decision(4, 2, 2, &c, &mut g, &mut s), ScaleAction::Hold);
+        assert_eq!(g, 0, "mid-band backlog clears the grow streak");
+    }
+
+    #[test]
+    fn scaling_respects_the_bounds() {
+        let c = cfg();
+        let (mut g, mut s) = (0u32, 0u32);
+        for _ in 0..20 {
+            // At max_workers a saturated signal must keep holding.
+            assert_eq!(
+                scale_decision(100, 4, c.max_workers, &c, &mut g, &mut s),
+                ScaleAction::Hold
+            );
+        }
+        let (mut g, mut s) = (0u32, 0u32);
+        for _ in 0..20 {
+            // At min_workers an idle signal must keep holding.
+            assert_eq!(
+                scale_decision(0, 1, c.min_workers, &c, &mut g, &mut s),
+                ScaleAction::Hold
+            );
+        }
+    }
+
+    #[test]
+    fn shrink_fires_when_idle_persists() {
+        let c = cfg();
+        let (mut g, mut s) = (0u32, 0u32);
+        assert_eq!(scale_decision(0, 3, 3, &c, &mut g, &mut s), ScaleAction::Hold);
+        assert_eq!(scale_decision(2, 3, 3, &c, &mut g, &mut s), ScaleAction::Hold);
+        assert_eq!(scale_decision(1, 3, 3, &c, &mut g, &mut s), ScaleAction::Shrink);
+        assert_eq!(s, 0, "streak resets after firing");
+    }
+
+    #[test]
+    fn imbalance_trigger_needs_ratio_slack_and_persistence() {
+        let c = cfg();
+        let mut streak = 0u32;
+        // 40 > 2*4 + 8: armed, but only fires on the 3rd consecutive tick.
+        assert_eq!(sustained_imbalance(&[40, 2, 3], &c, &mut streak), None);
+        assert_eq!(sustained_imbalance(&[40, 2, 3], &c, &mut streak), None);
+        assert_eq!(sustained_imbalance(&[40, 2, 3], &c, &mut streak), Some((0, 1)));
+        assert_eq!(streak, 0, "streak resets after firing");
+        // Within slack: near-idle noise never arms the trigger.
+        assert_eq!(sustained_imbalance(&[8, 0], &c, &mut streak), None);
+        // A balanced tick in the middle resets the streak.
+        assert_eq!(sustained_imbalance(&[40, 2], &c, &mut streak), None);
+        assert_eq!(sustained_imbalance(&[10, 10], &c, &mut streak), None);
+        assert_eq!(sustained_imbalance(&[40, 2], &c, &mut streak), None);
+        assert_eq!(streak, 1);
+        // Degenerate shapes are inert.
+        assert_eq!(sustained_imbalance(&[], &c, &mut streak), None);
+        assert_eq!(sustained_imbalance(&[99], &c, &mut streak), None);
+    }
+
+    #[test]
+    fn migrate_error_messages_are_stable() {
+        assert_eq!(MigrateError::SameShard.to_string(), "stream already lives on that shard");
+        assert_eq!(MigrateError::InvalidShard(9).to_string(), "shard 9 out of range");
+        assert_eq!(
+            MigrateError::Restore("boom".into()).to_string(),
+            "state hand-off failed: boom"
+        );
+    }
+}

@@ -23,7 +23,12 @@
 //! hosts long-lived streaming sessions (`submit_stream` / `append_stream`
 //! / `snapshot_stream`) over the exact incremental engine in
 //! [`crate::mp::stampi`]; each stream lives on one shard, so pipelined
-//! appends can never head-of-line block the rest of the fleet.
+//! appends can never head-of-line block the rest of the fleet.  Stream
+//! placement is **elastic**: the epoch-versioned [`router`] is the
+//! authority on where a stream lives, [`migrate`] moves hot streams
+//! between shards bit-identically at runtime (and autoscale worker
+//! pools), and [`admission`] adds an opt-in AIMD congestion window per
+//! shard.
 //!
 //! Sessions can outlive the process: [`wal`] gives every shard a
 //! segment write-ahead log (`Open`/`Append`/`Snapshot`/`Close` records,
@@ -32,8 +37,11 @@
 //! "Durability" section of [`service`]'s module docs for the ordering
 //! contract and failure policy.
 
+pub mod admission;
 pub mod fanout;
 pub mod metrics;
+pub mod migrate;
+pub mod router;
 pub mod service;
 pub mod slots;
 pub mod wal;

@@ -1,0 +1,201 @@
+//! Epoch-versioned stream routing table.
+//!
+//! Before elastic sharding, a stream's home shard was the low 8 bits
+//! of its id (`service::shard_of`) — authority packed into the id,
+//! placement fixed for life.  The router
+//! inverts that: the id bits are only a *hint* (the placement at mint
+//! time), and this table is the single authority on where a stream
+//! lives right now.  Every entry carries a **placement epoch** — a
+//! globally increasing version issued by [`Router::next_epoch`] — so
+//! placement changes are compare-and-swap transitions: a migration
+//! commits by [`Router::flip`]ing the entry from the exact placement it
+//! resolved, a close commits by [`Router::remove_if`], and whichever
+//! loses the race observes the epoch mismatch and retries or aborts.
+//!
+//! The same epochs are durable: the WAL logs them in every `Open` and
+//! `Snapshot` record, so when a crash lands inside a migration's
+//! two-directory window (target `Open`+`Snapshot` synced, source
+//! `Close` not yet written) recovery keeps the incarnation with the
+//! higher epoch and closes the other — see
+//! [`migrate`](crate::coordinator::migrate) and `wal_recovery.rs`.
+//!
+//! Locking: the table's mutex (`route_table`) is a **leaf** in the
+//! documented hierarchy (`docs/CONCURRENCY.md`) — nothing is ever
+//! acquired under it, so it may be taken while holding any other
+//! coordinator lock (the migration commit takes it under the source
+//! stream's `state` lock).  The `tools/lint` `lock_order` rule
+//! enforces this with `route_table` as the highest class.
+
+use std::collections::HashMap;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{lock_ok, Mutex};
+
+/// Where a stream lives, and the version of that fact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    /// Home shard index.
+    pub shard: usize,
+    /// Epoch of this placement: strictly increasing across the
+    /// stream's placements (and globally unique across all streams).
+    pub epoch: u64,
+}
+
+/// The authoritative stream id → [`Placement`] map.
+#[derive(Debug)]
+pub struct Router {
+    route_table: Mutex<HashMap<u64, Placement>>,
+    /// Last epoch issued; restart seeds it above every epoch any shard
+    /// WAL ever retained for a live stream (`wal::Replay::max_epoch`).
+    epoch: AtomicU64,
+}
+
+impl Router {
+    /// A router whose epoch allocator starts strictly above `floor`.
+    pub fn new(floor: u64) -> Self {
+        Router {
+            route_table: Mutex::new(HashMap::new()),
+            epoch: AtomicU64::new(floor),
+        }
+    }
+
+    /// Issue a fresh placement epoch (strictly increasing).
+    pub fn next_epoch(&self) -> u64 {
+        self.epoch.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Install a placement verbatim (recovery path: the epoch was
+    /// already issued in a previous life and replayed from the WAL).
+    pub fn install(&self, stream: u64, p: Placement) {
+        lock_ok(&self.route_table).insert(stream, p);
+    }
+
+    /// Route a freshly minted stream: issue an epoch, install, return
+    /// the placement.
+    pub fn bind(&self, stream: u64, shard: usize) -> Placement {
+        let p = Placement { shard, epoch: self.next_epoch() };
+        lock_ok(&self.route_table).insert(stream, p);
+        p
+    }
+
+    /// Current placement of `stream`, if it is live.
+    pub fn lookup(&self, stream: u64) -> Option<Placement> {
+        lock_ok(&self.route_table).get(&stream).copied()
+    }
+
+    /// Commit a migration: move `stream` from exactly `from` to `to`.
+    /// Fails (and changes nothing) when the current placement is no
+    /// longer `from` — the caller raced a close or another migration.
+    pub fn flip(&self, stream: u64, from: Placement, to: Placement) -> bool {
+        debug_assert!(to.epoch > from.epoch, "placement epochs must increase");
+        let mut t = lock_ok(&self.route_table);
+        match t.get_mut(&stream) {
+            Some(p) if *p == from => {
+                *p = to;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Commit a close: remove `stream`'s entry iff it still is exactly
+    /// `from`.  Fails (and changes nothing) on an epoch mismatch.
+    pub fn remove_if(&self, stream: u64, from: Placement) -> bool {
+        let mut t = lock_ok(&self.route_table);
+        match t.get(&stream) {
+            Some(p) if *p == from => {
+                t.remove(&stream);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Unconditional removal (quarantine: the stream is being retired
+    /// no matter what placement it reached).
+    pub fn remove(&self, stream: u64) -> Option<Placement> {
+        lock_ok(&self.route_table).remove(&stream)
+    }
+
+    /// Number of live streams.
+    pub fn len(&self) -> usize {
+        lock_ok(&self.route_table).len()
+    }
+
+    /// True when no stream is routed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the whole table (diagnostics / shard load scans).
+    pub fn placements(&self) -> Vec<(u64, Placement)> {
+        let mut v: Vec<(u64, Placement)> =
+            lock_ok(&self.route_table).iter().map(|(&s, &p)| (s, p)).collect();
+        v.sort_unstable_by_key(|&(s, _)| s);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_lookup_and_epochs_increase() {
+        let r = Router::new(0);
+        let a = r.bind(10, 2);
+        let b = r.bind(11, 0);
+        assert_eq!(a.shard, 2);
+        assert!(b.epoch > a.epoch);
+        assert_eq!(r.lookup(10), Some(a));
+        assert_eq!(r.lookup(99), None);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn epoch_allocator_respects_the_floor() {
+        let r = Router::new(41);
+        assert_eq!(r.next_epoch(), 42);
+        assert_eq!(r.next_epoch(), 43);
+    }
+
+    #[test]
+    fn flip_is_a_cas_on_the_exact_placement() {
+        let r = Router::new(0);
+        let from = r.bind(7, 0);
+        let to = Placement { shard: 3, epoch: r.next_epoch() };
+        // A stale `from` (wrong epoch) must not commit.
+        let stale = Placement { shard: 0, epoch: from.epoch + 99 };
+        assert!(!r.flip(7, stale, Placement { shard: 1, epoch: stale.epoch + 1 }));
+        assert_eq!(r.lookup(7), Some(from));
+        // The exact placement commits exactly once.
+        assert!(r.flip(7, from, to));
+        assert!(!r.flip(7, from, to));
+        assert_eq!(r.lookup(7), Some(to));
+    }
+
+    #[test]
+    fn remove_if_loses_to_a_concurrent_flip() {
+        let r = Router::new(0);
+        let from = r.bind(5, 1);
+        let to = Placement { shard: 2, epoch: r.next_epoch() };
+        assert!(r.flip(5, from, to));
+        // A closer that resolved the old placement must observe defeat…
+        assert!(!r.remove_if(5, from));
+        assert_eq!(r.lookup(5), Some(to));
+        // …and succeed after re-resolving.
+        assert!(r.remove_if(5, to));
+        assert_eq!(r.lookup(5), None);
+    }
+
+    #[test]
+    fn placements_snapshot_is_sorted_and_complete() {
+        let r = Router::new(0);
+        let b = r.bind(9, 1);
+        let a = r.bind(3, 0);
+        assert_eq!(r.placements(), vec![(3, a), (9, b)]);
+        r.remove(3);
+        assert_eq!(r.placements(), vec![(9, b)]);
+        assert!(!r.is_empty());
+    }
+}

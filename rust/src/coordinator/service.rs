@@ -14,12 +14,18 @@
 //!   PU fleet ([`crate::natsa::NatsaConfig::shard_slice`] — 48 PUs over
 //!   4 shards model 4 stacks of 12 PUs; a non-dividing count deals the
 //!   remainder to the first shards, so no PU is lost);
-//! * a **stream** is routed to one shard for its whole life at
-//!   [`AnalysisService::submit_stream`] (hash of the stream id), so its
-//!   inherently-sequential appends can only ever park workers of *that*
-//!   shard — a client pipelining appends head-of-line blocks its own
-//!   shard at worst, never the fleet (the old single-queue service parked
-//!   every worker in turn-waiting);
+//! * a **stream** is placed on one shard at
+//!   [`AnalysisService::submit_stream`] (hash of the stream id) and
+//!   routed through the epoch-versioned table in
+//!   [`crate::coordinator::router`] from then on — its
+//!   inherently-sequential appends can only ever park workers of its
+//!   *current* home shard; a client pipelining appends head-of-line
+//!   blocks that one shard at worst, never the fleet (the old
+//!   single-queue service parked every worker in turn-waiting).  The
+//!   shard index packed into the id's low bits is only the mint-time
+//!   **hint**: hot-shard migration
+//!   ([`crate::coordinator::migrate`], [`AnalysisService::migrate_stream`])
+//!   can move the stream, and only the router is authoritative;
 //! * **batch** jobs go to the least-loaded shard at submit time and spill
 //!   to the next shard when its queue is full, so they flow around a
 //!   stream storm instead of queueing behind it.
@@ -135,25 +141,50 @@
 //! * each job may carry its own window length and precision is fixed by
 //!   the service's type parameter.
 //!
+//! ## Elastic sharding
+//!
+//! Three cooperating subsystems keep a skewed workload from turning one
+//! shard into the slow memory channel everyone waits on (the NATSA
+//! software analogue of placing work where the data is):
+//!
+//! * **hot-shard migration** ([`crate::coordinator::migrate`]) —
+//!   quiesce a stream at its turn-seq barrier, hand its exact
+//!   WAL-snapshot bytes to a peer shard, log `Close` here and
+//!   `Open`+`Snapshot` there (durably, in that order reversed — target
+//!   first), and flip the routing entry; profiles stay bit-identical
+//!   across the hop and crash recovery composes via placement epochs;
+//! * **autoscaling worker pools** ([`ElasticConfig`]) — per-shard pools
+//!   grow/shrink between `min_workers..=max_workers` from queue-depth
+//!   signals with hysteresis; workers exit only at job boundaries;
+//! * **AIMD admission** ([`crate::coordinator::admission`], opt-in via
+//!   [`ServiceConfig::with_admission`]) — a per-shard congestion window
+//!   over in-flight work: overload fast-fails at submit
+//!   ([`SubmitError::Backpressure`], counted in
+//!   [`ServiceMetrics::admission_rejected`]) instead of piling up
+//!   latency, and re-opens additively when the overload clears.
+//!
 //! Concurrency contract — lock hierarchy (`streams` map →
-//! `entry.submit_seq` → `entry.state` → subscriber boxes; `try_lock`
-//! exempt), slot lifecycle, poison policy — is documented in
-//! `docs/CONCURRENCY.md` and enforced by the `tools/lint` scanner plus
-//! the loom models.
+//! `entry.submit_seq` → `entry.state` → subscriber boxes, with the
+//! router's `route_table` as a leaf above all; `try_lock` exempt), slot
+//! lifecycle, poison policy — is documented in `docs/CONCURRENCY.md`
+//! and enforced by the `tools/lint` scanner plus the loom models.
 
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+use crate::coordinator::admission::{AdmissionConfig, AimdController};
 use crate::coordinator::fanout::{self, SubBox};
 use crate::coordinator::metrics::ServiceMetrics;
+use crate::coordinator::migrate::{self, ElasticConfig, MigrateError};
+use crate::coordinator::router::{Placement, Router};
 use crate::coordinator::slots::{JobSlot, SlotStore, TakeError};
 use crate::coordinator::wal::{self, StreamMeta, WalOptions, WalWriter};
 use crate::mp::stampi::{Stampi, StampiConfig};
 use crate::mp::MatrixProfile;
 use crate::natsa::{NatsaConfig, NatsaEngine, StreamSession};
-use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use crate::sync::{lock_ok, thread, try_lock_ok, wait_ok, Arc, Condvar, Mutex, MutexGuard};
 use crate::Real;
@@ -165,14 +196,19 @@ const SHARD_BITS: u32 = 8;
 /// Hard shard-count ceiling implied by [`SHARD_BITS`].
 pub const MAX_SHARDS: usize = 1 << SHARD_BITS;
 
-/// The shard that owns a job or stream id (valid for ids handed out by
-/// [`AnalysisService::submit`] / `append_stream` / `submit_stream`).
+/// The shard that owns a **job** or **subscription** id (valid for ids
+/// handed out by [`AnalysisService::submit`] / `append_stream` /
+/// `subscribe_stream`).  For **stream** ids this is only the mint-time
+/// *hint* — hot-shard migration can re-home a stream, and the
+/// epoch-versioned [`Router`] is the sole authority; stream callers go
+/// through [`AnalysisService::stream_home`] / the internal resolve
+/// path, never this mask.
 pub fn shard_of(id: u64) -> usize {
     (id & (MAX_SHARDS as u64 - 1)) as usize
 }
 
-/// Stream-id hash for shard routing (splitmix64 finalizer: cheap, well
-/// mixed, stable — a stream keeps its shard for life).
+/// Stream-id hash for initial shard placement (splitmix64 finalizer:
+/// cheap, well mixed, stable).
 fn route_hash(x: u64) -> u64 {
     let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
@@ -215,6 +251,17 @@ pub struct ServiceConfig {
     /// `<= 1` disables the drain pass entirely (every job runs the
     /// serial path).
     pub coalesce: usize,
+    /// AIMD admission control (opt-in): when set, each shard carries a
+    /// congestion window over in-flight jobs and overload fast-fails at
+    /// submit with [`SubmitError::Backpressure`] instead of queueing
+    /// unbounded latency.  `None` (default) admits everything the
+    /// bounded queue accepts.
+    pub admission: Option<AdmissionConfig>,
+    /// Elastic sharding (opt-in): when set, a controller thread scales
+    /// each shard's worker pool between the configured bounds and
+    /// migrates hot streams to cold shards.  `None` (default) keeps the
+    /// static `workers_per_shard` pools and mint-time placements.
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -228,6 +275,8 @@ impl Default for ServiceConfig {
             wal_dir: None,
             wal_opts: WalOptions::default(),
             coalesce: crate::mp::kernel::BAND,
+            admission: None,
+            elastic: None,
         }
     }
 }
@@ -278,12 +327,26 @@ impl ServiceConfig {
         self
     }
 
+    /// Gate admission per shard behind an AIMD congestion window.
+    pub fn with_admission(mut self, cfg: AdmissionConfig) -> Self {
+        self.admission = Some(cfg);
+        self
+    }
+
+    /// Enable elastic sharding: autoscaling worker pools plus hot-shard
+    /// stream migration, driven by a controller thread.
+    pub fn with_elastic(mut self, cfg: ElasticConfig) -> Self {
+        self.elastic = Some(cfg);
+        self
+    }
+
     fn normalized(mut self) -> Self {
         self.shards = self.shards.clamp(1, MAX_SHARDS);
         self.workers_per_shard = self.workers_per_shard.max(1);
         self.queue_depth = self.queue_depth.max(1);
         self.result_cap = self.result_cap.max(1);
         self.coalesce = self.coalesce.max(1);
+        self.elastic = self.elastic.map(|e| e.normalized(self.workers_per_shard));
         self
     }
 }
@@ -377,44 +440,73 @@ impl std::fmt::Display for WaitError {
 pub type SubRecv<T> = fanout::SubRecv<MatrixProfile<T>>;
 
 /// One open stream: the session plus the apply-order bookkeeping.
-struct StreamState<T> {
-    session: StreamSession<T>,
+pub(crate) struct StreamState<T> {
+    pub(crate) session: StreamSession<T>,
     /// Next sequence number to apply (appends wait their turn on `cv`).
-    next_seq: u64,
+    pub(crate) next_seq: u64,
     /// Set by `close_stream`: wakes and fails any waiting appends.
-    closed: bool,
+    pub(crate) closed: bool,
+    /// Set by migration commit on the **source** entry: the stream is
+    /// alive, just elsewhere.  Waiters and the group pass treat it like
+    /// `closed` for this entry (give up, re-resolve), but clients see a
+    /// retryable miss, not "stream closed".
+    pub(crate) moved: bool,
+    /// Placement epoch of this incarnation (logged in every WAL
+    /// `Open`/`Snapshot` so restart recovery can pick the newest
+    /// incarnation when a crash lands inside a migration window).
+    pub(crate) epoch: u64,
     /// Appends applied since the last WAL snapshot (cadence counter;
     /// stays 0 while the shard's WAL is off or error-disabled).
-    unsnapshotted: u32,
+    pub(crate) unsnapshotted: u32,
     /// Live subscriber mailboxes, delivered to under this state lock so
     /// per-subscriber snapshot order == apply order.  Closed boxes are
     /// dropped lazily at the next fanout delivery.
-    subs: Vec<(u64, Arc<SubBox<MatrixProfile<T>>>)>,
+    pub(crate) subs: Vec<(u64, Arc<SubBox<MatrixProfile<T>>>)>,
 }
 
-struct StreamEntry<T> {
-    state: Mutex<StreamState<T>>,
-    cv: Condvar,
+pub(crate) struct StreamEntry<T> {
+    pub(crate) state: Mutex<StreamState<T>>,
+    pub(crate) cv: Condvar,
     /// Next sequence number to hand out.  Held across the (assign seq,
     /// enqueue) pair so queue order == seq order — the structural
     /// invariant the workers' turn-waiting relies on.
-    submit_seq: Mutex<u64>,
+    pub(crate) submit_seq: Mutex<u64>,
+    /// Set (before this entry leaves its shard's `streams` map) by
+    /// close, quarantine and migration: a submitter that cloned the
+    /// entry *before* the transition re-checks this after acquiring
+    /// `submit_seq` and re-resolves instead of enqueueing a job no
+    /// worker will ever match to a live map entry.
+    pub(crate) gone: AtomicBool,
+}
+
+/// Per-shard autoscaling worker-pool bookkeeping (gauges for the
+/// controller; workers themselves live in the service's join-handle
+/// vec).  `size` counts live workers; `target` is where the controller
+/// wants the pool — workers observing `size > target` exit at the next
+/// job boundary via a CAS decrement.
+#[derive(Debug)]
+pub(crate) struct WorkerPool {
+    pub(crate) size: AtomicU64,
+    pub(crate) target: AtomicU64,
 }
 
 /// One engine shard: queue-fed workers, its own streams, slots, metrics,
 /// and (when durability is on) its WAL writer.
-struct Shard<T: Real> {
-    slots: Mutex<SlotStore<JobResult<T>>>,
-    streams: Mutex<HashMap<u64, Arc<StreamEntry<T>>>>,
+pub(crate) struct Shard<T: Real> {
+    pub(crate) slots: Mutex<SlotStore<JobResult<T>>>,
+    pub(crate) streams: Mutex<HashMap<u64, Arc<StreamEntry<T>>>>,
     /// Subscription id → mailbox (the poll/unsubscribe index; the
     /// delivery index lives in each stream's `StreamState::subs`).
     /// Lock order: a stream's `state` lock may be held when taking
     /// this lock (subscribe does), never the reverse.
-    subs: Mutex<HashMap<u64, Arc<SubBox<MatrixProfile<T>>>>>,
-    metrics: ServiceMetrics,
+    pub(crate) subs: Mutex<HashMap<u64, Arc<SubBox<MatrixProfile<T>>>>>,
+    pub(crate) metrics: ServiceMetrics,
     /// `None` = WAL off.  The inner `Option` goes `None` after the first
     /// write error (durability disabled for the shard, service alive).
-    wal: Option<Mutex<Option<WalWriter<T>>>>,
+    pub(crate) wal: Option<Mutex<Option<WalWriter<T>>>>,
+    /// AIMD congestion window (admission control), when configured.
+    pub(crate) admission: Option<AimdController>,
+    pub(crate) pool: WorkerPool,
 }
 
 impl<T: Real> Shard<T> {
@@ -426,7 +518,7 @@ impl<T: Real> Shard<T> {
     ///
     /// Lock order: callers may hold a stream's `state` lock; never the
     /// reverse (a WAL holder never takes stream locks).
-    fn with_wal(
+    pub(crate) fn with_wal(
         &self,
         aggregate: &ServiceMetrics,
         f: impl FnOnce(&mut WalWriter<T>) -> crate::Result<()>,
@@ -447,7 +539,7 @@ impl<T: Real> Shard<T> {
     /// Snapshot cadence checks this so a dead writer doesn't keep
     /// ticking the counter (or worse, keep paying for deep state
     /// copies that `with_wal` would just discard).
-    fn wal_live(&self) -> bool {
+    pub(crate) fn wal_live(&self) -> bool {
         self.wal.as_ref().is_some_and(|cell| lock_ok(cell).is_some())
     }
 }
@@ -457,8 +549,18 @@ pub struct AnalysisService<T: Real> {
     /// Per-shard bounded queues (taken on shutdown).
     txs: Vec<Option<SyncSender<Job<T>>>>,
     shards: Vec<Arc<Shard<T>>>,
+    /// Per-shard queue receivers, kept so the elastic controller can
+    /// spawn additional workers onto a live shard.
+    rxs: Vec<Arc<Mutex<Receiver<Job<T>>>>>,
     aggregate: Arc<ServiceMetrics>,
-    workers: Vec<thread::JoinHandle<()>>,
+    /// Worker + controller join handles.  Shared with the controller
+    /// thread, which pushes handles for the workers it spawns.
+    workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    /// Tells the elastic controller (and pool-shrinking workers) to stop.
+    stop: Arc<AtomicBool>,
+    /// Authoritative stream id → placement map (see module docs: the
+    /// shard bits in a stream id are only the mint-time hint).
+    router: Arc<Router>,
     next_job_seq: AtomicU64,
     next_stream_seq: AtomicU64,
     next_sub_seq: AtomicU64,
@@ -510,27 +612,76 @@ impl<T: Real> AnalysisService<T> {
         let aggregate = Arc::new(ServiceMetrics::default());
         let mut txs = Vec::with_capacity(svc.shards);
         let mut shards = Vec::with_capacity(svc.shards);
+        let mut rxs = Vec::with_capacity(svc.shards);
         let mut workers = Vec::with_capacity(svc.shards * svc.workers_per_shard);
-        // Highest stream sequence ever issued against any WAL (0 =
-        // none): the id counter must restart strictly past every id the
-        // directory has ever seen — `Replay::max_stream` is fed by the
-        // segment headers' high-water field, so even ids whose records
-        // (including the `Close`) were compacted away stay retired.
+        // Phase 1 — replay every shard directory.  Two high-water marks
+        // cross shards: the highest stream sequence ever issued (the id
+        // counter must restart strictly past every id the directory has
+        // ever seen — `Replay::max_stream` is fed by the segment
+        // headers' high-water field, so even ids whose records were
+        // compacted away stay retired), and the highest placement epoch
+        // any *live* stream carries (the router's allocator must restart
+        // strictly past it, or a post-restart migration could mint an
+        // epoch that loses a recovery dedupe it should win).
         let mut max_stream_seq = 0u64;
-        for (k, &shard_config) in shard_configs.iter().enumerate() {
-            let mut streams: HashMap<u64, Arc<StreamEntry<T>>> = HashMap::new();
-            let mut wal_writer = None;
+        let mut max_epoch = 0u64;
+        let mut replays: Vec<Option<wal::Replay<T>>> = Vec::with_capacity(svc.shards);
+        for k in 0..svc.shards {
             if let Some(dir) = &svc.wal_dir {
                 let shard_dir = dir.join(format!("shard-{k}"));
                 let replay = wal::replay::<T>(&shard_dir)?;
                 max_stream_seq = max_stream_seq.max(replay.max_stream >> SHARD_BITS);
+                max_epoch = max_epoch.max(replay.max_epoch);
+                replays.push(Some(replay));
+            } else {
+                replays.push(None);
+            }
+        }
+        // Phase 2 — resolve each stream's home.  A crash inside a
+        // migration's commit window leaves the stream Open in TWO shard
+        // directories (the target's Open+Snapshot are synced before the
+        // source's Close is written); the incarnation with the higher
+        // placement epoch is the newer one and wins.  Epoch ties cannot
+        // cross shards (epochs are globally unique; legacy epoch-0 logs
+        // predate migration, under which a stream lived on exactly one
+        // shard for life).
+        let mut homes: HashMap<u64, (usize, u64)> = HashMap::new();
+        for (k, rp) in replays.iter().enumerate() {
+            let Some(rp) = rp else { continue };
+            for rs in &rp.streams {
+                match homes.get(&rs.id) {
+                    Some(&(_, epoch)) if epoch >= rs.epoch => {}
+                    _ => {
+                        homes.insert(rs.id, (k, rs.epoch));
+                    }
+                }
+            }
+        }
+        let router = Arc::new(Router::new(max_epoch));
+        // Phase 3 — per shard: resume the writer, close loser
+        // incarnations, restore winners, route them.
+        for (k, &shard_config) in shard_configs.iter().enumerate() {
+            let mut streams: HashMap<u64, Arc<StreamEntry<T>>> = HashMap::new();
+            let mut wal_writer = None;
+            if let Some(replay) = replays[k].take() {
+                let dir = svc.wal_dir.as_ref().expect("replay implies wal_dir");
+                let shard_dir = dir.join(format!("shard-{k}"));
                 let mut writer = WalWriter::resume(&shard_dir, svc.wal_opts.clone(), &replay)?;
                 let mut checkpoints = Vec::new();
                 let mut dropped = Vec::new();
                 for rs in replay.streams {
+                    if homes.get(&rs.id) != Some(&(k, rs.epoch)) {
+                        // Stale incarnation from an interrupted
+                        // migration: the stream's newer home is another
+                        // shard.  Finish the migration's intent by
+                        // closing it here.
+                        dropped.push(rs.id);
+                        continue;
+                    }
                     match restore_stream(&rs, shard_config.pus.max(1)) {
                         Ok((session, next_seq)) => {
-                            checkpoints.push((rs.id, next_seq, session.state()));
+                            checkpoints.push((rs.id, rs.epoch, next_seq, session.state()));
+                            router.install(rs.id, Placement { shard: k, epoch: rs.epoch });
                             streams.insert(
                                 rs.id,
                                 Arc::new(StreamEntry {
@@ -538,11 +689,14 @@ impl<T: Real> AnalysisService<T> {
                                         session,
                                         next_seq,
                                         closed: false,
+                                        moved: false,
+                                        epoch: rs.epoch,
                                         unsnapshotted: 0,
                                         subs: Vec::new(),
                                     }),
                                     cv: Condvar::new(),
                                     submit_seq: Mutex::new(next_seq),
+                                    gone: AtomicBool::new(false),
                                 }),
                             );
                         }
@@ -558,7 +712,8 @@ impl<T: Real> AnalysisService<T> {
                 // A dropped stream is a closed stream: logging the Close
                 // releases its (resume-seeded) pin so it cannot stall
                 // compaction forever, and keeps later replays from
-                // resurrecting a session we already failed to restore.
+                // resurrecting a session we already failed to restore
+                // (or a stale pre-migration incarnation).
                 for id in dropped {
                     writer.log_close(id)?;
                 }
@@ -577,24 +732,61 @@ impl<T: Real> AnalysisService<T> {
                 subs: Mutex::new(HashMap::new()),
                 metrics: ServiceMetrics::default(),
                 wal: wal_writer,
+                admission: svc.admission.clone().map(AimdController::new),
+                pool: WorkerPool {
+                    size: AtomicU64::new(svc.workers_per_shard as u64),
+                    target: AtomicU64::new(svc.workers_per_shard as u64),
+                },
             });
+            ServiceMetrics::publish_gauge(
+                &shard.metrics.pool_workers,
+                &aggregate.pool_workers,
+                svc.workers_per_shard as u64,
+            );
+            if let Some(adm) = &shard.admission {
+                ServiceMetrics::publish_gauge(
+                    &shard.metrics.cwnd_milli,
+                    &aggregate.cwnd_milli,
+                    adm.cwnd_milli(),
+                );
+            }
             for _ in 0..svc.workers_per_shard {
-                let rx = rx.clone();
-                let shard = shard.clone();
-                let aggregate = aggregate.clone();
-                let svc = svc.clone();
-                workers.push(thread::spawn(move || {
-                    worker_loop(rx, shard, aggregate, shard_config, svc);
-                }));
+                workers.push(spawn_worker(
+                    rx.clone(),
+                    shard.clone(),
+                    aggregate.clone(),
+                    router.clone(),
+                    shard_config,
+                    svc.clone(),
+                ));
             }
             txs.push(Some(tx));
+            rxs.push(rx);
             shards.push(shard);
+        }
+        let workers = Arc::new(Mutex::new(workers));
+        let stop = Arc::new(AtomicBool::new(false));
+        if let Some(ecfg) = svc.elastic.clone() {
+            let ctx = migrate::ControllerCtx {
+                shards: shards.clone(),
+                rxs: rxs.clone(),
+                router: router.clone(),
+                aggregate: aggregate.clone(),
+                shard_configs: shard_configs.clone(),
+                svc: svc.clone(),
+                workers: workers.clone(),
+                stop: stop.clone(),
+            };
+            lock_ok(&workers).push(thread::spawn(move || migrate::controller_loop(ctx, ecfg)));
         }
         Ok(AnalysisService {
             txs,
             shards,
+            rxs,
             aggregate,
             workers,
+            stop,
+            router,
             next_job_seq: AtomicU64::new(1),
             next_stream_seq: AtomicU64::new(max_stream_seq + 1),
             next_sub_seq: AtomicU64::new(1),
@@ -632,26 +824,61 @@ impl<T: Real> AnalysisService<T> {
 
     /// Open a streaming session with window `m` (and an optional retained
     /// history bound in samples).  Returns the stream id to append to.
-    /// The stream is routed to one shard for its whole life (hash of the
-    /// id), so its sequential appends can never park another shard's
-    /// workers.
+    /// The stream is *placed* on a shard by hashing the id — and from
+    /// then on routed through the epoch-versioned table, which hot-shard
+    /// migration may repoint (see [`Self::migrate_stream`]).
     pub fn submit_stream(&self, m: usize, max_history: Option<usize>) -> Result<u64, SubmitError> {
         let seq = self.next_stream_seq.fetch_add(1, Ordering::Relaxed);
         let shard_idx = (route_hash(seq) % self.shards.len() as u64) as usize;
+        self.open_stream_at(shard_idx, seq, m, max_history)
+    }
+
+    /// [`Self::submit_stream`] with an explicit initial shard (tests and
+    /// benchmarks pinning placement; `shard_idx` must be in range).
+    pub fn submit_stream_on(
+        &self,
+        shard_idx: usize,
+        m: usize,
+        max_history: Option<usize>,
+    ) -> Result<u64, SubmitError> {
+        if shard_idx >= self.shards.len() {
+            return Err(SubmitError::Invalid(format!(
+                "shard {shard_idx} out of range ({} shards)",
+                self.shards.len()
+            )));
+        }
+        let seq = self.next_stream_seq.fetch_add(1, Ordering::Relaxed);
+        self.open_stream_at(shard_idx, seq, m, max_history)
+    }
+
+    fn open_stream_at(
+        &self,
+        shard_idx: usize,
+        seq: u64,
+        m: usize,
+        max_history: Option<usize>,
+    ) -> Result<u64, SubmitError> {
         let session = NatsaEngine::<T>::new(self.shard_configs[shard_idx])
             .open_stream_bounded(m, max_history)
             .map_err(|e| SubmitError::Invalid(e.to_string()))?;
         let id = (seq << SHARD_BITS) | shard_idx as u64;
+        // The packed shard bits are only the mint-time hint; they must
+        // agree with the actual initial placement exactly here, at mint.
+        debug_assert_eq!(shard_of(id), shard_idx, "mint-time hint must match placement");
+        let epoch = self.router.next_epoch();
         let entry = Arc::new(StreamEntry {
             state: Mutex::new(StreamState {
                 session,
                 next_seq: 0,
                 closed: false,
+                moved: false,
+                epoch,
                 unsnapshotted: 0,
                 subs: Vec::new(),
             }),
             cv: Condvar::new(),
             submit_seq: Mutex::new(0),
+            gone: AtomicBool::new(false),
         });
         let shard = &self.shards[shard_idx];
         // Write-ahead: log the Open BEFORE the stream becomes visible,
@@ -665,11 +892,53 @@ impl<T: Real> AnalysisService<T> {
                     m,
                     excl: self.shard_configs[shard_idx].excl,
                     max_history,
+                    epoch,
                 },
             )
         });
+        // Visibility order: shard map first, router last — a client that
+        // resolves the placement must find the map entry (resolve relies
+        // on it; see `resolve_stream`).
         lock_ok(&shard.streams).insert(id, entry);
+        self.router.install(id, Placement { shard: shard_idx, epoch });
         Ok(id)
+    }
+
+    /// The shard currently hosting `stream` (`None` when unknown or
+    /// closed).  Snapshot only — migration may re-home the stream right
+    /// after this returns; callers wanting the entry go through the
+    /// internal resolve path, which retries the race.
+    pub fn stream_home(&self, stream: u64) -> Option<usize> {
+        self.router.lookup(stream).map(|p| p.shard)
+    }
+
+    /// Resolve `stream` to its current home: placement plus the live map
+    /// entry on that shard.  Retries the transient windows in which the
+    /// router and the shard maps disagree (mint: map insert → router
+    /// install; migration commit: target map insert → flip → source map
+    /// remove; close: router remove → map remove) — each window is
+    /// bounded by the writer finishing its sequence, and every retry
+    /// re-reads the router, so this terminates.
+    fn resolve_stream(&self, stream: u64) -> Result<(Placement, Arc<StreamEntry<T>>), SubmitError> {
+        loop {
+            let Some(p) = self.router.lookup(stream) else {
+                return Err(SubmitError::UnknownStream);
+            };
+            let shard = self.shards.get(p.shard).ok_or(SubmitError::UnknownStream)?;
+            if let Some(entry) = lock_ok(&shard.streams).get(&stream).cloned() {
+                return Ok((p, entry));
+            }
+            // Router said `p.shard` but the map has no entry: either the
+            // stream just closed (next lookup misses), just migrated
+            // (next lookup names the new home), or — mint/commit
+            // mid-flight — the entry is about to appear.  Re-read;
+            // yield only when the placement is unchanged.
+            match self.router.lookup(stream) {
+                None => return Err(SubmitError::UnknownStream),
+                Some(p2) if p2 != p => continue,
+                Some(_) => thread::yield_now(),
+            }
+        }
     }
 
     /// Enqueue a batch of samples against stream `stream`, onto the
@@ -705,29 +974,37 @@ impl<T: Real> AnalysisService<T> {
         samples: &[T],
         fanout: bool,
     ) -> Result<u64, SubmitError> {
-        let shard_idx = shard_of(stream);
-        let shard = self.shards.get(shard_idx).ok_or(SubmitError::UnknownStream)?;
-        let entry = lock_ok(&shard.streams)
-            .get(&stream)
-            .cloned()
-            .ok_or(SubmitError::UnknownStream)?;
-        // Hold the stream's seq lock across (assign seq, enqueue) so
-        // queue order equals sequence order — the workers rely on it.
-        let mut seq_guard = lock_ok(&entry.submit_seq);
-        let seq = *seq_guard;
-        let result = self.try_enqueue(
-            shard_idx,
-            JobPayload::StreamAppend { stream, samples: samples.to_vec(), seq, fanout },
-        );
-        match result {
-            Ok(_) => *seq_guard += 1,
-            Err(SubmitError::Backpressure) => {
-                shard.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
-                self.aggregate.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+        loop {
+            let (p, entry) = self.resolve_stream(stream)?;
+            let shard = &self.shards[p.shard];
+            // Hold the stream's seq lock across (assign seq, enqueue) so
+            // queue order equals sequence order — the workers rely on it.
+            let mut seq_guard = lock_ok(&entry.submit_seq);
+            if entry.gone.load(Ordering::Acquire) {
+                // The entry left its shard (close / quarantine /
+                // migration committed) between our resolve and taking
+                // its seq lock; a job enqueued against it would never
+                // find a live stream.  Re-resolve: a migrated stream
+                // admits the append at its new home, a closed one
+                // reports UnknownStream.
+                drop(seq_guard);
+                continue;
             }
-            Err(_) => {}
+            let seq = *seq_guard;
+            let result = self.try_enqueue(
+                p.shard,
+                JobPayload::StreamAppend { stream, samples: samples.to_vec(), seq, fanout },
+            );
+            match result {
+                Ok(_) => *seq_guard += 1,
+                Err(SubmitError::Backpressure) => {
+                    shard.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+                    self.aggregate.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => {}
+            }
+            return result;
         }
-        result
     }
 
     /// Register a snapshot subscriber on `stream`; returns the
@@ -738,25 +1015,33 @@ impl<T: Real> AnalysisService<T> {
     /// (at most [`ServiceConfig::result_cap`] retained; oldest evicted
     /// first — see [`Self::subscription_lag`]).
     pub fn subscribe_stream(&self, stream: u64) -> Result<u64, SubmitError> {
-        let shard_idx = shard_of(stream);
-        let shard = self.shards.get(shard_idx).ok_or(SubmitError::UnknownStream)?;
-        let entry = lock_ok(&shard.streams)
-            .get(&stream)
-            .cloned()
-            .ok_or(SubmitError::UnknownStream)?;
-        let seq = self.next_sub_seq.fetch_add(1, Ordering::Relaxed);
-        let id = (seq << SHARD_BITS) | shard_idx as u64;
-        let sb = SubBox::new();
-        // Registration is atomic under the stream's state lock (the
-        // documented state → subs-map order): a close racing in behind
-        // us finds the box in `subs` and closes it properly.
-        let mut st = lock_ok(&entry.state);
-        if st.closed {
-            return Err(SubmitError::UnknownStream);
+        loop {
+            let (p, entry) = self.resolve_stream(stream)?;
+            let shard = &self.shards[p.shard];
+            // The subscription id's packed bits name the shard whose
+            // `subs` index holds the mailbox — that binding is real
+            // authority (unsubscribe/poll mask it), so a migration
+            // racing us must be retried, not ignored.
+            let seq = self.next_sub_seq.fetch_add(1, Ordering::Relaxed);
+            let id = (seq << SHARD_BITS) | p.shard as u64;
+            let sb = SubBox::new();
+            // Registration is atomic under the stream's state lock (the
+            // documented state → subs-map order): a close racing in
+            // behind us finds the box in `subs` and closes it properly.
+            let mut st = lock_ok(&entry.state);
+            if st.closed {
+                return Err(SubmitError::UnknownStream);
+            }
+            if st.moved || entry.gone.load(Ordering::Acquire) {
+                // Migration committed between resolve and this lock: the
+                // live subscriber list moved to the new home's entry.
+                drop(st);
+                continue;
+            }
+            st.subs.push((id, sb.clone()));
+            lock_ok(&shard.subs).insert(id, sb);
+            return Ok(id);
         }
-        st.subs.push((id, sb.clone()));
-        lock_ok(&shard.subs).insert(id, sb);
-        Ok(id)
     }
 
     /// Tear down a subscription.  Fanout deliveries skip it from now on
@@ -848,19 +1133,20 @@ impl<T: Real> AnalysisService<T> {
     /// exercises the quarantine path.
     #[cfg(test)]
     fn append_stream_panic(&self, stream: u64) -> Result<u64, SubmitError> {
-        let shard_idx = shard_of(stream);
-        let shard = self.shards.get(shard_idx).ok_or(SubmitError::UnknownStream)?;
-        let entry = lock_ok(&shard.streams)
-            .get(&stream)
-            .cloned()
-            .ok_or(SubmitError::UnknownStream)?;
-        let mut seq_guard = lock_ok(&entry.submit_seq);
-        let seq = *seq_guard;
-        let result = self.try_enqueue(shard_idx, JobPayload::Panic { stream: Some(stream), seq });
-        if result.is_ok() {
-            *seq_guard += 1;
+        loop {
+            let (p, entry) = self.resolve_stream(stream)?;
+            let mut seq_guard = lock_ok(&entry.submit_seq);
+            if entry.gone.load(Ordering::Acquire) {
+                drop(seq_guard);
+                continue;
+            }
+            let seq = *seq_guard;
+            let result = self.try_enqueue(p.shard, JobPayload::Panic { stream: Some(stream), seq });
+            if result.is_ok() {
+                *seq_guard += 1;
+            }
+            return result;
         }
-        result
     }
 
     /// Reserve a completion slot and enqueue onto shard `shard_idx`.
@@ -870,6 +1156,15 @@ impl<T: Real> AnalysisService<T> {
     fn try_enqueue(&self, shard_idx: usize, payload: JobPayload<T>) -> Result<u64, SubmitError> {
         let shard = &self.shards[shard_idx];
         let tx = self.txs[shard_idx].as_ref().ok_or(SubmitError::Closed)?;
+        // AIMD admission gate (opt-in): refuse before reserving anything
+        // when the shard's in-flight load fills its congestion window.
+        if let Some(adm) = &shard.admission {
+            if !adm.try_acquire(shard.metrics.in_flight()) {
+                shard.metrics.admission_rejected.fetch_add(1, Ordering::Relaxed);
+                self.aggregate.admission_rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Backpressure);
+            }
+        }
         let seq = self.next_job_seq.fetch_add(1, Ordering::Relaxed);
         let id = (seq << SHARD_BITS) | shard_idx as u64;
         let slot = {
@@ -894,7 +1189,19 @@ impl<T: Real> AnalysisService<T> {
                 self.aggregate.jobs_submitted.fetch_sub(1, Ordering::Relaxed);
                 lock_ok(&shard.slots).forget(id);
                 match e {
-                    TrySendError::Full(_) => Err(SubmitError::Backpressure),
+                    TrySendError::Full(_) => {
+                        // Hard congestion: the bounded queue itself
+                        // refused — shrink the window multiplicatively.
+                        if let Some(adm) = &shard.admission {
+                            adm.on_congestion();
+                            ServiceMetrics::publish_gauge(
+                                &shard.metrics.cwnd_milli,
+                                &self.aggregate.cwnd_milli,
+                                adm.cwnd_milli(),
+                            );
+                        }
+                        Err(SubmitError::Backpressure)
+                    }
                     TrySendError::Disconnected(_) => Err(SubmitError::Closed),
                 }
             }
@@ -904,10 +1211,17 @@ impl<T: Real> AnalysisService<T> {
     /// Read a stream's live profile without going through the queue.
     /// `None` if the stream is unknown or closed.
     pub fn snapshot_stream(&self, stream: u64) -> Option<MatrixProfile<T>> {
-        let shard = self.shards.get(shard_of(stream))?;
-        let entry = lock_ok(&shard.streams).get(&stream).cloned()?;
-        let state = lock_ok(&entry.state);
-        Some(state.session.profile())
+        loop {
+            let (_, entry) = self.resolve_stream(stream).ok()?;
+            let state = lock_ok(&entry.state);
+            if state.moved {
+                // Migration won the race to this entry; the session (and
+                // any appends since) lives at the new home — re-resolve.
+                drop(state);
+                continue;
+            }
+            return Some(state.session.profile());
+        }
     }
 
     /// Close a stream.  Semantics are **reject, not drain**: the append
@@ -920,25 +1234,45 @@ impl<T: Real> AnalysisService<T> {
     /// After a restart the stream stays closed: replay never resurrects
     /// a `Close`d stream.  Returns whether the id was open.
     pub fn close_stream(&self, stream: u64) -> bool {
-        let Some(shard) = self.shards.get(shard_of(stream)) else {
-            return false;
-        };
-        let entry = lock_ok(&shard.streams).remove(&stream);
-        match entry {
-            Some(e) => {
-                // Mark closed and log the Close under the state lock:
-                // an append holds that lock from turn-win through WAL
-                // log and apply, so nothing of this stream's can enter
-                // the log after its Close record.
-                let mut st = lock_ok(&e.state);
-                st.closed = true;
-                shard.with_wal(&self.aggregate, |w| w.log_close(stream));
-                fanout::close_all(&mut st.subs);
-                drop(st);
-                e.cv.notify_all();
-                true
+        loop {
+            let Ok((p, e)) = self.resolve_stream(stream) else {
+                return false;
+            };
+            let shard = &self.shards[p.shard];
+            // Mark closed and log the Close under the state lock: an
+            // append holds that lock from turn-win through WAL log and
+            // apply, so nothing of this stream's can enter the log
+            // after its Close record.
+            let mut st = lock_ok(&e.state);
+            if st.closed {
+                return false;
             }
-            None => false,
+            if st.moved {
+                // A migration committed this entry away first; close the
+                // stream at its new home.
+                drop(st);
+                continue;
+            }
+            // Commit the close against the exact placement we resolved
+            // (CAS): losing means a migration flipped the entry
+            // concurrently — but `moved` is set under the state lock we
+            // hold, so a loss here can only be a stale pre-lock read.
+            if !self.router.remove_if(stream, p) {
+                drop(st);
+                continue;
+            }
+            st.closed = true;
+            e.gone.store(true, Ordering::Release);
+            shard.with_wal(&self.aggregate, |w| w.log_close(stream));
+            fanout::close_all(&mut st.subs);
+            // Lock order: `streams` (class below `state`) must not be
+            // acquired while `state` is held — drop first.  The entry
+            // stays resolvable in the gap; `closed` + the router removal
+            // already make every path report the stream gone.
+            drop(st);
+            lock_ok(&shard.streams).remove(&stream);
+            e.cv.notify_all();
+            return true;
         }
     }
 
@@ -1015,12 +1349,39 @@ impl<T: Real> AnalysisService<T> {
             .sum()
     }
 
+    /// Migrate `stream` to shard `to`: quiesce its appends at the
+    /// turn-seq barrier, install its exact WAL-snapshot state on the
+    /// target (durably, before the source logs its `Close`), and flip
+    /// the routing entry.  Appends admitted before the flip apply on the
+    /// source; appends admitted after resolve to the target — profiles
+    /// are bit-identical across the hop.  The elastic controller calls
+    /// this automatically when configured; it is public for explicit
+    /// rebalancing (and the tests).
+    pub fn migrate_stream(&self, stream: u64, to: usize) -> Result<(), MigrateError> {
+        migrate::run_migration(
+            &migrate::MigrateCtx {
+                shards: &self.shards,
+                router: &self.router,
+                aggregate: &self.aggregate,
+                shard_configs: &self.shard_configs,
+            },
+            stream,
+            to,
+        )
+    }
+
     /// Stop accepting jobs, drain every shard's queue, join workers.
-    pub fn shutdown(mut self) {
-        for tx in &mut self.txs {
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::Release);
+        let mut txs = self.txs;
+        for tx in &mut txs {
             tx.take(); // close the shard's channel
         }
-        for h in self.workers.drain(..) {
+        let handles: Vec<thread::JoinHandle<()>> = {
+            let mut w = lock_ok(&self.workers);
+            w.drain(..).collect()
+        };
+        for h in handles {
             let _ = h.join();
         }
         // Workers are gone, so the log is quiescent — one final fsync
@@ -1097,15 +1458,47 @@ fn restore_stream<T: Real>(
     .map_err(|e| e.to_string())
 }
 
+/// Spawn one worker thread onto a shard's shared queue receiver (used
+/// at startup and by the elastic controller growing a pool).
+pub(crate) fn spawn_worker<T: Real>(
+    rx: Arc<Mutex<Receiver<Job<T>>>>,
+    shard: Arc<Shard<T>>,
+    aggregate: Arc<ServiceMetrics>,
+    router: Arc<Router>,
+    config: NatsaConfig,
+    svc: ServiceConfig,
+) -> thread::JoinHandle<()> {
+    thread::spawn(move || worker_loop(rx, shard, aggregate, router, config, svc))
+}
+
 fn worker_loop<T: Real>(
     rx: Arc<Mutex<Receiver<Job<T>>>>,
     shard: Arc<Shard<T>>,
     aggregate: Arc<ServiceMetrics>,
+    router: Arc<Router>,
     config: NatsaConfig,
     svc: ServiceConfig,
 ) {
     let engine = NatsaEngine::<T>::new(config);
     loop {
+        // Pool shrink: workers exit only here, at a job boundary, never
+        // mid-job — the controller lowers `target` and whichever workers
+        // win the CAS decrement leave before blocking on the queue.
+        loop {
+            let size = shard.pool.size.load(Ordering::Relaxed);
+            let target = shard.pool.target.load(Ordering::Relaxed);
+            if size <= target {
+                break;
+            }
+            if shard
+                .pool
+                .size
+                .compare_exchange(size, size - 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+        }
         // Drain pass: block for one job, then opportunistically take up
         // to `coalesce - 1` more already-queued jobs in the same grab
         // (never waiting), so a storm of small appends arrives at the
@@ -1126,7 +1519,7 @@ fn worker_loop<T: Real>(
             batch
         };
         let rest = if batch.len() >= 2 {
-            run_group_pass(&shard, &aggregate, batch, &svc)
+            run_group_pass(&shard, &aggregate, &router, batch, &svc)
         } else {
             batch
         };
@@ -1136,7 +1529,7 @@ fn worker_loop<T: Real>(
         // already advanced above, so a leftover append behind a grouped
         // one finds its turn ready).
         for job in rest {
-            execute_one(job, &shard, &aggregate, &engine, &svc);
+            execute_one(job, &shard, &aggregate, &router, &engine, &svc);
         }
     }
 }
@@ -1148,6 +1541,7 @@ fn execute_one<T: Real>(
     job: Job<T>,
     shard: &Arc<Shard<T>>,
     aggregate: &ServiceMetrics,
+    router: &Router,
     engine: &NatsaEngine<T>,
     svc: &ServiceConfig,
 ) {
@@ -1184,7 +1578,7 @@ fn execute_one<T: Real>(
             shard.metrics.jobs_panicked.fetch_add(1, Ordering::Relaxed);
             aggregate.jobs_panicked.fetch_add(1, Ordering::Relaxed);
             if let Some(stream) = panic_stream {
-                quarantine_stream(shard, aggregate, stream);
+                quarantine_stream(shard, aggregate, router, stream);
             }
             (Err(format!("job panicked: {}", panic_message(&*cause))), 0.0)
         }
@@ -1213,6 +1607,16 @@ fn finish_job<T: Real>(
     let failed = profile.is_err();
     shard.metrics.record_outcome(failed, queue_wait, exec);
     aggregate.record_outcome(failed, queue_wait, exec);
+    // Feed the AIMD window the end-to-end latency this caller saw:
+    // success under the target grows the window, a breach shrinks it.
+    if let Some(adm) = &shard.admission {
+        adm.on_outcome(Duration::from_secs_f64((queue_wait + exec).max(0.0)));
+        ServiceMetrics::publish_gauge(
+            &shard.metrics.cwnd_milli,
+            &aggregate.cwnd_milli,
+            adm.cwnd_milli(),
+        );
+    }
 
     // Bounded retention: count the finished result BEFORE publishing
     // it, so a fast waiter can never consume (and decrement) a result
@@ -1251,6 +1655,7 @@ fn finish_job<T: Real>(
 fn run_group_pass<T: Real>(
     shard: &Arc<Shard<T>>,
     aggregate: &ServiceMetrics,
+    router: &Router,
     batch: Vec<Job<T>>,
     svc: &ServiceConfig,
 ) -> Vec<Job<T>> {
@@ -1280,7 +1685,7 @@ fn run_group_pass<T: Real>(
             continue;
         };
         let Some(st) = try_lock_ok(&e.state) else { continue };
-        if st.closed || st.next_seq != *seq {
+        if st.closed || st.moved || st.next_seq != *seq {
             continue;
         }
         let k = (st.session.m(), st.session.exclusion());
@@ -1348,9 +1753,12 @@ fn run_group_pass<T: Real>(
             if shard.wal_live() {
                 g.unsnapshotted += 1;
                 if g.unsnapshotted >= svc.wal_opts.snapshot_every.max(1) {
+                    let epoch = g.epoch;
                     let next_seq = g.next_seq;
                     let sess_state = g.session.state();
-                    shard.with_wal(aggregate, |w| w.log_snapshot(*stream, next_seq, &sess_state));
+                    shard.with_wal(aggregate, |w| {
+                        w.log_snapshot(*stream, epoch, next_seq, &sess_state)
+                    });
                     g.unsnapshotted = 0;
                 }
             } else {
@@ -1395,7 +1803,7 @@ fn run_group_pass<T: Real>(
                 };
                 shard.metrics.jobs_panicked.fetch_add(1, Ordering::Relaxed);
                 aggregate.jobs_panicked.fetch_add(1, Ordering::Relaxed);
-                quarantine_stream(shard, aggregate, *stream);
+                quarantine_stream(shard, aggregate, router, *stream);
                 finish_job(
                     shard,
                     aggregate,
@@ -1451,10 +1859,28 @@ fn panic_message(cause: &(dyn std::any::Any + Send)) -> &str {
 /// `next_seq` bump that will never come), and `Close` it in the WAL —
 /// replaying the packet that just panicked would only panic again on
 /// recovery.
-fn quarantine_stream<T: Real>(shard: &Shard<T>, aggregate: &ServiceMetrics, stream: u64) {
+fn quarantine_stream<T: Real>(
+    shard: &Shard<T>,
+    aggregate: &ServiceMetrics,
+    router: &Router,
+    stream: u64,
+) {
     let entry = lock_ok(&shard.streams).remove(&stream);
     if let Some(e) = entry {
+        e.gone.store(true, Ordering::Release);
         let mut st = lock_ok(&e.state);
+        if st.moved {
+            // A migration committed this entry away before the panic
+            // was handled: the stream now lives (healthy) on another
+            // shard and this entry is a husk — nothing to retire.
+            return;
+        }
+        // Unroute under the state lock (no CAS: whatever placement the
+        // stream reached, it is being retired).  Holding `state` here
+        // is what lets the migration commit treat its flip as
+        // infallible — every flip-breaker, this one included, needs
+        // the lock the migration holds at its commit point.
+        router.remove(stream);
         st.closed = true;
         shard.with_wal(aggregate, |w| w.log_close(stream));
         // A quarantined stream drops its subscriptions: its snapshots
@@ -1519,13 +1945,22 @@ fn run_stream_append<T: Real>(
     let wait_start = Instant::now();
     let mut state = lock_ok(&entry.state);
     // Appends dequeued out of order (multiple workers) wait their turn;
-    // `closed` breaks the wait so close_stream never strands a worker.
-    while !state.closed && state.next_seq != seq {
+    // `closed` breaks the wait so close_stream never strands a worker
+    // (and `moved` likewise, defensively — migration quiesces at the
+    // submit-seq barrier, so every append admitted against this entry
+    // applies *before* the commit sets `moved`; see
+    // `crate::coordinator::migrate`).
+    while !state.closed && !state.moved && state.next_seq != seq {
         state = wait_ok(&entry.cv, state);
     }
     let turn_wait = wait_start.elapsed().as_secs_f64();
     if state.closed {
         return (Err(format!("stream {stream} closed")), turn_wait);
+    }
+    if state.moved {
+        // Unreachable by the quiesce barrier (see above); failing the
+        // job loudly beats applying it to a stale session.
+        return (Err(format!("stream {stream} migrated mid-append")), turn_wait);
     }
     // Write-ahead: the packet is durable before it is applied — a crash
     // in between replays the packet instead of losing it.
@@ -1553,9 +1988,10 @@ fn run_stream_append<T: Real>(
     if shard.wal_live() {
         state.unsnapshotted += 1;
         if state.unsnapshotted >= svc.wal_opts.snapshot_every.max(1) {
+            let epoch = state.epoch;
             let next_seq = state.next_seq;
             let sess_state = state.session.state();
-            shard.with_wal(aggregate, |w| w.log_snapshot(stream, next_seq, &sess_state));
+            shard.with_wal(aggregate, |w| w.log_snapshot(stream, epoch, next_seq, &sess_state));
             state.unsnapshotted = 0;
         }
     } else {
@@ -1914,18 +2350,26 @@ mod tests {
         let mut streams = Vec::new();
         for _ in 0..32 {
             let id = s.submit_stream(16, None).unwrap();
-            assert!(shard_of(id) < 4);
-            hit[shard_of(id)] = true;
+            let home = s.stream_home(id).expect("fresh stream is routed");
+            assert!(home < 4);
+            // at mint — and only then — the packed hint and the router
+            // agree by construction
+            assert_eq!(shard_of(id), home, "mint-time hint disagrees with router");
+            hit[home] = true;
             streams.push(id);
         }
         assert!(
             hit.iter().filter(|&&h| h).count() >= 3,
             "hash routing left shards cold: {hit:?}"
         );
-        // every append job lands on its stream's shard
+        // every append job lands on its stream's current home shard
         for &stream in streams.iter().take(6) {
             let id = s.append_stream(stream, &generate::<f64>(Pattern::RandomWalk, 128, 4)).unwrap();
-            assert_eq!(shard_of(id), shard_of(stream), "append left its stream's shard");
+            assert_eq!(
+                shard_of(id),
+                s.stream_home(stream).unwrap(),
+                "append left its stream's shard"
+            );
             assert!(s.wait(id).unwrap().profile.is_ok());
         }
         // aggregate reconciles with the per-shard counters

@@ -122,6 +122,12 @@ pub struct StreamMeta {
     pub m: usize,
     pub excl: Option<usize>,
     pub max_history: Option<usize>,
+    /// Placement epoch of this incarnation (router-issued, strictly
+    /// increasing across migrations).  When a crash leaves a stream
+    /// open in two shard directories — the window between the target's
+    /// Open+Snapshot and the source's Close — recovery keeps the
+    /// incarnation with the higher epoch and closes the other.
+    pub epoch: u64,
 }
 
 /// One stream reconstructed by [`replay`]: its latest snapshot (if any)
@@ -133,6 +139,9 @@ pub struct ReplayedStream<T> {
     /// Configuration from the `Open` record; carried even when a
     /// snapshot exists (the snapshot's own fields must agree).
     pub meta: StreamMeta,
+    /// Placement epoch of this incarnation (from the `Open` record, or
+    /// the latest `Snapshot` when compaction dropped the `Open`).
+    pub epoch: u64,
     /// Latest snapshot: (next expected append seq, engine state).
     pub snapshot: Option<(u64, SessionState<T>)>,
     /// Append packets after the snapshot (or since `Open`): (seq, samples).
@@ -168,6 +177,11 @@ pub struct Replay<T> {
     /// compaction that reclaims segments a not-yet-resnapshotted stream
     /// still needs.
     pub pins: BTreeMap<u64, u64>,
+    /// Highest placement epoch seen in any `Open` or `Snapshot` record
+    /// (0 when none), including records of streams later closed.  The
+    /// router's epoch allocator must restart strictly above the max of
+    /// this over every shard directory.
+    pub max_epoch: u64,
     /// Highest stream id ever seen in this directory (0 when none):
     /// max over retained record stream ids *and* every segment header's
     /// high-water field, so it survives compaction of Close records.
@@ -433,10 +447,11 @@ impl<T: Real> WalWriter<T> {
     /// A stream was created.  Must be logged **before** the stream
     /// becomes visible to appends.
     pub fn log_open(&mut self, stream: u64, meta: StreamMeta) -> crate::Result<()> {
-        let mut body = Vec::with_capacity(26);
+        let mut body = Vec::with_capacity(34);
         put_u64(&mut body, meta.m as u64);
         put_opt(&mut body, meta.excl);
         put_opt(&mut body, meta.max_history);
+        put_u64(&mut body, meta.epoch);
         // Pin BEFORE logging: `log` may rotate-and-compact right after
         // writing the record, and compaction must already know this
         // segment is needed.
@@ -460,14 +475,18 @@ impl<T: Real> WalWriter<T> {
     }
 
     /// Full engine snapshot; subsumes every earlier record of `stream`
-    /// and advances its compaction pin.
+    /// and advances its compaction pin.  `epoch` is the placement epoch
+    /// of the stream's current incarnation — carried in every snapshot
+    /// so it survives compaction of the `Open` record.
     pub fn log_snapshot(
         &mut self,
         stream: u64,
+        epoch: u64,
         next_seq: u64,
         state: &SessionState<T>,
     ) -> crate::Result<()> {
         let mut body = Vec::new();
+        put_u64(&mut body, epoch);
         put_u64(&mut body, next_seq);
         let mut enc = Vec::new();
         state.encode(&mut enc);
@@ -499,9 +518,9 @@ impl<T: Real> WalWriter<T> {
     /// fired *between* these snapshots (oversized per-stream states,
     /// tiny `segment_bytes`) cannot reclaim a not-yet-resnapshotted
     /// stream's pre-restart history.
-    pub fn checkpoint(&mut self, streams: &[(u64, u64, SessionState<T>)]) -> crate::Result<()> {
-        for (id, next_seq, state) in streams {
-            self.log_snapshot(*id, *next_seq, state)?;
+    pub fn checkpoint(&mut self, streams: &[(u64, u64, u64, SessionState<T>)]) -> crate::Result<()> {
+        for (id, epoch, next_seq, state) in streams {
+            self.log_snapshot(*id, *epoch, *next_seq, state)?;
         }
         self.file.sync_data()?;
         self.compact()
@@ -546,6 +565,7 @@ impl<T: Real> WalWriter<T> {
 
 struct PendingStream<T> {
     meta: Option<StreamMeta>,
+    epoch: u64,
     snapshot: Option<(u64, SessionState<T>)>,
     appends: Vec<(u64, Vec<T>)>,
 }
@@ -561,13 +581,17 @@ struct PendingStream<T> {
 /// Rejects: bad segment headers, dtype mismatches, CRC/length damage
 /// anywhere but the newest tail, LSN gaps or regressions, appends whose
 /// sequence numbers don't chain, and `Append`/`Snapshot` records after a
-/// stream's `Close`.
+/// stream's `Close`.  An `Open` after a `Close` is legal: it starts a
+/// fresh incarnation of the id (a stream migrated away and later back —
+/// the Close retired the old incarnation, the Open carries a higher
+/// placement epoch).
 pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
     let segs = list_segments(dir)?;
     let mut streams: BTreeMap<u64, PendingStream<T>> = BTreeMap::new();
     let mut closed: Vec<u64> = Vec::new();
     let mut pins: BTreeMap<u64, u64> = BTreeMap::new();
     let mut max_stream = 0u64;
+    let mut max_epoch = 0u64;
     let mut next_lsn: Option<u64> = None;
     let mut torn = None;
     let mut records = 0u64;
@@ -644,7 +668,7 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
                 }
             }
             anyhow::ensure!(
-                !closed.contains(&stream) || kind == KIND_CLOSE,
+                !closed.contains(&stream) || kind == KIND_CLOSE || kind == KIND_OPEN,
                 "record for stream {stream} after its Close (lsn {lsn})"
             );
             match kind {
@@ -653,15 +677,26 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
                         m: c.usize()?,
                         excl: c.opt()?,
                         max_history: c.opt()?,
+                        epoch: c.u64()?,
                     };
                     c.done()?;
                     anyhow::ensure!(
                         !streams.contains_key(&stream),
                         "duplicate Open for stream {stream} (lsn {lsn})"
                     );
+                    // An Open after a Close re-incarnates the id (the
+                    // stream migrated back to this shard); the Close
+                    // retired the previous incarnation for good.
+                    closed.retain(|&s| s != stream);
+                    max_epoch = max_epoch.max(meta.epoch);
                     streams.insert(
                         stream,
-                        PendingStream { meta: Some(meta), snapshot: None, appends: Vec::new() },
+                        PendingStream {
+                            meta: Some(meta),
+                            epoch: meta.epoch,
+                            snapshot: None,
+                            appends: Vec::new(),
+                        },
                     );
                     pins.insert(stream, *seg_id);
                 }
@@ -700,6 +735,7 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
                     }
                 }
                 KIND_SNAPSHOT => {
+                    let epoch = c.u64()?;
                     let ns = c.u64()?;
                     let slen = c.usize()?;
                     let state = SessionState::<T>::decode(c.take(slen)?)?;
@@ -708,13 +744,17 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
                         m: state.m,
                         excl: Some(state.excl),
                         max_history: state.max_history,
+                        epoch,
                     };
+                    max_epoch = max_epoch.max(epoch);
                     let ps = streams.entry(stream).or_insert(PendingStream {
                         meta: None,
+                        epoch,
                         snapshot: None,
                         appends: Vec::new(),
                     });
                     ps.meta.get_or_insert(meta);
+                    ps.epoch = epoch;
                     ps.snapshot = Some((ns, state));
                     ps.appends.clear(); // subsumed
                     pins.insert(stream, *seg_id);
@@ -744,7 +784,13 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
             let meta = ps
                 .meta
                 .ok_or_else(|| anyhow::anyhow!("stream {id} replayed without Open or Snapshot"))?;
-            Ok(ReplayedStream { id, meta, snapshot: ps.snapshot, appends: ps.appends })
+            Ok(ReplayedStream {
+                id,
+                meta,
+                epoch: ps.epoch,
+                snapshot: ps.snapshot,
+                appends: ps.appends,
+            })
         })
         .collect::<crate::Result<Vec<_>>>()?;
     Ok(Replay {
@@ -753,6 +799,7 @@ pub fn replay<T: Real>(dir: &Path) -> crate::Result<Replay<T>> {
         next_lsn: next_lsn.unwrap_or(0),
         next_segment,
         pins,
+        max_epoch,
         max_stream,
         torn,
         records,
@@ -793,7 +840,7 @@ mod tests {
     #[test]
     fn every_record_kind_round_trips_through_replay() {
         let dir = tempdir("kinds");
-        let meta = StreamMeta { m: 8, excl: None, max_history: Some(64) };
+        let meta = StreamMeta { m: 8, excl: None, max_history: Some(64), epoch: 0 };
         let t = generate::<f64>(Pattern::RandomWalk, 64, 3);
         let mut engine = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
         for &x in &t {
@@ -804,9 +851,9 @@ mod tests {
             w.log_open(7, meta).unwrap();
             w.log_append(7, 0, &t[..10]).unwrap();
             w.log_append(7, 1, &t[10..20]).unwrap();
-            w.log_snapshot(7, 2, &engine.state()).unwrap();
+            w.log_snapshot(7, 0, 2, &engine.state()).unwrap();
             w.log_append(7, 2, &t[20..30]).unwrap();
-            w.log_open(9, StreamMeta { m: 16, excl: Some(3), max_history: None }).unwrap();
+            w.log_open(9, StreamMeta { m: 16, excl: Some(3), max_history: None, epoch: 0 }).unwrap();
             w.log_append(9, 0, &t[..5]).unwrap();
             w.log_open(11, meta).unwrap();
             w.log_close(11).unwrap();
@@ -848,7 +895,7 @@ mod tests {
         {
             let rp = replay::<f32>(&dir).unwrap();
             let mut w = WalWriter::<f32>::resume(&dir, WalOptions::default(), &rp).unwrap();
-            w.log_open(1, StreamMeta { m: 4, excl: None, max_history: None }).unwrap();
+            w.log_open(1, StreamMeta { m: 4, excl: None, max_history: None, epoch: 0 }).unwrap();
             w.log_append(1, 0, &t).unwrap();
             w.sync().unwrap();
         }
@@ -871,7 +918,7 @@ mod tests {
         let mut engine = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
         {
             let mut w = empty_resume(&dir, opts);
-            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None, epoch: 0 }).unwrap();
             let mut seq = 0u64;
             for chunk in t.chunks(16) {
                 w.log_append(1, seq, chunk).unwrap();
@@ -880,7 +927,7 @@ mod tests {
                     engine.append(x);
                 }
                 if seq % 5 == 0 {
-                    w.log_snapshot(1, seq, &engine.state()).unwrap();
+                    w.log_snapshot(1, 0, seq, &engine.state()).unwrap();
                 }
             }
             w.sync().unwrap();
@@ -910,7 +957,7 @@ mod tests {
         let dir = tempdir("torn");
         {
             let mut w = empty_resume(&dir, WalOptions::default());
-            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None, epoch: 0 }).unwrap();
             w.log_append(1, 0, &[1.0, 2.0, 3.0]).unwrap();
             w.log_append(1, 1, &[4.0, 5.0]).unwrap();
             w.sync().unwrap();
@@ -947,7 +994,7 @@ mod tests {
                 &dir,
                 WalOptions { segment_bytes: 64, ..WalOptions::default() },
             );
-            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None, epoch: 0 }).unwrap();
             for s in 0..6 {
                 w.log_append(1, s, &[s as f64; 8]).unwrap();
             }
@@ -970,7 +1017,7 @@ mod tests {
         let dir = tempdir("lsn");
         {
             let mut w = empty_resume(&dir, WalOptions::default());
-            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None, epoch: 0 }).unwrap();
             w.log_append(1, 0, &[1.0]).unwrap();
             w.log_append(1, 1, &[2.0]).unwrap();
             w.sync().unwrap();
@@ -1001,14 +1048,14 @@ mod tests {
         let opts = WalOptions { segment_bytes: 400, ..WalOptions::default() };
         {
             let mut w = empty_resume(&dir, opts.clone());
-            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None, epoch: 0 }).unwrap();
             let mut engine = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
             for (s, chunk) in t.chunks(25).enumerate() {
                 w.log_append(1, s as u64, chunk).unwrap();
                 for &x in chunk {
                     engine.append(x);
                 }
-                w.log_snapshot(1, s as u64 + 1, &engine.state()).unwrap();
+                w.log_snapshot(1, 0, s as u64 + 1, &engine.state()).unwrap();
             }
             w.sync().unwrap();
         }
@@ -1024,7 +1071,7 @@ mod tests {
         let lsn_before = rp.next_lsn;
         let resume_seg = rp.next_segment;
         let mut w = WalWriter::<f64>::resume(&dir, opts, &rp).unwrap();
-        w.checkpoint(&[(1, next_seq, rebuilt.state())]).unwrap();
+        w.checkpoint(&[(1, 0, next_seq, rebuilt.state())]).unwrap();
         let segs = list_segments(&dir).unwrap();
         assert!(
             segs.iter().all(|&(id, _)| id >= resume_seg),
@@ -1050,9 +1097,9 @@ mod tests {
         let dir = tempdir("seedpins");
         {
             let mut w = empty_resume(&dir, WalOptions::default());
-            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None, epoch: 0 }).unwrap();
             w.log_append(1, 0, &[1.0; 16]).unwrap();
-            w.log_open(2, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_open(2, StreamMeta { m: 8, excl: None, max_history: None, epoch: 0 }).unwrap();
             w.log_append(2, 0, &[2.0; 16]).unwrap();
             w.sync().unwrap();
         }
@@ -1067,7 +1114,7 @@ mod tests {
         let mut w = WalWriter::<f64>::resume(&dir, opts, &rp).unwrap();
         let mut e1 = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
         e1.extend(&[1.0; 16]);
-        w.log_snapshot(1, 1, &e1.state()).unwrap();
+        w.log_snapshot(1, 0, 1, &e1.state()).unwrap();
         assert!(w.segment() > resume_seg, "snapshot was meant to force a rotation");
         // "Crash" here: stream 2 must still replay in full from its
         // pre-restart segments.
@@ -1081,7 +1128,7 @@ mod tests {
         // Finishing the checkpoint reclaims the pre-restart history.
         let mut e2 = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
         e2.extend(&[2.0; 16]);
-        w.checkpoint(&[(2, 1, e2.state())]).unwrap();
+        w.checkpoint(&[(2, 0, 1, e2.state())]).unwrap();
         let segs = list_segments(&dir).unwrap();
         assert!(
             segs.iter().all(|&(id, _)| id >= resume_seg),
@@ -1099,7 +1146,7 @@ mod tests {
     #[test]
     fn closed_ids_survive_compaction_in_segment_headers() {
         let dir = tempdir("highwater");
-        let meta = StreamMeta { m: 8, excl: None, max_history: None };
+        let meta = StreamMeta { m: 8, excl: None, max_history: None, epoch: 0 };
         let mut e = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
         e.extend(&[1.0; 16]);
         {
@@ -1107,14 +1154,14 @@ mod tests {
             w.log_open(1, meta).unwrap();
             w.log_open(9, meta).unwrap();
             w.log_close(9).unwrap();
-            w.log_snapshot(1, 0, &e.state()).unwrap();
+            w.log_snapshot(1, 0, 0, &e.state()).unwrap();
             w.sync().unwrap();
         }
         let rp = replay::<f64>(&dir).unwrap();
         assert_eq!(rp.max_stream, 9);
         // The restart checkpoint compacts stream 9's Close away...
         let mut w = WalWriter::<f64>::resume(&dir, WalOptions::default(), &rp).unwrap();
-        w.checkpoint(&[(1, 0, e.state())]).unwrap();
+        w.checkpoint(&[(1, 0, 0, e.state())]).unwrap();
         drop(w);
         let rp2 = replay::<f64>(&dir).unwrap();
         assert!(rp2.closed.is_empty(), "Close record was supposed to be compacted");
@@ -1127,11 +1174,11 @@ mod tests {
         let dir = tempdir("closed");
         {
             let mut w = empty_resume(&dir, WalOptions::default());
-            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None }).unwrap();
+            w.log_open(1, StreamMeta { m: 8, excl: None, max_history: None, epoch: 0 }).unwrap();
             w.log_append(1, 0, &[1.0, 2.0]).unwrap();
             let mut e = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
             e.extend(&[1.0, 2.0]);
-            w.log_snapshot(1, 1, &e.state()).unwrap();
+            w.log_snapshot(1, 0, 1, &e.state()).unwrap();
             w.log_close(1).unwrap();
             w.sync().unwrap();
         }
@@ -1146,5 +1193,48 @@ mod tests {
         }
         let err = replay::<f64>(&dir).unwrap_err().to_string();
         assert!(err.contains("after its Close"), "{err}");
+    }
+
+    /// An `Open` after a `Close` starts a fresh incarnation of the id:
+    /// this is the migrate-away-and-back trace (A→B→A leaves A's
+    /// directory with Open/…/Close/Open).  The re-opened stream replays
+    /// with the new epoch and clean state; `max_epoch` sees every epoch
+    /// ever logged, including the retired incarnation's.
+    #[test]
+    fn open_after_close_reincarnates_the_stream_with_its_new_epoch() {
+        let dir = tempdir("reopen");
+        let mut e = Stampi::<f64>::new(StampiConfig::new(8)).unwrap();
+        e.extend(&[1.0; 12]);
+        {
+            let mut w = empty_resume(&dir, WalOptions::default());
+            w.log_open(5, StreamMeta { m: 8, excl: None, max_history: None, epoch: 3 }).unwrap();
+            w.log_append(5, 0, &[1.0, 2.0]).unwrap();
+            w.log_close(5).unwrap();
+            // Fresh incarnation, back from the peer shard with a
+            // snapshot and a higher epoch.
+            w.log_open(5, StreamMeta { m: 8, excl: None, max_history: None, epoch: 7 }).unwrap();
+            w.log_snapshot(5, 7, 4, &e.state()).unwrap();
+            w.log_append(5, 4, &[9.0]).unwrap();
+            w.sync().unwrap();
+        }
+        let rp = replay::<f64>(&dir).unwrap();
+        assert!(rp.closed.is_empty(), "re-open must clear the closed marker");
+        assert_eq!(rp.streams.len(), 1);
+        let s = &rp.streams[0];
+        assert_eq!(s.id, 5);
+        assert_eq!(s.epoch, 7);
+        assert_eq!(s.meta.epoch, 7);
+        assert_eq!(s.snapshot.as_ref().unwrap().0, 4);
+        assert_eq!(s.appends, vec![(4, vec![9.0])]);
+        assert_eq!(rp.max_epoch, 7);
+
+        // Epoch survives compaction of the Open record: a checkpoint
+        // rewrites the stream as a lone Snapshot, which carries it.
+        let mut w = WalWriter::<f64>::resume(&dir, WalOptions::default(), &rp).unwrap();
+        w.checkpoint(&[(5, 7, 5, e.state())]).unwrap();
+        drop(w);
+        let rp2 = replay::<f64>(&dir).unwrap();
+        assert_eq!(rp2.streams[0].epoch, 7);
+        assert_eq!(rp2.max_epoch, 7);
     }
 }

@@ -20,6 +20,8 @@ use std::path::PathBuf;
 
 use natsa::sync::Arc;
 
+use natsa::coordinator::admission::AdmissionConfig;
+use natsa::coordinator::migrate::ElasticConfig;
 use natsa::coordinator::service::{AnalysisService, ServiceConfig, SubmitError};
 use natsa::coordinator::PjrtEngine;
 use natsa::mp::{brute, parallel, scrimp, stomp, MpConfig};
@@ -124,6 +126,7 @@ fn print_usage() {
          \x20 serve     [--shards 4] [--workers 2] [--depth 16] [--pus 48] [--m 64]\n\
          \x20           [--streams 6] [--packets 24] [--chunk 512] [--jobs 12]\n\
          \x20           [--wal-dir DIR]  (durable per-shard WAL; recovers open streams on restart)\n\
+         \x20           [--elastic on [--max-workers N]] [--admission on]  (elastic sharding / AIMD)\n\
          \x20 simulate  --platform <ddr4-ooo|ddr4-inorder|hbm-ooo|hbm-inorder|natsa|natsa-ddr4>\n\
          \x20           --n N --m M [--precision dp|sp]\n\
          \x20 repro     --id <fig1|fig3|fig4|fig7|table2|fig8|fig9|fig10|table3|fig11|fig12|sens-m|all>\n\
@@ -287,6 +290,8 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
     let chunk = opts.usize("chunk", 512)?;
     let jobs = opts.usize("jobs", 12)?;
     let wal_dir = opts.get("wal-dir").map(PathBuf::from);
+    let elastic = opts.get("elastic").map(|v| v == "on" || v == "true").unwrap_or(false);
+    let admission = opts.get("admission").map(|v| v == "on" || v == "true").unwrap_or(false);
 
     println!(
         "serve: {shards} shards x {workers} workers (depth {depth}), {pus} PUs total; \
@@ -299,6 +304,18 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
     if let Some(dir) = wal_dir {
         println!("wal: per-shard durable log under {}", dir.display());
         svc_config = svc_config.with_wal(dir);
+    }
+    if elastic {
+        let max = opts.usize("max-workers", workers.max(1) * 4)?;
+        println!("elastic: autoscaling pools up to {max} workers/shard + hot-stream migration");
+        svc_config = svc_config.with_elastic(ElasticConfig {
+            max_workers: max,
+            ..ElasticConfig::default()
+        });
+    }
+    if admission {
+        println!("admission: AIMD congestion window per shard");
+        svc_config = svc_config.with_admission(AdmissionConfig::default());
     }
     // try_start_sharded, not start_sharded: a damaged WAL directory
     // should surface as a CLI error, not a panic.

@@ -1,0 +1,450 @@
+//! Elastic sharding contracts: stream migration is **bit-identical**
+//! (f32 and f64), a skewed append storm makes the controller actually
+//! migrate at least one hot stream with bounded tail latency,
+//! subscribers survive the hop, worker pools autoscale under backlog,
+//! and the opt-in AIMD admission window fast-fails overload and
+//! re-opens afterwards.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use natsa::coordinator::admission::AdmissionConfig;
+use natsa::coordinator::migrate::{ElasticConfig, MigrateError};
+use natsa::coordinator::service::{AnalysisService, ServiceConfig, SubRecv};
+use natsa::mp::MatrixProfile;
+use natsa::natsa::NatsaConfig;
+use natsa::timeseries::generator::{generate, Pattern};
+use natsa::Real;
+
+/// Bit-level equality — tolerances would hide exactly the class of bug
+/// (reordered float ops across the shard hop) these tests exist to catch.
+fn assert_bit_identical<T: Real>(got: &MatrixProfile<T>, want: &MatrixProfile<T>) {
+    assert_eq!(got.p.len(), want.p.len(), "profile length");
+    for (k, (a, b)) in got.p.iter().zip(&want.p).enumerate() {
+        assert_eq!(
+            a.to_f64s().to_bits(),
+            b.to_f64s().to_bits(),
+            "profile bit mismatch at {k}: {a} vs {b}"
+        );
+    }
+    assert_eq!(got.i, want.i, "index vector mismatch");
+}
+
+/// Deliberately uneven packet boundaries: migration hands the session
+/// over mid-sequence, so boundary-dependent tile blocking is part of
+/// the bit-identity contract.
+fn packets<T: Real>(n: usize, seed: u64) -> Vec<Vec<T>> {
+    let series = generate::<T>(Pattern::EcgLike, n, seed);
+    let sizes = [61usize, 24, 97, 33];
+    let mut out = Vec::new();
+    let (mut at, mut k) = (0, 0);
+    while at < n {
+        let len = sizes[k % sizes.len()].min(n - at);
+        out.push(series[at..at + len].to_vec());
+        at += len;
+        k += 1;
+    }
+    out
+}
+
+fn feed<T: Real>(s: &AnalysisService<T>, stream: u64, packets: &[Vec<T>]) {
+    for p in packets {
+        let id = s.append_stream(stream, p).unwrap();
+        s.wait(id).unwrap().profile.unwrap();
+    }
+}
+
+/// Replay the identical packet prefix on a plain single-shard service:
+/// the placement-independent reference profile.
+fn reference_profile<T: Real>(m: usize, pk: &[Vec<T>]) -> MatrixProfile<T> {
+    let s = AnalysisService::<T>::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default().with_shards(1).with_workers(1).with_queue_depth(32),
+    );
+    let stream = s.submit_stream(m, None).unwrap();
+    feed(&s, stream, pk);
+    let snap = s.snapshot_stream(stream).unwrap();
+    s.close_stream(stream);
+    s.shutdown();
+    snap
+}
+
+// ---------------------------------------------------------------------
+// Manual migration: protocol-level contract
+// ---------------------------------------------------------------------
+
+fn manual_migration_bit_identity<T: Real>() {
+    let m = 16;
+    let pk = packets::<T>(1600, 5);
+    let half = pk.len() / 2;
+
+    let svc = AnalysisService::<T>::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default().with_shards(3).with_workers(1).with_queue_depth(16),
+    );
+    let stream = svc.submit_stream_on(0, m, None).unwrap();
+    assert_eq!(svc.stream_home(stream), Some(0));
+    feed(&svc, stream, &pk[..half]);
+
+    // Error surface first: the failed attempts must not disturb state.
+    assert_eq!(svc.migrate_stream(stream, 0), Err(MigrateError::SameShard));
+    assert_eq!(svc.migrate_stream(stream, 99), Err(MigrateError::InvalidShard(99)));
+    assert_eq!(svc.migrate_stream(stream ^ 0x1000, 1), Err(MigrateError::UnknownStream));
+    assert_eq!(svc.stream_home(stream), Some(0), "failed attempts re-homed the stream");
+
+    svc.migrate_stream(stream, 2).expect("migration failed");
+    assert_eq!(svc.stream_home(stream), Some(2), "router not repointed");
+    assert_eq!(svc.shard_metrics(0).streams_migrated.load(Ordering::Relaxed), 1);
+    assert_eq!(svc.metrics().streams_migrated.load(Ordering::Relaxed), 1);
+
+    // The same id keeps working; appends now land on the new home.
+    feed(&svc, stream, &pk[half..]);
+    let got = svc.snapshot_stream(stream).expect("stream lost in migration");
+    assert_bit_identical(&got, &reference_profile(m, &pk));
+
+    // A closed stream is unknown to migration.
+    assert!(svc.close_stream(stream));
+    assert_eq!(svc.migrate_stream(stream, 1), Err(MigrateError::UnknownStream));
+    assert_eq!(svc.metrics().in_flight(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn manual_migration_is_bit_identical_f64() {
+    manual_migration_bit_identity::<f64>();
+}
+
+#[test]
+fn manual_migration_is_bit_identical_f32() {
+    manual_migration_bit_identity::<f32>();
+}
+
+#[test]
+fn subscribers_survive_the_hop() {
+    let m = 16;
+    let svc = AnalysisService::<f64>::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default().with_shards(2).with_workers(1).with_queue_depth(16),
+    );
+    let stream = svc.submit_stream_on(0, m, None).unwrap();
+    let warm = generate::<f64>(Pattern::RandomWalk, 4 * m, 9);
+    svc.wait(svc.append_stream(stream, &warm).unwrap()).unwrap().profile.unwrap();
+
+    let sub = svc.subscribe_stream(stream).unwrap();
+    svc.wait(svc.append_stream_fanout(stream, &[0.25]).unwrap()).unwrap().profile.unwrap();
+    let before = match svc.poll_subscription(sub) {
+        SubRecv::Snapshot(p) => p,
+        other => panic!("expected pre-hop snapshot, got {other:?}"),
+    };
+
+    svc.migrate_stream(stream, 1).expect("migration failed");
+
+    // The mailbox moved with the stream: a post-hop fanout append still
+    // delivers, in order, to the same subscription id.
+    svc.wait(svc.append_stream_fanout(stream, &[0.75]).unwrap()).unwrap().profile.unwrap();
+    let after = match svc.poll_subscription(sub) {
+        SubRecv::Snapshot(p) => p,
+        other => panic!("subscription lost in migration: {other:?}"),
+    };
+    assert_eq!(before.p.len() + 1, after.p.len(), "post-hop snapshot out of order");
+    assert_eq!(svc.metrics().fanout_delivered.load(Ordering::Relaxed), 2);
+
+    assert!(svc.unsubscribe(sub));
+    assert!(svc.close_stream(stream));
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// The controller: skewed storm → migration, with bounded tail latency
+// ---------------------------------------------------------------------
+
+fn skewed_storm_migrates<T: Real>() {
+    let m = 16;
+    let hot_streams = 4;
+    let base = 40; // packets fed before the "keep feeding" phase
+    let cap = 600; // hard packet cap per stream (the deadline's budget)
+
+    let svc = Arc::new(
+        AnalysisService::<T>::try_start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default()
+                .with_shards(4)
+                .with_workers(1)
+                .with_queue_depth(8)
+                .with_elastic(ElasticConfig {
+                    min_workers: 1,
+                    max_workers: 1, // isolate the migration actuator
+                    tick: Duration::from_millis(1),
+                    grow_backlog: u64::MAX, // pools never grow here
+                    shrink_backlog: 0,
+                    hysteresis_ticks: 1,
+                    migrate_ratio: 2,
+                    migrate_slack: 2,
+                    migrate_ticks: 2,
+                    cooldown_ticks: 2,
+                }),
+        )
+        .unwrap(),
+    );
+
+    // 80/20 skew: every hot stream is pinned to shard 0; one background
+    // stream sits on shard 1; shards 2..3 start idle.
+    let stop = Arc::new(AtomicBool::new(false));
+    let clients: Vec<_> = (0..hot_streams as u64)
+        .map(|c| {
+            let svc = svc.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || -> (u64, usize) {
+                let pk = packets::<T>(cap * 24, c);
+                let stream = svc.submit_stream_on(0, m, None).unwrap();
+                let mut pending = VecDeque::new();
+                let mut fed = 0usize;
+                for p in &pk {
+                    let (_, drained) =
+                        svc.append_stream_pipelined(stream, p, &mut pending).unwrap();
+                    for r in drained {
+                        r.profile.unwrap();
+                    }
+                    fed += 1;
+                    // Base load always goes in (the storm must form);
+                    // past it, stop as soon as a migration happened.
+                    if fed >= base && stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+                for id in pending {
+                    svc.wait(id).unwrap().profile.unwrap();
+                }
+                (stream, fed)
+            })
+        })
+        .collect();
+    let background = svc.submit_stream_on(1, m, None).unwrap();
+    feed(&svc, background, &packets::<T>(400, 77));
+
+    // The controller must commit at least one migration before the
+    // feeders run out of packets.
+    let deadline = Instant::now()
+        .checked_add(Duration::from_secs(60))
+        .expect("deadline representable");
+    while svc.metrics().streams_migrated.load(Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "no migration within the deadline");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let fed: Vec<(u64, usize)> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+    let migrated = svc.metrics().streams_migrated.load(Ordering::Relaxed);
+    assert!(migrated >= 1, "controller never migrated");
+    // At least one hot stream left shard 0 for a colder one.
+    let moved: Vec<usize> = fed
+        .iter()
+        .filter_map(|&(s, _)| svc.stream_home(s))
+        .filter(|&h| h != 0)
+        .collect();
+    assert!(!moved.is_empty(), "every stream still homes on the hot shard");
+
+    // Bit-identity across the hop, under concurrency: each stream's
+    // final profile equals the same packet prefix replayed on a plain
+    // service, bit for bit.
+    for &(stream, n) in &fed {
+        let seed = fed.iter().position(|&(s, _)| s == stream).unwrap() as u64;
+        let pk = packets::<T>(cap * 24, seed);
+        let got = svc.snapshot_stream(stream).expect("hot stream lost");
+        assert_bit_identical(&got, &reference_profile(m, &pk[..n]));
+        assert!(svc.close_stream(stream));
+    }
+    assert!(svc.close_stream(background));
+
+    // Tail latency stayed bounded through the storm (the queue is 8
+    // deep and every append is small: seconds would mean a stall).
+    let p99 = svc.metrics().latency.quantile(0.99);
+    assert!(p99 < 10.0, "p99 {p99}s: storm latency unbounded");
+
+    // Counters reconcile after the churn.
+    assert_eq!(svc.metrics().in_flight(), 0);
+    let sum = |get: &dyn Fn(usize) -> u64| (0..svc.num_shards()).map(get).sum::<u64>();
+    assert_eq!(
+        svc.metrics().streams_migrated.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).streams_migrated.load(Ordering::Relaxed)),
+        "streams_migrated skewed"
+    );
+    assert_eq!(
+        svc.metrics().migration_failed.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).migration_failed.load(Ordering::Relaxed)),
+        "migration_failed skewed"
+    );
+    assert_eq!(
+        svc.metrics().jobs_completed.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).jobs_completed.load(Ordering::Relaxed)),
+        "completed skewed"
+    );
+    assert_eq!(svc.metrics().jobs_failed.load(Ordering::Relaxed), 0);
+    Arc::try_unwrap(svc).ok().expect("service still shared").shutdown();
+}
+
+#[test]
+fn skewed_storm_triggers_migration_f64() {
+    skewed_storm_migrates::<f64>();
+}
+
+#[test]
+fn skewed_storm_triggers_migration_f32() {
+    skewed_storm_migrates::<f32>();
+}
+
+// ---------------------------------------------------------------------
+// Autoscaling pools
+// ---------------------------------------------------------------------
+
+#[test]
+fn worker_pool_grows_under_backlog_and_shrinks_when_idle() {
+    let m = 16;
+    let svc = Arc::new(
+        AnalysisService::<f64>::try_start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default()
+                .with_shards(1)
+                .with_workers(1)
+                .with_queue_depth(32)
+                .with_elastic(ElasticConfig {
+                    min_workers: 1,
+                    max_workers: 3,
+                    tick: Duration::from_millis(1),
+                    grow_backlog: 2,
+                    shrink_backlog: 0,
+                    hysteresis_ticks: 2,
+                    // One shard: the migration trigger can never arm
+                    // (hot == cold), so only the pool actuator runs.
+                    migrate_slack: u64::MAX / 2,
+                    ..ElasticConfig::default()
+                }),
+        )
+        .unwrap(),
+    );
+    assert_eq!(svc.metrics().pool_workers.load(Ordering::Relaxed), 1);
+
+    // Storm one stream until the controller has grown the pool.
+    let stream = svc.submit_stream(m, None).unwrap();
+    let pk = packets::<f64>(20_000, 3);
+    let storm = {
+        let svc = svc.clone();
+        let pk = pk.clone();
+        std::thread::spawn(move || {
+            let mut pending = VecDeque::new();
+            for p in &pk {
+                let (_, drained) = svc.append_stream_pipelined(stream, p, &mut pending).unwrap();
+                for r in drained {
+                    r.profile.unwrap();
+                }
+            }
+            for id in pending {
+                svc.wait(id).unwrap().profile.unwrap();
+            }
+        })
+    };
+    let deadline = Instant::now()
+        .checked_add(Duration::from_secs(60))
+        .expect("deadline representable");
+    while svc.metrics().pool_workers.load(Ordering::Relaxed) < 2 {
+        assert!(Instant::now() < deadline, "pool never grew under sustained backlog");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    storm.join().unwrap();
+
+    // Idle now: the controller lowers the target; workers leave at job
+    // boundaries, so give them boundaries until the gauge is back at 1.
+    let deadline = Instant::now()
+        .checked_add(Duration::from_secs(60))
+        .expect("deadline representable");
+    while svc.metrics().pool_workers.load(Ordering::Relaxed) > 1 {
+        assert!(Instant::now() < deadline, "pool never shrank back to min");
+        let id = svc.append_stream(stream, &[0.5]).unwrap();
+        svc.wait(id).unwrap().profile.unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // Growth never overshot the ceiling, and the gauges reconcile.
+    assert!(svc.shard_metrics(0).pool_workers.load(Ordering::Relaxed) <= 3);
+    assert_eq!(
+        svc.metrics().pool_workers.load(Ordering::Relaxed),
+        svc.shard_metrics(0).pool_workers.load(Ordering::Relaxed)
+    );
+    assert!(svc.close_stream(stream));
+    assert_eq!(svc.metrics().in_flight(), 0);
+    Arc::try_unwrap(svc).ok().expect("service still shared").shutdown();
+}
+
+// ---------------------------------------------------------------------
+// AIMD admission
+// ---------------------------------------------------------------------
+
+#[test]
+fn admission_window_rejects_overload_then_reopens() {
+    let m = 16;
+    let svc = AnalysisService::<f64>::start_sharded(
+        NatsaConfig::default().with_threads(1),
+        ServiceConfig::default()
+            .with_shards(1)
+            .with_workers(1)
+            .with_queue_depth(64)
+            .with_admission(AdmissionConfig {
+                initial_cwnd: 2,
+                min_cwnd: 1,
+                max_cwnd: 64,
+                latency_target: Duration::from_secs(10),
+                decrease_pct: 50,
+                cooldown_acks: 4,
+            }),
+    );
+    assert_eq!(
+        svc.metrics().cwnd_milli.load(Ordering::Relaxed),
+        2000,
+        "initial window gauge not published"
+    );
+
+    // Mature the stream so each append costs real work (keeps jobs in
+    // flight long enough for the burst below to hit the window).
+    let stream = svc.submit_stream(m, None).unwrap();
+    let warm = generate::<f64>(Pattern::RandomWalk, 8000, 1);
+    svc.wait(svc.append_stream(stream, &warm).unwrap()).unwrap().profile.unwrap();
+
+    // Fire-and-forget burst: with cwnd = 2 jobs, a tight loop of 100
+    // submissions must see rejections (the worker cannot drain 98
+    // profile-sized appends inside one submission loop).
+    let mut accepted = Vec::new();
+    for k in 0..100 {
+        if let Ok(id) = svc.append_stream(stream, &[k as f64 * 0.01]) {
+            accepted.push(id);
+        }
+    }
+    let rejected = svc.metrics().admission_rejected.load(Ordering::Relaxed);
+    assert!(rejected > 0, "overload burst was never admission-limited");
+    assert!(
+        (accepted.len() as u64) < 100,
+        "every submission was admitted past a 2-job window"
+    );
+    for id in accepted {
+        svc.wait(id).unwrap().profile.unwrap();
+    }
+
+    // Recovery: every ack under the (generous) latency target grew the
+    // window additively — the gauge must show it re-opening …
+    assert!(
+        svc.metrics().cwnd_milli.load(Ordering::Relaxed) > 2000,
+        "window did not grow back on healthy traffic"
+    );
+    // … and fresh submissions are admitted again.
+    let id = svc.append_stream(stream, &[0.5]).expect("recovered service rejected");
+    svc.wait(id).unwrap().profile.unwrap();
+
+    assert_eq!(svc.metrics().in_flight(), 0);
+    assert_eq!(
+        svc.metrics().admission_rejected.load(Ordering::Relaxed),
+        svc.shard_metrics(0).admission_rejected.load(Ordering::Relaxed)
+    );
+    assert!(svc.close_stream(stream));
+    svc.shutdown();
+}

@@ -66,6 +66,34 @@ fn assert_reconciled(svc: &AnalysisService<f64>) {
         agg.coalesce_width.coalesced(),
         "appends_coalesced != width>=2 histogram mass"
     );
+    // elastic-sharding counters reconcile like every other counter …
+    assert_eq!(
+        agg.streams_migrated.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).streams_migrated.load(Ordering::Relaxed)),
+        "streams_migrated skewed"
+    );
+    assert_eq!(
+        agg.migration_failed.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).migration_failed.load(Ordering::Relaxed)),
+        "migration_failed skewed"
+    );
+    assert_eq!(
+        agg.admission_rejected.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).admission_rejected.load(Ordering::Relaxed)),
+        "admission_rejected skewed"
+    );
+    // … and the gauges reconcile as Σ latest published shard values
+    // (quiescent here, so the telescoped aggregate must equal the sum).
+    assert_eq!(
+        agg.cwnd_milli.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).cwnd_milli.load(Ordering::Relaxed)),
+        "cwnd_milli gauge skewed"
+    );
+    assert_eq!(
+        agg.pool_workers.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).pool_workers.load(Ordering::Relaxed)),
+        "pool_workers gauge skewed"
+    );
 }
 
 /// Pipeline every chunk of `t` into `stream` through the service's
@@ -77,7 +105,14 @@ fn pipeline_stream(svc: &AnalysisService<f64>, stream: u64, t: &[f64], chunk: us
         let (id, drained) = svc
             .append_stream_pipelined(stream, packet, &mut pending)
             .expect("append rejected");
-        assert_eq!(shard_of(id), shard_of(stream), "append strayed off-shard");
+        // The job id packs the shard the append executes on; with no
+        // migrations in flight that must be the router's current home
+        // (NOT shard_of(stream) — the id bits are only a mint-time hint).
+        assert_eq!(
+            Some(shard_of(id)),
+            svc.stream_home(stream),
+            "append strayed off the stream's home shard"
+        );
         for r in drained {
             r.profile.unwrap();
         }
@@ -113,8 +148,10 @@ fn concurrent_streams_across_shards_match_batch_bit_for_bit_in_structure() {
                     "stream {stream} diverged: {}",
                     got.max_abs_diff(&want)
                 );
+                let home = svc.stream_home(stream).expect("open stream must route");
+                assert_eq!(home, shard_of(stream), "static placement: hint == home");
                 assert!(svc.close_stream(stream));
-                shard_of(stream)
+                home
             })
         })
         .collect();
@@ -191,7 +228,7 @@ fn batch_jobs_are_not_head_of_line_blocked_by_a_stream_storm() {
     ));
     let m = 16;
     let stream = svc.submit_stream(m, None).unwrap();
-    let busy = shard_of(stream);
+    let busy = svc.stream_home(stream).expect("open stream must route");
 
     let t = generate::<f64>(Pattern::RandomWalk, 10_000, 7);
     let storm = {

@@ -45,6 +45,8 @@ fn donor_state(rng: &mut Rng) -> SessionState<f64> {
 #[derive(Debug)]
 struct ModelStream {
     meta: StreamMeta,
+    /// Placement epoch of this incarnation.
+    epoch: u64,
     /// (next expected seq at snapshot time, encoded state bytes)
     snapshot: Option<(u64, Vec<u8>)>,
     /// appends since the snapshot (or since open): (seq, samples)
@@ -59,6 +61,8 @@ struct Model {
     next_lsn: u64,
     /// Highest stream id ever opened (the id allocator's floor).
     max_id: u64,
+    /// Epoch allocator (strictly increasing across opens/re-opens).
+    next_epoch: u64,
 }
 
 fn encoded(state: &SessionState<f64>) -> Vec<u8> {
@@ -91,6 +95,9 @@ fn check_replay(rp: &Replay<f64>, model: &Model, ctx: &str) {
         if rs.snapshot.is_none() {
             assert_eq!(rs.meta, ms.meta, "{ctx}: stream {} meta", rs.id);
         }
+        // The incarnation's epoch survives whether the Open or only a
+        // Snapshot was retained.
+        assert_eq!(rs.epoch, ms.epoch, "{ctx}: stream {} epoch", rs.id);
         assert_eq!(rs.next_seq(), ms.next_seq, "{ctx}: stream {} next_seq", rs.id);
         match (&rs.snapshot, &ms.snapshot) {
             (None, None) => {}
@@ -127,6 +134,19 @@ fn check_replay(rp: &Replay<f64>, model: &Model, ctx: &str) {
     // headers carry it even after every record of a closed stream is
     // reclaimed) — otherwise a restarted allocator could reuse ids
     assert_eq!(rp.max_stream, model.max_id, "{ctx}: stream id high-water");
+    // the epoch high-water must cover every LIVE incarnation (live
+    // streams pin their Open/Snapshot, so their epochs are always
+    // retained; closed streams' epochs may be compacted away, which is
+    // safe — dedupe only ever compares live incarnations)
+    for rs in &rp.streams {
+        assert!(
+            rp.max_epoch >= rs.epoch,
+            "{ctx}: max_epoch {} below live epoch {}",
+            rp.max_epoch,
+            rs.epoch
+        );
+    }
+    assert!(rp.max_epoch <= model.next_epoch, "{ctx}: phantom epoch");
     // closed ids in retained segments are a subset of what the model
     // closed (compaction may have dropped older Close records)...
     for id in &rp.closed {
@@ -191,17 +211,25 @@ fn random_interleavings_agree_with_reference_model() {
                 0..=14 => {
                     let id = next_id;
                     next_id += 1;
+                    model.next_epoch += 1;
                     let meta = StreamMeta {
                         m: rng.range(4, 64),
                         excl: (rng.range(0, 2) == 1).then(|| rng.range(1, 8)),
                         max_history: (rng.range(0, 2) == 1).then(|| rng.range(128, 512)),
+                        epoch: model.next_epoch,
                     };
                     w.log_open(id, meta).unwrap();
                     model.next_lsn += 1;
                     model.max_id = model.max_id.max(id);
                     model.streams.insert(
                         id,
-                        ModelStream { meta, snapshot: None, appends: Vec::new(), next_seq: 0 },
+                        ModelStream {
+                            meta,
+                            epoch: meta.epoch,
+                            snapshot: None,
+                            appends: Vec::new(),
+                            next_seq: 0,
+                        },
                     );
                 }
                 // append a packet
@@ -218,18 +246,44 @@ fn random_interleavings_agree_with_reference_model() {
                 60..=69 if !open_ids.is_empty() => {
                     let id = pick(&mut rng, &open_ids);
                     let ms = model.streams.get_mut(&id).unwrap();
-                    w.log_snapshot(id, ms.next_seq, &donor).unwrap();
+                    w.log_snapshot(id, ms.epoch, ms.next_seq, &donor).unwrap();
                     model.next_lsn += 1;
                     ms.snapshot = Some((ms.next_seq, donor_bytes.clone()));
                     ms.appends.clear();
                 }
                 // close a stream
-                70..=77 if !open_ids.is_empty() => {
+                70..=75 if !open_ids.is_empty() => {
                     let id = pick(&mut rng, &open_ids);
                     w.log_close(id).unwrap();
                     model.next_lsn += 1;
                     model.streams.remove(&id);
                     model.closed.insert(id);
+                }
+                // re-open a closed id (migrate-away-and-back trace):
+                // fresh incarnation with a strictly higher epoch
+                76..=77 if !model.closed.is_empty() => {
+                    let ids: Vec<u64> = model.closed.iter().copied().collect();
+                    let id = pick(&mut rng, &ids);
+                    model.next_epoch += 1;
+                    let meta = StreamMeta {
+                        m: rng.range(4, 64),
+                        excl: None,
+                        max_history: None,
+                        epoch: model.next_epoch,
+                    };
+                    w.log_open(id, meta).unwrap();
+                    model.next_lsn += 1;
+                    model.closed.remove(&id);
+                    model.streams.insert(
+                        id,
+                        ModelStream {
+                            meta,
+                            epoch: meta.epoch,
+                            snapshot: None,
+                            appends: Vec::new(),
+                            next_seq: 0,
+                        },
+                    );
                 }
                 // explicit rotation (on top of size-triggered ones)
                 78..=82 => {
@@ -259,10 +313,10 @@ fn random_interleavings_agree_with_reference_model() {
                     w = WalWriter::<f64>::resume(&dir, opts.clone(), &rp).unwrap();
                     // the recovery contract: re-snapshot every restored
                     // stream so pre-crash segments become reclaimable
-                    let cps: Vec<(u64, u64, SessionState<f64>)> = model
+                    let cps: Vec<(u64, u64, u64, SessionState<f64>)> = model
                         .streams
                         .iter()
-                        .map(|(&id, ms)| (id, ms.next_seq, donor.clone()))
+                        .map(|(&id, ms)| (id, ms.epoch, ms.next_seq, donor.clone()))
                         .collect();
                     w.checkpoint(&cps).unwrap();
                     model.next_lsn += cps.len() as u64;

@@ -215,6 +215,233 @@ fn closed_stream_ids_stay_retired_across_restarts() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Migration × durability, clean-shutdown flavor: a stream fed half its
+/// packets, migrated to another shard, and restarted must come back
+/// **exactly once**, at the **target** home, and finish bit-identically.
+/// The source directory still carries the stream's original `Open` plus
+/// every pre-hop append; only its logged `Close` (and the target's
+/// higher placement epoch) keep the old incarnation from resurrecting.
+fn migrated_stream_recovers_once_at_target<T: Real>() {
+    let m = 32;
+    let pk = packets::<T>(2400, 23);
+    let half = pk.len() / 2;
+
+    let reference = {
+        let s = AnalysisService::<T>::start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default()
+                .with_shards(2)
+                .with_workers(1)
+                .with_queue_depth(32),
+        );
+        let stream = s.submit_stream(m, None).unwrap();
+        feed(&s, stream, &pk);
+        let snap = s.snapshot_stream(stream).unwrap();
+        s.close_stream(stream);
+        s.shutdown();
+        snap
+    };
+
+    let dir = tempdir(&format!("mig-{}", T::DTYPE));
+
+    // run 1: feed half on the minted home, migrate, stop
+    let (stream, target) = {
+        let s = AnalysisService::<T>::try_start_sharded(
+            NatsaConfig::default().with_threads(1),
+            wal_config(&dir),
+        )
+        .unwrap();
+        let stream = s.submit_stream(m, None).unwrap();
+        feed(&s, stream, &pk[..half]);
+        let from = s.stream_home(stream).expect("open stream must route");
+        let to = 1 - from;
+        s.migrate_stream(stream, to).expect("migration failed");
+        assert_eq!(s.stream_home(stream), Some(to));
+        assert_eq!(s.metrics().wal_errors.load(Ordering::Relaxed), 0);
+        s.shutdown();
+        (stream, to)
+    };
+
+    // run 2: recovery must pick the target incarnation — and only it
+    let got = {
+        let s = AnalysisService::<T>::try_start_sharded(
+            NatsaConfig::default().with_threads(1),
+            wal_config(&dir),
+        )
+        .unwrap();
+        assert_eq!(
+            s.stream_home(stream),
+            Some(target),
+            "recovery re-homed the migrated stream"
+        );
+        let fed: usize = pk[..half].iter().map(Vec::len).sum();
+        let snap = s.snapshot_stream(stream).expect("migrated stream not recovered");
+        assert_eq!(snap.len(), fed - m + 1, "recovered at the wrong length");
+        feed(&s, stream, &pk[half..]);
+        let got = s.snapshot_stream(stream).unwrap();
+        assert_eq!(s.metrics().wal_errors.load(Ordering::Relaxed), 0);
+        s.close_stream(stream);
+        s.shutdown();
+        got
+    };
+    assert_bit_identical(&got, &reference);
+
+    // run 3: closed on the target — no directory resurrects it
+    let s = AnalysisService::<T>::try_start_sharded(
+        NatsaConfig::default().with_threads(1),
+        wal_config(&dir),
+    )
+    .unwrap();
+    assert!(
+        s.snapshot_stream(stream).is_none(),
+        "closed migrated stream resurrected by replay"
+    );
+    s.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn migrated_stream_recovers_once_at_target_f64() {
+    migrated_stream_recovers_once_at_target::<f64>();
+}
+
+#[test]
+fn migrated_stream_recovers_once_at_target_f32() {
+    migrated_stream_recovers_once_at_target::<f32>();
+}
+
+/// Migration × durability, crash-window flavor.  The migration protocol
+/// syncs the target's `Open`+`Snapshot` **before** writing the source's
+/// `Close`, so a crash inside that window leaves the stream Open in
+/// BOTH shard directories with no `Close` anywhere.  This test
+/// hand-crafts exactly those bytes with the public WAL writer (the same
+/// calls the live protocol makes) and asserts recovery resolves the
+/// race by placement epoch: one live incarnation, homed on the target,
+/// continuing bit-identically — and the loser is closed durably, so a
+/// second restart cannot bring it back either.
+fn crash_window_recovers_exactly_once<T: Real>() {
+    use natsa::coordinator::wal::{replay, StreamMeta, WalOptions, WalWriter};
+
+    let m = 32;
+    let pk = packets::<T>(2400, 31);
+    let half = pk.len() / 2;
+    let reference = {
+        let s = AnalysisService::<T>::start_sharded(
+            NatsaConfig::default().with_threads(1),
+            ServiceConfig::default()
+                .with_shards(2)
+                .with_workers(1)
+                .with_queue_depth(32),
+        );
+        let stream = s.submit_stream(m, None).unwrap();
+        feed(&s, stream, &pk);
+        let snap = s.snapshot_stream(stream).unwrap();
+        s.close_stream(stream);
+        s.shutdown();
+        snap
+    };
+
+    // The directory a crash mid-commit-window leaves behind.  Stream id
+    // 256 packs shard 0 in its low bits — the mint-time hint; recovery
+    // must ignore it and trust the epochs.
+    let dir = tempdir(&format!("window-{}", T::DTYPE));
+    let stream = 256u64;
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("wal.meta"),
+        format!("natsa-wal v1 dtype={} shards=2\n", T::DTYPE),
+    )
+    .unwrap();
+    let opts = WalOptions {
+        snapshot_every: 3,
+        segment_bytes: 2048,
+        sync: false,
+    };
+    let meta = |epoch| StreamMeta {
+        m,
+        excl: None,
+        max_history: None,
+        epoch,
+    };
+    // shard 0 — the source: Open at epoch 1, every pre-hop append, and
+    // crucially NO Close (it never reached the disk).
+    {
+        let sdir = dir.join("shard-0");
+        let mut w = WalWriter::<T>::resume(&sdir, opts.clone(), &replay(&sdir).unwrap()).unwrap();
+        w.log_open(stream, meta(1)).unwrap();
+        for (seq, p) in pk[..half].iter().enumerate() {
+            w.log_append(stream, seq as u64, p).unwrap();
+        }
+        w.sync().unwrap();
+    }
+    // shard 1 — the target: the migration's synced hand-off at epoch 2.
+    // (The live protocol logs Open + a state Snapshot; an Open plus the
+    // same appends replays to the identical session state through the
+    // already-pinned recovery path, without reaching into session
+    // internals from an integration test.)
+    {
+        let sdir = dir.join("shard-1");
+        let mut w = WalWriter::<T>::resume(&sdir, opts.clone(), &replay(&sdir).unwrap()).unwrap();
+        w.log_open(stream, meta(2)).unwrap();
+        for (seq, p) in pk[..half].iter().enumerate() {
+            w.log_append(stream, seq as u64, p).unwrap();
+        }
+        w.sync().unwrap();
+    }
+
+    // Recovery: epoch 2 wins — the stream lives exactly once, on the
+    // target, and picks up where the migration left off.
+    let got = {
+        let s = AnalysisService::<T>::try_start_sharded(
+            NatsaConfig::default().with_threads(1),
+            wal_config(&dir),
+        )
+        .unwrap();
+        assert_eq!(
+            s.stream_home(stream),
+            Some(1),
+            "crash-window recovery homed the stream on the stale source"
+        );
+        let fed: usize = pk[..half].iter().map(Vec::len).sum();
+        let snap = s.snapshot_stream(stream).expect("stream lost in the crash window");
+        assert_eq!(snap.len(), fed - m + 1, "recovered at the wrong length");
+        // a fresh stream id must mint above the crashed one
+        let fresh = s.submit_stream(m, None).unwrap();
+        assert_ne!(fresh, stream, "stream id reused across the crash window");
+        s.close_stream(fresh);
+        feed(&s, stream, &pk[half..]);
+        let got = s.snapshot_stream(stream).unwrap();
+        assert_eq!(s.metrics().wal_errors.load(Ordering::Relaxed), 0);
+        s.shutdown();
+        got
+    };
+    assert_bit_identical(&got, &reference);
+
+    // Second restart: the first recovery closed the stale source copy
+    // durably, so the stream is still exactly once — never duplicated,
+    // never flapped back to shard 0.
+    let s = AnalysisService::<T>::try_start_sharded(
+        NatsaConfig::default().with_threads(1),
+        wal_config(&dir),
+    )
+    .unwrap();
+    assert_eq!(s.stream_home(stream), Some(1), "stale incarnation resurrected");
+    assert!(s.snapshot_stream(stream).is_some());
+    s.close_stream(stream);
+    s.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crash_window_recovers_exactly_once_f64() {
+    crash_window_recovers_exactly_once::<f64>();
+}
+
+#[test]
+fn crash_window_recovers_exactly_once_f32() {
+    crash_window_recovers_exactly_once::<f32>();
+}
+
 #[test]
 fn wal_dir_pins_dtype_and_shard_count() {
     let dir = tempdir("meta");

@@ -11,12 +11,15 @@
 //!   policy (and the loom swap) lives in exactly one place.
 //! * **naked_wait** — same for Condvar waits: `wait_ok` /
 //!   `wait_timeout_ok` only.
-//! * **lock_order** — in `coordinator/service.rs`, classified locks
-//!   must be acquired in strictly ascending hierarchy order
-//!   (`streams` map → `entry.submit_seq` → `entry.state` → shard
-//!   `subs` index; `slots` and the WAL cell are leaves).  `try_lock_ok`
-//!   is exempt — it cannot deadlock, which is exactly why the group
-//!   pass uses it.
+//! * **lock_order** — in the coordinator's locking modules
+//!   (`service.rs`, `router.rs`, `migrate.rs`, `admission.rs`),
+//!   classified locks must be acquired in strictly ascending hierarchy
+//!   order (`streams` map → `entry.submit_seq` → `entry.state` → shard
+//!   `subs` index; `slots`, the WAL cell, and the router's
+//!   `route_table` are leaves — `route_table` is the highest class, so
+//!   it may be taken under anything but nothing under it).
+//!   `try_lock_ok` is exempt — it cannot deadlock, which is exactly
+//!   why the group pass uses it.
 //! * **instant_arith** — no raw `Instant` arithmetic (`+`/`-`,
 //!   `.duration_since(`): only `checked_add` /
 //!   `saturating_duration_since`, so a stale deadline times out instead
@@ -57,7 +60,17 @@ const LOCK_CLASSES: &[(&str, u8)] = &[
     ("submit_seq", 20),
     ("state", 30),
     ("subs", 40),
-    ("slots", 50), // leaf: never held across another classified acquire
+    ("slots", 50),       // leaf: never held across another classified acquire
+    ("route_table", 60), // router leaf: taken under anything, nothing under it
+];
+
+/// Files the `lock_order` rule runs over: every module that acquires
+/// classified coordinator locks.
+const LOCK_ORDER_FILES: &[&str] = &[
+    "rust/src/coordinator/service.rs",
+    "rust/src/coordinator/router.rs",
+    "rust/src/coordinator/migrate.rs",
+    "rust/src/coordinator/admission.rs",
 ];
 
 #[derive(Debug)]
@@ -365,7 +378,7 @@ fn scan_source(rel: &str, content: &str) -> Vec<Finding> {
         }
     }
 
-    if rel == "rust/src/coordinator/service.rs" {
+    if LOCK_ORDER_FILES.contains(&rel) {
         scan_lock_order(rel, &lines, &mask, &mut findings);
     }
 
@@ -432,8 +445,8 @@ fn scan_lock_order(rel: &str, lines: &[Line], mask: &[bool], findings: &mut Vec<
                         rule: "lock_order",
                         msg: format!(
                             "acquires `{cname}` (class {class}) while `{}` (class {}) is held — \
-                             hierarchy is streams < submit_seq < state < subs, slots leaf \
-                             (docs/CONCURRENCY.md)",
+                             hierarchy is streams < submit_seq < state < subs, slots and \
+                             route_table leaves (docs/CONCURRENCY.md)",
                             worst.name, worst.class
                         ),
                     });
@@ -537,6 +550,34 @@ mod tests {
         assert!(rules("rust/src/coordinator/service.rs", temp).is_empty());
         let temp_descent = "fn f() {\n    let st = lock_ok(&e.state);\n    lock_ok(&shard.streams).remove(&id);\n}";
         assert_eq!(rules("rust/src/coordinator/service.rs", temp_descent), vec!["lock_order"]);
+    }
+
+    #[test]
+    fn route_table_is_the_top_of_the_hierarchy() {
+        // nothing may be acquired while the route table is held …
+        let descent =
+            "fn f() {\n    let t = lock_ok(&self.route_table);\n    let st = lock_ok(&e.state);\n}";
+        assert_eq!(rules("rust/src/coordinator/router.rs", descent), vec!["lock_order"]);
+        // … but it may be taken under anything (it is the leaf)
+        let ascent =
+            "fn f() {\n    let st = lock_ok(&e.state);\n    let t = lock_ok(&self.route_table);\n}";
+        assert!(rules("rust/src/coordinator/router.rs", ascent).is_empty());
+        // the rule covers every coordinator locking module, not just
+        // the service
+        assert_eq!(rules("rust/src/coordinator/migrate.rs", descent), vec!["lock_order"]);
+        assert_eq!(rules("rust/src/coordinator/admission.rs", descent), vec!["lock_order"]);
+        assert!(rules("rust/src/coordinator/mod.rs", descent).is_empty());
+    }
+
+    #[test]
+    fn migration_cross_shard_insert_needs_its_marker() {
+        // the migration's one sanctioned inversion: the target's streams
+        // map under the source's state lock — flagged without the
+        // marker, clean with it on the line above
+        let naked = "fn f() {\n    let st = lock_ok(&e.state);\n    lock_ok(&target.streams).insert(id, entry);\n}";
+        assert_eq!(rules("rust/src/coordinator/migrate.rs", naked), vec!["lock_order"]);
+        let marked = "fn f() {\n    let st = lock_ok(&e.state);\n    // natsa-lint: allow(lock_order)\n    lock_ok(&target.streams).insert(id, entry);\n}";
+        assert!(rules("rust/src/coordinator/migrate.rs", marked).is_empty());
     }
 
     #[test]
