@@ -1,0 +1,1357 @@
+#!/usr/bin/env python3
+"""Line-for-line Python mirror of ``tools/lint`` (natsa-lint v2).
+
+The Rust analyzer is the CI gate; this mirror exists because several of
+this repo's build containers have no Rust toolchain, and the project's
+verification record for those sessions is "the Python mirror ran the
+same algorithm over the same tree and agreed".  Every function here
+ports its namesake in ``tools/lint/src/main.rs`` one-for-one — same
+tokenizer states, same per-function model, same pass order, same
+messages, same sort/dedup — so a finding list produced by either tool
+is byte-comparable with the other's.
+
+Usage:
+    python3 python/tools/lint_mirror.py [--json] [ROOT]   # scan a tree
+    python3 python/tools/lint_mirror.py --selftest        # planted tests
+
+Exit status mirrors the Rust tool: 0 clean, 1 findings, 2 I/O error.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# --- constants (verbatim from main.rs) -------------------------------
+
+SCAN_DIRS = ["rust/src", "rust/tests", "benches", "examples", "tools/lint/src"]
+
+LOCK_CLASSES = [
+    ("streams", 10),
+    ("submit_seq", 20),
+    ("state", 30),
+    ("subs", 40),
+    ("slots", 50),
+    ("route_table", 60),
+]
+
+LOCK_ORDER_FILES = [
+    "rust/src/coordinator/service.rs",
+    "rust/src/coordinator/router.rs",
+    "rust/src/coordinator/migrate.rs",
+    "rust/src/coordinator/admission.rs",
+]
+
+FP_FILES = [
+    "rust/src/mp/kernel.rs",
+    "rust/src/mp/stampi.rs",
+    "rust/src/coordinator/migrate.rs",
+]
+
+WAL_FILES = ["rust/src/coordinator/service.rs", "rust/src/coordinator/migrate.rs"]
+
+METRICS_FILE = "rust/src/coordinator/metrics.rs"
+METRICS_USAGE_FILES = [
+    "rust/src/coordinator/metrics.rs",
+    "rust/src/coordinator/service.rs",
+    "rust/src/coordinator/migrate.rs",
+]
+RECON_FILE = "rust/tests/service_shard.rs"
+RECON_FN = "assert_reconciled"
+
+RULES = [
+    ("naked_lock", "NL001"),
+    ("naked_wait", "NL002"),
+    ("lock_order", "NL003"),
+    ("instant_arith", "NL004"),
+    ("hot_sqrt", "NL005"),
+    ("fp_determinism", "NL006"),
+    ("wal_order", "NL007"),
+    ("metrics_coverage", "NL008"),
+    ("suppression", "NL009"),
+]
+RULE_ID = dict(RULES)
+
+TRANSCENDENTALS = [
+    ".powf(", ".powi(", ".exp(", ".exp2(", ".exp_m1(", ".ln(", ".ln_1p(",
+    ".log(", ".log2(", ".log10(", ".sin(", ".cos(", ".tan(", ".asin(",
+    ".acos(", ".atan(", ".atan2(", ".sinh(", ".cosh(", ".tanh(", ".cbrt(",
+    ".hypot(",
+]
+
+OPAQUE_CALLEES = [
+    "new", "default", "fmt", "clone", "remove", "len", "is_empty", "extend", "drop",
+]
+
+# Built from parts so this file's own text never contains the marker.
+MARKER = "natsa-lint" + ": allow("
+
+
+class Finding:
+    def __init__(self, file, line, rule, msg):
+        self.file = file
+        self.line = line
+        self.rule = rule
+        self.msg = msg
+
+    def id(self):
+        return RULE_ID.get(self.rule, "NL???")
+
+    def __str__(self):
+        return f"{self.file}:{self.line}: [{self.id()} {self.rule}] {self.msg}"
+
+    def __repr__(self):
+        return str(self)
+
+
+# --- tokenizer -------------------------------------------------------
+
+
+def is_ident(c):
+    return c.isalnum() or c == "_"
+
+
+class Line:
+    __slots__ = ("code", "comment", "allows")
+
+    def __init__(self, code, comment, allows):
+        self.code = code
+        self.comment = comment
+        self.allows = allows
+
+
+def parse_allows(comment):
+    out = []
+    rest = comment
+    while True:
+        pos = rest.find(MARKER)
+        if pos < 0:
+            break
+        after = rest[pos + len(MARKER):]
+        end = after.find(")")
+        if end < 0:
+            break
+        out.append({"rule": after[:end].strip(), "justified": False})
+        rest = after[end:]
+    return out
+
+
+def strip_markers(comment):
+    out = []
+    rest = comment
+    while True:
+        pos = rest.find(MARKER)
+        if pos < 0:
+            break
+        out.append(rest[:pos])
+        after = rest[pos + len(MARKER):]
+        end = after.find(")")
+        if end < 0:
+            rest = ""
+            break
+        rest = after[end + 1:]
+    out.append(rest)
+    return "".join(out)
+
+
+CODE, BLOCK, STR, RAWSTR = 0, 1, 2, 3
+
+
+def sanitize(content):
+    st = CODE
+    depth = 0  # BLOCK nesting / RAWSTR hash count
+    out = []
+    for raw in content.split("\n"):
+        chars = raw
+        n = len(chars)
+        code = []
+        comment = []
+        i = 0
+        while i < n:
+            if st == BLOCK:
+                if chars[i] == "/" and i + 1 < n and chars[i + 1] == "*":
+                    depth += 1
+                    comment.append("/*")
+                    i += 2
+                elif chars[i] == "*" and i + 1 < n and chars[i + 1] == "/":
+                    if depth == 1:
+                        st = CODE
+                    else:
+                        depth -= 1
+                        comment.append("*/")
+                    i += 2
+                else:
+                    comment.append(chars[i])
+                    i += 1
+            elif st == STR:
+                if chars[i] == "\\":
+                    i += 2
+                elif chars[i] == '"':
+                    code.append('"')
+                    st = CODE
+                    i += 1
+                else:
+                    i += 1
+            elif st == RAWSTR:
+                h = depth
+                if chars[i] == '"' and all(
+                    i + 1 + k < n and chars[i + 1 + k] == "#" for k in range(h)
+                ):
+                    code.append('"' + "#" * h)
+                    st = CODE
+                    i += h + 1
+                else:
+                    i += 1
+            else:  # CODE
+                c = chars[i]
+                if c == "/" and i + 1 < n and chars[i + 1] == "/":
+                    comment.append(chars[i + 2:])
+                    i = n
+                elif c == "/" and i + 1 < n and chars[i + 1] == "*":
+                    st = BLOCK
+                    depth = 1
+                    i += 2
+                elif c == '"':
+                    code.append('"')
+                    st = STR
+                    i += 1
+                elif c == "r":
+                    # raw-string start candidate: same prev-ident test as
+                    # the Rust tokenizer (an `r` glued to an identifier is
+                    # part of that identifier, not a literal prefix)
+                    joined = "".join(code)
+                    if joined and is_ident(joined[-1]):
+                        code.append(c)
+                        i += 1
+                        continue
+                    h = 0
+                    while i + 1 + h < n and chars[i + 1 + h] == "#":
+                        h += 1
+                    if i + 1 + h < n and chars[i + 1 + h] == '"':
+                        code.append("r" + "#" * h + '"')
+                        st = RAWSTR
+                        depth = h
+                        i += h + 2
+                    else:
+                        code.append(c)
+                        i += 1
+                elif c == "'":
+                    if i + 1 < n and chars[i + 1] == "\\":
+                        code.append("' '")
+                        j = i + 2
+                        while j < n and chars[j] != "'":
+                            j += 1
+                        i = j + 1
+                    elif i + 2 < n and chars[i + 2] == "'":
+                        code.append("' '")
+                        i += 3
+                    else:
+                        code.append("'")
+                        i += 1
+                else:
+                    code.append(c)
+                    i += 1
+        comment_s = "".join(comment)
+        out.append(Line("".join(code), comment_s, parse_allows(comment_s)))
+    for i, line in enumerate(out):
+        if not line.allows:
+            continue
+        own = any(ch.isalnum() for ch in strip_markers(line.comment))
+        prev = i > 0 and any(ch.isalnum() for ch in out[i - 1].comment)
+        for a in line.allows:
+            a["justified"] = own or prev
+    return out
+
+
+def test_region_mask(lines):
+    mask = [False] * len(lines)
+    i = 0
+    while i < len(lines):
+        code = lines[i].code
+        if "#[cfg(test)]" in code or "#[cfg(all(test" in code:
+            depth = 0
+            opened = False
+            j = i
+            while j < len(lines):
+                mask[j] = True
+                for c in lines[j].code:
+                    if c == "{":
+                        depth += 1
+                        opened = True
+                    elif c == "}":
+                        depth -= 1
+                if opened and depth <= 0:
+                    break
+                j += 1
+            i = j + 1
+        else:
+            i += 1
+    return mask
+
+
+# --- per-function model ----------------------------------------------
+
+
+class Func:
+    __slots__ = ("name", "body_start", "end")
+
+    def __init__(self, name, body_start, end):
+        self.name = name
+        self.body_start = body_start
+        self.end = end
+
+
+class Model:
+    __slots__ = ("rel", "lines", "mask", "funcs")
+
+    def __init__(self, rel, content):
+        self.rel = rel
+        self.lines = sanitize(content)
+        self.mask = test_region_mask(self.lines)
+        self.funcs = extract_funcs(self.lines)
+
+
+def extract_funcs(lines):
+    out = []
+    for i in range(len(lines)):
+        chars = lines[i].code
+        n = len(chars)
+        k = 0
+        while k + 1 < n:
+            word_fn = (
+                chars[k] == "f"
+                and chars[k + 1] == "n"
+                and (k == 0 or not is_ident(chars[k - 1]))
+                and (k + 2 >= n or not is_ident(chars[k + 2]))
+            )
+            if not word_fn:
+                k += 1
+                continue
+            j = k + 2
+            while j < n and chars[j].isspace():
+                j += 1
+            ns = j
+            while j < n and is_ident(chars[j]):
+                j += 1
+            if j > ns:
+                name = chars[ns:j]
+                span = body_span(lines, i, j)
+                if span is not None:
+                    out.append(Func(name, span[0], span[1]))
+            k = max(j, k + 1)
+    return out
+
+
+def body_span(lines, li, ci):
+    paren = 0
+    brace = 0
+    body_start = None
+    l, c = li, ci
+    while l < len(lines):
+        chars = lines[l].code
+        while c < len(chars):
+            ch = chars[c]
+            if ch == "(":
+                paren += 1
+            elif ch == ")":
+                paren -= 1
+            elif ch == "{":
+                if body_start is not None:
+                    brace += 1
+                elif paren == 0:
+                    body_start = l
+                    brace = 1
+            elif ch == "}":
+                if body_start is not None:
+                    brace -= 1
+                    if brace == 0:
+                        return (body_start, l)
+            elif ch == ";":
+                if body_start is None and paren == 0:
+                    return None
+            c += 1
+        l += 1
+        c = 0
+    return None
+
+
+# --- shared helpers --------------------------------------------------
+
+
+def squash(s):
+    return "".join(c for c in s if not c.isspace())
+
+
+def find_all(hay, needle):
+    out = []
+    start = 0
+    while True:
+        p = hay.find(needle, start)
+        if p < 0:
+            break
+        out.append(p)
+        start = p + 1
+    return out
+
+
+def matches_window(lines, i, pat):
+    cur = squash(lines[i].code)
+    nxt = squash(lines[i + 1].code) if i + 1 < len(lines) else ""
+    win = cur + nxt
+    return any(p < len(cur) for p in find_all(win, pat))
+
+
+def has_word(hay, word):
+    wlen = len(word)
+    for p in find_all(hay, word):
+        pre = p == 0 or not is_ident(hay[p - 1])
+        post = p + wlen >= len(hay) or not is_ident(hay[p + wlen])
+        if pre and post:
+            return True
+    return False
+
+
+def call_idents(sq):
+    out = []
+    i = 0
+    n = len(sq)
+    while i < n:
+        if is_ident(sq[i]) and not sq[i].isdigit():
+            start = i
+            while i < n and is_ident(sq[i]):
+                i += 1
+            if i < n and sq[i] == "(":
+                out.append(sq[start:i])
+        else:
+            i += 1
+    return out
+
+
+def allowed(lines, i, rule):
+    if any(a["rule"] == rule for a in lines[i].allows):
+        return i
+    if i > 0 and any(a["rule"] == rule for a in lines[i - 1].allows):
+        return i - 1
+    return None
+
+
+def report(m, i, rule, msg, findings, used):
+    j = allowed(m.lines, i, rule)
+    if j is not None:
+        used.add((m.rel, j, rule))
+    else:
+        findings.append(Finding(m.rel, i + 1, rule, msg))
+
+
+# --- the analysis ----------------------------------------------------
+
+
+def scan_files(files):
+    models = [Model(rel, src) for rel, src in files]
+    findings = []
+    used = set()
+    for m in models:
+        scan_local(m, findings, used)
+    scan_lock_order(models, findings, used)
+    scan_wal_order(models, findings, used)
+    scan_metrics_coverage(models, findings, used)
+    scan_suppressions(models, used, findings)
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    deduped = []
+    for f in findings:
+        if deduped and (
+            deduped[-1].file == f.file
+            and deduped[-1].line == f.line
+            and deduped[-1].rule == f.rule
+            and deduped[-1].msg == f.msg
+        ):
+            continue
+        deduped.append(f)
+    return deduped
+
+
+def scan_local(m, findings, used):
+    in_src = m.rel.startswith("rust/src/")
+    naked_scope = in_src and m.rel != "rust/src/sync.rs"
+    hot_scope = m.rel in ("rust/src/mp/kernel.rs", "rust/src/mp/stampi.rs")
+    fp_scope = m.rel in FP_FILES
+    for i in range(len(m.lines)):
+        if naked_scope and not m.mask[i]:
+            for pat in [
+                ".lock().unwrap()",
+                ".lock().expect(",
+                ".read().unwrap()",
+                ".write().unwrap()",
+            ]:
+                if matches_window(m.lines, i, pat):
+                    report(
+                        m, i, "naked_lock",
+                        f"`{pat}` — acquire through crate::sync::lock_ok so the "
+                        "poison policy (and the loom swap) lives in one place",
+                        findings, used,
+                    )
+                    break
+        if naked_scope and not m.mask[i]:
+            cur = squash(m.lines[i].code)
+            nxt = squash(m.lines[i + 1].code) if i + 1 < len(m.lines) else ""
+            win = cur + nxt
+            hit = any(
+                any(p < len(cur) and ".unwrap()" in win[p:] for p in find_all(win, pat))
+                for pat in [".wait(", ".wait_timeout("]
+            )
+            if hit:
+                report(
+                    m, i, "naked_wait",
+                    "Condvar wait unwrap — use crate::sync::wait_ok / wait_timeout_ok",
+                    findings, used,
+                )
+        cur = squash(m.lines[i].code)
+        for pat in [
+            ".duration_since(", "Instant::now()+", "Instant::now()-",
+            "+Instant::now()", "-Instant::now()",
+        ]:
+            if pat in cur:
+                report(
+                    m, i, "instant_arith",
+                    f"`{pat}` — raw Instant arithmetic panics on underflow/overflow; "
+                    "use checked_add / saturating_duration_since",
+                    findings, used,
+                )
+                break
+        if hot_scope and not m.mask[i] and matches_window(m.lines, i, ".sqrt()"):
+            report(
+                m, i, "hot_sqrt",
+                "sqrt on a kernel hot path — the deferred-sqrt contract keeps "
+                "distances squared (one sqrt per snapshot via sqrt_in_place)",
+                findings, used,
+            )
+        if fp_scope and not m.mask[i]:
+            scan_fp_line(m, i, findings, used)
+
+
+def scan_fp_line(m, i, findings, used):
+    cur = squash(m.lines[i].code)
+    if ".mul_add(" in cur:
+        report(
+            m, i, "fp_determinism",
+            "`mul_add` — FMA contraction rounds differently from mul-then-add; "
+            "bit-identity surfaces must not fuse",
+            findings, used,
+        )
+        return
+    for t in TRANSCENDENTALS:
+        if t in cur:
+            report(
+                m, i, "fp_determinism",
+                f"`{t}…)` — transcendental with platform-dependent rounding on a "
+                "bit-identity surface",
+                findings, used,
+            )
+            return
+    for w in ["HashMap", "HashSet"]:
+        if has_word(cur, w):
+            report(
+                m, i, "fp_determinism",
+                f"`{w}` — hashed iteration order is nondeterministic; feeding FP "
+                "accumulation or profile merges breaks bit-identity (use a sorted "
+                "or indexed container)",
+                findings, used,
+            )
+            return
+    tgt = float_cast(m.lines[i].code)
+    if tgt is not None:
+        report(
+            m, i, "fp_determinism",
+            f"`as {tgt}` cast of a computed value on a bit-identity surface — "
+            "precision reshaping must stay at the sanctioned conversion sites "
+            "(integer-identifier casts are exact and exempt)",
+            findings, used,
+        )
+
+
+def float_cast(code):
+    chars = code
+    n = len(chars)
+    k = 0
+    while k + 1 < n:
+        word_as = (
+            chars[k] == "a"
+            and chars[k + 1] == "s"
+            and (k == 0 or not is_ident(chars[k - 1]))
+            and k + 2 < n
+            and chars[k + 2].isspace()
+        )
+        if not word_as:
+            k += 1
+            continue
+        j = k + 2
+        while j < n and chars[j].isspace():
+            j += 1
+        ts = j
+        while j < n and is_ident(chars[j]):
+            j += 1
+        tgt = chars[ts:j]
+        p = k
+        while p > 0 and chars[p - 1].isspace():
+            p -= 1
+        computed = p > 0 and chars[p - 1] == ")"
+        q = p
+        while q > 0 and (is_ident(chars[q - 1]) or chars[q - 1] == "."):
+            q -= 1
+        tok = chars[q:p]
+        float_lit = bool(tok) and tok[0].isdigit() and "." in tok
+        if tgt == "f32":
+            return "f32"
+        if tgt == "f64" and (computed or float_lit):
+            return "f64"
+        k = j
+    return None
+
+
+# --- NL003 lock_order ------------------------------------------------
+
+
+def class_name(cls):
+    for n, c in LOCK_CLASSES:
+        if c == cls:
+            return n
+    return "?"
+
+
+def scan_lock_order(models, findings, used):
+    universe = [k for k in range(len(models)) if models[k].rel in LOCK_ORDER_FILES]
+    names = {f.name for k in universe for f in models[k].funcs}
+    acquires = {}
+    calls_of = {}
+    sites = []
+    for mi in universe:
+        m = models[mi]
+        for f in m.funcs:
+            scan_fn_locks(m, mi, f, names, acquires, calls_of, sites, findings, used)
+    trans = {k: set(v) for k, v in acquires.items()}
+    while True:
+        changed = False
+        for name, callees in calls_of.items():
+            add = set()
+            for callee in callees:
+                add |= trans.get(callee, set())
+            cur = trans.setdefault(name, set())
+            for c in add:
+                if c not in cur:
+                    cur.add(c)
+                    changed = True
+        if not changed:
+            break
+    for s in sites:
+        t = trans.get(s["callee"])
+        if t is None:
+            continue
+        worst = None
+        for h in s["held"]:
+            for c in sorted(t):
+                if h[1] >= c and (worst is None or h[1] > worst[0][1]):
+                    worst = (h, c)
+        if worst is not None:
+            (gname, gclass), c = worst
+            report(
+                models[s["model"]], s["line"], "lock_order",
+                f"calls `{s['callee']}`, which transitively acquires "
+                f"`{class_name(c)}` (class {c}), while `{gname}` (class {gclass}) "
+                "is held — cross-function hierarchy descent (docs/CONCURRENCY.md)",
+                findings, used,
+            )
+
+
+def scan_fn_locks(m, mi, f, names, acquires, calls_of, sites, findings, used):
+    depth = 0
+    held = []  # [name, class, depth]
+    hi = min(f.end, len(m.lines) - 1)
+    for i in range(f.body_start, hi + 1):
+        code = squash(m.lines[i].code)
+        for p in find_all(code, "drop("):
+            if p > 0 and (code[p - 1].isalnum() or code[p - 1] == "_"):
+                continue
+            end = code.find(")", p + 5)
+            if end >= 0:
+                name = code[p + 5:end]
+                held = [g for g in held if g[0] != name]
+        for p in find_all(code, "lock_ok("):
+            if p > 0 and (code[p - 1].isalnum() or code[p - 1] == "_"):
+                continue
+            arg_start = p + len("lock_ok(")
+            rel_end = code.find(")", arg_start)
+            if rel_end < 0:
+                continue
+            arg_end = rel_end
+            field = code[arg_start:arg_end].lstrip("&")
+            # rsplit over both '.' and ':' like Rust's rsplit(['.', ':'])
+            for sep_pos in range(len(field) - 1, -1, -1):
+                if field[sep_pos] in ".:":
+                    field = field[sep_pos + 1:]
+                    break
+            hit = next(((n, c) for n, c in LOCK_CLASSES if n == field), None)
+            if hit is None:
+                continue
+            cname, cls = hit
+            if not m.mask[i]:
+                acquires.setdefault(f.name, set()).add(cls)
+                worst = None
+                for g in held:
+                    if g[1] >= cls and (worst is None or g[1] > worst[1]):
+                        worst = g
+                if worst is not None:
+                    report(
+                        m, i, "lock_order",
+                        f"acquires `{cname}` (class {cls}) while `{worst[0]}` "
+                        f"(class {worst[1]}) is held — hierarchy is streams < "
+                        "submit_seq < state < subs, slots and route_table leaves "
+                        "(docs/CONCURRENCY.md)",
+                        findings, used,
+                    )
+            if code[arg_end:arg_end + 2] == ");":
+                name = binding_name(code[:p])
+                if name is not None:
+                    held.append([name, cls, depth])
+        if not m.mask[i]:
+            for callee in call_idents(code):
+                if callee != f.name and callee in names and callee not in OPAQUE_CALLEES:
+                    calls_of.setdefault(f.name, set()).add(callee)
+                    if held:
+                        sites.append({
+                            "model": mi,
+                            "line": i,
+                            "callee": callee,
+                            "held": [(g[0], g[1]) for g in held],
+                        })
+        for c in code:
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+        held = [g for g in held if g[2] <= depth]
+
+
+def binding_name(before):
+    if not before.startswith("let"):
+        return None
+    rest = before[3:]
+    if rest.startswith("mut"):
+        rest = rest[3:]
+    if not rest.endswith("="):
+        return None
+    name = rest[:-1]
+    if not name or not all(c.isalnum() or c == "_" for c in name):
+        return None
+    return name
+
+
+# --- NL007 wal_order -------------------------------------------------
+
+
+def first_arg(sq, after):
+    rest = sq[after:]
+    end = len(rest)
+    for stop in (",", ")"):
+        p = rest.find(stop)
+        if p >= 0:
+            end = min(end, p)
+    return rest[:end].lstrip("*&")
+
+
+def scan_wal_order(models, findings, used):
+    universe = [k for k in range(len(models)) if models[k].rel in WAL_FILES]
+    names = {f.name for k in universe for f in models[k].funcs}
+    direct_close = set()
+    calls_of = {}
+    for mi in universe:
+        m = models[mi]
+        for f in m.funcs:
+            hi = min(f.end, len(m.lines) - 1)
+            for i in range(f.body_start, hi + 1):
+                if m.mask[i]:
+                    continue
+                sq = squash(m.lines[i].code)
+                if "log_close(" in sq:
+                    direct_close.add(f.name)
+                for callee in call_idents(sq):
+                    if callee != f.name and callee in names and callee not in OPAQUE_CALLEES:
+                        calls_of.setdefault(f.name, set()).add(callee)
+    closes = set(direct_close)
+    while True:
+        changed = False
+        for name, callees in calls_of.items():
+            if name not in closes and any(c in closes for c in callees):
+                closes.add(name)
+                changed = True
+        if not changed:
+            break
+    for mi in universe:
+        m = models[mi]
+        for f in m.funcs:
+            seen_open = False
+            seen_append = False
+            seen_state = False
+            closed_args = []
+            hi = min(f.end, len(m.lines) - 1)
+            for i in range(f.body_start, hi + 1):
+                if m.mask[i]:
+                    continue
+                sq = squash(m.lines[i].code)
+                for op, flag in [("log_open(", True), ("log_append(", False), ("log_snapshot(", False)]:
+                    for p in find_all(sq, op):
+                        if flag:
+                            seen_open = True
+                        elif op == "log_append(":
+                            seen_append = True
+                        arg = first_arg(sq, p + len(op))
+                        if arg in closed_args:
+                            report(
+                                m, i, "wal_order",
+                                f"`{op}…)` after `log_close` for the same stream "
+                                f"(`{arg}`) — records after Close are unreachable "
+                                "on replay",
+                                findings, used,
+                            )
+                for p in find_all(sq, "log_close("):
+                    closed_args.append(first_arg(sq, p + len("log_close(")))
+                for p in find_all(sq, "lock_ok("):
+                    arg_start = p + len("lock_ok(")
+                    rel_end = sq.find(")", arg_start)
+                    if rel_end >= 0:
+                        field = sq[arg_start:rel_end].lstrip("&")
+                        for sep_pos in range(len(field) - 1, -1, -1):
+                            if field[sep_pos] in ".:":
+                                field = field[sep_pos + 1:]
+                                break
+                        if field == "state":
+                            seen_state = True
+                if "session.extend(" in sq or "append_group(" in sq:
+                    if not seen_append:
+                        report(
+                            m, i, "wal_order",
+                            "session mutation is not write-ahead logged — no "
+                            "`log_append` dominates it in this function (WAL "
+                            "contract: log, then mutate, inside the state-lock "
+                            "region)",
+                            findings, used,
+                        )
+                    elif not seen_state:
+                        report(
+                            m, i, "wal_order",
+                            "session mutation before any state-lock acquisition — "
+                            "WAL ordering is only atomic inside the stream's "
+                            "state-lock region",
+                            findings, used,
+                        )
+                if "streams).insert(" in sq and not seen_open:
+                    report(
+                        m, i, "wal_order",
+                        "stream install without a dominating `log_open` — the WAL "
+                        "must know the stream before the map does",
+                        findings, used,
+                    )
+                if (".closed=true" in sq or ".moved=true" in sq) and f.name not in closes:
+                    report(
+                        m, i, "wal_order",
+                        "close/move mark without a `log_close` in this function or "
+                        "its callees — replay would resurrect the stream",
+                        findings, used,
+                    )
+
+
+# --- NL008 metrics_coverage ------------------------------------------
+
+
+def field_use(sq, prefix, field):
+    pat = prefix + field
+    plen = len(pat)
+    for p in find_all(sq, pat):
+        pre = prefix.startswith(".") or p == 0 or not is_ident(sq[p - 1])
+        post = p + plen >= len(sq) or not is_ident(sq[p + plen])
+        if pre and post:
+            return True
+    return False
+
+
+def scan_metrics_coverage(models, findings, used):
+    mm = next((m for m in models if m.rel == METRICS_FILE), None)
+    if mm is None:
+        return
+    fields = []
+    def_range = None
+    in_struct = False
+    start = 0
+    for i in range(len(mm.lines)):
+        if mm.mask[i]:
+            continue
+        sq = squash(mm.lines[i].code)
+        if not in_struct and sq.startswith("pubstructServiceMetrics{"):
+            in_struct = True
+            start = i
+            continue
+        if in_struct:
+            if sq == "}":
+                def_range = (start, i)
+                break
+            if sq.startswith("pub"):
+                rest = sq[3:]
+                cp = rest.find(":")
+                if cp >= 0:
+                    name = rest[:cp]
+                    if name and all(is_ident(c) for c in name):
+                        fields.append((name, i))
+    if def_range is None:
+        findings.append(Finding(
+            mm.rel, 1, "metrics_coverage",
+            "ServiceMetrics struct not found — the coverage pass has nothing to check",
+        ))
+        return
+    recon = next((m for m in models if m.rel == RECON_FILE), None)
+    recon_fn = None
+    if recon is not None:
+        rf = next((f for f in recon.funcs if f.name == RECON_FN), None)
+        if rf is not None:
+            recon_fn = (recon, rf)
+    if recon_fn is None:
+        findings.append(Finding(
+            mm.rel, def_range[0] + 1, "metrics_coverage",
+            f"reconciliation test `{RECON_FN}` not found in {RECON_FILE} — every "
+            "ServiceMetrics field must be covered by the Σ-reconciliation test",
+        ))
+    for fname, fline in fields:
+        any_use = False
+        shard = False
+        agg = False
+        for m in models:
+            if m.rel not in METRICS_USAGE_FILES:
+                continue
+            for i in range(len(m.lines)):
+                if m.mask[i]:
+                    continue
+                if m.rel == METRICS_FILE and def_range[0] <= i <= def_range[1]:
+                    continue
+                sq = squash(m.lines[i].code)
+                if field_use(sq, ".", fname):
+                    any_use = True
+                if field_use(sq, "metrics.", fname):
+                    shard = True
+                if field_use(sq, "aggregate.", fname):
+                    agg = True
+        if not any_use:
+            report(
+                mm, fline, "metrics_coverage",
+                f"`{fname}` is never recorded in the coordinator — dead or "
+                "unreconcilable metric field",
+                findings, used,
+            )
+        elif shard != agg:
+            side = "shard, no aggregate" if shard else "aggregate, no shard"
+            report(
+                mm, fline, "metrics_coverage",
+                f"`{fname}` is ticked on only one side ({side}) — shard and "
+                "aggregate must move in step or Σ-reconciliation cannot hold",
+                findings, used,
+            )
+        if recon_fn is not None:
+            rm, rf = recon_fn
+            hi = min(rf.end, len(rm.lines) - 1)
+            covered = any(
+                field_use(squash(rm.lines[i].code), ".", fname)
+                for i in range(rf.body_start, hi + 1)
+            )
+            if not covered:
+                report(
+                    mm, fline, "metrics_coverage",
+                    f"`{fname}` is missing from `{RECON_FN}` ({RECON_FILE}) — new "
+                    "counters must join the Σ-reconciliation test",
+                    findings, used,
+                )
+
+
+# --- NL009 suppression -----------------------------------------------
+
+
+def scan_suppressions(models, used, findings):
+    known = {r for r, _ in RULES}
+    for m in models:
+        for i, line in enumerate(m.lines):
+            for a in line.allows:
+                if a["rule"] not in known:
+                    findings.append(Finding(
+                        m.rel, i + 1, "suppression",
+                        f"allow marker names unknown rule `{a['rule']}`",
+                    ))
+                elif (m.rel, i, a["rule"]) not in used:
+                    findings.append(Finding(
+                        m.rel, i + 1, "suppression",
+                        f"stale allow marker — no `{a['rule']}` finding is "
+                        "suppressed here; delete it or it will mask a future "
+                        "regression",
+                    ))
+                elif not a["justified"]:
+                    findings.append(Finding(
+                        m.rel, i + 1, "suppression",
+                        f"allow marker for `{a['rule']}` lacks a justification "
+                        "comment (same comment or the line above)",
+                    ))
+
+
+# --- tree walk / CLI -------------------------------------------------
+
+
+def scan_tree(root):
+    paths = []
+    for d in SCAN_DIRS:
+        base = os.path.join(root, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fn in filenames:
+                if fn.endswith(".rs"):
+                    paths.append(os.path.join(dirpath, fn))
+    paths.sort()
+    files = []
+    for path in paths:
+        with open(path, encoding="utf-8") as fh:
+            content = fh.read()
+        rel = os.path.relpath(path, root).replace("\\", "/")
+        files.append((rel, content))
+    return scan_files(files), len(files)
+
+
+def render_json(findings, files_scanned):
+    return json.dumps(
+        {
+            "schema": "natsa-lint/v2",
+            "files_scanned": files_scanned,
+            "clean": not findings,
+            "findings": [
+                {"file": f.file, "line": f.line, "id": f.id(), "rule": f.rule, "msg": f.msg}
+                for f in findings
+            ],
+        },
+        indent=2,
+        ensure_ascii=False,
+    )
+
+
+# --- self-tests (ports of the Rust #[cfg(test)] module) --------------
+
+
+def _rules(rel, src):
+    return [f.rule for f in scan_files([(rel, src)])]
+
+
+def _repo_root():
+    return os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", ".."))
+
+
+def selftest():
+    checks = 0
+
+    def ok(cond, what):
+        nonlocal checks
+        checks += 1
+        if not cond:
+            raise AssertionError(what)
+
+    # naked_lock
+    src = "fn f() {\n    let _ = m.lock().unwrap();\n}"
+    ok(_rules("rust/src/coordinator/fanout.rs", src) == ["naked_lock"], "naked_lock caught")
+    ok(_rules("rust/src/sync.rs", src) == [], "sync.rs exempt")
+    ok(_rules("rust/tests/x.rs", src) == [], "tests scope exempt")
+    split = "fn f() {\n    let _ = m.lock()\n        .unwrap();\n}"
+    ok(_rules("rust/src/a.rs", split) == ["naked_lock"], "split chain caught")
+    rw = "fn f() {\n    let _ = m.read().unwrap();\n}"
+    ok(_rules("rust/src/a.rs", rw) == ["naked_lock"], "rwlock caught")
+    marked = (
+        "fn f() {\n    // " + MARKER + "naked_lock) planted case\n"
+        "    let _ = m.lock().unwrap();\n}"
+    )
+    ok(_rules("rust/src/a.rs", marked) == [], "marker exempts")
+    tested = "#[cfg(test)]\nmod tests {\n    fn f() { let _ = m.lock().unwrap(); }\n}"
+    ok(_rules("rust/src/a.rs", tested) == [], "test mod exempt")
+    tested2 = "#[cfg(all(test, not(loom)))]\nmod tests {\n    fn f() { let _ = m.lock().unwrap(); }\n}"
+    ok(_rules("rust/src/a.rs", tested2) == [], "cfg(all(test..)) exempt")
+
+    # naked_wait
+    ok(_rules("rust/src/a.rs", "fn f() {\n    let g = cv.wait(g).unwrap();\n}") == ["naked_wait"], "wait caught")
+    ok(_rules("rust/src/a.rs", "fn f() {\n    let (g, _) = cv.wait_timeout(g, d).unwrap();\n}") == ["naked_wait"], "wait_timeout caught")
+    ok(_rules("rust/src/a.rs", "fn f() {\n    let g = wait_ok(&cv, g);\n}") == [], "wait_ok clean")
+
+    # lock_order: intra
+    descent = "fn f() {\n    let st = lock_ok(&e.state);\n    let g = lock_ok(&e.submit_seq);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", descent) == ["lock_order"], "descent caught")
+    ascent = "fn f() {\n    let g = lock_ok(&e.submit_seq);\n    let st = lock_ok(&e.state);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", ascent) == [], "ascent clean")
+    ok(_rules("rust/src/coordinator/mod.rs", descent) == [], "out-of-universe clean")
+    dropped = "fn f() {\n    let st = lock_ok(&e.state);\n    drop(st);\n    let g = lock_ok(&e.submit_seq);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", dropped) == [], "drop releases")
+    scoped = "fn f() {\n    {\n        let st = lock_ok(&e.state);\n    }\n    let g = lock_ok(&e.submit_seq);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", scoped) == [], "scope releases")
+    try_exempt = "fn f() {\n    let st = lock_ok(&e.state);\n    let g = try_lock_ok(&e.submit_seq);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", try_exempt) == [], "try_lock exempt")
+    temp = (
+        "fn f() {\n    w.log_open(id, meta);\n"
+        "    lock_ok(&shard.streams).insert(id, entry);\n"
+        "    let st = lock_ok(&e.state);\n    let _n = lock_ok(&shard.subs).len();\n}"
+    )
+    ok(_rules("rust/src/coordinator/service.rs", temp) == [], "temporaries not held")
+    temp_descent = "fn f() {\n    let st = lock_ok(&e.state);\n    lock_ok(&shard.streams).remove(&id);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", temp_descent) == ["lock_order"], "temp descent caught")
+    rt_descent = "fn f() {\n    let t = lock_ok(&self.route_table);\n    let st = lock_ok(&e.state);\n}"
+    ok(_rules("rust/src/coordinator/router.rs", rt_descent) == ["lock_order"], "route_table top")
+    rt_ascent = "fn f() {\n    let st = lock_ok(&e.state);\n    let t = lock_ok(&self.route_table);\n}"
+    ok(_rules("rust/src/coordinator/router.rs", rt_ascent) == [], "route_table under state ok")
+    ok(_rules("rust/src/coordinator/migrate.rs", rt_descent) == ["lock_order"], "migrate in universe")
+    ok(_rules("rust/src/coordinator/admission.rs", rt_descent) == ["lock_order"], "admission in universe")
+    naked_inv = (
+        "fn f(w: &W) {\n    w.log_open(id, meta);\n    let st = lock_ok(&e.state);\n"
+        "    lock_ok(&target.streams).insert(id, entry);\n}"
+    )
+    ok(_rules("rust/src/coordinator/migrate.rs", naked_inv) == ["lock_order"], "inversion caught")
+    marked_inv = (
+        "fn f(w: &W) {\n    w.log_open(id, meta);\n    let st = lock_ok(&e.state);\n"
+        "    // " + MARKER + "lock_order) planted sanctioned inversion\n"
+        "    lock_ok(&target.streams).insert(id, entry);\n}"
+    )
+    ok(_rules("rust/src/coordinator/migrate.rs", marked_inv) == [], "inversion marker ok")
+
+    # lock_order: interprocedural
+    cross = (
+        "fn helper(e: &E) {\n    let st = lock_ok(&e.state);\n    st.touch();\n}\n"
+        "fn caller(shard: &S, e: &E) {\n    let g = lock_ok(&shard.subs);\n    helper(e);\n    drop(g);\n}"
+    )
+    fs = scan_files([("rust/src/coordinator/service.rs", cross)])
+    ok([f.rule for f in fs] == ["lock_order"], "cross-function chain caught")
+    ok(fs[0].line == 7, "flagged at call site")
+    ok("helper" in fs[0].msg, "names the callee")
+    asc = (
+        "fn helper(e: &E) {\n    let st = lock_ok(&e.state);\n}\n"
+        "fn caller(e: &E) {\n    let g = lock_ok(&e.submit_seq);\n    helper(e);\n}"
+    )
+    ok(_rules("rust/src/coordinator/service.rs", asc) == [], "cross-function ascent clean")
+    two_hop = (
+        "fn c(e: &E) {\n    let st = lock_ok(&e.state);\n}\n"
+        "fn b(e: &E) {\n    c(e);\n}\n"
+        "fn a(shard: &S, e: &E) {\n    let g = lock_ok(&shard.subs);\n    b(e);\n}"
+    )
+    ok(_rules("rust/src/coordinator/service.rs", two_hop) == ["lock_order"], "two-hop transitive caught")
+    marked_cross = (
+        "fn helper(e: &E) {\n    let st = lock_ok(&e.state);\n}\n"
+        "fn caller(shard: &S, e: &E) {\n    let g = lock_ok(&shard.subs);\n"
+        "    // " + MARKER + "lock_order) planted cross-function case\n    helper(e);\n}"
+    )
+    ok(_rules("rust/src/coordinator/service.rs", marked_cross) == [], "cross-function marker ok")
+
+    # instant_arith
+    add = "fn f() {\n    let d = Instant::now() + Duration::from_secs(30);\n}"
+    ok(_rules("rust/tests/x.rs", add) == ["instant_arith"], "instant add caught in tests")
+    ok(_rules("benches/y.rs", add) == ["instant_arith"], "instant add caught in benches")
+    ok(_rules("rust/src/a.rs", "fn f() {\n    let d = a.duration_since(b);\n}") == ["instant_arith"], "duration_since caught")
+    ok(_rules("rust/src/a.rs", "fn f() {\n    let d = a.saturating_duration_since(b);\n}") == [], "saturating clean")
+    ok(_rules("rust/src/a.rs", 'fn f() {\n    let d = Instant::now().checked_add(t).expect("x");\n}') == [], "checked clean")
+
+    # hot_sqrt
+    sq = "fn f(x: f64) -> f64 {\n    x.sqrt()\n}"
+    ok(_rules("rust/src/mp/kernel.rs", sq) == ["hot_sqrt"], "sqrt caught in kernel")
+    ok(_rules("rust/src/mp/stampi.rs", sq) == ["hot_sqrt"], "sqrt caught in stampi")
+    ok(_rules("rust/src/mp/mod.rs", sq) == [], "sqrt_in_place home clean")
+    msq = "fn f(x: f64) -> f64 {\n    x.sqrt() // " + MARKER + "hot_sqrt) planted\n}"
+    ok(_rules("rust/src/mp/kernel.rs", msq) == [], "sqrt marker ok")
+
+    # fp_determinism
+    fma = "fn f(a: f64, b: f64, c: f64) -> f64 {\n    a.mul_add(b, c)\n}"
+    ok(_rules("rust/src/mp/kernel.rs", fma) == ["fp_determinism"], "mul_add caught")
+    ok(_rules("rust/src/mp/mod.rs", fma) == [], "fp scope limited")
+    fma_t = "#[cfg(test)]\nmod tests {\n    fn f(a: f64) -> f64 { a.mul_add(a, a) }\n}"
+    ok(_rules("rust/src/mp/kernel.rs", fma_t) == [], "fp test mod exempt")
+    ok(_rules("rust/src/mp/kernel.rs", "fn f(x: f64) -> f64 {\n    x.powf(2.0)\n}") == ["fp_determinism"], "powf caught")
+    ok(_rules("rust/src/mp/stampi.rs", "fn f() {\n    let mut h = HashMap::with_capacity(4);\n}") == ["fp_determinism"], "HashMap caught")
+    ok(_rules("rust/src/mp/kernel.rs", "fn f(x: f64) -> f32 {\n    x as f32\n}") == ["fp_determinism"], "as f32 caught")
+    ok(_rules("rust/src/mp/kernel.rs", "fn f(a: f64, b: f64) -> f64 {\n    (a + b) as f64\n}") == ["fp_determinism"], "computed as f64 caught")
+    ok(_rules("rust/src/mp/kernel.rs", "fn f() -> f64 {\n    2.5 as f64\n}") == ["fp_determinism"], "float literal cast caught")
+    ok(_rules("rust/src/mp/kernel.rs", "fn f(m: usize) -> f64 {\n    2.0 * m as f64\n}") == [], "ident as f64 clean")
+
+    # wal_order
+    unlogged = "fn f(e: &E) {\n    let mut st = lock_ok(&e.state);\n    st.session.extend(samples);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", unlogged) == ["wal_order"], "unlogged extend caught")
+    logged = (
+        "fn f(e: &E) {\n    let mut st = lock_ok(&e.state);\n"
+        "    w.log_append(stream, seq, samples);\n    st.session.extend(samples);\n}"
+    )
+    ok(_rules("rust/src/coordinator/service.rs", logged) == [], "logged extend clean")
+    no_region = "fn f(w: &W) {\n    w.log_append(stream, seq, samples);\n    session.extend(samples);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", no_region) == ["wal_order"], "extend outside region caught")
+    ok(_rules("rust/src/coordinator/slots.rs", unlogged) == [], "wal scope limited")
+    g_unlogged = "fn f(e: &E) {\n    let g = try_lock_ok(&e.state);\n    let r = append_group(&mut sess);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", g_unlogged) == ["wal_order"], "unlogged group caught")
+    g_logged = (
+        "fn f(e: &E) {\n    let g = try_lock_ok(&e.state);\n"
+        "    w.log_append(stream, seq, samples);\n    let r = append_group(&mut sess);\n}"
+    )
+    ok(_rules("rust/src/coordinator/service.rs", g_logged) == [], "logged group clean")
+    install = "fn f() {\n    lock_ok(&shard.streams).insert(id, entry);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", install) == ["wal_order"], "unopened install caught")
+    opened = "fn f(w: &W) {\n    w.log_open(id, meta);\n    lock_ok(&shard.streams).insert(id, entry);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", opened) == [], "opened install clean")
+    close_un = "fn f(e: &E) {\n    let mut st = lock_ok(&e.state);\n    st.closed = true;\n}"
+    ok(_rules("rust/src/coordinator/service.rs", close_un) == ["wal_order"], "unlogged close caught")
+    close_ok = (
+        "fn f(e: &E) {\n    let mut st = lock_ok(&e.state);\n    st.closed = true;\n"
+        "    w.log_close(stream);\n}"
+    )
+    ok(_rules("rust/src/coordinator/service.rs", close_ok) == [], "direct close clean")
+    via_callee = (
+        "fn quarantine(w: &W) {\n    w.log_close(stream);\n}\n"
+        "fn f(e: &E, w: &W) {\n    let mut st = lock_ok(&e.state);\n    st.closed = true;\n"
+        "    quarantine(w);\n}"
+    )
+    ok(_rules("rust/src/coordinator/service.rs", via_callee) == [], "close via callee clean")
+    moved = "fn f(e: &E) {\n    let mut st = lock_ok(&e.state);\n    st.moved = true;\n}"
+    ok(_rules("rust/src/coordinator/migrate.rs", moved) == ["wal_order"], "unlogged move caught")
+    after_close = "fn f(w: &W) {\n    w.log_close(stream);\n    w.log_open(stream, meta);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", after_close) == ["wal_order"], "record after close caught")
+    other_stream = "fn f(w: &W) {\n    w.log_close(dropped);\n    w.log_open(stream, meta);\n}"
+    ok(_rules("rust/src/coordinator/service.rs", other_stream) == [], "other stream after close clean")
+
+    # metrics_coverage (synthetic)
+    met = (
+        "pub struct ServiceMetrics {\n    pub a: AtomicU64,\n    pub b: AtomicU64,\n}\n"
+        "impl ServiceMetrics {\n    pub fn tick(&self) {\n"
+        "        self.a.fetch_add(1, Ordering::Relaxed);\n"
+        "        self.b.fetch_add(1, Ordering::Relaxed);\n    }\n}"
+    )
+    recon_ok = (
+        "fn assert_reconciled(svc: &S) {\n    assert_eq!(agg.a.load(O), sum.a);\n"
+        "    assert_eq!(agg.b.load(O), sum.b);\n}"
+    )
+    ok(scan_files([(METRICS_FILE, met), (RECON_FILE, recon_ok)]) == [] or
+       not scan_files([(METRICS_FILE, met), (RECON_FILE, recon_ok)]), "synthetic clean")
+    recon_partial = "fn assert_reconciled(svc: &S) {\n    assert_eq!(agg.a.load(O), sum.a);\n}"
+    fs = scan_files([(METRICS_FILE, met), (RECON_FILE, recon_partial)])
+    ok([f.rule for f in fs] == ["metrics_coverage"] and "`b`" in fs[0].msg, "missing-from-recon caught")
+    dead = (
+        "pub struct ServiceMetrics {\n    pub a: AtomicU64,\n    pub c: AtomicU64,\n}\n"
+        "impl ServiceMetrics {\n    pub fn tick(&self) {\n"
+        "        self.a.fetch_add(1, Ordering::Relaxed);\n    }\n}"
+    )
+    recon_ac = (
+        "fn assert_reconciled(svc: &S) {\n    assert_eq!(agg.a.load(O), sum.a);\n"
+        "    assert_eq!(agg.c.load(O), sum.c);\n}"
+    )
+    fs = scan_files([(METRICS_FILE, dead), (RECON_FILE, recon_ac)])
+    ok([f.rule for f in fs] == ["metrics_coverage"] and "never recorded" in fs[0].msg, "dead field caught")
+    svc_one = "fn f(shard: &S) {\n    shard.metrics.a.fetch_add(1, Ordering::Relaxed);\n}"
+    fs = scan_files([(METRICS_FILE, met), ("rust/src/coordinator/service.rs", svc_one), (RECON_FILE, recon_ok)])
+    ok([f.rule for f in fs] == ["metrics_coverage"] and "only one side" in fs[0].msg, "one-sided tick caught")
+    fs = scan_files([(METRICS_FILE, met)])
+    ok([f.rule for f in fs] == ["metrics_coverage"], "missing recon fn caught")
+
+    # metrics_coverage fails closed on the real tree's twin scratch field
+    root = _repo_root()
+    real = {}
+    for rel in [METRICS_FILE, "rust/src/coordinator/service.rs",
+                "rust/src/coordinator/migrate.rs", RECON_FILE]:
+        with open(os.path.join(root, rel), encoding="utf-8") as fh:
+            real[rel] = fh.read()
+    base = scan_files(list(real.items()))
+    ok(base == [] or not base, "real metrics surface clean: " + "; ".join(map(str, base)))
+    scratch = next(
+        l for l in real[METRICS_FILE].split("\n") if "scratch_unreconciled" in l
+    )
+    spiked = dict(real)
+    spiked[METRICS_FILE] = real[METRICS_FILE].replace(
+        "pub struct ServiceMetrics {", "pub struct ServiceMetrics {\n" + scratch
+    )
+    fs = scan_files(list(spiked.items()))
+    ok(fs and all(f.rule == "metrics_coverage" for f in fs), "spiked twin field flagged")
+    ok(any("scratch_unreconciled" in f.msg for f in fs), "spike names the field")
+
+    # suppression hygiene
+    stale = "fn f() {\n    // " + MARKER + "naked_lock) says it is needed here\n    let x = compute();\n}"
+    ok(_rules("rust/src/a.rs", stale) == ["suppression"], "stale marker caught")
+    unknown = "fn f() {\n    // " + MARKER + "bogus_rule) oops\n    let x = compute();\n}"
+    ok(_rules("rust/src/a.rs", unknown) == ["suppression"], "unknown rule caught")
+    bare = "fn f() {\n    // " + MARKER + "naked_lock)\n    let _ = m.lock().unwrap();\n}"
+    ok(_rules("rust/src/a.rs", bare) == ["suppression"], "unjustified marker caught")
+    above = (
+        "fn f() {\n    // single-threaded startup, poison impossible\n"
+        "    // " + MARKER + "naked_lock)\n    let _ = m.lock().unwrap();\n}"
+    )
+    ok(_rules("rust/src/a.rs", above) == [], "line-above justification ok")
+
+    # tokenizer: raw strings
+    fp_raw = 'fn f() {\n    let s = r#"say "hi" then m.lock().unwrap()"#;\n}'
+    ok(_rules("rust/src/a.rs", fp_raw) == [], "raw string false positive pinned")
+    fn_raw = 'fn f() {\n    let s = r"ends with \\";\n    let _ = m.lock().unwrap();\n}'
+    ok(_rules("rust/src/a.rs", fn_raw) == ["naked_lock"], "raw string false negative pinned")
+    ml_raw = 'fn f() {\n    let s = r#"first\n.lock().unwrap()\nlast"#;\n}'
+    ok(_rules("rust/src/a.rs", ml_raw) == [], "multi-line raw string blanked")
+
+    # tokenizer: nested block comments
+    nested = (
+        "fn f() {}\n/* outer /* inner */ let _ = m.lock().unwrap(); /* x */ "
+        "still comment */\nfn g() {}"
+    )
+    ok(_rules("rust/src/a.rs", nested) == [], "nested block comment pinned")
+    nested_ml = "fn f() {}\n/* outer\n/* inner\n*/\nlet _ = m.lock().unwrap();\n*/\nfn g() {}"
+    ok(_rules("rust/src/a.rs", nested_ml) == [], "multi-line nested comment pinned")
+    strings = (
+        "//! docs say never write .lock().unwrap() by hand\nfn f() {\n"
+        '    let s = ".sqrt() and .lock().unwrap() and Instant::now() + d";\n'
+        "    /* .wait(g).unwrap() */\n}"
+    )
+    ok(_rules("rust/src/mp/kernel.rs", strings) == [], "comments and strings inert")
+
+    # ids and json
+    fs = scan_files([("rust/src/a.rs", "fn f() {\n    let _ = m.lock().unwrap();\n}")])
+    ok(fs[0].id() == "NL001", "stable id")
+    js = render_json(fs, 1)
+    ok('"id": "NL001"' in js and '"clean": false' in js, "json report")
+    ok('"clean": true' in render_json([], 3), "clean json report")
+
+    # whole tree
+    findings, files = scan_tree(root)
+    ok(files > 20, "tree walk found the sources")
+    ok(findings == [] or not findings,
+       "repo must be natsa-lint clean:\n" + "\n".join(map(str, findings)))
+
+    print(f"lint_mirror selftest: {checks} checks passed")
+
+
+def main(argv):
+    as_json = False
+    do_selftest = False
+    root = "."
+    for arg in argv[1:]:
+        if arg == "--json":
+            as_json = True
+        elif arg == "--selftest":
+            do_selftest = True
+        else:
+            root = arg
+    if do_selftest:
+        selftest()
+        return 0
+    try:
+        findings, files_scanned = scan_tree(root)
+    except OSError as e:
+        print(f"natsa-lint: {e}", file=sys.stderr)
+        return 2
+    if as_json:
+        print(render_json(findings, files_scanned))
+    else:
+        for f in findings:
+            print(f)
+        if not findings:
+            print(f"natsa-lint: tree clean ({files_scanned} files)")
+    if findings:
+        print(f"natsa-lint: {len(findings)} violation(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -477,6 +477,58 @@ mod tests {
         );
     }
 
+    /// Test-only twin of [`ServiceMetrics`] carrying one deliberately
+    /// unreconciled field.  It exists for `tools/lint`'s
+    /// metrics-coverage pass (NL008): the analyzer skips `#[cfg(test)]`
+    /// regions, so this struct is exempt as written — but the analyzer's
+    /// own self-test splices the scratch field's line into the live
+    /// struct and asserts the pass flags it.  Proof that the pass fails
+    /// closed on the ship-an-unreconciled-counter mistake, kept here so
+    /// the planted field can never drift from real field syntax.
+    #[allow(dead_code)]
+    #[derive(Debug, Default)]
+    pub struct ServiceMetricsTwin {
+        pub jobs_submitted: AtomicU64,
+        pub jobs_completed: AtomicU64,
+        pub scratch_unreconciled: AtomicU64,
+    }
+
+    #[test]
+    fn twin_struct_scratch_field_stays_unwired() {
+        // The twin's scratch counter is recorded nowhere and summed
+        // nowhere — exactly the mistake NL008 exists to catch.  Pin
+        // that it really is dead weight (ticking it changes nothing
+        // observable), so the planted violation stays a violation.
+        let t = ServiceMetricsTwin::default();
+        t.scratch_unreconciled.fetch_add(42, Ordering::Relaxed);
+        let m = ServiceMetrics::default();
+        assert_eq!(m.in_flight(), 0);
+        assert!(!m.summary().contains("42"));
+    }
+
+    #[test]
+    fn width_histogram_reconciles_across_instances() {
+        // The Σ-reconciliation contract, at histogram granularity: two
+        // per-shard width histograms ticked independently must sum
+        // bucket-by-bucket to the aggregate instance ticked alongside.
+        let band = crate::mp::kernel::BAND;
+        let (a, b) = (WidthHistogram::default(), WidthHistogram::default());
+        let agg = WidthHistogram::default();
+        for w in [1usize, 1, 2, band, band + 3] {
+            a.record(w);
+            agg.record(w);
+        }
+        for w in [1usize, 3, band - 1, band] {
+            b.record(w);
+            agg.record(w);
+        }
+        for w in 1..=band {
+            assert_eq!(agg.at(w), a.at(w) + b.at(w), "bucket {w} skewed");
+        }
+        assert_eq!(agg.count(), a.count() + b.count());
+        assert_eq!(agg.coalesced(), a.coalesced() + b.coalesced());
+    }
+
     #[test]
     fn elastic_counters_surface_in_the_summary() {
         let m = ServiceMetrics::default();

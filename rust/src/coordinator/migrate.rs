@@ -59,8 +59,9 @@
 //! is a leaf above all classes and is taken under `state` at the commit
 //! point.  The one deliberate exception: the **target** shard's
 //! `streams` map (class 10) is inserted into while the **source**
-//! stream's `state` lock is held — annotated `natsa-lint:
-//! allow(lock_order)` at the site; safe because no code path anywhere
+//! stream's `state` lock is held — the repo's single sanctioned
+//! suppression of lint rule NL003 (`lock_order`), annotated at the
+//! site (see `docs/INVARIANTS.md`); safe because no code path anywhere
 //! acquires a `state` lock while holding a `streams`-map lock (the maps
 //! are leaves in practice; the documented chain is only ever entered
 //! map-first on a *single* shard), so no cycle can form.

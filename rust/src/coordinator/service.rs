@@ -1450,6 +1450,9 @@ fn restore_stream<T: Real>(
             }
         };
         for (_, packet) in &rs.appends {
+            // Replay consumes records already in the log; re-logging them
+            // here would double every append on the next recovery.
+            // natsa-lint: allow(wal_order)
             session.extend(packet);
         }
         Ok((session, rs.next_seq()))

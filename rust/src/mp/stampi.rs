@@ -584,7 +584,7 @@ impl<T: Real> Stampi<T> {
         let sd = var.sqrt(); // natsa-lint: allow(hot_sqrt)
         if sd > 0.0 {
             self.za.push(T::of_f64(std::f64::consts::SQRT_2 / sd));
-            // natsa-lint: allow(hot_sqrt)
+            // natsa-lint: allow(hot_sqrt) same once-per-window seeding pair
             self.zb.push(T::of_f64((2.0 * mf).sqrt() * mean / sd));
         } else {
             self.za.push(T::zero());

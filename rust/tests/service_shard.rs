@@ -38,6 +38,26 @@ fn assert_reconciled(svc: &AnalysisService<f64>) {
         "rejected skewed"
     );
     assert_eq!(
+        agg.jobs_panicked.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).jobs_panicked.load(Ordering::Relaxed)),
+        "panicked skewed"
+    );
+    assert_eq!(
+        agg.wal_errors.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).wal_errors.load(Ordering::Relaxed)),
+        "wal_errors skewed"
+    );
+    assert_eq!(
+        agg.queue_wait_ns.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).queue_wait_ns.load(Ordering::Relaxed)),
+        "queue_wait_ns skewed"
+    );
+    assert_eq!(
+        agg.exec_ns.load(Ordering::Relaxed),
+        sum(&|k| svc.shard_metrics(k).exec_ns.load(Ordering::Relaxed)),
+        "exec_ns skewed"
+    );
+    assert_eq!(
         agg.latency.count(),
         sum(&|k| svc.shard_metrics(k).latency.count()),
         "latency histogram skewed"
